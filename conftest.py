@@ -1,0 +1,6 @@
+# Allow running `pytest python/tests/` from the repo root: the test suite
+# imports the build-time `compile` package relative to python/.
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))

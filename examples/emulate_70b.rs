@@ -1,0 +1,35 @@
+//! Large-scale emulation (§6.3): Llama 3.3 70B strong scaling from 1,280
+//! to 10,240 GPUs, reproducing Tables 6–7 as a runnable example.
+//!
+//! Run: `cargo run --release --example emulate_70b`
+
+use kareus::baselines::{run_system, System};
+use kareus::paper::compare::{frontier_improvement, max_throughput_reduction};
+use kareus::paper::workloads::emulation_rows;
+use kareus::sim::gpu::GpuSpec;
+
+fn main() {
+    let gpu = GpuSpec::a100();
+    println!("Llama 3.3 70B, PP10·TP8, µb4, seq 4K, global batch 2048 (strong scaling)\n");
+    for (gpus, mbs, cfg) in emulation_rows() {
+        let t0 = std::time::Instant::now();
+        let m = run_system(&gpu, &cfg, System::Megatron, 3);
+        let mp = run_system(&gpu, &cfg, System::MegatronPerseus, 3);
+        let k = run_system(&gpu, &cfg, System::Kareus, 3);
+        let (t_mp, e_mp) = max_throughput_reduction(&m, &mp);
+        let (t_k, e_k) = max_throughput_reduction(&m, &k);
+        let (iso_t, iso_e) = frontier_improvement(&mp, &k);
+        let mt = m.frontier.min_time().unwrap();
+        println!(
+            "{gpus:>6} GPUs × {mbs:>3} µbatches | iter {:.2}s {:.1}kJ/GPU | \
+             M+P ΔT {t_mp:+.1}% ΔE {e_mp:+.1}% | Kareus ΔT {t_k:+.1}% ΔE {e_k:+.1}% | \
+             iso-T {} iso-E {} | cluster {:.1} MJ/iter | ({:.0}s)",
+            mt.time,
+            mt.energy / 1e3,
+            iso_t.map(|v| format!("{v:.1}%")).unwrap_or_else(|| "—".into()),
+            iso_e.map(|v| format!("{v:.1}%")).unwrap_or_else(|| "—".into()),
+            mt.energy * gpus as f64 / 1e6,
+            t0.elapsed().as_secs_f64(),
+        );
+    }
+}

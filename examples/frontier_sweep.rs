@@ -1,0 +1,61 @@
+//! Frontier sweep: compare all systems' iteration time–energy frontiers
+//! on one workload and print iso-time / iso-energy improvements — the
+//! §6.2.2 analysis as a runnable example.
+//!
+//! Run: `cargo run --release --example frontier_sweep [-- --model llama3b --tp 4 --cp 2]`
+
+use kareus::baselines::{run_system, System};
+use kareus::cli::Args;
+use kareus::paper::compare::{frontier_improvement, max_throughput_reduction};
+use kareus::sim::gpu::GpuSpec;
+use kareus::workload::{ModelSpec, Parallelism, TrainConfig};
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let model = match args.get("model").unwrap_or("qwen1.7b") {
+        "llama3b" => ModelSpec::llama32_3b(),
+        "llama70b" => ModelSpec::llama33_70b(),
+        _ => ModelSpec::qwen3_1_7b(),
+    };
+    let cfg = TrainConfig {
+        model,
+        par: Parallelism::new(args.get_u32("tp", 8), args.get_u32("cp", 1), args.get_u32("pp", 2)),
+        microbatch: args.get_u32("microbatch", 16),
+        seq_len: args.get_u32("seq", 4096),
+        n_microbatches: args.get_u32("nmb", 8),
+        dtype_bytes: 2,
+    };
+    let gpu = GpuSpec::a100();
+    println!("workload: {} ({} GPUs)\n", cfg.label(), cfg.par.gpus());
+
+    let megatron = run_system(&gpu, &cfg, System::Megatron, 1);
+    let systems = [
+        System::MegatronPerseus,
+        System::Nanobatching,
+        System::NanobatchingPerseus,
+        System::Kareus,
+    ];
+    let mut results = vec![];
+    for sys in systems {
+        let r = run_system(&gpu, &cfg, sys, 1);
+        let (dt, de) = max_throughput_reduction(&megatron, &r);
+        println!("{:26} frontier ({} pts):", sys.name(), r.frontier.len());
+        for p in r.frontier.points() {
+            println!("    {:8.3} s  {:8.0} J", p.time, p.energy);
+        }
+        println!("    max-throughput vs Megatron: ΔT {dt:+.1}%, ΔE {de:+.1}%\n");
+        results.push(r);
+    }
+
+    // Frontier improvement vs M+P (Table 4 metrics).
+    let mp = &results[0];
+    for r in &results[1..] {
+        let (iso_t, iso_e) = frontier_improvement(mp, r);
+        println!(
+            "{:26} iso-time energy reduction: {}   iso-energy time reduction: {}",
+            r.system.name(),
+            iso_t.map(|v| format!("{v:.1}%")).unwrap_or_else(|| "—".into()),
+            iso_e.map(|v| format!("{v:.1}%")).unwrap_or_else(|| "—".into()),
+        );
+    }
+}

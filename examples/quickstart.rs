@@ -1,0 +1,52 @@
+//! Quickstart: optimize one workload with Kareus and inspect the
+//! time–energy frontier.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use kareus::baselines::System;
+use kareus::coordinator::{Coordinator, Target};
+use kareus::sim::gpu::GpuSpec;
+use kareus::workload::{ModelSpec, Parallelism, TrainConfig};
+
+fn main() {
+    // A Table-3 workload: Qwen 3 1.7B, tensor parallel 8, pipeline 2.
+    let cfg = TrainConfig {
+        model: ModelSpec::qwen3_1_7b(),
+        par: Parallelism::new(8, 1, 2),
+        microbatch: 8,
+        seq_len: 4096,
+        n_microbatches: 8,
+        dtype_bytes: 2,
+    };
+    let coord = Coordinator::new(GpuSpec::a100(), cfg);
+
+    println!("== Megatron-LM baseline (sequential, max frequency) ==");
+    let m = coord.optimize(System::Megatron, 0);
+    let mp = m.frontier.min_time().unwrap();
+    println!("  iteration: {:.3} s, {:.0} J/GPU ({:.1} TFLOP/s/GPU)\n", mp.time, mp.energy, m.tflops_per_gpu);
+
+    println!("== Kareus (joint SM allocation + launch timing + frequency) ==");
+    let k = coord.optimize(System::Kareus, 0);
+    println!("  MBO profiling overhead (simulated): {:.1} min", k.mbo_profiling_s / 60.0);
+    println!("  iteration time–energy frontier (per GPU):");
+    for p in k.frontier.points() {
+        println!("    {:.3} s   {:.0} J", p.time, p.energy);
+    }
+
+    let fast = coord.select(&k, Target::MaxThroughput).unwrap();
+    println!(
+        "\n  max-throughput point: {:.3} s ({:+.1}% vs Megatron), {:.0} J ({:+.1}%)",
+        fast.iter_time_s,
+        100.0 * (fast.iter_time_s - mp.time) / mp.time,
+        fast.iter_energy_j,
+        100.0 * (fast.iter_energy_j - mp.energy) / mp.energy,
+    );
+
+    // Pick a point under an energy budget 10% below Megatron's.
+    if let Some(dep) = coord.select(&k, Target::EnergyBudget(mp.energy * 0.9)) {
+        println!(
+            "  under a 0.9× energy budget: {:.3} s, {:.0} J ({})",
+            dep.iter_time_s, dep.iter_energy_j, dep.freq_summary
+        );
+    }
+}

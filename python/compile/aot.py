@@ -1,0 +1,160 @@
+"""AOT compile path: lower L2 (JAX model + L1 Pallas kernels) to HLO text.
+
+Emits one .hlo.txt per executable plus artifacts/manifest.json describing
+argument/result layouts so the Rust runtime can load and drive them blind.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids, so text round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--large]
+"""
+
+import argparse
+import functools
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+LEARNING_RATE = {"tiny": 1e-2, "e2e": 3e-3, "e2e-100m": 1e-3}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple for stable ABI)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype="float32"):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def _arg_entry(shape, dtype):
+    return {"shape": list(shape), "dtype": str(dtype)}
+
+
+def lower_init(cfg: M.ModelConfig):
+    def fn(seed):
+        return tuple(M.init_params(cfg, seed))
+
+    lowered = jax.jit(fn).lower(_spec((), "uint32"))
+    args = [_arg_entry((), "uint32")]
+    outs = [_arg_entry(s, "float32") for _, s in cfg.param_specs()]
+    return to_hlo_text(lowered), args, outs
+
+
+def lower_train_step(cfg: M.ModelConfig, lr: float):
+    n = len(cfg.param_specs())
+
+    def fn(*flat):
+        state = list(flat[: 3 * n])
+        step = flat[3 * n]
+        tokens = flat[3 * n + 1]
+        loss, new_state, new_step = M.train_step(cfg, lr, state, step, tokens)
+        return tuple([loss] + new_state + [new_step])
+
+    state_specs = [_spec(s) for _, s in cfg.param_specs()] * 3
+    step_spec = _spec((), "int32")
+    tok_spec = _spec((cfg.batch, cfg.seq_len + 1), "int32")
+    lowered = jax.jit(fn).lower(*state_specs, step_spec, tok_spec)
+    args = (
+        [_arg_entry(s, "float32") for _, s in cfg.param_specs()] * 3
+        + [_arg_entry((), "int32"), _arg_entry((cfg.batch, cfg.seq_len + 1), "int32")]
+    )
+    outs = (
+        [_arg_entry((), "float32")]
+        + [_arg_entry(s, "float32") for _, s in cfg.param_specs()] * 3
+        + [_arg_entry((), "int32")]
+    )
+    return to_hlo_text(lowered), args, outs
+
+
+def lower_fwd(cfg: M.ModelConfig, use_pallas: bool):
+    def fn(*flat):
+        params = list(flat[:-1])
+        tokens = flat[-1]
+        return (M.forward(cfg, params, tokens, use_pallas=use_pallas),)
+
+    param_specs = [_spec(s) for _, s in cfg.param_specs()]
+    tok_spec = _spec((cfg.batch, cfg.seq_len), "int32")
+    lowered = jax.jit(fn).lower(*param_specs, tok_spec)
+    args = [_arg_entry(s, "float32") for _, s in cfg.param_specs()] + [
+        _arg_entry((cfg.batch, cfg.seq_len), "int32")
+    ]
+    outs = [_arg_entry((cfg.batch, cfg.seq_len, cfg.vocab), "float32")]
+    return to_hlo_text(lowered), args, outs
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--large", action="store_true", help="also emit the ~100M-param e2e config")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"artifacts": {}, "configs": {}}
+    jobs = [
+        ("init_tiny", lambda: lower_init(M.CONFIGS["tiny"])),
+        ("fwd_ref_tiny", lambda: lower_fwd(M.CONFIGS["tiny"], use_pallas=False)),
+        ("fwd_pallas_tiny", lambda: lower_fwd(M.CONFIGS["tiny"], use_pallas=True)),
+        ("train_step_tiny", lambda: lower_train_step(M.CONFIGS["tiny"], LEARNING_RATE["tiny"])),
+        ("init_e2e", lambda: lower_init(M.CONFIGS["e2e"])),
+        ("train_step_e2e", lambda: lower_train_step(M.CONFIGS["e2e"], LEARNING_RATE["e2e"])),
+    ]
+    if args.large:
+        jobs += [
+            ("init_e2e-100m", lambda: lower_init(M.CONFIGS["e2e-100m"])),
+            (
+                "train_step_e2e-100m",
+                lambda: lower_train_step(M.CONFIGS["e2e-100m"], LEARNING_RATE["e2e-100m"]),
+            ),
+        ]
+
+    for name, job in jobs:
+        t0 = time.time()
+        text, arg_specs, out_specs = job()
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "args": arg_specs,
+            "outputs": out_specs,
+        }
+        print(f"lowered {name}: {len(text)} chars in {time.time() - t0:.1f}s")
+
+    for cname, cfg in M.CONFIGS.items():
+        if cname == "e2e-100m" and not args.large:
+            continue
+        manifest["configs"][cname] = {
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+            "d_ff": cfg.d_ff,
+            "seq_len": cfg.seq_len,
+            "batch": cfg.batch,
+            "n_param_arrays": len(cfg.param_specs()),
+            "n_params": int(cfg.n_params()),
+            "lr": LEARNING_RATE[cname],
+            "param_names": [n for n, _ in cfg.param_specs()],
+        }
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote manifest with {len(manifest['artifacts'])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

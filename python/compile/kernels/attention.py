@@ -1,0 +1,117 @@
+"""L1: blocked causal flash attention as a Pallas kernel.
+
+This is the compute hot-spot of the paper's Attention-AllReduce partition
+(the "FlashAttention" box in Figure 3). The kernel uses the online-softmax
+formulation: the grid tiles the query sequence, and each program streams
+key/value blocks from HBM through VMEM, maintaining running max / sum /
+accumulator state.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's CUDA
+kernel tiles for shared memory and warps; here BlockSpec expresses the
+HBM<->VMEM schedule, and block sizes are MXU-friendly multiples. The kernel
+MUST run with interpret=True in this environment — real-TPU lowering emits
+a Mosaic custom-call the CPU PJRT plugin cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_Q = 64
+DEFAULT_BLOCK_K = 64
+NEG_INF = -1e30
+
+
+def _flash_attention_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int, causal: bool, scale: float):
+    """One grid program: one query block vs. all (visible) key blocks.
+
+    Refs (VMEM blocks):
+      q_ref: [block_q, d]    -- this program's query tile
+      k_ref: [seq_k, d]      -- full keys (streamed in block_k chunks below)
+      v_ref: [seq_k, d]      -- full values
+      o_ref: [block_q, d]    -- output tile
+    """
+    block_q = q_ref.shape[0]
+    seq_k = k_ref.shape[0]
+    d = q_ref.shape[1]
+    q_blk_idx = pl.program_id(1)
+    q = q_ref[...].astype(jnp.float32) * scale
+
+    # Running online-softmax state.
+    m0 = jnp.full((block_q,), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((block_q,), dtype=jnp.float32)
+    acc0 = jnp.zeros((block_q, d), dtype=jnp.float32)
+
+    num_k_blocks = pl.cdiv(seq_k, block_k)
+    if causal:
+        # Skip key blocks strictly after the last query row of this tile.
+        last_q_row = (q_blk_idx + 1) * block_q - 1
+        num_visible = pl.cdiv(last_q_row + 1, block_k)
+        num_visible = jnp.minimum(num_visible, num_k_blocks)
+    else:
+        num_visible = num_k_blocks
+
+    def body(kb, carry):
+        m_i, l_i, acc = carry
+        k_blk = pl.load(k_ref, (pl.dslice(kb * block_k, block_k), slice(None))).astype(jnp.float32)
+        v_blk = pl.load(v_ref, (pl.dslice(kb * block_k, block_k), slice(None))).astype(jnp.float32)
+        s = q @ k_blk.T  # [block_q, block_k]
+        if causal:
+            q_rows = q_blk_idx * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+            k_cols = kb * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(q_rows >= k_cols, s, NEG_INF)
+        m_new = jnp.maximum(m_i, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_i - m_new)
+        l_new = l_i * alpha + jnp.sum(p, axis=1)
+        acc_new = acc * alpha[:, None] + p @ v_blk
+        return m_new, l_new, acc_new
+
+    m_f, l_f, acc_f = jax.lax.fori_loop(0, num_visible, body, (m0, l0, acc0))
+    # Rows with no visible keys (cannot happen for causal self-attention,
+    # but guard the division anyway).
+    l_safe = jnp.where(l_f == 0.0, 1.0, l_f)
+    o_ref[...] = (acc_f / l_safe[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k"))
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    causal: bool = True,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+) -> jax.Array:
+    """Blocked causal attention. q, k, v: [heads, seq, head_dim].
+
+    Grid: (heads, seq_q / block_q). Each program holds one query tile in
+    VMEM and streams keys/values.
+    """
+    assert q.ndim == 3, f"expected [heads, seq, d], got {q.shape}"
+    heads, seq_q, d = q.shape
+    seq_k = k.shape[1]
+    block_q = min(block_q, seq_q)
+    block_k = min(block_k, seq_k)
+    assert seq_q % block_q == 0 and seq_k % block_k == 0, (
+        f"seq ({seq_q},{seq_k}) must be divisible by blocks ({block_q},{block_k})"
+    )
+    scale = 1.0 / (d ** 0.5)
+
+    kernel = functools.partial(
+        _flash_attention_kernel, block_k=block_k, causal=causal, scale=scale
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(heads, seq_q // block_q),
+        in_specs=[
+            pl.BlockSpec((None, block_q, d), lambda h, i: (h, i, 0)),
+            pl.BlockSpec((None, seq_k, d), lambda h, i: (h, 0, 0)),
+            pl.BlockSpec((None, seq_k, d), lambda h, i: (h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, d), lambda h, i: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=True,  # CPU PJRT cannot execute Mosaic custom-calls.
+    )(q, k, v)

@@ -1,0 +1,48 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness signal).
+
+Every Pallas kernel in this package has an exact (up to float tolerance)
+counterpart here. pytest (python/tests/) sweeps shapes/dtypes with
+hypothesis and asserts allclose between the kernel and its oracle; the
+same oracles back the `fwd_ref` AOT artifact that the Rust integration
+tests compare against `fwd_pallas`.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm_ref(x: jax.Array, gamma: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """RMSNorm over the last axis: x * rsqrt(mean(x^2) + eps) * gamma."""
+    ms = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(ms + eps) * gamma).astype(x.dtype)
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, causal: bool = True) -> jax.Array:
+    """Scaled dot-product attention oracle.
+
+    q, k, v: [..., seq, head_dim]; returns the same shape as q.
+    """
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
+    logits = jnp.einsum("...qd,...kd->...qk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    if causal:
+        sq, sk = logits.shape[-2], logits.shape[-1]
+        mask = jnp.tril(jnp.ones((sq, sk), dtype=bool), k=sk - sq)
+        logits = jnp.where(mask, logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("...qk,...kd->...qd", probs, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def fused_rmsnorm_matmul_ref(
+    x: jax.Array, gamma: jax.Array, w: jax.Array, eps: float = 1e-5
+) -> jax.Array:
+    """Oracle for the fused RMSNorm + matmul kernel: rmsnorm(x, gamma) @ w."""
+    return (rmsnorm_ref(x, gamma, eps).astype(jnp.float32) @ w.astype(jnp.float32)).astype(
+        x.dtype
+    )
+
+
+def swiglu_ref(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array) -> jax.Array:
+    """SwiGLU MLP oracle: (silu(x @ w_gate) * (x @ w_up)) @ w_down."""
+    xf = x.astype(jnp.float32)
+    out = (jax.nn.silu(xf @ w_gate.astype(jnp.float32)) * (xf @ w_up.astype(jnp.float32))) @ w_down.astype(jnp.float32)
+    return out.astype(x.dtype)

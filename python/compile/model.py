@@ -1,0 +1,200 @@
+"""L2: decoder-only transformer LM in JAX (build-time only).
+
+Forward, cross-entropy loss, backward, and a fused AdamW train step. The
+attention layer can run through the L1 Pallas flash-attention kernel
+(`use_pallas=True`) or the pure-jnp oracle; both lower to the same HLO
+artifact format consumed by the Rust runtime.
+
+Parameters are a flat, deterministically-ordered list of arrays so the Rust
+side can thread `(params, opt_m, opt_v)` through repeated `train_step`
+executions without understanding the pytree structure. The ordering is
+recorded in artifacts/manifest.json by aot.py.
+"""
+
+import dataclasses
+import functools
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.attention import flash_attention
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Decoder-only transformer configuration (Llama-style, RoPE + SwiGLU)."""
+
+    vocab: int = 256
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 4
+    d_ff: int = 1024  # SwiGLU hidden size
+    seq_len: int = 128
+    batch: int = 8
+    rope_theta: float = 10000.0
+    eps: float = 1e-5
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def param_specs(self) -> List[Tuple[str, Tuple[int, ...]]]:
+        """Flat (name, shape) list; the canonical parameter ordering."""
+        specs: List[Tuple[str, Tuple[int, ...]]] = [("embed", (self.vocab, self.d_model))]
+        for i in range(self.n_layers):
+            specs += [
+                (f"layer{i}.attn_norm", (self.d_model,)),
+                (f"layer{i}.wq", (self.d_model, self.d_model)),
+                (f"layer{i}.wk", (self.d_model, self.d_model)),
+                (f"layer{i}.wv", (self.d_model, self.d_model)),
+                (f"layer{i}.wo", (self.d_model, self.d_model)),
+                (f"layer{i}.mlp_norm", (self.d_model,)),
+                (f"layer{i}.w_gate", (self.d_model, self.d_ff)),
+                (f"layer{i}.w_up", (self.d_model, self.d_ff)),
+                (f"layer{i}.w_down", (self.d_ff, self.d_model)),
+            ]
+        specs += [("final_norm", (self.d_model,)), ("lm_head", (self.d_model, self.vocab))]
+        return specs
+
+    def n_params(self) -> int:
+        return sum(int(jnp.prod(jnp.asarray(s))) for _, s in self.param_specs())
+
+
+def init_params(cfg: ModelConfig, seed: jax.Array) -> List[jax.Array]:
+    """Initialize the flat parameter list from a scalar uint32 seed.
+
+    Scaled-normal init for matrices, ones for norm gains. Lowered to its own
+    HLO artifact so the Rust trainer can materialize parameters on-device.
+    """
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for name, shape in cfg.param_specs():
+        key, sub = jax.random.split(key)
+        if len(shape) == 1:  # norm gain
+            params.append(jnp.ones(shape, jnp.float32))
+        else:
+            fan_in = shape[0]
+            std = 1.0 / jnp.sqrt(jnp.asarray(fan_in, jnp.float32))
+            params.append(jax.random.normal(sub, shape, jnp.float32) * std)
+    return params
+
+
+def _rope(x: jax.Array, theta: float) -> jax.Array:
+    """Rotary position embedding. x: [heads, seq, head_dim]."""
+    _, seq, d = x.shape
+    half = d // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = jnp.arange(seq, dtype=jnp.float32)[:, None] * freqs[None, :]  # [seq, half]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def forward(
+    cfg: ModelConfig, params: List[jax.Array], tokens: jax.Array, use_pallas: bool = False
+) -> jax.Array:
+    """Forward pass. tokens: [batch, seq] int32 -> logits [batch, seq, vocab]."""
+    specs = cfg.param_specs()
+    p = {name: arr for (name, _), arr in zip(specs, params)}
+    x = p["embed"][tokens]  # [b, s, d]
+
+    attn = flash_attention if use_pallas else ref.attention_ref
+
+    def block(x, i):
+        h = ref.rmsnorm_ref(x, p[f"layer{i}.attn_norm"], cfg.eps)
+        b, s, d = h.shape
+        nh, hd = cfg.n_heads, cfg.head_dim
+
+        def heads_of(w):
+            y = h @ w  # [b, s, d]
+            return y.reshape(b, s, nh, hd).transpose(0, 2, 1, 3)  # [b, nh, s, hd]
+
+        q, k, v = heads_of(p[f"layer{i}.wq"]), heads_of(p[f"layer{i}.wk"]), heads_of(p[f"layer{i}.wv"])
+        q = jax.vmap(lambda t: _rope(t, cfg.rope_theta))(q)
+        k = jax.vmap(lambda t: _rope(t, cfg.rope_theta))(k)
+        o = jax.vmap(lambda qq, kk, vv: attn(qq, kk, vv))(q, k, v)  # [b, nh, s, hd]
+        o = o.transpose(0, 2, 1, 3).reshape(b, s, d) @ p[f"layer{i}.wo"]
+        x = x + o
+        h2 = ref.rmsnorm_ref(x, p[f"layer{i}.mlp_norm"], cfg.eps)
+        x = x + ref.swiglu_ref(
+            h2, p[f"layer{i}.w_gate"], p[f"layer{i}.w_up"], p[f"layer{i}.w_down"]
+        )
+        return x
+
+    for i in range(cfg.n_layers):
+        x = block(x, i)
+    x = ref.rmsnorm_ref(x, p["final_norm"], cfg.eps)
+    return x @ p["lm_head"]
+
+
+def loss_fn(
+    cfg: ModelConfig, params: List[jax.Array], tokens: jax.Array, use_pallas: bool = False
+) -> jax.Array:
+    """Next-token cross-entropy. tokens: [batch, seq_len + 1] int32."""
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    logits = forward(cfg, params, inp, use_pallas)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+# ---------------------------------------------------------------------------
+# AdamW train step (flat-state layout: params ++ m ++ v, plus step counter)
+# ---------------------------------------------------------------------------
+
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.95, 1e-8
+WEIGHT_DECAY = 0.01
+
+
+def train_step(
+    cfg: ModelConfig,
+    lr: float,
+    state: List[jax.Array],
+    step: jax.Array,
+    tokens: jax.Array,
+) -> Tuple[jax.Array, List[jax.Array], jax.Array]:
+    """One fused fwd+bwd+AdamW update.
+
+    state = flat [params..., m..., v...] (3 * n_params arrays).
+    Returns (loss, new_state, new_step); the Rust trainer threads outputs
+    back into inputs each step.
+    """
+    n = len(cfg.param_specs())
+    assert len(state) == 3 * n, f"state len {len(state)} != 3*{n}"
+    params, m, v = state[:n], state[n : 2 * n], state[2 * n :]
+
+    loss, grads = jax.value_and_grad(lambda ps: loss_fn(cfg, ps, tokens))(params)
+
+    t = (step + 1).astype(jnp.float32)
+    bc1 = 1.0 - ADAM_B1 ** t
+    bc2 = 1.0 - ADAM_B2 ** t
+    new_params, new_m, new_v = [], [], []
+    for pi, mi, vi, gi, (name, _) in zip(params, m, v, grads, cfg.param_specs()):
+        mi2 = ADAM_B1 * mi + (1.0 - ADAM_B1) * gi
+        vi2 = ADAM_B2 * vi + (1.0 - ADAM_B2) * jnp.square(gi)
+        update = (mi2 / bc1) / (jnp.sqrt(vi2 / bc2) + ADAM_EPS)
+        decay = 0.0 if pi.ndim == 1 else WEIGHT_DECAY  # no decay on norm gains
+        new_params.append(pi - lr * (update + decay * pi))
+        new_m.append(mi2)
+        new_v.append(vi2)
+    return loss, new_params + new_m + new_v, step + 1
+
+
+def zeros_like_params(cfg: ModelConfig) -> List[jax.Array]:
+    return [jnp.zeros(shape, jnp.float32) for _, shape in cfg.param_specs()]
+
+
+# Named configurations used by aot.py / the Rust trainer.
+CONFIGS = {
+    # Pallas-vs-ref numerics check (small so interpret-mode is fast).
+    "tiny": ModelConfig(vocab=64, d_model=64, n_layers=2, n_heads=2, d_ff=128, seq_len=64, batch=2),
+    # E2E training default (~13M params), a few hundred steps on CPU PJRT.
+    "e2e": ModelConfig(vocab=512, d_model=320, n_layers=6, n_heads=5, d_ff=896, seq_len=128, batch=8),
+    # ~100M-parameter config for the full-scale E2E run (slower per step).
+    "e2e-100m": ModelConfig(
+        vocab=4096, d_model=768, n_layers=12, n_heads=12, d_ff=2048, seq_len=256, batch=4
+    ),
+}

@@ -1,0 +1,173 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (ref.py).
+
+Hypothesis sweeps shapes/dtypes/block sizes; assert_allclose against the
+oracle is the core correctness signal for the kernels that end up inside
+the AOT HLO artifacts.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.attention import flash_attention
+from compile.kernels.fused_mlp import fused_rmsnorm_matmul
+
+jax.config.update("jax_enable_x64", False)
+
+
+def rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return (jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("heads", [1, 2, 4])
+    @pytest.mark.parametrize("seq", [64, 128])
+    @pytest.mark.parametrize("d", [16, 32, 64])
+    def test_matches_ref_causal(self, heads, seq, d):
+        q, k, v = (rand(i, (heads, seq, d)) for i in range(3))
+        out = flash_attention(q, k, v, causal=True)
+        exp = ref.attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(out, exp, atol=2e-5, rtol=2e-5)
+
+    @pytest.mark.parametrize("seq", [64, 128])
+    def test_matches_ref_noncausal(self, seq):
+        q, k, v = (rand(i + 10, (2, seq, 32)) for i in range(3))
+        out = flash_attention(q, k, v, causal=False)
+        exp = ref.attention_ref(q, k, v, causal=False)
+        np.testing.assert_allclose(out, exp, atol=2e-5, rtol=2e-5)
+
+    @pytest.mark.parametrize("block_q,block_k", [(16, 16), (32, 64), (64, 32), (128, 128)])
+    def test_block_size_invariance(self, block_q, block_k):
+        q, k, v = (rand(i + 20, (2, 128, 32)) for i in range(3))
+        out = flash_attention(q, k, v, block_q=block_q, block_k=block_k)
+        exp = ref.attention_ref(q, k, v)
+        np.testing.assert_allclose(out, exp, atol=2e-5, rtol=2e-5)
+
+    def test_causal_masks_future(self):
+        """Perturbing future keys/values must not change earlier outputs."""
+        q, k, v = (rand(i + 30, (1, 64, 16)) for i in range(3))
+        out1 = flash_attention(q, k, v)
+        k2 = k.at[:, 48:, :].set(99.0)
+        v2 = v.at[:, 48:, :].set(-99.0)
+        out2 = flash_attention(q, k2, v2)
+        np.testing.assert_allclose(out1[:, :48], out2[:, :48], atol=1e-6)
+
+    def test_first_row_attends_only_self(self):
+        q, k, v = (rand(i + 40, (1, 64, 16)) for i in range(3))
+        out = flash_attention(q, k, v)
+        np.testing.assert_allclose(out[:, 0, :], v[:, 0, :], atol=1e-5, rtol=1e-5)
+
+    def test_large_logit_stability(self):
+        """Online softmax must survive large logits without overflow."""
+        q = rand(50, (1, 64, 16), scale=30.0)
+        k = rand(51, (1, 64, 16), scale=30.0)
+        v = rand(52, (1, 64, 16))
+        out = flash_attention(q, k, v)
+        assert bool(jnp.all(jnp.isfinite(out)))
+        exp = ref.attention_ref(q, k, v)
+        np.testing.assert_allclose(out, exp, atol=1e-4, rtol=1e-4)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        heads=st.integers(1, 3),
+        seq_pow=st.integers(4, 7),  # 16..128
+        d=st.sampled_from([8, 16, 32]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_shape_sweep(self, heads, seq_pow, d, seed):
+        seq = 2 ** seq_pow
+        q, k, v = (rand(seed + i, (heads, seq, d)) for i in range(3))
+        bq = min(32, seq)
+        out = flash_attention(q, k, v, block_q=bq, block_k=bq)
+        exp = ref.attention_ref(q, k, v)
+        np.testing.assert_allclose(out, exp, atol=3e-5, rtol=3e-5)
+
+    def test_bfloat16(self):
+        q, k, v = (rand(i + 60, (2, 64, 32), dtype=jnp.bfloat16) for i in range(3))
+        out = flash_attention(q, k, v)
+        exp = ref.attention_ref(q, k, v)
+        assert out.dtype == jnp.bfloat16
+        np.testing.assert_allclose(
+            out.astype(jnp.float32), exp.astype(jnp.float32), atol=3e-2, rtol=3e-2
+        )
+
+    def test_rejects_bad_rank(self):
+        with pytest.raises(AssertionError):
+            flash_attention(jnp.zeros((64, 16)), jnp.zeros((64, 16)), jnp.zeros((64, 16)))
+
+
+# ---------------------------------------------------------------------------
+# fused rmsnorm + matmul
+# ---------------------------------------------------------------------------
+
+class TestFusedRmsnormMatmul:
+    @pytest.mark.parametrize("m,d,n", [(64, 96, 256), (128, 64, 128), (64, 320, 512)])
+    def test_matches_ref(self, m, d, n):
+        x, g, w = rand(1, (m, d)), rand(2, (d,)), rand(3, (d, n))
+        out = fused_rmsnorm_matmul(x, g, w)
+        exp = ref.fused_rmsnorm_matmul_ref(x, g, w)
+        np.testing.assert_allclose(out, exp, atol=1e-4, rtol=1e-4)
+
+    @pytest.mark.parametrize("block_m,block_n", [(16, 32), (64, 64), (32, 128)])
+    def test_block_size_invariance(self, block_m, block_n):
+        x, g, w = rand(4, (64, 96)), rand(5, (96,)), rand(6, (96, 128))
+        out = fused_rmsnorm_matmul(x, g, w, block_m=block_m, block_n=block_n)
+        exp = ref.fused_rmsnorm_matmul_ref(x, g, w)
+        np.testing.assert_allclose(out, exp, atol=1e-4, rtol=1e-4)
+
+    def test_norm_scale_invariance(self):
+        """RMSNorm output is invariant to uniform scaling of the input row."""
+        x, g, w = rand(7, (32, 64)), rand(8, (64,)), rand(9, (64, 64))
+        out1 = fused_rmsnorm_matmul(x, g, w)
+        out2 = fused_rmsnorm_matmul(x * 7.5, g, w)
+        np.testing.assert_allclose(out1, out2, atol=1e-3, rtol=1e-3)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        m=st.sampled_from([16, 32, 64]),
+        d=st.sampled_from([32, 64, 128]),
+        n=st.sampled_from([32, 64, 128, 256]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_shape_sweep(self, m, d, n, seed):
+        x, g, w = rand(seed, (m, d)), rand(seed + 1, (d,)), rand(seed + 2, (d, n))
+        out = fused_rmsnorm_matmul(x, g, w, block_m=min(16, m), block_n=min(32, n))
+        exp = ref.fused_rmsnorm_matmul_ref(x, g, w)
+        np.testing.assert_allclose(out, exp, atol=1e-4, rtol=1e-4)
+
+    def test_gamma_zero_gives_zero(self):
+        x = rand(10, (32, 64))
+        w = rand(11, (64, 32))
+        out = fused_rmsnorm_matmul(x, jnp.zeros((64,)), w)
+        np.testing.assert_allclose(out, jnp.zeros((32, 32)), atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# oracle self-consistency
+# ---------------------------------------------------------------------------
+
+class TestOracles:
+    def test_rmsnorm_unit_rms(self):
+        x = rand(20, (16, 64), scale=3.0)
+        y = ref.rmsnorm_ref(x, jnp.ones((64,)))
+        rms = jnp.sqrt(jnp.mean(jnp.square(y), axis=-1))
+        np.testing.assert_allclose(rms, jnp.ones(16), atol=1e-3, rtol=1e-3)
+
+    def test_attention_rows_are_convex_combos(self):
+        """Non-causal attention output rows lie in the convex hull of v rows."""
+        q, k = rand(21, (1, 32, 16)), rand(22, (1, 32, 16))
+        v = jnp.ones((1, 32, 16))
+        out = ref.attention_ref(q, k, v, causal=False)
+        np.testing.assert_allclose(out, jnp.ones_like(out), atol=1e-5)
+
+    def test_swiglu_zero_input(self):
+        wg, wu, wd = rand(23, (64, 128)), rand(24, (64, 128)), rand(25, (128, 64))
+        out = ref.swiglu_ref(jnp.zeros((8, 64)), wg, wu, wd)
+        np.testing.assert_allclose(out, jnp.zeros((8, 64)), atol=1e-7)

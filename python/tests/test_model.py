@@ -1,0 +1,152 @@
+"""L2 correctness: model shapes, loss behaviour, train-step convergence,
+pallas/ref forward agreement, and AOT artifact integrity."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    return M.CONFIGS["tiny"]
+
+
+@pytest.fixture(scope="module")
+def tiny_params(tiny):
+    return M.init_params(tiny, jnp.uint32(0))
+
+
+def synthetic_tokens(cfg, seed=0, n_extra=1):
+    """Learnable synthetic stream: affine next-token map + noise (mirrors
+    the Rust trainer's corpus generator)."""
+    rng = np.random.default_rng(seed)
+    b, s = cfg.batch, cfg.seq_len + n_extra - 1
+    toks = np.zeros((b, s + 1), dtype=np.int32)
+    toks[:, 0] = rng.integers(0, cfg.vocab, size=b)
+    for t in range(s):
+        toks[:, t + 1] = (toks[:, t] * 31 + 17) % cfg.vocab
+    return jnp.asarray(toks)
+
+
+class TestInit:
+    def test_param_count_matches_specs(self, tiny, tiny_params):
+        assert len(tiny_params) == len(tiny.param_specs())
+        for arr, (_, shape) in zip(tiny_params, tiny.param_specs()):
+            assert arr.shape == shape
+
+    def test_norm_gains_are_ones(self, tiny, tiny_params):
+        for arr, (name, _) in zip(tiny_params, tiny.param_specs()):
+            if "norm" in name:
+                np.testing.assert_allclose(arr, jnp.ones_like(arr))
+
+    def test_deterministic(self, tiny):
+        p1 = M.init_params(tiny, jnp.uint32(7))
+        p2 = M.init_params(tiny, jnp.uint32(7))
+        for a, b in zip(p1, p2):
+            np.testing.assert_array_equal(a, b)
+
+    def test_seed_changes_params(self, tiny):
+        p1 = M.init_params(tiny, jnp.uint32(1))
+        p2 = M.init_params(tiny, jnp.uint32(2))
+        assert any(not np.array_equal(a, b) for a, b in zip(p1, p2))
+
+
+class TestForward:
+    def test_logits_shape(self, tiny, tiny_params):
+        toks = synthetic_tokens(tiny)[:, : tiny.seq_len]
+        logits = M.forward(tiny, tiny_params, toks)
+        assert logits.shape == (tiny.batch, tiny.seq_len, tiny.vocab)
+
+    def test_causality(self, tiny, tiny_params):
+        """Changing a future token must not change earlier logits."""
+        toks = synthetic_tokens(tiny)[:, : tiny.seq_len]
+        l1 = M.forward(tiny, tiny_params, toks)
+        toks2 = toks.at[:, -1].set((toks[:, -1] + 1) % tiny.vocab)
+        l2 = M.forward(tiny, tiny_params, toks2)
+        np.testing.assert_allclose(l1[:, :-1], l2[:, :-1], atol=1e-5, rtol=1e-4)
+
+    def test_pallas_matches_ref_forward(self, tiny, tiny_params):
+        """The L1-kernel forward must agree with the oracle forward — the
+        same equivalence the Rust integration test checks on HLO artifacts."""
+        toks = synthetic_tokens(tiny)[:, : tiny.seq_len]
+        l_ref = M.forward(tiny, tiny_params, toks, use_pallas=False)
+        l_pal = M.forward(tiny, tiny_params, toks, use_pallas=True)
+        np.testing.assert_allclose(l_ref, l_pal, atol=5e-4, rtol=5e-4)
+
+    def test_initial_loss_near_uniform(self, tiny, tiny_params):
+        toks = synthetic_tokens(tiny)
+        loss = M.loss_fn(tiny, tiny_params, toks)
+        assert abs(float(loss) - np.log(tiny.vocab)) < 0.7
+
+
+class TestTrainStep:
+    def test_loss_decreases(self, tiny):
+        params = M.init_params(tiny, jnp.uint32(0))
+        state = params + M.zeros_like_params(tiny) + M.zeros_like_params(tiny)
+        step = jnp.int32(0)
+        fn = jax.jit(lambda st, sp, tk: M.train_step(tiny, 1e-2, st, sp, tk))
+        losses = []
+        for i in range(40):
+            toks = synthetic_tokens(tiny, seed=i)
+            loss, state, step = fn(state, step, toks)
+            losses.append(float(loss))
+        # The trajectory is noisy step-to-step; compare a tail average.
+        tail = sum(losses[-5:]) / 5.0
+        assert tail < losses[0] * 0.5, f"no convergence: {losses[0]} -> tail {tail} ({losses})"
+
+    def test_step_counter_increments(self, tiny):
+        params = M.init_params(tiny, jnp.uint32(0))
+        state = params + M.zeros_like_params(tiny) + M.zeros_like_params(tiny)
+        _, _, step = M.train_step(tiny, 1e-2, state, jnp.int32(3), synthetic_tokens(tiny))
+        assert int(step) == 4
+
+    def test_state_layout_stable(self, tiny):
+        n = len(tiny.param_specs())
+        params = M.init_params(tiny, jnp.uint32(0))
+        state = params + M.zeros_like_params(tiny) + M.zeros_like_params(tiny)
+        loss, new_state, _ = M.train_step(tiny, 1e-2, state, jnp.int32(0), synthetic_tokens(tiny))
+        assert len(new_state) == 3 * n
+        for a, b in zip(state, new_state):
+            assert a.shape == b.shape
+
+
+class TestArtifacts:
+    """Integrity of the AOT outputs consumed by the Rust runtime."""
+
+    ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        path = os.path.join(self.ART, "manifest.json")
+        if not os.path.exists(path):
+            pytest.skip("artifacts not built (run `make artifacts`)")
+        with open(path) as f:
+            return json.load(f)
+
+    def test_all_artifacts_exist(self, manifest):
+        for name, art in manifest["artifacts"].items():
+            assert os.path.exists(os.path.join(self.ART, art["file"])), name
+
+    def test_hlo_text_is_parseable_header(self, manifest):
+        for name, art in manifest["artifacts"].items():
+            with open(os.path.join(self.ART, art["file"])) as f:
+                head = f.read(200)
+            assert "HloModule" in head, f"{name} missing HloModule header"
+
+    def test_train_step_arg_layout(self, manifest):
+        cfg = manifest["configs"]["tiny"]
+        art = manifest["artifacts"]["train_step_tiny"]
+        n = cfg["n_param_arrays"]
+        assert len(art["args"]) == 3 * n + 2
+        assert len(art["outputs"]) == 3 * n + 2
+        assert art["args"][-1]["shape"] == [cfg["batch"], cfg["seq_len"] + 1]
+
+    def test_manifest_param_names_match_model(self, manifest):
+        cfg = M.CONFIGS["tiny"]
+        assert manifest["configs"]["tiny"]["param_names"] == [n for n, _ in cfg.param_specs()]

@@ -1,0 +1,136 @@
+//! Microbenchmarks of the optimizer stack's hot paths — the §Perf
+//! targets in EXPERIMENTS.md. Run via `cargo bench --bench hot_paths`.
+
+use kareus::frontier::{Frontier, Point};
+use kareus::mbo::space;
+use kareus::partition::{detect_partitions, Partition};
+use kareus::pipeline::{greedy_fill, simulate_1f1b, StageMenu};
+use kareus::profiler::Profiler;
+use kareus::sim::exec::{execute_partition, LaunchAt, Schedule};
+use kareus::sim::gpu::GpuSpec;
+use kareus::surrogate::{Gbdt, GbdtParams};
+use kareus::util::bench::bench;
+use kareus::util::rng::Rng;
+use kareus::workload::{build_nanobatch_pass, Dir, ModelSpec, Parallelism, TrainConfig};
+
+fn test_partition() -> (GpuSpec, Partition) {
+    let gpu = GpuSpec::a100();
+    let cfg = TrainConfig {
+        model: ModelSpec::qwen3_1_7b(),
+        par: Parallelism::new(8, 1, 2),
+        microbatch: 8,
+        seq_len: 4096,
+        n_microbatches: 8,
+        dtype_bytes: 2,
+    };
+    let w = build_nanobatch_pass(&cfg, Dir::Fwd, false, false);
+    let parts = detect_partitions(&gpu, &w, true);
+    (gpu, parts[0].clone())
+}
+
+fn main() {
+    println!("== kareus hot-path benchmarks ==");
+    let (gpu, part) = test_partition();
+    let sched = Schedule { comm_sms: 12, launch: LaunchAt::WithComp(1), freq_mhz: 1200 };
+
+    // 1. The schedule executor — called ~10^5–10^6 times per MBO sweep.
+    bench("sim::execute_partition (overlap)", 0.5, || {
+        std::hint::black_box(execute_partition(
+            &gpu,
+            &part.comps,
+            part.comm.as_ref(),
+            &sched,
+            30.0,
+            Some(gpu.tdp_w),
+        ));
+    });
+    bench("sim::execute_partition (sequential)", 0.5, || {
+        std::hint::black_box(execute_partition(
+            &gpu,
+            &part.comps,
+            part.comm.as_ref(),
+            &Schedule::sequential(1200),
+            30.0,
+            Some(gpu.tdp_w),
+        ));
+    });
+
+    // 2. Candidate-space enumeration.
+    bench("mbo::candidate_space", 0.3, || {
+        std::hint::black_box(space::candidate_space(&gpu, &part, 8));
+    });
+
+    // 3. GBDT surrogate training (Appendix C hyperparameters) + predict.
+    let mut rng = Rng::new(1);
+    let x: Vec<Vec<f64>> = (0..150)
+        .map(|_| vec![rng.range_f64(900.0, 1410.0), rng.below(30) as f64, rng.below(5) as f64])
+        .collect();
+    let y: Vec<f64> = x.iter().map(|v| 1000.0 / v[0] + (v[1] - 12.0).abs()).collect();
+    bench("surrogate::Gbdt::fit (150 pts, 100 rounds)", 1.0, || {
+        std::hint::black_box(Gbdt::fit(&x, &y, &GbdtParams::default()));
+    });
+    let model = Gbdt::fit(&x, &y, &GbdtParams::default());
+    bench("surrogate::Gbdt::predict x1000", 0.3, || {
+        let mut acc = 0.0;
+        for xi in &x {
+            acc += model.predict(xi);
+        }
+        std::hint::black_box(acc);
+    });
+
+    // 4. Hypervolume / HVI over a realistic frontier.
+    let pts: Vec<Point> =
+        (0..64).map(|i| Point::new(1.0 + i as f64 * 0.05, 100.0 - i as f64, i)).collect();
+    let front = Frontier::from_points(pts);
+    bench("frontier::hvi x1000", 0.3, || {
+        let mut acc = 0.0;
+        for i in 0..1000 {
+            acc += front.hvi((1.5 + (i % 50) as f64 * 0.01, 80.0), (10.0, 200.0));
+        }
+        std::hint::black_box(acc);
+    });
+
+    // 5. 1F1B simulation + Perseus greedy at testbed and emulation scale.
+    let menu_pts: Vec<(f64, f64, f64)> =
+        (0..18).map(|i| (0.1 + 0.004 * i as f64, 60.0 - 1.2 * i as f64, 40.0 - i as f64)).collect();
+    let mk_menu = || {
+        let f = kareus::compose::MbFrontier::from_points(
+            menu_pts
+                .iter()
+                .map(|&(t, e, d)| kareus::compose::MbPoint {
+                    time_s: t,
+                    total_j: e,
+                    dyn_j: d,
+                    plan: kareus::compose::MicrobatchPlan {
+                        freq_mhz: 1410,
+                        configs: Default::default(),
+                        sequential: true,
+                    },
+                })
+                .collect(),
+        );
+        StageMenu::from_frontiers(&f, &f)
+    };
+    let menus2: Vec<StageMenu> = (0..2).map(|_| mk_menu()).collect();
+    let choice2 = vec![vec![0usize; 16]; 2];
+    bench("pipeline::simulate_1f1b (2 stages, 8 µb)", 0.3, || {
+        std::hint::black_box(simulate_1f1b(&menus2, &choice2, 8));
+    });
+    let menus10: Vec<StageMenu> = (0..10).map(|_| mk_menu()).collect();
+    let choice10 = vec![vec![0usize; 256]; 10];
+    bench("pipeline::simulate_1f1b (10 stages, 128 µb)", 0.5, || {
+        std::hint::black_box(simulate_1f1b(&menus10, &choice10, 128));
+    });
+    bench("pipeline::greedy_fill (2 stages, 8 µb)", 1.0, || {
+        std::hint::black_box(greedy_fill(&menus2, 8, 90.0, 2.0));
+    });
+    bench("pipeline::greedy_fill (10 stages, 128 µb)", 3.0, || {
+        std::hint::black_box(greedy_fill(&menus10, 128, 90.0, 60.0));
+    });
+
+    // 6. Profiler measurement (thermal + meter simulation).
+    let mut prof = Profiler::new(gpu.clone(), Default::default(), 7);
+    bench("profiler::measure (5s window sim)", 1.0, || {
+        std::hint::black_box(prof.measure(&part, &sched));
+    });
+}

@@ -1,0 +1,33 @@
+//! End-to-end benches: one per paper table/figure (deliverable (d)).
+//! Each regenerates the experiment and reports wall time. Subset with
+//! KAREUS_BENCH=table1,fig3 (comma-separated ids); default runs the
+//! fast set; KAREUS_BENCH=all runs everything including the emulation.
+
+use std::time::Instant;
+
+fn main() {
+    let sel = std::env::var("KAREUS_BENCH").unwrap_or_else(|_| "fast".to_string());
+    let fast: &[&str] = &["table1", "fig3", "fig7", "table8", "fig12", "appA", "appB", "mbo-stats"];
+    let all = kareus::paper::ALL_EXPERIMENTS;
+    let ids: Vec<&str> = match sel.as_str() {
+        "fast" => fast.to_vec(),
+        "all" => all.to_vec(),
+        s => s.split(',').map(|x| x.trim()).filter(|x| !x.is_empty()).collect::<Vec<_>>()
+            .into_iter().map(|x| {
+                // leak to 'static lifetime for uniform handling
+                Box::leak(x.to_string().into_boxed_str()) as &str
+            }).collect(),
+    };
+    println!("== kareus paper-table benches (KAREUS_BENCH={sel}) ==");
+    for id in ids {
+        let t0 = Instant::now();
+        match kareus::paper::run_experiment(id) {
+            Some(out) => {
+                let dt = t0.elapsed().as_secs_f64();
+                let first = out.lines().next().unwrap_or("");
+                println!("{id:12} {dt:8.2}s   {first}");
+            }
+            None => println!("{id:12} unknown experiment id"),
+        }
+    }
+}

@@ -1,0 +1,84 @@
+//! Minimal CLI argument parser (no clap offline): `--key value` /
+//! `--flag` options plus positional arguments.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Args {
+        let mut out = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                // `--key=value`, `--key value`, or bare `--flag`.
+                if let Some((k, v)) = key.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    out.options.insert(key.to_string(), iter.next().unwrap());
+                } else {
+                    out.flags.push(key.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_u32(&self, key: &str, default: u32) -> u32 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn mixed_forms() {
+        // Note: a bare `--flag` is only a flag when not followed by a
+        // non-option token (documented greedy `--key value` semantics).
+        let a = parse("paper pos2 --exp table3 --seed=7 --verbose");
+        assert_eq!(a.positional, vec!["paper", "pos2"]);
+        assert_eq!(a.get("exp"), Some("table3"));
+        assert_eq!(a.get_u32("seed", 0), 7);
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("train");
+        assert_eq!(a.get_u32("steps", 100), 100);
+        assert_eq!(a.get_f64("deadline", 1.5), 1.5);
+        assert!(!a.has_flag("x"));
+    }
+
+    #[test]
+    fn flag_before_value_option() {
+        let a = parse("--all --exp table1");
+        assert!(a.has_flag("all"));
+        assert_eq!(a.get("exp"), Some("table1"));
+    }
+}

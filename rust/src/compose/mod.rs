@@ -1,0 +1,369 @@
+//! Microbatch frontier construction (§4.4, Algorithm 2).
+//!
+//! A microbatch is a sequence of partition instances. For each GPU
+//! frequency (uniform within the microbatch — frequency switching costs
+//! milliseconds, §4.4 design decision 1), Kareus enumerates the Cartesian
+//! product of per-*type* schedule configurations (design decision 2: all
+//! instances of a type share one configuration), sums time and energy
+//! across instances plus non-partition components, adds the
+//! sequential-execution candidate (§4.5 execution-model switching), and
+//! prunes to the Pareto frontier.
+
+use std::collections::BTreeMap;
+
+use crate::frontier::{Frontier, Point};
+use crate::mbo::MboResult;
+use crate::partition::Partition;
+use crate::profiler::Profiler;
+use crate::sim::exec::{execute_partition, LaunchAt, Schedule};
+use crate::sim::gpu::GpuSpec;
+use crate::sim::kernel::Kernel;
+use crate::workload::MicrobatchWork;
+
+/// The deployed configuration of one microbatch.
+#[derive(Clone, Debug)]
+pub struct MicrobatchPlan {
+    pub freq_mhz: u32,
+    /// Per-partition-type (SM allocation, launch timing); empty when
+    /// sequential.
+    pub configs: BTreeMap<String, Schedule>,
+    /// §4.5: fall back to the sequential execution model.
+    pub sequential: bool,
+}
+
+/// One feasible microbatch operating point.
+#[derive(Clone, Debug)]
+pub struct MbPoint {
+    pub time_s: f64,
+    pub total_j: f64,
+    pub dyn_j: f64,
+    pub plan: MicrobatchPlan,
+}
+
+impl MbPoint {
+    pub fn static_j(&self) -> f64 {
+        self.total_j - self.dyn_j
+    }
+}
+
+/// A microbatch frontier: Pareto points plus the full plan list (frontier
+/// tags index into `points`).
+#[derive(Clone, Debug)]
+pub struct MbFrontier {
+    pub points: Vec<MbPoint>,
+    pub frontier: Frontier,
+}
+
+impl MbFrontier {
+    pub fn from_points(points: Vec<MbPoint>) -> Self {
+        let f = Frontier::from_points(
+            points.iter().enumerate().map(|(i, p)| Point::new(p.time_s, p.total_j, i)).collect(),
+        );
+        MbFrontier { points, frontier: f }
+    }
+
+    /// Frontier points in ascending time, with their plans.
+    pub fn pareto(&self) -> Vec<&MbPoint> {
+        self.frontier.points().iter().map(|p| &self.points[p.tag]).collect()
+    }
+}
+
+/// Evaluate one overlapped microbatch: partitions executed sequentially,
+/// each overlapping its comm with the paired nanobatch's computation
+/// (Figure 5, rows 2–3), plus non-partition extras and the trailing
+/// drain comm of the last nanobatch (exposed by construction).
+pub fn eval_overlapped_microbatch(
+    gpu: &GpuSpec,
+    partitions: &[Partition],
+    configs: &BTreeMap<String, Schedule>,
+    freq_mhz: u32,
+    extra: &[Kernel],
+) -> MbPoint {
+    let mut time = 0.0;
+    let mut total = 0.0;
+    let mut dynamic = 0.0;
+    let mut last_comm: Option<(&Kernel, u32)> = None;
+    for part in partitions {
+        let mut sched = *configs
+            .get(&part.ptype)
+            .unwrap_or(&Schedule { comm_sms: 12, launch: LaunchAt::WithComp(0), freq_mhz });
+        sched.freq_mhz = freq_mhz;
+        let r = execute_partition(
+            gpu,
+            &part.comps,
+            part.comm.as_ref(),
+            &sched,
+            gpu.ref_temp_c,
+            Some(gpu.tdp_w),
+        );
+        time += part.count as f64 * r.time_s;
+        total += part.count as f64 * r.total_j();
+        dynamic += part.count as f64 * r.dyn_j;
+        if let Some(c) = &part.comm {
+            last_comm = Some((c, sched.comm_sms));
+        }
+    }
+    // Drain: the final segment's comm has no following computation to
+    // overlap with — it runs exposed once per microbatch.
+    if let Some((c, sms)) = last_comm {
+        let t = c.comm_bytes / gpu.comm_bw(sms.max(1));
+        time += t;
+        let p_dyn = gpu.comm_power(gpu.comm_bw(sms.max(1))) + gpu.mem_power(2.0 * gpu.comm_bw(sms.max(1)));
+        total += (gpu.static_power(gpu.ref_temp_c) + p_dyn) * t;
+        dynamic += p_dyn * t;
+    }
+    // Non-partition components run sequentially at the same frequency.
+    let (te, je, de) = eval_extra(gpu, extra, freq_mhz);
+    time += te;
+    total += je;
+    dynamic += de;
+    MbPoint {
+        time_s: time,
+        total_j: total,
+        dyn_j: dynamic,
+        plan: MicrobatchPlan { freq_mhz, configs: configs.clone(), sequential: false },
+    }
+}
+
+fn eval_extra(gpu: &GpuSpec, extra: &[Kernel], freq_mhz: u32) -> (f64, f64, f64) {
+    if extra.is_empty() {
+        return (0.0, 0.0, 0.0);
+    }
+    let r = execute_partition(
+        gpu,
+        extra,
+        None,
+        &Schedule::sequential(freq_mhz),
+        gpu.ref_temp_c,
+        Some(gpu.tdp_w),
+    );
+    (r.time_s, r.total_j(), r.dyn_j)
+}
+
+/// Evaluate the sequential execution model for one microbatch (§4.5;
+/// Megatron-LM's model, Figure 2a): each segment's computation then its
+/// comm, unsplit microbatch.
+pub fn eval_sequential_microbatch(gpu: &GpuSpec, work: &MicrobatchWork, freq_mhz: u32) -> MbPoint {
+    let mut time = 0.0;
+    let mut total = 0.0;
+    let mut dynamic = 0.0;
+    for seg in &work.segments {
+        let r = execute_partition(
+            gpu,
+            &seg.comps,
+            seg.comm.as_ref(),
+            &Schedule::sequential(freq_mhz),
+            gpu.ref_temp_c,
+            Some(gpu.tdp_w),
+        );
+        time += r.time_s;
+        total += r.total_j();
+        dynamic += r.dyn_j;
+    }
+    let (te, je, de) = eval_extra(gpu, &work.extra, freq_mhz);
+    time += te;
+    total += je;
+    dynamic += de;
+    MbPoint {
+        time_s: time,
+        total_j: total,
+        dyn_j: dynamic,
+        plan: MicrobatchPlan { freq_mhz, configs: BTreeMap::new(), sequential: true },
+    }
+}
+
+/// Algorithm 2: build the microbatch frontier from per-partition MBO
+/// results. `seq_work` is the unsplit microbatch (sequential-model
+/// candidates are profiled per frequency and merged, §4.5).
+pub fn microbatch_frontier(
+    gpu: &GpuSpec,
+    partitions: &[Partition],
+    mbo: &BTreeMap<String, MboResult>,
+    extra: &[Kernel],
+    seq_work: Option<&MicrobatchWork>,
+) -> MbFrontier {
+    // Distinct (sms, launch) configs that appear on each type's partition
+    // frontier — the schedule vocabulary the Cartesian product ranges over.
+    let mut type_configs: Vec<(String, Vec<(u32, LaunchAt)>)> = Vec::new();
+    for part in partitions {
+        if part.comm.is_none() {
+            continue;
+        }
+        let Some(res) = mbo.get(&part.ptype) else { continue };
+        let mut cfgs: Vec<(u32, LaunchAt)> = Vec::new();
+        for p in res.frontier.points() {
+            let s = res.evaluated[p.tag].sched;
+            if !cfgs.contains(&(s.comm_sms, s.launch)) {
+                cfgs.push((s.comm_sms, s.launch));
+            }
+        }
+        if cfgs.is_empty() {
+            cfgs.push((12, LaunchAt::WithComp(0)));
+        }
+        cfgs.truncate(8); // keep enumeration tractable
+        // Always include nanobatching's default configuration so Kareus's
+        // frontier dominates Nanobatching+Perseus by construction (the MBO
+        // may not have kept it if it never landed on a partition frontier).
+        let default_cfg =
+            (crate::baselines::NANO_DEFAULT_SMS, crate::baselines::NANO_DEFAULT_LAUNCH);
+        if !cfgs.contains(&default_cfg) {
+            cfgs.push(default_cfg);
+        }
+        type_configs.push((part.ptype.clone(), cfgs));
+    }
+
+    let mut points: Vec<MbPoint> = Vec::new();
+    for &f in &gpu.search_freqs() {
+        // Cartesian product across partition types.
+        let mut combos: Vec<BTreeMap<String, Schedule>> = vec![BTreeMap::new()];
+        for (ptype, cfgs) in &type_configs {
+            let mut next = Vec::with_capacity(combos.len() * cfgs.len());
+            for base in &combos {
+                for &(sms, launch) in cfgs {
+                    let mut m = base.clone();
+                    m.insert(ptype.clone(), Schedule { comm_sms: sms, launch, freq_mhz: f });
+                    next.push(m);
+                }
+            }
+            combos = next;
+        }
+        for configs in combos {
+            points.push(eval_overlapped_microbatch(gpu, partitions, &configs, f, extra));
+        }
+        if let Some(w) = seq_work {
+            points.push(eval_sequential_microbatch(gpu, w, f));
+        }
+    }
+    MbFrontier::from_points(points)
+}
+
+/// Helper for tests/benches: run full MBO on every partition type.
+pub fn optimize_all_partitions(
+    profiler_seed: u64,
+    gpu: &GpuSpec,
+    partitions: &[Partition],
+    comm_group: u32,
+) -> BTreeMap<String, MboResult> {
+    use crate::mbo::{optimize_partition, MboParams};
+    use crate::profiler::ProfilerConfig;
+    let results: Vec<(String, MboResult)> = crate::util::pool::parallel_map(
+        partitions.to_vec(),
+        crate::util::pool::default_threads(),
+        |part| {
+            let mut prof =
+                Profiler::new(gpu.clone(), ProfilerConfig::default(), profiler_seed ^ hash(&part.ptype));
+            let mut params = MboParams::for_class(part.size_class());
+            params.seed = profiler_seed ^ hash(&part.ptype);
+            let r = optimize_partition(&mut prof, &part, comm_group, &params);
+            (part.ptype.clone(), r)
+        },
+    );
+    results.into_iter().collect()
+}
+
+fn hash(s: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::detect_partitions;
+    use crate::workload::{build_nanobatch_pass, build_pass, Dir, ModelSpec, Parallelism, TrainConfig};
+
+    fn cfg() -> TrainConfig {
+        TrainConfig {
+            model: ModelSpec::qwen3_1_7b(),
+            par: Parallelism::new(8, 1, 2),
+            microbatch: 8,
+            seq_len: 4096,
+            n_microbatches: 8,
+            dtype_bytes: 2,
+        }
+    }
+
+    #[test]
+    fn sequential_single_freq_is_one_point() {
+        let g = GpuSpec::a100();
+        let c = cfg();
+        let w = build_pass(&c, c.tokens_per_gpu(), Dir::Fwd, false, false);
+        let p = eval_sequential_microbatch(&g, &w, 1410);
+        assert!(p.time_s > 0.0 && p.total_j > 0.0);
+        assert!(p.dyn_j < p.total_j);
+        assert!(p.plan.sequential);
+    }
+
+    #[test]
+    fn overlap_microbatch_beats_sequential_at_max_freq() {
+        let g = GpuSpec::a100();
+        let c = cfg();
+        let seq_w = build_pass(&c, c.tokens_per_gpu(), Dir::Fwd, false, false);
+        let nano_w = build_nanobatch_pass(&c, Dir::Fwd, false, false);
+        let parts = detect_partitions(&g, &nano_w, true);
+        let mut configs = BTreeMap::new();
+        for p in &parts {
+            configs.insert(
+                p.ptype.clone(),
+                Schedule { comm_sms: 12, launch: LaunchAt::WithComp(1), freq_mhz: 1410 },
+            );
+        }
+        let ovl = eval_overlapped_microbatch(&g, &parts, &configs, 1410, &nano_w.extra);
+        let seq = eval_sequential_microbatch(&g, &seq_w, 1410);
+        assert!(ovl.time_s < seq.time_s, "ovl {} seq {}", ovl.time_s, seq.time_s);
+    }
+
+    #[test]
+    fn frontier_contains_multiple_freqs() {
+        let g = GpuSpec::a100();
+        let c = cfg();
+        let nano_w = build_nanobatch_pass(&c, Dir::Fwd, false, false);
+        let parts = detect_partitions(&g, &nano_w, true);
+        let mbo = optimize_all_partitions(7, &g, &parts, c.par.tp * c.par.cp);
+        let seq_w = build_pass(&c, c.tokens_per_gpu(), Dir::Fwd, false, false);
+        let mbf = microbatch_frontier(&g, &parts, &mbo, &nano_w.extra, Some(&seq_w));
+        assert!(mbf.frontier.len() >= 5, "frontier len {}", mbf.frontier.len());
+        let freqs: std::collections::BTreeSet<u32> =
+            mbf.pareto().iter().map(|p| p.plan.freq_mhz).collect();
+        assert!(freqs.len() >= 3, "only freqs {freqs:?} on frontier");
+    }
+
+    #[test]
+    fn execution_model_switching_on_tiny_workloads() {
+        // §4.5: when per-microbatch work is small, splitting into
+        // nanobatches lowers arithmetic intensity and sequential execution
+        // can win; the merged frontier must pick whichever is better and
+        // never be worse than sequential-only.
+        let g = GpuSpec::a100();
+        let mut c = cfg();
+        c.microbatch = 1;
+        c.seq_len = 512; // tiny per-microbatch work
+        let nano_w = build_nanobatch_pass(&c, Dir::Fwd, false, false);
+        let parts = detect_partitions(&g, &nano_w, true);
+        let mbo = optimize_all_partitions(13, &g, &parts, c.par.tp * c.par.cp);
+        let seq_w = build_pass(&c, c.tokens_per_gpu(), Dir::Fwd, false, false);
+        let mbf = microbatch_frontier(&g, &parts, &mbo, &nano_w.extra, Some(&seq_w));
+        // Frontier min-time must be <= the best sequential point.
+        let best_seq = (0..18)
+            .map(|i| eval_sequential_microbatch(&g, &seq_w, 900 + 30 * i).time_s)
+            .fold(f64::INFINITY, f64::min);
+        let ft = mbf.frontier.min_time().unwrap().time;
+        assert!(ft <= best_seq * (1.0 + 1e-9), "frontier {ft} vs seq {best_seq}");
+        // And sequential candidates are actually present in the point set.
+        assert!(mbf.points.iter().any(|p| p.plan.sequential));
+    }
+
+    #[test]
+    fn microbatch_energy_decomposes() {
+        let g = GpuSpec::a100();
+        let c = cfg();
+        let w = build_pass(&c, c.tokens_per_gpu(), Dir::Fwd, true, true);
+        let p = eval_sequential_microbatch(&g, &w, 1200);
+        assert!(p.static_j() > 0.0);
+        assert!((p.static_j() + p.dyn_j - p.total_j).abs() < 1e-9 * p.total_j);
+    }
+}

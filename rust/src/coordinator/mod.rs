@@ -1,0 +1,207 @@
+//! Leader coordinator (§5.1, Figure 8): ① detect partitions → ② run MBO →
+//! ③ compose the iteration frontier → ④ select an operating point for the
+//! target (deadline / energy budget / max throughput) → ⑤ deploy to the
+//! execution engine (here: the PJRT trainer with schedule-driven
+//! accounting) → ⑥ frequency plan per microbatch.
+
+use anyhow::Result;
+
+use crate::baselines::{run_system, System, SystemResult};
+use crate::runtime::Runtime;
+use crate::sim::gpu::GpuSpec;
+use crate::trainer::{ScheduleAccounting, StepLog, Trainer};
+use crate::util::json::{arr, num, obj, s, Json};
+use crate::workload::TrainConfig;
+
+/// The job-level objective used to pick a point off the frontier (§4.1:
+/// deadlines, energy budgets, or max throughput).
+#[derive(Clone, Copy, Debug)]
+pub enum Target {
+    MaxThroughput,
+    Deadline(f64),
+    EnergyBudget(f64),
+}
+
+/// A selected operating point, ready to deploy.
+#[derive(Clone, Debug)]
+pub struct Deployment {
+    pub system: System,
+    pub iter_time_s: f64,
+    pub iter_energy_j: f64,
+    pub freq_summary: String,
+}
+
+pub struct Coordinator {
+    pub gpu: GpuSpec,
+    pub cfg: TrainConfig,
+}
+
+impl Coordinator {
+    pub fn new(gpu: GpuSpec, cfg: TrainConfig) -> Self {
+        Coordinator { gpu, cfg }
+    }
+
+    /// Phases ①–③: run the full optimization for one system.
+    pub fn optimize(&self, system: System, seed: u64) -> SystemResult {
+        run_system(&self.gpu, &self.cfg, system, seed)
+    }
+
+    /// Phase ④: select an operating point for the target.
+    pub fn select(&self, result: &SystemResult, target: Target) -> Option<Deployment> {
+        let f = &result.frontier;
+        let point = match target {
+            Target::MaxThroughput => f.min_time(),
+            Target::Deadline(t) => {
+                let e = f.energy_at_deadline(t)?;
+                f.points().iter().find(|p| (p.energy - e).abs() < 1e-9).copied()
+            }
+            Target::EnergyBudget(e) => {
+                let t = f.time_at_budget(e)?;
+                f.points().iter().find(|p| (p.time - t).abs() < 1e-9).copied()
+            }
+        }?;
+        let plan = &result.plans[point.tag];
+        let n_slots: usize = plan.choice.iter().map(|c| c.len()).sum();
+        Some(Deployment {
+            system: result.system,
+            iter_time_s: point.time,
+            iter_energy_j: point.energy,
+            freq_summary: format!(
+                "{} stages, {} task slots, bubble {:.3}s",
+                plan.choice.len(),
+                n_slots,
+                plan.bubble_s
+            ),
+        })
+    }
+
+    /// Phases ⑤–⑥: deploy to the training engine — run real train steps
+    /// through PJRT with the selected schedule driving accounting.
+    pub fn deploy_and_train(
+        &self,
+        deployment: &Deployment,
+        runtime: Runtime,
+        model_config: &str,
+        steps: u32,
+        seed: u64,
+    ) -> Result<Vec<StepLog>> {
+        let mut trainer = Trainer::new(runtime, model_config, seed)?;
+        let acct = ScheduleAccounting {
+            label: deployment.system.name(),
+            iter_time_s: deployment.iter_time_s,
+            iter_energy_j: deployment.iter_energy_j,
+        };
+        trainer.train(steps, &acct, (steps / 20).max(1))
+    }
+
+    /// Dynamic adaptation (§4.1: the frontier exists so the job can react
+    /// to "changing environments (e.g., stragglers)"): given a straggler
+    /// slowdown factor on the current iteration and a fixed wall-clock
+    /// deadline for the *remaining* run, re-select an operating point that
+    /// still meets the deadline — typically a faster (higher-energy) point
+    /// that compensates for the slowdown without touching the optimizer.
+    pub fn adapt(
+        &self,
+        result: &SystemResult,
+        remaining_iters: u64,
+        remaining_deadline_s: f64,
+        straggler_factor: f64,
+    ) -> Option<Deployment> {
+        assert!(straggler_factor >= 1.0, "factor is a slowdown multiplier");
+        if remaining_iters == 0 {
+            return None;
+        }
+        // Budget per iteration after accounting for the straggler tax.
+        let per_iter = remaining_deadline_s / remaining_iters as f64 / straggler_factor;
+        self.select(result, Target::Deadline(per_iter))
+    }
+
+    /// Serialize a frontier + deployment for tooling (schedule-plan file).
+    pub fn plan_json(&self, result: &SystemResult, deployment: &Deployment) -> Json {
+        obj(vec![
+            ("system", s(result.system.name())),
+            ("workload", s(&self.cfg.label())),
+            (
+                "frontier",
+                arr(result
+                    .frontier
+                    .points()
+                    .iter()
+                    .map(|p| arr(vec![num(p.time), num(p.energy)]))
+                    .collect()),
+            ),
+            ("iter_time_s", num(deployment.iter_time_s)),
+            ("iter_energy_j", num(deployment.iter_energy_j)),
+            ("mbo_profiling_s", num(result.mbo_profiling_s)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{ModelSpec, Parallelism};
+
+    fn coord() -> Coordinator {
+        Coordinator::new(
+            GpuSpec::a100(),
+            TrainConfig {
+                model: ModelSpec::qwen3_1_7b(),
+                par: Parallelism::new(8, 1, 2),
+                microbatch: 8,
+                seq_len: 4096,
+                n_microbatches: 8,
+                dtype_bytes: 2,
+            },
+        )
+    }
+
+    #[test]
+    fn select_targets() {
+        let c = coord();
+        let r = c.optimize(System::MegatronPerseus, 0);
+        let max = c.select(&r, Target::MaxThroughput).unwrap();
+        let dl = c.select(&r, Target::Deadline(max.iter_time_s * 1.2)).unwrap();
+        assert!(dl.iter_energy_j <= max.iter_energy_j);
+        assert!(dl.iter_time_s <= max.iter_time_s * 1.2 + 1e-9);
+        // Infeasible deadline.
+        assert!(c.select(&r, Target::Deadline(max.iter_time_s * 0.5)).is_none());
+        // Energy budget.
+        let eb = c.select(&r, Target::EnergyBudget(max.iter_energy_j)).unwrap();
+        assert!(eb.iter_energy_j <= max.iter_energy_j + 1e-9);
+    }
+
+    #[test]
+    fn adapt_to_straggler_moves_left_on_frontier() {
+        let c = coord();
+        let r = c.optimize(System::MegatronPerseus, 0);
+        // Plan the run at an energy-lean point: deadline with 25% slack.
+        let fast = c.select(&r, Target::MaxThroughput).unwrap();
+        let lean = c.select(&r, Target::Deadline(fast.iter_time_s * 1.25)).unwrap();
+        let iters = 100;
+        let wall = lean.iter_time_s * iters as f64;
+        // No straggler: adaptation reproduces a point at least as lean.
+        let same = c.adapt(&r, iters, wall, 1.0).unwrap();
+        assert!(same.iter_time_s <= lean.iter_time_s * (1.0 + 1e-9));
+        // 15% straggler tax: must move to a faster, higher-energy point.
+        let adapted = c.adapt(&r, iters, wall, 1.15).unwrap();
+        assert!(adapted.iter_time_s < lean.iter_time_s);
+        assert!(adapted.iter_energy_j >= lean.iter_energy_j);
+        // Impossible recovery: slower than the fastest point even after
+        // adaptation.
+        let hopeless = c.adapt(&r, iters, fast.iter_time_s * iters as f64 * 0.5, 1.5);
+        assert!(hopeless.is_none());
+        // Run finished: nothing to adapt.
+        assert!(c.adapt(&r, 0, 100.0, 1.1).is_none());
+    }
+
+    #[test]
+    fn plan_json_roundtrips() {
+        let c = coord();
+        let r = c.optimize(System::MegatronPerseus, 0);
+        let d = c.select(&r, Target::MaxThroughput).unwrap();
+        let j = c.plan_json(&r, &d);
+        let parsed = Json::parse(&j.dump()).unwrap();
+        assert!(parsed.get("frontier").unwrap().as_arr().unwrap().len() >= 1);
+    }
+}

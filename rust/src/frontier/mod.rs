@@ -1,0 +1,264 @@
+//! Pareto-frontier and hypervolume utilities for the (time, energy) plane.
+//!
+//! Everything Kareus optimizes is a 2-D minimization: lower time AND lower
+//! energy. A point dominates another if it is ≤ in both coordinates and <
+//! in at least one. The hypervolume (HV) of a frontier w.r.t. a reference
+//! point r (worse than every point) is the paper's frontier-quality metric
+//! (§4.3.2, HVI acquisition; Appendix C stopping criterion).
+
+/// One point on the time–energy plane, tagged with the configuration index
+/// that produced it.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Point {
+    pub time: f64,
+    pub energy: f64,
+    /// Opaque tag: index into whatever candidate list produced this point.
+    pub tag: usize,
+}
+
+impl Point {
+    pub fn new(time: f64, energy: f64, tag: usize) -> Self {
+        Point { time, energy, tag }
+    }
+
+    /// True iff `self` Pareto-dominates `other` (minimization).
+    pub fn dominates(&self, other: &Point) -> bool {
+        self.time <= other.time
+            && self.energy <= other.energy
+            && (self.time < other.time || self.energy < other.energy)
+    }
+}
+
+/// A Pareto frontier, kept sorted by ascending time (thus descending
+/// energy).
+#[derive(Clone, Debug, Default)]
+pub struct Frontier {
+    points: Vec<Point>,
+}
+
+impl Frontier {
+    pub fn new() -> Self {
+        Frontier { points: Vec::new() }
+    }
+
+    /// Build the frontier of an arbitrary point set (O(n log n)).
+    pub fn from_points(mut pts: Vec<Point>) -> Self {
+        pts.retain(|p| p.time.is_finite() && p.energy.is_finite());
+        pts.sort_by(|a, b| {
+            a.time.partial_cmp(&b.time).unwrap().then(a.energy.partial_cmp(&b.energy).unwrap())
+        });
+        let mut out: Vec<Point> = Vec::new();
+        let mut best_energy = f64::INFINITY;
+        for p in pts {
+            if p.energy < best_energy {
+                // Drop duplicates in time: keep the first (lowest energy).
+                if let Some(last) = out.last() {
+                    if (last.time - p.time).abs() < 1e-15 {
+                        continue;
+                    }
+                }
+                out.push(p);
+                best_energy = p.energy;
+            }
+        }
+        Frontier { points: out }
+    }
+
+    /// Insert one point, keeping only non-dominated points. Returns true
+    /// if the point landed on the frontier.
+    pub fn insert(&mut self, p: Point) -> bool {
+        if !p.time.is_finite() || !p.energy.is_finite() {
+            return false;
+        }
+        if self.points.iter().any(|q| q.dominates(&p) || (q.time == p.time && q.energy == p.energy)) {
+            return false;
+        }
+        self.points.retain(|q| !p.dominates(q));
+        let pos = self.points.partition_point(|q| q.time < p.time);
+        self.points.insert(pos, p);
+        true
+    }
+
+    pub fn points(&self) -> &[Point] {
+        &self.points
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// Leftmost = minimum-time point (max-throughput operating point, §6.1).
+    pub fn min_time(&self) -> Option<Point> {
+        self.points.first().copied()
+    }
+
+    /// Bottom = minimum-energy point.
+    pub fn min_energy(&self) -> Option<Point> {
+        self.points.last().copied()
+    }
+
+    /// Dominated hypervolume w.r.t. reference point `r` (both coords must
+    /// be ≥ every frontier point; contributions are clipped at 0).
+    pub fn hypervolume(&self, r: (f64, f64)) -> f64 {
+        let mut hv = 0.0;
+        let mut prev_time = r.0;
+        // Iterate right-to-left (descending time): each point contributes
+        // (prev_time - t_i) * (r.energy - e_i).
+        for p in self.points.iter().rev() {
+            let w = (prev_time - p.time).max(0.0);
+            let h = (r.1 - p.energy).max(0.0);
+            hv += w * h;
+            prev_time = prev_time.min(p.time);
+        }
+        hv
+    }
+
+    /// Hypervolume improvement of adding candidate `c` (§4.3.2, Figure 6).
+    pub fn hvi(&self, c: (f64, f64), r: (f64, f64)) -> f64 {
+        let base = self.hypervolume(r);
+        let mut with = self.clone();
+        with.insert(Point::new(c.0, c.1, usize::MAX));
+        (with.hypervolume(r) - base).max(0.0)
+    }
+
+    /// The paper's reference point: 1.1 × the worst observed coordinates
+    /// (Appendix C).
+    pub fn reference_of(points: &[Point]) -> (f64, f64) {
+        let mut t = f64::NEG_INFINITY;
+        let mut e = f64::NEG_INFINITY;
+        for p in points {
+            t = t.max(p.time);
+            e = e.max(p.energy);
+        }
+        (1.1 * t, 1.1 * e)
+    }
+
+    /// Minimum energy among points with time ≤ deadline (iso-time lookup,
+    /// §6.1 "frontier improvement" metrics). None if infeasible.
+    pub fn energy_at_deadline(&self, deadline: f64) -> Option<f64> {
+        self.points
+            .iter()
+            .filter(|p| p.time <= deadline * (1.0 + 1e-9))
+            .map(|p| p.energy)
+            .fold(None, |acc, e| Some(acc.map_or(e, |a: f64| a.min(e))))
+    }
+
+    /// Minimum time among points with energy ≤ budget (iso-energy lookup).
+    pub fn time_at_budget(&self, budget: f64) -> Option<f64> {
+        self.points
+            .iter()
+            .filter(|p| p.energy <= budget * (1.0 + 1e-9))
+            .map(|p| p.time)
+            .fold(None, |acc, t| Some(acc.map_or(t, |a: f64| a.min(t))))
+    }
+
+    /// Merge another frontier in (e.g. sequential-execution candidates,
+    /// §4.5 "execution model switching").
+    pub fn merge(&mut self, other: &Frontier) {
+        for p in other.points() {
+            self.insert(*p);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pts(v: &[(f64, f64)]) -> Vec<Point> {
+        v.iter().enumerate().map(|(i, &(t, e))| Point::new(t, e, i)).collect()
+    }
+
+    #[test]
+    fn from_points_removes_dominated() {
+        let f = Frontier::from_points(pts(&[(1.0, 5.0), (2.0, 3.0), (1.5, 6.0), (3.0, 1.0), (2.5, 4.0)]));
+        let coords: Vec<(f64, f64)> = f.points().iter().map(|p| (p.time, p.energy)).collect();
+        assert_eq!(coords, vec![(1.0, 5.0), (2.0, 3.0), (3.0, 1.0)]);
+    }
+
+    #[test]
+    fn insert_maintains_invariants() {
+        let mut f = Frontier::new();
+        assert!(f.insert(Point::new(2.0, 2.0, 0)));
+        assert!(!f.insert(Point::new(3.0, 3.0, 1))); // dominated
+        assert!(f.insert(Point::new(1.0, 4.0, 2)));
+        assert!(f.insert(Point::new(0.5, 1.0, 3))); // dominates everything
+        assert_eq!(f.len(), 1);
+        assert_eq!(f.points()[0].tag, 3);
+    }
+
+    #[test]
+    fn frontier_sorted_by_time() {
+        let f = Frontier::from_points(pts(&[(3.0, 1.0), (1.0, 3.0), (2.0, 2.0)]));
+        let times: Vec<f64> = f.points().iter().map(|p| p.time).collect();
+        assert_eq!(times, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn hypervolume_rectangle() {
+        let f = Frontier::from_points(pts(&[(1.0, 1.0)]));
+        assert!((f.hypervolume((3.0, 2.0)) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hypervolume_staircase() {
+        let f = Frontier::from_points(pts(&[(1.0, 3.0), (2.0, 1.0)]));
+        // r = (4, 4): point (2,1) contributes (4-2)*(4-1)=6;
+        // point (1,3) contributes (2-1)*(4-3)=1. Total 7.
+        assert!((f.hypervolume((4.0, 4.0)) - 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hvi_zero_for_dominated_candidate() {
+        let f = Frontier::from_points(pts(&[(1.0, 1.0)]));
+        assert_eq!(f.hvi((2.0, 2.0), (5.0, 5.0)), 0.0);
+        assert!(f.hvi((0.5, 0.5), (5.0, 5.0)) > 0.0);
+    }
+
+    #[test]
+    fn hv_monotone_under_insert() {
+        let mut f = Frontier::from_points(pts(&[(2.0, 2.0)]));
+        let r = (5.0, 5.0);
+        let hv0 = f.hypervolume(r);
+        f.insert(Point::new(1.0, 3.0, 9));
+        assert!(f.hypervolume(r) >= hv0);
+    }
+
+    #[test]
+    fn iso_lookups() {
+        let f = Frontier::from_points(pts(&[(1.0, 5.0), (2.0, 3.0), (3.0, 1.0)]));
+        assert_eq!(f.energy_at_deadline(2.0), Some(3.0));
+        assert_eq!(f.energy_at_deadline(0.5), None);
+        assert_eq!(f.time_at_budget(3.0), Some(2.0));
+        assert_eq!(f.time_at_budget(0.5), None);
+        assert_eq!(f.min_time().unwrap().time, 1.0);
+        assert_eq!(f.min_energy().unwrap().energy, 1.0);
+    }
+
+    #[test]
+    fn reference_point_is_10pct_worse() {
+        let p = pts(&[(1.0, 4.0), (2.0, 3.0)]);
+        let r = Frontier::reference_of(&p);
+        assert!((r.0 - 2.2).abs() < 1e-12 && (r.1 - 4.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_switches_execution_model() {
+        let mut overlap = Frontier::from_points(pts(&[(2.0, 2.0)]));
+        let sequential = Frontier::from_points(pts(&[(1.5, 3.0), (4.0, 1.0)]));
+        overlap.merge(&sequential);
+        assert_eq!(overlap.len(), 3);
+    }
+
+    #[test]
+    fn non_finite_points_rejected() {
+        let mut f = Frontier::new();
+        assert!(!f.insert(Point::new(f64::NAN, 1.0, 0)));
+        assert!(!f.insert(Point::new(1.0, f64::INFINITY, 0)));
+        assert!(f.is_empty());
+    }
+}

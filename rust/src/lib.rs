@@ -1,0 +1,19 @@
+//! Kareus reproduction library.
+pub mod baselines;
+pub mod cli;
+pub mod coordinator;
+pub mod runtime;
+pub mod trainer;
+pub mod paper;
+pub mod compose;
+pub mod frontier;
+pub mod pipeline;
+pub mod mbo;
+pub mod partition;
+pub mod profiler;
+pub mod sim;
+pub mod surrogate;
+pub mod workload;
+pub mod util;
+
+pub fn hello() -> &'static str { "kareus" }

@@ -1,0 +1,204 @@
+//! Kareus leader entrypoint.
+//!
+//! Subcommands:
+//!   paper     --exp <id> | --all          regenerate paper tables/figures
+//!   optimize  --model <m> --tp --cp --pp --microbatch --seq [--system <s>]
+//!   train     --config tiny|e2e --steps N [--artifacts DIR] [--baseline]
+//!   census                                 Appendix B space census
+//!   list                                   list experiments
+
+use kareus::baselines::System;
+use kareus::cli::Args;
+use kareus::coordinator::{Coordinator, Target};
+use kareus::paper;
+use kareus::runtime::Runtime;
+use kareus::sim::gpu::GpuSpec;
+use kareus::workload::{ModelSpec, Parallelism, TrainConfig};
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let code = match cmd {
+        "paper" => cmd_paper(&args),
+        "optimize" => cmd_optimize(&args),
+        "train" => cmd_train(&args),
+        "census" => {
+            println!("{}", paper::run_experiment("appB").unwrap());
+            0
+        }
+        "list" => {
+            println!("experiments: {}", paper::ALL_EXPERIMENTS.join(" "));
+            0
+        }
+        _ => {
+            eprintln!(
+                "kareus — joint dynamic+static energy optimization for large model training\n\
+                 usage:\n  kareus paper --exp <id>|--all\n  kareus optimize --model qwen1.7b|llama3b|llama70b \
+                 [--tp 8 --cp 1 --pp 2 --microbatch 8 --seq 4096 --nmb 8] [--system kareus] \
+                 [--deadline S|--budget J]\n  kareus train --config tiny|e2e --steps 100 [--artifacts artifacts] [--baseline]\n  \
+                 kareus census | kareus list"
+            );
+            if cmd == "help" {
+                0
+            } else {
+                2
+            }
+        }
+    };
+    std::process::exit(code);
+}
+
+fn cmd_paper(args: &Args) -> i32 {
+    if args.has_flag("all") {
+        for id in paper::ALL_EXPERIMENTS {
+            println!("================ {id} ================");
+            match paper::run_experiment(id) {
+                Some(out) => println!("{out}"),
+                None => eprintln!("unknown experiment {id}"),
+            }
+        }
+        return 0;
+    }
+    let Some(id) = args.get("exp") else {
+        eprintln!("need --exp <id> or --all; ids: {}", paper::ALL_EXPERIMENTS.join(" "));
+        return 2;
+    };
+    match paper::run_experiment(id) {
+        Some(out) => {
+            println!("{out}");
+            0
+        }
+        None => {
+            eprintln!("unknown experiment {id}; ids: {}", paper::ALL_EXPERIMENTS.join(" "));
+            2
+        }
+    }
+}
+
+fn parse_model(name: &str) -> Option<ModelSpec> {
+    match name {
+        "qwen1.7b" | "qwen" => Some(ModelSpec::qwen3_1_7b()),
+        "llama3b" => Some(ModelSpec::llama32_3b()),
+        "llama70b" => Some(ModelSpec::llama33_70b()),
+        _ => None,
+    }
+}
+
+fn parse_system(name: &str) -> Option<System> {
+    match name {
+        "megatron" => Some(System::Megatron),
+        "megatron-perseus" | "m+p" => Some(System::MegatronPerseus),
+        "nanobatching" => Some(System::Nanobatching),
+        "nanobatching-perseus" | "n+p" => Some(System::NanobatchingPerseus),
+        "kareus" => Some(System::Kareus),
+        _ => None,
+    }
+}
+
+fn cmd_optimize(args: &Args) -> i32 {
+    let model = match parse_model(args.get("model").unwrap_or("qwen1.7b")) {
+        Some(m) => m,
+        None => {
+            eprintln!("unknown model (qwen1.7b | llama3b | llama70b)");
+            return 2;
+        }
+    };
+    let cfg = TrainConfig {
+        model,
+        par: Parallelism::new(
+            args.get_u32("tp", 8),
+            args.get_u32("cp", 1),
+            args.get_u32("pp", 2),
+        ),
+        microbatch: args.get_u32("microbatch", 8),
+        seq_len: args.get_u32("seq", 4096),
+        n_microbatches: args.get_u32("nmb", 8),
+        dtype_bytes: 2,
+    };
+    let system = match parse_system(args.get("system").unwrap_or("kareus")) {
+        Some(s) => s,
+        None => {
+            eprintln!("unknown system");
+            return 2;
+        }
+    };
+    let coord = Coordinator::new(GpuSpec::a100(), cfg);
+    eprintln!("optimizing {} with {} ...", cfg.label(), system.name());
+    let result = coord.optimize(system, args.get_u32("seed", 2026) as u64);
+    let target = if let Some(d) = args.get("deadline") {
+        Target::Deadline(d.parse().unwrap_or(f64::INFINITY))
+    } else if let Some(b) = args.get("budget") {
+        Target::EnergyBudget(b.parse().unwrap_or(f64::INFINITY))
+    } else {
+        Target::MaxThroughput
+    };
+    match coord.select(&result, target) {
+        Some(dep) => {
+            println!("{}", coord.plan_json(&result, &dep).dump());
+            0
+        }
+        None => {
+            eprintln!("no frontier point satisfies the target");
+            1
+        }
+    }
+}
+
+fn cmd_train(args: &Args) -> i32 {
+    let config = args.get("config").unwrap_or("e2e").to_string();
+    let steps = args.get_u32("steps", 100);
+    let dir = args.get("artifacts").unwrap_or("artifacts").to_string();
+    let seed = args.get_u32("seed", 0) as u64;
+
+    // Phase ①–④: pick the schedule to deploy (Kareus vs Megatron baseline)
+    // on a representative workload; the simulated accounting is attached
+    // to every training step.
+    let wl = TrainConfig {
+        model: ModelSpec::qwen3_1_7b(),
+        par: Parallelism::new(8, 1, 2),
+        microbatch: 8,
+        seq_len: 4096,
+        n_microbatches: 8,
+        dtype_bytes: 2,
+    };
+    let coord = Coordinator::new(GpuSpec::a100(), wl);
+    let system = if args.has_flag("baseline") { System::Megatron } else { System::Kareus };
+    eprintln!("selecting execution schedule ({}) ...", system.name());
+    let result = coord.optimize(system, 2026);
+    let dep = coord.select(&result, Target::MaxThroughput).expect("frontier nonempty");
+    eprintln!(
+        "deployed: {} iter {:.3}s {:.0}J ({})",
+        dep.system.name(),
+        dep.iter_time_s,
+        dep.iter_energy_j,
+        dep.freq_summary
+    );
+
+    // Phase ⑤: real training through PJRT.
+    let rt = match Runtime::new(&dir) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("runtime: {e:#}");
+            return 1;
+        }
+    };
+    eprintln!("PJRT platform: {}", rt.platform());
+    match coord.deploy_and_train(&dep, rt, &config, steps, seed) {
+        Ok(logs) => {
+            let first = logs.first().map(|l| l.loss).unwrap_or(f32::NAN);
+            let last = logs.last().map(|l| l.loss).unwrap_or(f32::NAN);
+            let sim_total_t: f64 = dep.iter_time_s * steps as f64;
+            let sim_total_e: f64 = dep.iter_energy_j * steps as f64;
+            println!(
+                "done: loss {first:.4} -> {last:.4} over {steps} steps; \
+                 simulated {sim_total_t:.1}s / {sim_total_e:.0}J per-GPU under {}",
+                dep.system.name()
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("train: {e:#}");
+            1
+        }
+    }
+}

@@ -1,0 +1,137 @@
+//! Candidate search space for one partition (§4.1 decision variables,
+//! Appendix C ranges).
+
+use crate::partition::Partition;
+use crate::sim::exec::{LaunchAt, Schedule};
+use crate::sim::gpu::GpuSpec;
+
+/// Enumerate the candidate schedules for a partition.
+///
+/// * Frequency: 900–1410 MHz at 30 MHz stride (App. C).
+/// * SM allocation: comm group < 4 GPUs → 1..=20 step 1;
+///   group ≥ 4 → 3..=30 step 3 (App. C).
+/// * Launch timing: any computation kernel index whose remaining compute
+///   can possibly cover the communication; options that *always* expose
+///   communication (e.g. launching with the last Linear2, Figure 3a) are
+///   excluded (App. C).
+pub fn candidate_space(gpu: &GpuSpec, part: &Partition, comm_group: u32) -> Vec<Schedule> {
+    let freqs = gpu.search_freqs();
+    let sms = sm_allocations(comm_group);
+    let timings = launch_timings(gpu, part);
+    let mut out = Vec::with_capacity(freqs.len() * sms.len() * timings.len());
+    for &f in &freqs {
+        if part.comm.is_none() {
+            // No communication: only frequency matters.
+            out.push(Schedule { comm_sms: 0, launch: LaunchAt::WithComp(0), freq_mhz: f });
+            continue;
+        }
+        for &s in &sms {
+            for &t in &timings {
+                out.push(Schedule { comm_sms: s, launch: LaunchAt::WithComp(t), freq_mhz: f });
+            }
+        }
+    }
+    out
+}
+
+pub fn sm_allocations(comm_group: u32) -> Vec<u32> {
+    if comm_group < 4 {
+        (1..=20).collect()
+    } else {
+        (1..=10).map(|i| 3 * i).collect()
+    }
+}
+
+/// Launch-timing options: computation kernel indices, pruned of positions
+/// from which the communication can never finish before the computation
+/// stream does (always-exposed; App. C).
+pub fn launch_timings(gpu: &GpuSpec, part: &Partition) -> Vec<usize> {
+    let Some(comm) = &part.comm else { return vec![0] };
+    // Fastest possible comm: full search-range SM allocation.
+    let t_comm_min = comm.comm_bytes / gpu.comm_bw(30);
+    let mut out = Vec::new();
+    for i in 0..part.comps.len() {
+        // Compute time from kernel i to the end at f_max with all SMs —
+        // the loosest bound on how much overlap room remains.
+        let t_rest: f64 = part.comps[i..]
+            .iter()
+            .map(|k| {
+                (k.flops / gpu.flop_rate(gpu.n_sms, gpu.f_max_mhz)).max(k.bytes / gpu.mem_bw)
+            })
+            .sum();
+        if t_rest >= t_comm_min || i == 0 {
+            out.push(i);
+        }
+    }
+    out
+}
+
+/// Feature vector for the surrogate models: [freq, sms, launch index].
+pub fn features(s: &Schedule) -> Vec<f64> {
+    let launch = match s.launch {
+        LaunchAt::Sequential => -1.0,
+        LaunchAt::WithComp(i) => i as f64,
+    };
+    vec![s.freq_mhz as f64, s.comm_sms as f64, launch]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::kernel::{Kernel, KernelKind};
+
+    fn part(comm_bytes: f64) -> Partition {
+        Partition {
+            ptype: "fwd/attn".into(),
+            comps: vec![
+                Kernel::comp("norm", KernelKind::Norm, 1e8, 8e8),
+                Kernel::comp("linear1", KernelKind::Linear, 4e11, 2e9),
+                Kernel::comp("flash", KernelKind::FlashAttention, 2e11, 1e9),
+                Kernel::comp("linear2", KernelKind::Linear, 4e11, 2e9),
+            ],
+            comm: Some(Kernel::comm("ar", KernelKind::AllReduce, comm_bytes)),
+            count: 28,
+        }
+    }
+
+    #[test]
+    fn space_size_matches_appendix_c_shape() {
+        let g = GpuSpec::a100();
+        let p = part(4e8);
+        let space = candidate_space(&g, &p, 8);
+        // 18 freqs × 10 SM choices × ≤4 timings.
+        assert!(space.len() <= 18 * 10 * 4);
+        assert!(space.len() >= 18 * 10 * 2, "len {}", space.len());
+    }
+
+    #[test]
+    fn small_group_fine_grained_sms() {
+        assert_eq!(sm_allocations(2), (1..=20).collect::<Vec<u32>>());
+        assert_eq!(sm_allocations(8), vec![3, 6, 9, 12, 15, 18, 21, 24, 27, 30]);
+    }
+
+    #[test]
+    fn always_exposed_timings_pruned() {
+        let g = GpuSpec::a100();
+        // Huge comm: only early launch indices can cover it.
+        let p = part(6e9);
+        let timings = launch_timings(&g, &p);
+        assert!(timings.contains(&0));
+        assert!(!timings.contains(&3), "launching at the last kernel always exposes: {timings:?}");
+    }
+
+    #[test]
+    fn no_comm_partition_single_knob() {
+        let g = GpuSpec::a100();
+        let mut p = part(1e8);
+        p.comm = None;
+        let space = candidate_space(&g, &p, 8);
+        assert_eq!(space.len(), g.search_freqs().len());
+    }
+
+    #[test]
+    fn features_roundtrip() {
+        let s = Schedule { comm_sms: 12, launch: LaunchAt::WithComp(2), freq_mhz: 1200 };
+        assert_eq!(features(&s), vec![1200.0, 12.0, 2.0]);
+    }
+}

@@ -1,0 +1,83 @@
+//! Shared comparison machinery for the evaluation tables (§6.1 metrics):
+//! max-throughput comparison (vs Megatron-LM) and frontier improvement
+//! (iso-time energy / iso-energy time reductions vs Megatron-LM+Perseus).
+
+use crate::baselines::{run_system, System, SystemResult};
+use crate::sim::gpu::GpuSpec;
+use crate::workload::TrainConfig;
+
+/// All four §6.2 systems evaluated on one workload.
+#[derive(Clone, Debug)]
+pub struct WorkloadComparison {
+    pub cfg: TrainConfig,
+    pub megatron: SystemResult,
+    pub megatron_perseus: SystemResult,
+    pub nano_perseus: SystemResult,
+    pub kareus: SystemResult,
+}
+
+pub fn compare_workload(gpu: &GpuSpec, cfg: &TrainConfig, seed: u64) -> WorkloadComparison {
+    WorkloadComparison {
+        cfg: *cfg,
+        megatron: run_system(gpu, cfg, System::Megatron, seed),
+        megatron_perseus: run_system(gpu, cfg, System::MegatronPerseus, seed),
+        nano_perseus: run_system(gpu, cfg, System::NanobatchingPerseus, seed),
+        kareus: run_system(gpu, cfg, System::Kareus, seed),
+    }
+}
+
+/// Max-throughput comparison (Table 3): time/energy reduction (%) of a
+/// system's leftmost frontier point relative to Megatron-LM.
+pub fn max_throughput_reduction(baseline: &SystemResult, sys: &SystemResult) -> (f64, f64) {
+    let b = baseline.frontier.min_time().expect("baseline frontier");
+    let s = sys.frontier.min_time().expect("system frontier");
+    (100.0 * (b.time - s.time) / b.time, 100.0 * (b.energy - s.energy) / b.energy)
+}
+
+/// Frontier improvement (Table 4): iso-time energy reduction and
+/// iso-energy time reduction vs the reference frontier ("—" = None:
+/// the system has no point meeting the constraint, like N+P rows that
+/// are slower than M+P's fastest point).
+pub fn frontier_improvement(
+    reference: &SystemResult,
+    sys: &SystemResult,
+) -> (Option<f64>, Option<f64>) {
+    let ref_min_time = reference.frontier.min_time().expect("ref frontier");
+    let ref_min_energy = reference.frontier.min_energy().expect("ref frontier");
+    let iso_time = sys
+        .frontier
+        .energy_at_deadline(ref_min_time.time)
+        .map(|e| 100.0 * (ref_min_time.energy - e) / ref_min_time.energy);
+    let iso_energy = sys
+        .frontier
+        .time_at_budget(ref_min_energy.energy)
+        .map(|t| 100.0 * (ref_min_energy.time - t) / ref_min_energy.time);
+    (iso_time, iso_energy)
+}
+
+pub fn fmt_opt(v: Option<f64>) -> String {
+    v.map(|x| format!("{:.1}", x)).unwrap_or_else(|| "—".to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::paper::workloads::ablation_config;
+
+    #[test]
+    fn kareus_metrics_positive_on_tp8() {
+        let gpu = GpuSpec::a100();
+        let cfg = ablation_config(8);
+        let cmp = compare_workload(&gpu, &cfg, 42);
+        let (dt, de) = max_throughput_reduction(&cmp.megatron, &cmp.kareus);
+        assert!(dt > 0.0, "kareus time reduction {dt}");
+        assert!(de > 0.0, "kareus energy reduction {de}");
+        let (iso_t, iso_e) = frontier_improvement(&cmp.megatron_perseus, &cmp.kareus);
+        assert!(iso_t.unwrap_or(-1.0) > 0.0, "iso-time {iso_t:?}");
+        assert!(iso_e.unwrap_or(-1.0) > 0.0, "iso-energy {iso_e:?}");
+        // Kareus strictly dominates N+P at max throughput.
+        let (dt_np, de_np) = max_throughput_reduction(&cmp.megatron, &cmp.nano_perseus);
+        assert!(dt >= dt_np - 0.5, "kareus {dt} vs n+p {dt_np}");
+        assert!(de >= de_np - 0.5, "kareus {de} vs n+p {de_np}");
+    }
+}

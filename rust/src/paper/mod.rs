@@ -1,0 +1,9 @@
+//! Paper-reproduction harness: every table and figure of the evaluation
+//! section, regenerated from the simulator + optimizer stack.
+//! DESIGN.md §4 maps experiment ids to modules.
+
+pub mod compare;
+pub mod experiments;
+pub mod workloads;
+
+pub use experiments::{run_experiment, ALL_EXPERIMENTS};

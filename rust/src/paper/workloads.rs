@@ -1,0 +1,107 @@
+//! The paper's workload matrix (§6.1, Tables 3–4 rows; §6.3 emulation;
+//! §6.4–6.5 ablation/sensitivity configs).
+
+use crate::workload::{ModelSpec, Parallelism, TrainConfig};
+
+/// One Table 3/4 row. OOM rows from the paper are excluded (they ran out
+/// of memory on the real testbed; the simulator mirrors the published
+/// rows).
+pub fn table3_rows() -> Vec<TrainConfig> {
+    let mut rows = Vec::new();
+    let mk = |model: ModelSpec, tp: u32, cp: u32, mb: u32, seq: u32| TrainConfig {
+        model,
+        par: Parallelism::new(tp, cp, 2),
+        microbatch: mb,
+        seq_len: seq,
+        n_microbatches: 8,
+        dtype_bytes: 2,
+    };
+    // Llama 3.2 3B TP8: only µb8/4K fits (8K and µb16 OOM in the paper).
+    rows.push(mk(ModelSpec::llama32_3b(), 8, 1, 8, 4096));
+    // Llama 3.2 3B CP2TP4.
+    rows.push(mk(ModelSpec::llama32_3b(), 4, 2, 8, 4096));
+    rows.push(mk(ModelSpec::llama32_3b(), 4, 2, 8, 8192));
+    rows.push(mk(ModelSpec::llama32_3b(), 4, 2, 16, 4096));
+    // Qwen 3 1.7B TP8.
+    rows.push(mk(ModelSpec::qwen3_1_7b(), 8, 1, 8, 4096));
+    rows.push(mk(ModelSpec::qwen3_1_7b(), 8, 1, 8, 8192));
+    rows.push(mk(ModelSpec::qwen3_1_7b(), 8, 1, 16, 4096));
+    // Qwen 3 1.7B CP2TP4.
+    rows.push(mk(ModelSpec::qwen3_1_7b(), 4, 2, 8, 4096));
+    rows.push(mk(ModelSpec::qwen3_1_7b(), 4, 2, 8, 8192));
+    rows.push(mk(ModelSpec::qwen3_1_7b(), 4, 2, 16, 4096));
+    rows
+}
+
+/// Table 1's workload: Qwen 3 1.7B on 16 GPUs, PP2·CP2·TP4, 8×µb16, 4K.
+pub fn table1_config() -> TrainConfig {
+    TrainConfig {
+        model: ModelSpec::qwen3_1_7b(),
+        par: Parallelism::new(4, 2, 2),
+        microbatch: 16,
+        seq_len: 4096,
+        n_microbatches: 8,
+        dtype_bytes: 2,
+    }
+}
+
+/// §6.4 ablation / §6.5 sensitivity base config: Qwen 1.7B TP8, seq 4K.
+pub fn ablation_config(microbatch: u32) -> TrainConfig {
+    TrainConfig {
+        model: ModelSpec::qwen3_1_7b(),
+        par: Parallelism::new(8, 1, 2),
+        microbatch,
+        seq_len: 4096,
+        n_microbatches: 8,
+        dtype_bytes: 2,
+    }
+}
+
+/// §6.3 emulation: Llama 3.3 70B, PP10·TP8, µb4, seq 4K, strong scaling
+/// (Table 5). Returns (n_gpus, n_microbatches_per_pipeline, config).
+pub fn emulation_rows() -> Vec<(u32, u32, TrainConfig)> {
+    [(10_240u32, 16u32), (5_120, 32), (2_560, 64), (1_280, 128)]
+        .into_iter()
+        .map(|(gpus, mbs)| {
+            (
+                gpus,
+                mbs,
+                TrainConfig {
+                    model: ModelSpec::llama33_70b(),
+                    par: Parallelism::new(8, 1, 10),
+                    microbatch: 4,
+                    seq_len: 4096,
+                    n_microbatches: mbs,
+                    dtype_bytes: 2,
+                },
+            )
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eleven_minus_oom_rows() {
+        // Paper Table 3 has 11 non-OOM data rows; we model 10 (the Llama
+        // TP8 block keeps only its single non-OOM row).
+        assert_eq!(table3_rows().len(), 10);
+    }
+
+    #[test]
+    fn all_rows_use_16_gpus() {
+        for r in table3_rows() {
+            assert_eq!(r.par.gpus(), 16, "{}", r.label());
+        }
+    }
+
+    #[test]
+    fn emulation_strong_scaling_consistent() {
+        for (gpus, mbs, cfg) in emulation_rows() {
+            let pipelines = gpus / cfg.par.gpus();
+            assert_eq!(pipelines * mbs, 2048, "global batch mismatch");
+        }
+    }
+}

@@ -1,0 +1,198 @@
+//! Partitioned overlap execution model (§4.2, §4.5).
+//!
+//! A *partition* pairs one communication kernel from one nanobatch with
+//! the longest contiguous computation sequence from the *other* nanobatch
+//! — by construction they have no data dependencies, so the comm kernel
+//! may overlap any contiguous subsequence of the computation.
+//!
+//! Detection walks the kernel stream produced by the workload builder,
+//! groups short consecutive memory-bound computations into logical ops,
+//! fuses consecutive communication kernels, and dedups repeating patterns
+//! into partition *types* (Attention–AllReduce, MLP–AllReduce in Figure 5)
+//! so each type is optimized once and shares its configuration across all
+//! instances (§4.4 design decision 2).
+
+use crate::sim::gpu::GpuSpec;
+use crate::sim::kernel::Kernel;
+use crate::workload::{Dir, MicrobatchWork};
+
+/// A partition type: the repeating (computation sequence, comm) pattern.
+#[derive(Clone, Debug)]
+pub struct Partition {
+    /// Type key, e.g. "fwd/attn", "bwd/mlp".
+    pub ptype: String,
+    pub comps: Vec<Kernel>,
+    pub comm: Option<Kernel>,
+    /// Instances of this type per microbatch pass (counting both
+    /// nanobatches).
+    pub count: u32,
+}
+
+/// Size class for MBO hyperparameter selection (Appendix C).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SizeClass {
+    Small,
+    Medium,
+    Large,
+}
+
+impl Partition {
+    pub fn size_class(&self) -> SizeClass {
+        match self.comps.len() {
+            0..=1 => SizeClass::Small,
+            2..=3 => SizeClass::Medium,
+            _ => SizeClass::Large,
+        }
+    }
+}
+
+/// Threshold below which consecutive memory-bound kernels are grouped
+/// (§4.5): kernels whose solo execution is shorter than this at f_max.
+pub const GROUP_THRESHOLD_S: f64 = 60e-6;
+
+/// Detect partition types in one pass's kernel stream.
+///
+/// `nanobatched` doubles the instance count: each microbatch runs two
+/// nanobatches, each contributing one instance per segment.
+pub fn detect_partitions(gpu: &GpuSpec, work: &MicrobatchWork, nanobatched: bool) -> Vec<Partition> {
+    let dir_label = match work.dir {
+        Dir::Fwd => "fwd",
+        Dir::Bwd => "bwd",
+    };
+    let mut out: Vec<Partition> = Vec::new();
+    for seg in &work.segments {
+        let comps = group_short_membound(gpu, &seg.comps);
+        let ptype = format!("{}/{}", dir_label, seg.stype);
+        if let Some(existing) = out.iter_mut().find(|p| p.ptype == ptype) {
+            existing.count += if nanobatched { 2 } else { 1 };
+        } else {
+            out.push(Partition {
+                ptype,
+                comps,
+                comm: seg.comm.clone(),
+                count: if nanobatched { 2 } else { 1 },
+            });
+        }
+    }
+    out
+}
+
+/// Group consecutive short memory-bound kernels into one logical op
+/// (§4.5): treating them separately only inflates the launch-timing
+/// search space.
+pub fn group_short_membound(gpu: &GpuSpec, comps: &[Kernel]) -> Vec<Kernel> {
+    let mut out: Vec<Kernel> = Vec::new();
+    let mut pending: Vec<Kernel> = Vec::new();
+    let is_short_membound = |k: &Kernel| {
+        if !k.memory_bound(gpu, gpu.n_sms, gpu.f_max_mhz) {
+            return false;
+        }
+        let t = k.bytes / gpu.mem_bw;
+        t < GROUP_THRESHOLD_S
+    };
+    for k in comps {
+        if is_short_membound(k) {
+            pending.push(k.clone());
+        } else {
+            if !pending.is_empty() {
+                out.push(Kernel::group(&pending));
+                pending.clear();
+            }
+            out.push(k.clone());
+        }
+    }
+    if !pending.is_empty() {
+        out.push(Kernel::group(&pending));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::kernel::KernelKind;
+    use crate::workload::{build_pass, Dir, ModelSpec, Parallelism, TrainConfig};
+
+    fn cfg() -> TrainConfig {
+        TrainConfig {
+            model: ModelSpec::qwen3_1_7b(),
+            par: Parallelism::new(8, 1, 2),
+            microbatch: 8,
+            seq_len: 4096,
+            n_microbatches: 8,
+            dtype_bytes: 2,
+        }
+    }
+
+    #[test]
+    fn detects_two_types_per_direction() {
+        let g = GpuSpec::a100();
+        let w = build_pass(&cfg(), cfg().tokens_per_gpu() / 2.0, Dir::Fwd, false, false);
+        let parts = detect_partitions(&g, &w, true);
+        assert_eq!(parts.len(), 2);
+        let types: Vec<&str> = parts.iter().map(|p| p.ptype.as_str()).collect();
+        assert!(types.contains(&"fwd/attn") && types.contains(&"fwd/mlp"));
+    }
+
+    #[test]
+    fn instance_counts_cover_all_layers_and_nanobatches() {
+        let g = GpuSpec::a100();
+        let c = cfg();
+        let w = build_pass(&c, c.tokens_per_gpu() / 2.0, Dir::Fwd, false, false);
+        let parts = detect_partitions(&g, &w, true);
+        let total: u32 = parts.iter().map(|p| p.count).sum();
+        assert_eq!(total, 2 * 2 * c.layers_per_stage());
+    }
+
+    #[test]
+    fn bwd_partitions_labeled() {
+        let g = GpuSpec::a100();
+        let c = cfg();
+        let w = build_pass(&c, c.tokens_per_gpu() / 2.0, Dir::Bwd, false, false);
+        let parts = detect_partitions(&g, &w, true);
+        assert!(parts.iter().all(|p| p.ptype.starts_with("bwd/")));
+    }
+
+    #[test]
+    fn grouping_merges_short_membound_runs() {
+        let g = GpuSpec::a100();
+        // Two tiny memory-bound ops followed by a big linear.
+        let comps = vec![
+            Kernel::comp("bda", KernelKind::BiasDropoutAdd, 1e5, 5e6),
+            Kernel::comp("norm", KernelKind::Norm, 1e5, 5e6),
+            Kernel::comp("linear", KernelKind::Linear, 5e11, 2e9),
+        ];
+        let grouped = group_short_membound(&g, &comps);
+        assert_eq!(grouped.len(), 2);
+        assert_eq!(grouped[0].kind, KernelKind::Grouped);
+        assert_eq!(grouped[0].bytes, 1e7);
+    }
+
+    #[test]
+    fn grouping_preserves_total_work() {
+        let g = GpuSpec::a100();
+        let c = cfg();
+        let w = build_pass(&c, c.tokens_per_gpu(), Dir::Fwd, false, false);
+        let before: f64 = w.segments[0].comps.iter().map(|k| k.flops + k.bytes).sum();
+        let grouped = group_short_membound(&g, &w.segments[0].comps);
+        let after: f64 = grouped.iter().map(|k| k.flops + k.bytes).sum();
+        assert!((before - after).abs() < 1e-6 * before.max(1.0));
+    }
+
+    #[test]
+    fn size_classes() {
+        let g = GpuSpec::a100();
+        let mk = |n: usize| Partition {
+            ptype: "t".into(),
+            comps: (0..n)
+                .map(|i| Kernel::comp(format!("k{i}"), KernelKind::Linear, 1e11, 1e9))
+                .collect(),
+            comm: None,
+            count: 1,
+        };
+        let _ = g;
+        assert_eq!(mk(1).size_class(), SizeClass::Small);
+        assert_eq!(mk(3).size_class(), SizeClass::Medium);
+        assert_eq!(mk(5).size_class(), SizeClass::Large);
+    }
+}

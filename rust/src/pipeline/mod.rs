@@ -1,0 +1,485 @@
+//! 1F1B pipeline schedule + Perseus-style iteration-frontier composition
+//! (§2.2 Figure 1, §4.4 "microbatch frontiers to iteration frontier").
+//!
+//! Each (stage, direction) has a microbatch frontier (time, energy)
+//! choices. The 1F1B dependency DAG determines the critical path; the
+//! iteration frontier is traced by sweeping an iteration deadline and
+//! greedily moving off-critical-path microbatches down their frontiers
+//! (cheaper-but-slower points) while the deadline holds — Perseus's
+//! iterative energy-reduction algorithm [15] adapted to our frontier
+//! representation. Iteration energy adds the static power of idle bubble
+//! time (§4.4).
+
+use crate::compose::MbFrontier;
+use crate::frontier::{Frontier, Point};
+
+/// One task in the pipeline: (stage, microbatch, direction).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Task {
+    pub stage: usize,
+    pub mb: usize,
+    pub is_bwd: bool,
+}
+
+/// The 1F1B task order for one stage (warmup fwds, steady 1F1B, cooldown
+/// bwds) — Figure 1's schedule.
+pub fn stage_order(stage: usize, n_stages: usize, n_microbatches: usize) -> Vec<Task> {
+    let warmup = (n_stages - 1 - stage).min(n_microbatches);
+    let mut order = Vec::with_capacity(2 * n_microbatches);
+    let mut next_fwd = 0usize;
+    let mut next_bwd = 0usize;
+    for _ in 0..warmup {
+        order.push(Task { stage, mb: next_fwd, is_bwd: false });
+        next_fwd += 1;
+    }
+    while next_bwd < n_microbatches {
+        if next_fwd < n_microbatches {
+            order.push(Task { stage, mb: next_fwd, is_bwd: false });
+            next_fwd += 1;
+        }
+        order.push(Task { stage, mb: next_bwd, is_bwd: true });
+        next_bwd += 1;
+        // 1F1B steady state alternates F and B; warmup already issued the
+        // lead forwards.
+    }
+    order
+}
+
+/// A frozen choice of operating point for every task.
+#[derive(Clone, Debug)]
+pub struct IterationPlan {
+    /// choice[stage][2*mb + is_bwd] = index into that (stage, dir)
+    /// frontier's pareto() list.
+    pub choice: Vec<Vec<usize>>,
+    pub time_s: f64,
+    pub total_j: f64,
+    pub dyn_j: f64,
+    /// Idle (bubble) time summed over stages, per GPU.
+    pub bubble_s: f64,
+}
+
+/// Per-(stage, dir) Pareto choices: (time, total, dyn) ascending in time.
+#[derive(Clone, Debug)]
+pub struct StageMenu {
+    pub fwd: Vec<(f64, f64, f64)>,
+    pub bwd: Vec<(f64, f64, f64)>,
+}
+
+impl StageMenu {
+    pub fn from_frontiers(fwd: &MbFrontier, bwd: &MbFrontier) -> Self {
+        let take = |f: &MbFrontier| {
+            f.pareto().iter().map(|p| (p.time_s, p.total_j, p.dyn_j)).collect::<Vec<_>>()
+        };
+        StageMenu { fwd: take(fwd), bwd: take(bwd) }
+    }
+
+    fn menu(&self, is_bwd: bool) -> &[(f64, f64, f64)] {
+        if is_bwd {
+            &self.bwd
+        } else {
+            &self.fwd
+        }
+    }
+}
+
+/// Simulate the 1F1B schedule given per-task durations; returns
+/// (iteration time, per-stage busy time).
+pub fn simulate_1f1b(
+    menus: &[StageMenu],
+    choice: &[Vec<usize>],
+    n_microbatches: usize,
+) -> (f64, Vec<f64>) {
+    let n_stages = menus.len();
+    let dur = |t: &Task| {
+        let m = menus[t.stage].menu(t.is_bwd);
+        m[choice[t.stage][2 * t.mb + t.is_bwd as usize].min(m.len() - 1)].0
+    };
+    // end[stage][2*mb + dir]; NaN = not yet scheduled.
+    let mut end = vec![vec![f64::NAN; 2 * n_microbatches]; n_stages];
+    let orders: Vec<Vec<Task>> =
+        (0..n_stages).map(|s| stage_order(s, n_stages, n_microbatches)).collect();
+    // Event-driven list scheduling in topological order: each stage
+    // consumes its 1F1B order as soon as cross-stage dependencies resolve.
+    let mut ptr = vec![0usize; n_stages];
+    let mut clock = vec![0.0f64; n_stages];
+    let total = n_stages * 2 * n_microbatches;
+    let mut scheduled = 0usize;
+    while scheduled < total {
+        let mut progress = false;
+        for s in 0..n_stages {
+            while ptr[s] < orders[s].len() {
+                let t = &orders[s][ptr[s]];
+                let dep = if !t.is_bwd {
+                    if s == 0 {
+                        Some(0.0)
+                    } else {
+                        let v = end[s - 1][2 * t.mb];
+                        if v.is_nan() {
+                            None
+                        } else {
+                            Some(v)
+                        }
+                    }
+                } else if s == n_stages - 1 {
+                    let v = end[s][2 * t.mb];
+                    if v.is_nan() {
+                        None
+                    } else {
+                        Some(v)
+                    }
+                } else {
+                    let v = end[s + 1][2 * t.mb + 1];
+                    if v.is_nan() {
+                        None
+                    } else {
+                        Some(v)
+                    }
+                };
+                let Some(dep) = dep else { break };
+                let start = clock[s].max(dep);
+                let e = start + dur(t);
+                end[s][2 * t.mb + t.is_bwd as usize] = e;
+                clock[s] = e;
+                ptr[s] += 1;
+                scheduled += 1;
+                progress = true;
+            }
+        }
+        assert!(progress, "1F1B schedule deadlocked (inconsistent orders)");
+    }
+    let mut makespan = 0.0f64;
+    let mut busy = vec![0.0f64; n_stages];
+    for s in 0..n_stages {
+        for t in &orders[s] {
+            busy[s] += dur(t);
+        }
+        makespan = makespan.max(clock[s]);
+    }
+    (makespan, busy)
+}
+
+/// Energy of a frozen plan: task energies + static power during bubbles.
+fn plan_energy(
+    menus: &[StageMenu],
+    choice: &[Vec<usize>],
+    n_microbatches: usize,
+    p_static: f64,
+) -> (f64, f64, f64, f64) {
+    let (time, busy) = simulate_1f1b(menus, choice, n_microbatches);
+    let mut total = 0.0;
+    let mut dynamic = 0.0;
+    for (s, menu) in menus.iter().enumerate() {
+        for mb in 0..n_microbatches {
+            for d in 0..2 {
+                let m = menu.menu(d == 1);
+                let c = m[choice[s][2 * mb + d].min(m.len() - 1)];
+                total += c.1;
+                dynamic += c.2;
+            }
+        }
+    }
+    let bubble: f64 = busy.iter().map(|b| (time - b).max(0.0)).sum();
+    total += p_static * bubble;
+    (time, total, dynamic, bubble)
+}
+
+/// Build the iteration frontier by deadline sweep + greedy slack filling.
+///
+/// Returns (frontier over per-GPU (time, energy), plans). Energies are per
+/// GPU within one pipeline (multiply by TP×CP×PP for cluster totals).
+pub fn iteration_frontier(
+    menus: &[StageMenu],
+    n_microbatches: usize,
+    p_static: f64,
+    n_deadlines: usize,
+) -> (Frontier, Vec<IterationPlan>) {
+    let n_stages = menus.len();
+    let min_choice = vec![vec![0usize; 2 * n_microbatches]; n_stages];
+    let (t_min, _) = simulate_1f1b(menus, &min_choice, n_microbatches);
+
+    // Loosest deadline worth considering: everything at its own
+    // energy-minimal point.
+    let max_choice: Vec<Vec<usize>> = (0..n_stages)
+        .map(|s| {
+            (0..2 * n_microbatches)
+                .map(|i| {
+                    let m = menus[s].menu(i % 2 == 1);
+                    argmin_energy(m)
+                })
+                .collect()
+        })
+        .collect();
+    let (t_max, _) = simulate_1f1b(menus, &max_choice, n_microbatches);
+
+    let mut plans = Vec::new();
+    let mut pts = Vec::new();
+    for k in 0..n_deadlines.max(2) {
+        let deadline = t_min + (t_max - t_min).max(0.0) * k as f64 / (n_deadlines - 1).max(1) as f64;
+        let plan = greedy_fill(menus, n_microbatches, p_static, deadline);
+        pts.push(Point::new(plan.time_s, plan.total_j, plans.len()));
+        plans.push(plan);
+    }
+    (Frontier::from_points(pts), plans)
+}
+
+fn argmin_energy(m: &[(f64, f64, f64)]) -> usize {
+    let mut best = 0;
+    for (i, c) in m.iter().enumerate() {
+        if c.1 < m[best].1 {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Perseus-style greedy: start at min-time everywhere, then repeatedly
+/// apply the move (one task → next, slower-but-cheaper frontier point)
+/// with the highest task-local energy saving per added second, as long as
+/// the 1F1B makespan stays within the deadline.
+///
+/// Granularity adapts to scale: per-task moves for testbed-sized
+/// pipelines; per-(stage, direction) uniform moves for large-scale
+/// emulation (10 stages × 128 microbatches), where per-task search would
+/// be quadratic in thousands of slots.
+pub fn greedy_fill(
+    menus: &[StageMenu],
+    n_microbatches: usize,
+    p_static: f64,
+    deadline: f64,
+) -> IterationPlan {
+    let n_stages = menus.len();
+    let mut choice = vec![vec![0usize; 2 * n_microbatches]; n_stages];
+
+    // Move groups: sets of task slots that move together. Testbed-sized
+    // pipelines get one group per task (Perseus's per-microbatch control).
+    // At emulation scale, the warm-up and cool-down microbatches — the
+    // ones with real slack (the paper: bubbles are "normally reduced down
+    // to the lowest frequency") — stay individually controllable, and the
+    // steady-state middle moves as one block per (stage, direction).
+    let per_task = n_stages * 2 * n_microbatches <= 192;
+    // Groups are sets of (stage, slot) that move together. Three kinds:
+    //  · fine-grained groups (per task, or per warmup/cooldown microbatch
+    //    plus a per-stage middle block at emulation scale) absorb *slack*;
+    //  · coordinated all-stage groups slow the whole pipeline uniformly —
+    //    a single stage slowed alone just creates bubbles on the other
+    //    stages (static burn ≥ dynamic savings), the coordinated move is
+    //    what trades iteration time for dynamic energy.
+    let mut groups: Vec<Vec<(usize, usize)>> = Vec::new();
+    for s in 0..n_stages {
+        for d in 0..2 {
+            if per_task {
+                for mb in 0..n_microbatches {
+                    groups.push(vec![(s, 2 * mb + d)]);
+                }
+            } else {
+                let edge = n_stages.min(n_microbatches / 2);
+                let mut middle = Vec::new();
+                for mb in 0..n_microbatches {
+                    if mb < edge || mb >= n_microbatches - edge {
+                        groups.push(vec![(s, 2 * mb + d)]);
+                    } else {
+                        middle.push((s, 2 * mb + d));
+                    }
+                }
+                if !middle.is_empty() {
+                    groups.push(middle);
+                }
+            }
+        }
+    }
+    // Coordinated groups: all-forward, all-backward, and everything.
+    let all_fwd: Vec<(usize, usize)> = (0..n_stages)
+        .flat_map(|s| (0..n_microbatches).map(move |mb| (s, 2 * mb)))
+        .collect();
+    let all_bwd: Vec<(usize, usize)> = (0..n_stages)
+        .flat_map(|s| (0..n_microbatches).map(move |mb| (s, 2 * mb + 1)))
+        .collect();
+    let mut all: Vec<(usize, usize)> = all_fwd.clone();
+    all.extend(all_bwd.iter().copied());
+    groups.push(all_fwd);
+    groups.push(all_bwd);
+    groups.push(all);
+
+    // Max-heap of candidate moves keyed by energy-saved-per-second.
+    #[derive(PartialEq)]
+    struct Move {
+        rate: f64,
+        group: usize,
+    }
+    impl Eq for Move {}
+    impl PartialOrd for Move {
+        fn partial_cmp(&self, o: &Self) -> Option<std::cmp::Ordering> {
+            Some(self.cmp(o))
+        }
+    }
+    impl Ord for Move {
+        fn cmp(&self, o: &Self) -> std::cmp::Ordering {
+            self.rate.partial_cmp(&o.rate).unwrap_or(std::cmp::Ordering::Equal)
+        }
+    }
+
+    // Group move value: summed task-energy savings per summed added time
+    // over members that can still advance. The true (bubble-coupled)
+    // objective is verified before accepting.
+    let group_rate = |choice: &Vec<Vec<usize>>, members: &[(usize, usize)]| -> Option<f64> {
+        let mut de = 0.0;
+        let mut dt = 0.0;
+        for &(s, slot) in members {
+            let m = menus[s].menu(slot % 2 == 1);
+            let cur = choice[s][slot];
+            if cur + 1 < m.len() {
+                de += m[cur].1 - m[cur + 1].1;
+                dt += m[cur + 1].0 - m[cur].0;
+            }
+        }
+        if dt <= 0.0 {
+            None
+        } else {
+            Some(de / dt)
+        }
+    };
+
+    let mut heap = std::collections::BinaryHeap::new();
+    for g in 0..groups.len() {
+        if let Some(rate) = group_rate(&choice, &groups[g]) {
+            heap.push(Move { rate, group: g });
+        }
+    }
+
+    let (_, mut total_cur, _, _) = plan_energy(menus, &choice, n_microbatches, p_static);
+    while let Some(mv) = heap.pop() {
+        let members = &groups[mv.group];
+        // Advance every member that still has a slower point; remember
+        // which actually moved so the revert is exact.
+        let mut moved: Vec<(usize, usize)> = Vec::new();
+        for &(s, slot) in members {
+            let m = menus[s].menu(slot % 2 == 1);
+            if choice[s][slot] + 1 < m.len() {
+                choice[s][slot] += 1;
+                moved.push((s, slot));
+            }
+        }
+        if moved.is_empty() {
+            continue;
+        }
+        let (t, _) = simulate_1f1b(menus, &choice, n_microbatches);
+        let (_, total_after, _, _) = plan_energy(menus, &choice, n_microbatches, p_static);
+        // A move must respect the deadline AND reduce true total energy
+        // (task savings can be outweighed by static power burned in the
+        // bubbles the slowdown creates on other stages).
+        if t <= deadline * (1.0 + 1e-9) && total_after < total_cur - 1e-12 {
+            total_cur = total_after;
+            if let Some(rate) = group_rate(&choice, members) {
+                heap.push(Move { rate, group: mv.group });
+            }
+        } else {
+            for (s, slot) in moved {
+                choice[s][slot] -= 1; // revert; this group is saturated
+            }
+        }
+    }
+
+    let (time, total, dynamic, bubble) = plan_energy(menus, &choice, n_microbatches, p_static);
+    IterationPlan { choice, time_s: time, total_j: total, dyn_j: dynamic, bubble_s: bubble }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compose::{MbFrontier, MbPoint, MicrobatchPlan};
+    use std::collections::BTreeMap;
+
+    fn mb_frontier(points: &[(f64, f64, f64)]) -> MbFrontier {
+        MbFrontier::from_points(
+            points
+                .iter()
+                .map(|&(t, e, d)| MbPoint {
+                    time_s: t,
+                    total_j: e,
+                    dyn_j: d,
+                    plan: MicrobatchPlan { freq_mhz: 1410, configs: BTreeMap::new(), sequential: true },
+                })
+                .collect(),
+        )
+    }
+
+    fn menus(n_stages: usize) -> Vec<StageMenu> {
+        // Realistic proportions: dynamic energy dominates, so slowing a
+        // microbatch saves far more than the static power burned in any
+        // bubble it creates (90 W × Δt).
+        let f = mb_frontier(&[(1.0, 300.0, 250.0), (1.2, 240.0, 185.0), (1.5, 200.0, 140.0)]);
+        let b = mb_frontier(&[(2.0, 600.0, 500.0), (2.4, 480.0, 370.0), (3.0, 400.0, 280.0)]);
+        (0..n_stages).map(|_| StageMenu::from_frontiers(&f, &b)).collect()
+    }
+
+    #[test]
+    fn stage_order_is_1f1b() {
+        let o = stage_order(0, 2, 4);
+        assert_eq!(o.len(), 8);
+        // Stage 0 with 2 stages: 1 warmup fwd, then F B F B ...
+        assert!(!o[0].is_bwd && !o[1].is_bwd && o[2].is_bwd);
+        let o_last = stage_order(1, 2, 4);
+        assert!(!o_last[0].is_bwd && o_last[1].is_bwd); // no warmup on last stage
+    }
+
+    #[test]
+    fn all_tasks_scheduled_once() {
+        for s in 0..3 {
+            let o = stage_order(s, 3, 5);
+            assert_eq!(o.len(), 10);
+            let mut seen = std::collections::HashSet::new();
+            for t in &o {
+                assert!(seen.insert((t.mb, t.is_bwd)));
+            }
+        }
+    }
+
+    #[test]
+    fn min_time_schedule_matches_analytic_1f1b() {
+        // Uniform durations: makespan = (M + P - 1) * (tf + tb) for 1F1B
+        // (approximately; exact for tf == tb).
+        let f = mb_frontier(&[(1.0, 1.0, 0.5)]);
+        let b = mb_frontier(&[(1.0, 1.0, 0.5)]);
+        let m: Vec<StageMenu> = (0..4).map(|_| StageMenu::from_frontiers(&f, &b)).collect();
+        let choice = vec![vec![0usize; 2 * 8]; 4];
+        let (t, _) = simulate_1f1b(&m, &choice, 8);
+        let expected = (8 + 4 - 1) as f64 * 2.0;
+        assert!((t - expected).abs() < 1e-6, "t = {t}, expected {expected}");
+    }
+
+    #[test]
+    fn deeper_pipeline_longer_makespan() {
+        let (t2, _) = simulate_1f1b(&menus(2), &vec![vec![0; 12]; 2], 6);
+        let (t4, _) = simulate_1f1b(&menus(4), &vec![vec![0; 12]; 4], 6);
+        assert!(t4 > t2);
+    }
+
+    #[test]
+    fn greedy_fill_saves_energy_with_slack() {
+        let m = menus(2);
+        let tight = greedy_fill(&m, 4, 90.0, 0.0); // impossible deadline -> min time
+        let loose = greedy_fill(&m, 4, 90.0, tight.time_s * 1.3);
+        assert!(loose.total_j < tight.total_j, "loose {} tight {}", loose.total_j, tight.total_j);
+        assert!(loose.time_s <= tight.time_s * 1.3 + 1e-9);
+    }
+
+    #[test]
+    fn iteration_frontier_is_pareto() {
+        let m = menus(2);
+        let (f, plans) = iteration_frontier(&m, 4, 90.0, 8);
+        assert!(f.len() >= 2, "frontier {}", f.len());
+        assert!(!plans.is_empty());
+        for w in f.points().windows(2) {
+            assert!(w[1].time > w[0].time && w[1].energy < w[0].energy);
+        }
+    }
+
+    #[test]
+    fn bubbles_nonnegative_and_counted() {
+        let m = menus(3);
+        let plan = greedy_fill(&m, 4, 90.0, 0.0);
+        assert!(plan.bubble_s >= 0.0);
+        // Warmup/cooldown bubbles must exist in a 3-stage pipeline.
+        assert!(plan.bubble_s > 0.0);
+    }
+}

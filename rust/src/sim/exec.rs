@@ -1,0 +1,600 @@
+//! Two-stream execution-schedule simulator.
+//!
+//! Executes one *partition* (§4.2): a sequence of computation kernels on
+//! the compute stream, plus (optionally) one communication kernel on the
+//! comm stream with no data dependencies on them. The schedule controls
+//! the three factors of §3.2:
+//!   1. SM allocation of the communication kernel,
+//!   2. launch timing (which computation kernel the comm launches with, or
+//!      fully sequential execution),
+//!   3. GPU frequency.
+//!
+//! The simulation is piecewise: between events (kernel completions, comm
+//! launch), resource shares are constant; HBM bandwidth is split
+//! demand-proportionally between the active compute kernel and the
+//! communication kernel (this reproduces §3.2.2's Norm-vs-AllReduce
+//! contention), compute throughput scales with SMs × frequency while
+//! memory and link throughput are frequency-invariant (§3.2.3), and power
+//! above the board limit triggers oscillating frequency throttling whose
+//! Jensen penalty makes fluctuating frequency cost more dynamic energy
+//! than its average (Appendix A).
+
+use super::gpu::GpuSpec;
+use super::kernel::Kernel;
+
+/// Fixed kernel-launch latency (CUDA launch + stream bookkeeping).
+pub const LAUNCH_OVERHEAD_S: f64 = 3e-6;
+
+/// When the communication kernel launches relative to the computation
+/// sequence.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum LaunchAt {
+    /// Sequential execution model (Megatron-LM, Figure 2a): comm runs
+    /// alone after all computation, with enough SMs to saturate the link.
+    Sequential,
+    /// Partitioned overlap: comm launches when computation kernel `i`
+    /// starts (Figure 3's "launched together with Linear1/Norm/RoPE").
+    WithComp(usize),
+}
+
+/// A complete execution schedule for one partition (the MBO decision
+/// variables, §4.1).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Schedule {
+    pub comm_sms: u32,
+    pub launch: LaunchAt,
+    pub freq_mhz: u32,
+}
+
+impl Schedule {
+    pub fn sequential(freq_mhz: u32) -> Self {
+        Schedule { comm_sms: 0, launch: LaunchAt::Sequential, freq_mhz }
+    }
+}
+
+/// Simulation output for one partition execution.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ExecResult {
+    pub time_s: f64,
+    pub dyn_j: f64,
+    pub static_j: f64,
+    /// Time during which the comm kernel ran with no computation active
+    /// ("exposed communication", §3.2.1) — SMs idle, static power wasted.
+    pub exposed_comm_s: f64,
+    /// Work-averaged effective core frequency (≠ requested when throttled).
+    pub avg_freq_mhz: f64,
+    pub throttled: bool,
+    pub peak_power_w: f64,
+}
+
+impl ExecResult {
+    pub fn total_j(&self) -> f64 {
+        self.dyn_j + self.static_j
+    }
+}
+
+/// Execute one partition under `sched` at die temperature `temp_c`.
+///
+/// `power_limit` of `None` disables throttling (used by unit tests);
+/// normally pass `Some(gpu.tdp_w)`.
+pub fn execute_partition(
+    gpu: &GpuSpec,
+    comps: &[Kernel],
+    comm: Option<&Kernel>,
+    sched: &Schedule,
+    temp_c: f64,
+    power_limit: Option<f64>,
+) -> ExecResult {
+    match sched.launch {
+        LaunchAt::Sequential => execute_sequential(gpu, comps, comm, sched.freq_mhz, temp_c, power_limit),
+        LaunchAt::WithComp(launch_idx) => {
+            execute_overlapped(gpu, comps, comm, sched, launch_idx, temp_c, power_limit)
+        }
+    }
+}
+
+fn execute_sequential(
+    gpu: &GpuSpec,
+    comps: &[Kernel],
+    comm: Option<&Kernel>,
+    freq_mhz: u32,
+    temp_c: f64,
+    power_limit: Option<f64>,
+) -> ExecResult {
+    let mut res = ExecResult { avg_freq_mhz: freq_mhz as f64, ..Default::default() };
+    let p_static = gpu.static_power(temp_c);
+    let mut freq_time_weighted = 0.0;
+
+    for k in comps {
+        run_solo_comp(gpu, k, gpu.n_sms, freq_mhz, p_static, power_limit, &mut res, &mut freq_time_weighted);
+    }
+    if let Some(c) = comm {
+        // NCCL-style default kernel: saturates the link when run alone.
+        let link = gpu.link_bw.min(gpu.mem_bw / 2.0);
+        let t = c.comm_bytes / link + LAUNCH_OVERHEAD_S;
+        let p_dyn = gpu.comm_power(link) + gpu.mem_power(2.0 * link);
+        res.time_s += t;
+        res.dyn_j += p_dyn * t;
+        res.static_j += p_static * t;
+        res.exposed_comm_s += t;
+        res.peak_power_w = res.peak_power_w.max(p_static + p_dyn);
+        freq_time_weighted += freq_mhz as f64 * t;
+    }
+    if res.time_s > 0.0 {
+        res.avg_freq_mhz = freq_time_weighted / res.time_s;
+    }
+    res
+}
+
+/// Run one computation kernel alone (no comm contention).
+#[allow(clippy::too_many_arguments)]
+fn run_solo_comp(
+    gpu: &GpuSpec,
+    k: &Kernel,
+    sms: u32,
+    freq_mhz: u32,
+    p_static: f64,
+    power_limit: Option<f64>,
+    res: &mut ExecResult,
+    freq_time_weighted: &mut f64,
+) {
+    let seg = segment_rates(gpu, Some((k, sms, 1.0)), None, freq_mhz, p_static, power_limit);
+    let t = 1.0 / seg.comp_rate + LAUNCH_OVERHEAD_S;
+    res.time_s += t;
+    res.dyn_j += seg.p_dyn * (t - LAUNCH_OVERHEAD_S) + p_static * 0.0;
+    res.static_j += p_static * t;
+    res.peak_power_w = res.peak_power_w.max(p_static + seg.p_dyn);
+    res.throttled |= seg.throttled;
+    *freq_time_weighted += seg.eff_freq_mhz * t;
+}
+
+#[allow(clippy::too_many_arguments)]
+fn execute_overlapped(
+    gpu: &GpuSpec,
+    comps: &[Kernel],
+    comm: Option<&Kernel>,
+    sched: &Schedule,
+    launch_idx: usize,
+    temp_c: f64,
+    power_limit: Option<f64>,
+) -> ExecResult {
+    let launch_idx = launch_idx.min(comps.len().saturating_sub(1));
+    let p_static = gpu.static_power(temp_c);
+    let mut res = ExecResult { avg_freq_mhz: sched.freq_mhz as f64, ..Default::default() };
+    let mut freq_time_weighted = 0.0;
+
+    let mut comp_idx = 0usize;
+    let mut comp_left = 1.0f64; // fraction of current comp kernel remaining
+    let mut comm_left: f64 = if comm.is_some() { 1.0 } else { 0.0 };
+    let mut comm_launched = comm.is_none();
+    // Launch overheads are serial on each stream; fold them in up front.
+    let overhead = comps.len() as f64 * LAUNCH_OVERHEAD_S;
+    res.time_s += overhead;
+    res.static_j += p_static * overhead;
+
+    let mut guard = 0usize;
+    while comp_idx < comps.len() || comm_left > 1e-12 {
+        guard += 1;
+        assert!(guard < 10_000, "simulator failed to converge");
+
+        if !comm_launched && comp_idx >= launch_idx {
+            comm_launched = true;
+        }
+        let comm_active = comm_launched && comm_left > 1e-12;
+        let comp_active = comp_idx < comps.len();
+
+        let comp_sms = if comm_active { gpu.n_sms.saturating_sub(sched.comm_sms) } else { gpu.n_sms };
+        let comp_arg = if comp_active { Some((&comps[comp_idx], comp_sms, comp_left)) } else { None };
+        let comm_arg = if comm_active {
+            Some((comm.unwrap(), sched.comm_sms, comm_left))
+        } else {
+            None
+        };
+        let seg = segment_rates(gpu, comp_arg, comm_arg, sched.freq_mhz, p_static, power_limit);
+
+        // Time until the earliest completion among active kernels.
+        let mut dt = f64::INFINITY;
+        if comp_active {
+            dt = dt.min(comp_left / seg.comp_rate);
+        }
+        if comm_active {
+            dt = dt.min(comm_left / seg.comm_rate);
+        }
+        debug_assert!(dt.is_finite() && dt > 0.0, "dt = {dt}");
+
+        res.time_s += dt;
+        res.dyn_j += seg.p_dyn * dt;
+        res.static_j += p_static * dt;
+        res.peak_power_w = res.peak_power_w.max(p_static + seg.p_dyn);
+        res.throttled |= seg.throttled;
+        freq_time_weighted += seg.eff_freq_mhz * dt;
+        if comm_active && !comp_active {
+            res.exposed_comm_s += dt;
+        }
+
+        if comp_active {
+            comp_left -= seg.comp_rate * dt;
+            if comp_left <= 1e-9 {
+                comp_idx += 1;
+                comp_left = 1.0;
+            }
+        }
+        if comm_active {
+            comm_left -= seg.comm_rate * dt;
+            if comm_left <= 1e-9 {
+                comm_left = 0.0;
+            }
+        }
+    }
+    if res.time_s > 0.0 {
+        res.avg_freq_mhz =
+            (freq_time_weighted + sched.freq_mhz as f64 * overhead) / res.time_s;
+    }
+    res
+}
+
+/// Constant-rate segment: resource shares and power for the active kernel
+/// set. Rates are fractions of each kernel completed per second.
+struct SegmentRates {
+    comp_rate: f64,
+    comm_rate: f64,
+    p_dyn: f64,
+    eff_freq_mhz: f64,
+    throttled: bool,
+}
+
+fn segment_rates(
+    gpu: &GpuSpec,
+    comp: Option<(&Kernel, u32, f64)>,
+    comm: Option<(&Kernel, u32, f64)>,
+    freq_mhz: u32,
+    p_static: f64,
+    power_limit: Option<f64>,
+) -> SegmentRates {
+    let rates_at = |f_mhz: f64| -> (f64, f64, f64, f64, f64) {
+        // HBM demand of each consumer (bytes/s it could absorb).
+        let (mut d_comp, mut flop_cap) = (0.0, 0.0);
+        if let Some((k, sms, _)) = comp {
+            flop_cap = sms as f64 * gpu.flops_per_sm_per_cycle * f_mhz * 1e6;
+            d_comp = if k.flops > 0.0 {
+                (k.bytes * flop_cap / k.flops).min(gpu.mem_bw)
+            } else {
+                gpu.mem_bw
+            };
+        }
+        let mut d_comm = 0.0;
+        let mut link_cap = 0.0;
+        if let Some((k, sms, _)) = comm {
+            link_cap = gpu.comm_bw(sms);
+            // HBM traffic rate needed to sustain the link rate.
+            d_comm = (k.bytes / k.comm_bytes.max(1.0)) * link_cap;
+        }
+        // Demand-proportional HBM sharing when oversubscribed.
+        let total_d = d_comp + d_comm;
+        let scale = if total_d > gpu.mem_bw { gpu.mem_bw / total_d } else { 1.0 };
+        let m_comp = d_comp * scale;
+        let m_comm = d_comm * scale;
+
+        // Per-kernel completion rates (fraction/s).
+        let comp_rate = comp
+            .map(|(k, _, _)| {
+                let r_flop = if k.flops > 0.0 { flop_cap / k.flops } else { f64::INFINITY };
+                let r_mem = if k.bytes > 0.0 { m_comp / k.bytes } else { f64::INFINITY };
+                r_flop.min(r_mem)
+            })
+            .unwrap_or(0.0);
+        let comm_rate = comm
+            .map(|(k, _, _)| {
+                let r_link = link_cap / k.comm_bytes.max(1.0);
+                let r_mem = if k.bytes > 0.0 { m_comm / k.bytes } else { f64::INFINITY };
+                r_link.min(r_mem)
+            })
+            .unwrap_or(0.0);
+
+        // Achieved resource rates -> dynamic power.
+        let flop_rate = comp.map(|(k, _, _)| comp_rate * k.flops).unwrap_or(0.0);
+        let mem_rate = comp.map(|(k, _, _)| comp_rate * k.bytes).unwrap_or(0.0)
+            + comm.map(|(k, _, _)| comm_rate * k.bytes).unwrap_or(0.0);
+        let link_rate = comm.map(|(k, _, _)| comm_rate * k.comm_bytes).unwrap_or(0.0);
+        let fr = f_mhz * 1e6 / gpu.f_max_hz();
+        let peak_flops = gpu.n_sms as f64 * gpu.flops_per_sm_per_cycle * f_mhz * 1e6;
+        let p_comp = if peak_flops > 0.0 {
+            gpu.comp_w_max * fr * fr * fr * (flop_rate / peak_flops).min(1.0)
+        } else {
+            0.0
+        };
+        let p_dyn = p_comp + gpu.mem_power(mem_rate) + gpu.comm_power(link_rate);
+        (comp_rate, comm_rate, p_dyn, flop_rate, p_comp)
+    };
+
+    let f_req = freq_mhz as f64;
+    let (comp_rate, comm_rate, p_dyn, _flop_rate, p_comp) = rates_at(f_req);
+
+    let limit = power_limit.unwrap_or(f64::INFINITY);
+    if p_static + p_dyn <= limit || p_comp <= 0.0 {
+        return SegmentRates { comp_rate, comm_rate, p_dyn, eff_freq_mhz: f_req, throttled: false };
+    }
+
+    // Throttling: the power controller oscillates the clock so that average
+    // power ≈ limit. Find the balance frequency by bisection on the *true*
+    // rates function (utilization shifts as kernels move between memory-
+    // and compute-bound regimes, so a constant-utilization f³ solve is not
+    // monotone). The oscillation is modeled as a 50/50 duty cycle between
+    // f_req and f_lo mirrored around f_bal: time follows the *average*
+    // frequency; dynamic compute energy follows the f³ *mixture*, which by
+    // Jensen's inequality exceeds running constantly at f_bal (Appendix A)
+    // — the effect Kareus exploits in the §6.2.1 case study.
+    let mut lo = gpu.f_min_mhz as f64;
+    let mut hi = f_req;
+    for _ in 0..24 {
+        let mid = 0.5 * (lo + hi);
+        let (_, _, p_mid, _, _) = rates_at(mid);
+        if p_static + p_mid > limit {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+    let f_bal = lo;
+    let f_lo = (2.0 * f_bal - f_req).max(gpu.f_min_mhz as f64);
+    let (comp_rate_b, comm_rate_b, p_dyn_bal, _fr_b, p_comp_bal) = rates_at(f_bal);
+    // Jensen penalty on the compute component of dynamic power.
+    let mix = if f_bal > 0.0 {
+        0.5 * (f_req / f_bal).powi(3) + 0.5 * (f_lo / f_bal).powi(3)
+    } else {
+        1.0
+    };
+    let p_dyn_throttled = (p_dyn_bal - p_comp_bal) + p_comp_bal * mix.max(1.0);
+    SegmentRates {
+        comp_rate: comp_rate_b,
+        comm_rate: comm_rate_b,
+        p_dyn: p_dyn_throttled,
+        eff_freq_mhz: f_bal,
+        throttled: true,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::kernel::KernelKind;
+
+    fn gpu() -> GpuSpec {
+        GpuSpec::a100()
+    }
+
+    fn linear(flops: f64) -> Kernel {
+        Kernel::comp("linear", KernelKind::Linear, flops, flops / 300.0)
+    }
+    fn norm(bytes: f64) -> Kernel {
+        Kernel::comp("norm", KernelKind::Norm, bytes / 8.0, bytes)
+    }
+    fn allreduce(bytes: f64) -> Kernel {
+        Kernel::comm("ar", KernelKind::AllReduce, bytes)
+    }
+
+    #[test]
+    fn sequential_time_is_sum() {
+        let g = gpu();
+        let comps = vec![linear(1e11), linear(2e11)];
+        let comm = allreduce(1e8);
+        let r = execute_partition(&g, &comps, Some(&comm), &Schedule::sequential(1410), 30.0, None);
+        let t_comp = 3e11 / g.flop_rate(g.n_sms, 1410);
+        let t_comm = 1e8 / g.link_bw;
+        assert!((r.time_s - (t_comp + t_comm)).abs() / r.time_s < 0.05, "{}", r.time_s);
+        assert!(r.exposed_comm_s > 0.0);
+    }
+
+    #[test]
+    fn overlap_beats_sequential() {
+        // A long compute kernel fully hides a small comm kernel.
+        let g = gpu();
+        let comps = vec![linear(5e11)];
+        let comm = allreduce(1e8);
+        let seq = execute_partition(&g, &comps, Some(&comm), &Schedule::sequential(1410), 30.0, None);
+        let ovl = execute_partition(
+            &g,
+            &comps,
+            Some(&comm),
+            &Schedule { comm_sms: 8, launch: LaunchAt::WithComp(0), freq_mhz: 1410 },
+            30.0,
+            None,
+        );
+        assert!(ovl.time_s < seq.time_s, "ovl {} seq {}", ovl.time_s, seq.time_s);
+        assert!(ovl.total_j() < seq.total_j());
+        assert_eq!(ovl.exposed_comm_s, 0.0);
+    }
+
+    #[test]
+    fn sm_allocation_sweet_spot() {
+        // §3.2.1 / Figure 3(a)-(c): few SMs expose comm; many SMs slow
+        // compute. A middle allocation minimizes time.
+        let g = gpu();
+        let comps = vec![linear(5e11), linear(5e11)];
+        let comm = allreduce(3e8);
+        let time_at = |sms: u32| {
+            execute_partition(
+                &g,
+                &comps,
+                Some(&comm),
+                &Schedule { comm_sms: sms, launch: LaunchAt::WithComp(0), freq_mhz: 1410 },
+                30.0,
+                None,
+            )
+            .time_s
+        };
+        let t2 = time_at(2);
+        let t12 = time_at(12);
+        let t90 = time_at(90);
+        assert!(t12 < t2, "mid {t12} vs few {t2}");
+        assert!(t12 < t90, "mid {t12} vs many {t90}");
+    }
+
+    #[test]
+    fn comm_with_membound_kernel_contends() {
+        // §3.2.2: a comm kernel overlapped with a memory-bound kernel
+        // (Norm) contends for HBM bandwidth and prolongs both, whereas
+        // overlapping with a compute-bound Linear (giving up a few SMs)
+        // costs almost nothing.
+        let g = gpu();
+        let comm = allreduce(3e8);
+        let sched = Schedule { comm_sms: 12, launch: LaunchAt::WithComp(0), freq_mhz: 1410 };
+
+        // Norm + comm: both memory-bound -> contention prolongs the pair
+        // beyond the longer of the two run solo.
+        let norm_k = norm(4e9);
+        let t_norm_solo =
+            execute_partition(&g, &[norm_k.clone()], None, &sched, 30.0, None).time_s;
+        let t_comm_solo =
+            execute_partition(&g, &[], Some(&comm), &sched, 30.0, None).time_s;
+        let t_norm_ovl =
+            execute_partition(&g, &[norm_k.clone()], Some(&comm), &sched, 30.0, None).time_s;
+        assert!(
+            t_norm_ovl > 1.05 * t_norm_solo.max(t_comm_solo),
+            "ovl {t_norm_ovl} vs solo {t_norm_solo}/{t_comm_solo}"
+        );
+
+        // Linear + comm: near-perfect overlap (no bandwidth contention).
+        let lin = linear(6e11);
+        let t_lin_solo = execute_partition(&g, &[lin.clone()], None, &sched, 30.0, None).time_s;
+        let t_lin_ovl =
+            execute_partition(&g, &[lin.clone()], Some(&comm), &sched, 30.0, None).time_s;
+        assert!(
+            t_lin_ovl < 1.15 * t_lin_solo.max(t_comm_solo),
+            "ovl {t_lin_ovl} vs solo {t_lin_solo}/{t_comm_solo}"
+        );
+        assert!(t_lin_ovl < 0.8 * (t_lin_solo + t_comm_solo));
+    }
+
+    #[test]
+    fn lower_freq_cuts_dynamic_energy() {
+        let g = gpu();
+        let comps = vec![linear(5e11)];
+        let hi = execute_partition(&g, &comps, None, &Schedule::sequential(1410), 30.0, None);
+        let lo = execute_partition(&g, &comps, None, &Schedule::sequential(1110), 30.0, None);
+        assert!(lo.dyn_j < hi.dyn_j);
+        assert!(lo.time_s > hi.time_s);
+        assert!(lo.static_j > hi.static_j); // longer run -> more static
+    }
+
+    #[test]
+    fn dynamic_energy_schedule_invariant_at_fixed_freq() {
+        // §3.1: at the same frequency, dynamic energy is (largely) constant
+        // across schedules; static energy varies with time.
+        let g = gpu();
+        let comps = vec![linear(3e11), norm(1e9), linear(3e11)];
+        let comm = allreduce(5e8);
+        let mk = |sms, at| {
+            execute_partition(
+                &g,
+                &comps,
+                Some(&comm),
+                &Schedule { comm_sms: sms, launch: LaunchAt::WithComp(at), freq_mhz: 1410 },
+                30.0,
+                None,
+            )
+        };
+        let a = mk(4, 0);
+        let b = mk(20, 2);
+        let rel = (a.dyn_j - b.dyn_j).abs() / a.dyn_j;
+        assert!(rel < 0.02, "dyn energy varied {rel}");
+        assert!((a.static_j - b.static_j).abs() > 0.0);
+    }
+
+    #[test]
+    fn throttling_penalizes_fluctuation() {
+        // Heavy overlap at max frequency exceeds TDP -> throttled with a
+        // Jensen penalty; requesting the balance frequency directly is
+        // cheaper at ~equal time (§6.2.1 case study).
+        let g = gpu();
+        let comps = vec![linear(8e11)];
+        let comm = allreduce(2e9);
+        let hot = execute_partition(
+            &g,
+            &comps,
+            Some(&comm),
+            &Schedule { comm_sms: 24, launch: LaunchAt::WithComp(0), freq_mhz: 1410 },
+            60.0,
+            Some(g.tdp_w),
+        );
+        assert!(hot.throttled);
+        assert!(hot.avg_freq_mhz < 1409.0, "avg {}", hot.avg_freq_mhz);
+        let steady_freq = (hot.avg_freq_mhz / 15.0).round() as u32 * 15;
+        let steady = execute_partition(
+            &g,
+            &comps,
+            Some(&comm),
+            &Schedule { comm_sms: 24, launch: LaunchAt::WithComp(0), freq_mhz: steady_freq },
+            60.0,
+            Some(g.tdp_w),
+        );
+        assert!(steady.time_s <= hot.time_s * 1.02);
+        assert!(steady.dyn_j < hot.dyn_j, "steady {} hot {}", steady.dyn_j, hot.dyn_j);
+    }
+
+    #[test]
+    fn exposed_comm_accounted() {
+        let g = gpu();
+        let comps = vec![linear(1e10)];
+        let comm = allreduce(5e9); // huge comm, tiny compute
+        let r = execute_partition(
+            &g,
+            &comps,
+            Some(&comm),
+            &Schedule { comm_sms: 30, launch: LaunchAt::WithComp(0), freq_mhz: 1410 },
+            30.0,
+            None,
+        );
+        assert!(r.exposed_comm_s > 0.5 * r.time_s);
+    }
+
+    #[test]
+    fn higher_temp_increases_static_energy() {
+        let g = gpu();
+        let comps = vec![linear(3e11)];
+        let cold = execute_partition(&g, &comps, None, &Schedule::sequential(1410), 30.0, None);
+        let hot = execute_partition(&g, &comps, None, &Schedule::sequential(1410), 75.0, None);
+        assert!(hot.static_j > cold.static_j);
+        assert!((hot.time_s - cold.time_s).abs() < 1e-9);
+    }
+
+    #[test]
+    fn no_comm_partition_works() {
+        let g = gpu();
+        let comps = vec![linear(1e11), norm(1e9)];
+        let r = execute_partition(
+            &g,
+            &comps,
+            None,
+            &Schedule { comm_sms: 0, launch: LaunchAt::WithComp(0), freq_mhz: 1410 },
+            30.0,
+            None,
+        );
+        assert!(r.time_s > 0.0);
+        assert_eq!(r.exposed_comm_s, 0.0);
+    }
+
+    #[test]
+    fn late_launch_can_expose_comm() {
+        let g = gpu();
+        let comps = vec![linear(4e11), linear(4e11)];
+        let comm = allreduce(2e9);
+        let early = execute_partition(
+            &g,
+            &comps,
+            Some(&comm),
+            &Schedule { comm_sms: 12, launch: LaunchAt::WithComp(0), freq_mhz: 1410 },
+            30.0,
+            None,
+        );
+        let late = execute_partition(
+            &g,
+            &comps,
+            Some(&comm),
+            &Schedule { comm_sms: 12, launch: LaunchAt::WithComp(1), freq_mhz: 1410 },
+            30.0,
+            None,
+        );
+        assert!(late.exposed_comm_s >= early.exposed_comm_s);
+    }
+}

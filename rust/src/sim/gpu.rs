@@ -1,0 +1,223 @@
+//! GPU hardware specification and power model.
+//!
+//! The paper's power model (§2.1, Appendix A): total power = static power
+//! (all parts of the chip, always, temperature-dependent leakage) + dynamic
+//! power (∝ activity; compute dynamic power ∝ V²f ≈ f³ since voltage scales
+//! ~linearly with frequency on NVIDIA parts). Memory and interconnect
+//! throughput are frequency-invariant (§3.2.3 footnote 5: lowering core
+//! frequency lowers the roofline's compute ceiling only).
+
+/// Hardware spec. Defaults model an NVIDIA A100-SXM4-40GB, the paper's
+/// testbed GPU (§6.1), with power split calibrated so that a fully busy
+/// GPU at f_max draws ≈ TDP.
+#[derive(Clone, Debug)]
+pub struct GpuSpec {
+    pub name: &'static str,
+    /// Streaming multiprocessors available for allocation.
+    pub n_sms: u32,
+    /// FLOPs per SM per cycle (bf16/fp16 tensor-core path).
+    /// 108 SMs × 2048 × 1.41 GHz ≈ 312 TFLOP/s, the A100's tensor peak.
+    pub flops_per_sm_per_cycle: f64,
+    /// HBM bandwidth, bytes/s (frequency-invariant).
+    pub mem_bw: f64,
+    /// Effective collective-communication bandwidth per GPU, bytes/s
+    /// (NVSwitch intra-node; the workload builder scales volumes so this
+    /// single figure suffices).
+    pub link_bw: f64,
+    /// Link bytes/s contributed by each SM allocated to a communication
+    /// kernel (MSCCL++ grid-size model). With 12 GB/s per SM, ~25 SMs
+    /// saturate the link — matching the paper's observation that >30 SMs
+    /// never helps (Appendix B).
+    pub sm_copy_bw: f64,
+    /// Supported core frequencies, MHz.
+    pub f_min_mhz: u32,
+    pub f_max_mhz: u32,
+    pub f_stride_mhz: u32,
+    /// Static power at reference temperature (P0 "ready" state draw, §2.3
+    /// footnote 4), watts.
+    pub static_w: f64,
+    /// Leakage temperature coefficient: static power multiplier per kelvin
+    /// above the reference temperature.
+    pub leak_per_k: f64,
+    pub ref_temp_c: f64,
+    /// Dynamic power of fully-active compute at f_max, watts.
+    pub comp_w_max: f64,
+    /// Dynamic power of fully-saturated HBM, watts.
+    pub mem_w_max: f64,
+    /// Dynamic power of a fully-saturated interconnect, watts.
+    pub comm_w_max: f64,
+    /// Board power limit; sustained draw above this triggers frequency
+    /// throttling (§6.2.1 case study).
+    pub tdp_w: f64,
+}
+
+impl GpuSpec {
+    pub fn a100() -> Self {
+        GpuSpec {
+            name: "A100-SXM4-40GB",
+            n_sms: 108,
+            flops_per_sm_per_cycle: 2048.0,
+            mem_bw: 1.555e12,
+            link_bw: 300e9,
+            sm_copy_bw: 12e9,
+            f_min_mhz: 210,
+            f_max_mhz: 1410,
+            f_stride_mhz: 15,
+            static_w: 90.0,
+            leak_per_k: 0.008,
+            ref_temp_c: 30.0,
+            comp_w_max: 300.0,
+            mem_w_max: 90.0,
+            comm_w_max: 15.0,
+            tdp_w: 400.0,
+        }
+    }
+
+    #[inline]
+    pub fn f_max_hz(&self) -> f64 {
+        self.f_max_mhz as f64 * 1e6
+    }
+
+    /// Peak FLOP/s with `sms` SMs at `f_mhz`.
+    #[inline]
+    pub fn flop_rate(&self, sms: u32, f_mhz: u32) -> f64 {
+        sms as f64 * self.flops_per_sm_per_cycle * f_mhz as f64 * 1e6
+    }
+
+    /// Effective link bandwidth for a communication kernel given its SM
+    /// allocation (frequency-invariant).
+    #[inline]
+    pub fn comm_bw(&self, sms: u32) -> f64 {
+        (sms as f64 * self.sm_copy_bw).min(self.link_bw)
+    }
+
+    /// Static power at a given die temperature (leakage grows with temp).
+    #[inline]
+    pub fn static_power(&self, temp_c: f64) -> f64 {
+        self.static_w * (1.0 + self.leak_per_k * (temp_c - self.ref_temp_c).max(0.0))
+    }
+
+    /// Instantaneous dynamic compute power given the achieved FLOP rate and
+    /// frequency: P = comp_w_max · (f/f_max)³ · utilization, where
+    /// utilization is the achieved fraction of peak *at that frequency*.
+    #[inline]
+    pub fn comp_power(&self, flop_rate_achieved: f64, f_mhz: u32) -> f64 {
+        let peak = self.flop_rate(self.n_sms, f_mhz);
+        if peak <= 0.0 {
+            return 0.0;
+        }
+        let util = (flop_rate_achieved / peak).min(1.0);
+        let fr = f_mhz as f64 * 1e6 / self.f_max_hz();
+        self.comp_w_max * fr * fr * fr * util
+    }
+
+    /// Instantaneous dynamic memory power given achieved HBM traffic rate.
+    #[inline]
+    pub fn mem_power(&self, mem_rate: f64) -> f64 {
+        self.mem_w_max * (mem_rate / self.mem_bw).min(1.0)
+    }
+
+    /// Instantaneous dynamic interconnect power.
+    #[inline]
+    pub fn comm_power(&self, link_rate: f64) -> f64 {
+        self.comm_w_max * (link_rate / self.link_bw).min(1.0)
+    }
+
+    /// All supported frequencies (hardware stride).
+    pub fn all_freqs(&self) -> Vec<u32> {
+        (self.f_min_mhz..=self.f_max_mhz).step_by(self.f_stride_mhz as usize).collect()
+    }
+
+    /// The MBO search range from Appendix C: 900–1410 MHz at 30 MHz stride
+    /// (below ~900 MHz total energy rises again — footnote 11).
+    pub fn search_freqs(&self) -> Vec<u32> {
+        let lo = 900.max(self.f_min_mhz);
+        (lo..=self.f_max_mhz).step_by(2 * self.f_stride_mhz as usize).collect()
+    }
+
+    /// Dynamic energy per FLOP at frequency f (∝ f², see Appendix A):
+    /// power/rate = comp_w_max·(f/fmax)³ / (n_sms·c·f).
+    #[inline]
+    pub fn energy_per_flop(&self, f_mhz: u32) -> f64 {
+        let fr = f_mhz as f64 * 1e6 / self.f_max_hz();
+        self.comp_w_max * fr * fr * fr / self.flop_rate(self.n_sms, f_mhz)
+    }
+
+    /// Dynamic energy per HBM byte (frequency-invariant).
+    #[inline]
+    pub fn energy_per_byte(&self) -> f64 {
+        self.mem_w_max / self.mem_bw
+    }
+
+    /// Dynamic energy per communicated byte.
+    #[inline]
+    pub fn energy_per_comm_byte(&self) -> f64 {
+        self.comm_w_max / self.link_bw
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn a100_tensor_peak() {
+        let g = GpuSpec::a100();
+        let peak = g.flop_rate(g.n_sms, g.f_max_mhz);
+        assert!((peak - 312e12).abs() / 312e12 < 0.01, "peak {peak}");
+    }
+
+    #[test]
+    fn unconstrained_full_load_exceeds_tdp() {
+        // Sustained fully-overlapped max-frequency work must exceed the
+        // board limit — that is *why* throttling exists (§6.2.1); real
+        // A100s downclock under sustained dense GEMM + comm overlap.
+        let g = GpuSpec::a100();
+        let p = g.static_power(60.0)
+            + g.comp_power(g.flop_rate(g.n_sms, g.f_max_mhz), g.f_max_mhz)
+            + g.mem_power(g.mem_bw)
+            + g.comm_power(g.link_bw);
+        assert!(p > g.tdp_w, "p = {p}");
+        // A typical training mix (70% compute util, 50% HBM) fits in TDP.
+        let typical = g.static_power(55.0)
+            + g.comp_power(0.70 * g.flop_rate(g.n_sms, g.f_max_mhz), g.f_max_mhz)
+            + g.mem_power(0.5 * g.mem_bw);
+        assert!(typical < g.tdp_w, "typical = {typical}");
+    }
+
+    #[test]
+    fn energy_per_flop_scales_superlinearly() {
+        // e(f) ∝ f²: halving frequency should quarter per-flop energy.
+        let g = GpuSpec::a100();
+        let hi = g.energy_per_flop(1410);
+        let lo = g.energy_per_flop(705);
+        assert!((hi / lo - 4.0).abs() < 0.05, "ratio {}", hi / lo);
+    }
+
+    #[test]
+    fn comm_bw_saturates() {
+        let g = GpuSpec::a100();
+        assert!(g.comm_bw(2) < g.link_bw);
+        assert_eq!(g.comm_bw(25), g.link_bw);
+        assert_eq!(g.comm_bw(80), g.link_bw);
+    }
+
+    #[test]
+    fn static_power_grows_with_temp() {
+        let g = GpuSpec::a100();
+        assert!(g.static_power(70.0) > g.static_power(30.0));
+        assert_eq!(g.static_power(20.0), g.static_w); // clamped below ref
+    }
+
+    #[test]
+    fn freq_lists() {
+        let g = GpuSpec::a100();
+        let all = g.all_freqs();
+        assert_eq!(all.first(), Some(&210));
+        assert_eq!(all.last(), Some(&1410));
+        assert_eq!(all.len(), 81);
+        let search = g.search_freqs();
+        assert_eq!(search.first(), Some(&900));
+        assert_eq!(search.len(), 18);
+    }
+}

@@ -1,0 +1,174 @@
+//! Kernel resource-demand model.
+//!
+//! A kernel is characterized by the *work* it performs: FLOPs, HBM bytes
+//! moved, and interconnect bytes (for communication kernels). §3.1 of the
+//! paper: total work is schedule-invariant; schedules change *when/where*
+//! it runs and therefore time and static energy.
+
+/// Operator classes appearing in the paper's figures (Figure 3, Figure 10).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum KernelKind {
+    Norm,
+    Linear,
+    Rope,
+    FlashAttention,
+    Activation,
+    BiasDropoutAdd,
+    Embedding,
+    GradAccum,
+    AllReduce,
+    AllGather,
+    ReduceScatter,
+    SendRecv,
+    /// Short memory-bound computations grouped into one logical op (§4.5).
+    Grouped,
+}
+
+impl KernelKind {
+    pub fn is_comm(self) -> bool {
+        matches!(
+            self,
+            KernelKind::AllReduce
+                | KernelKind::AllGather
+                | KernelKind::ReduceScatter
+                | KernelKind::SendRecv
+        )
+    }
+}
+
+/// One kernel's total resource demand.
+#[derive(Clone, Debug)]
+pub struct Kernel {
+    pub name: String,
+    pub kind: KernelKind,
+    /// Floating-point operations (0 for pure comm).
+    pub flops: f64,
+    /// HBM traffic in bytes (reads + writes). Communication kernels also
+    /// touch HBM: ring collectives read and write each chunk.
+    pub bytes: f64,
+    /// Interconnect traffic in bytes (0 for computation kernels).
+    pub comm_bytes: f64,
+}
+
+impl Kernel {
+    pub fn comp(name: impl Into<String>, kind: KernelKind, flops: f64, bytes: f64) -> Self {
+        debug_assert!(!kind.is_comm());
+        Kernel { name: name.into(), kind, flops, bytes, comm_bytes: 0.0 }
+    }
+
+    pub fn comm(name: impl Into<String>, kind: KernelKind, comm_bytes: f64) -> Self {
+        debug_assert!(kind.is_comm());
+        // Ring collectives stream every chunk through HBM once in and once
+        // out; model HBM traffic as 2× the wire traffic.
+        Kernel { name: name.into(), kind, flops: 0.0, bytes: 2.0 * comm_bytes, comm_bytes }
+    }
+
+    pub fn is_comm(&self) -> bool {
+        self.kind.is_comm()
+    }
+
+    /// Arithmetic intensity (FLOPs per HBM byte). The roofline ridge point
+    /// at frequency f sits at n_sms·c·f / mem_bw; kernels below it are
+    /// memory-bound (§3.2.2).
+    pub fn intensity(&self) -> f64 {
+        if self.bytes <= 0.0 {
+            f64::INFINITY
+        } else {
+            self.flops / self.bytes
+        }
+    }
+
+    /// Whether this kernel is memory-bound on `gpu` at frequency `f_mhz`
+    /// when given `sms` SMs.
+    pub fn memory_bound(&self, gpu: &super::gpu::GpuSpec, sms: u32, f_mhz: u32) -> bool {
+        if self.is_comm() {
+            return true;
+        }
+        let t_comp = self.flops / gpu.flop_rate(sms, f_mhz);
+        let t_mem = self.bytes / gpu.mem_bw;
+        t_mem > t_comp
+    }
+
+    /// Merge consecutive short memory-bound kernels into one logical op
+    /// (§4.5 "short consecutive memory-bound computations").
+    pub fn group(kernels: &[Kernel]) -> Kernel {
+        assert!(!kernels.is_empty());
+        Kernel {
+            name: kernels.iter().map(|k| k.name.as_str()).collect::<Vec<_>>().join("+"),
+            kind: if kernels.len() == 1 { kernels[0].kind } else { KernelKind::Grouped },
+            flops: kernels.iter().map(|k| k.flops).sum(),
+            bytes: kernels.iter().map(|k| k.bytes).sum(),
+            comm_bytes: kernels.iter().map(|k| k.comm_bytes).sum(),
+        }
+    }
+
+    /// Fuse consecutive communication kernels into one (§4.5 "multiple
+    /// communication kernels" — e.g. per-layer AllGathers under context
+    /// parallelism share one SM allocation).
+    pub fn fuse_comm(kernels: &[Kernel]) -> Kernel {
+        assert!(kernels.iter().all(|k| k.is_comm()));
+        let total: f64 = kernels.iter().map(|k| k.comm_bytes).sum();
+        let mut k = Kernel::comm(
+            kernels.iter().map(|k| k.name.as_str()).collect::<Vec<_>>().join("+"),
+            kernels[0].kind,
+            total,
+        );
+        if kernels.len() > 1 {
+            // Fusing removes per-kernel launch overhead; nothing else changes.
+            k.name.push_str("(fused)");
+        }
+        k
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::gpu::GpuSpec;
+
+    #[test]
+    fn comm_has_hbm_traffic() {
+        let k = Kernel::comm("ar", KernelKind::AllReduce, 1e9);
+        assert_eq!(k.bytes, 2e9);
+        assert!(k.is_comm());
+    }
+
+    #[test]
+    fn memory_bound_classification() {
+        let g = GpuSpec::a100();
+        // Norm-like kernel: tiny flops, large bytes -> memory bound.
+        let norm = Kernel::comp("norm", KernelKind::Norm, 1e8, 1e9);
+        assert!(norm.memory_bound(&g, g.n_sms, 1410));
+        // Big matmul: compute bound at f_max with all SMs.
+        let mm = Kernel::comp("mm", KernelKind::Linear, 1e12, 1e9);
+        assert!(!mm.memory_bound(&g, g.n_sms, 1410));
+    }
+
+    #[test]
+    fn lower_freq_shifts_toward_compute_bound() {
+        // §3.2.3: reducing frequency lowers the compute ceiling only, so a
+        // kernel that was memory-bound at f_max can become compute-bound.
+        let g = GpuSpec::a100();
+        let k = Kernel::comp("border", KernelKind::Linear, 2.2e11, 1.5e9);
+        assert!(k.memory_bound(&g, g.n_sms, 1410));
+        assert!(!k.memory_bound(&g, g.n_sms, 900));
+    }
+
+    #[test]
+    fn group_sums_work() {
+        let a = Kernel::comp("bda", KernelKind::BiasDropoutAdd, 1e6, 4e8);
+        let b = Kernel::comp("norm", KernelKind::Norm, 2e6, 6e8);
+        let gr = Kernel::group(&[a, b]);
+        assert_eq!(gr.kind, KernelKind::Grouped);
+        assert_eq!(gr.flops, 3e6);
+        assert_eq!(gr.bytes, 1e9);
+    }
+
+    #[test]
+    fn fuse_comm_sums_volume() {
+        let a = Kernel::comm("ag_k", KernelKind::AllGather, 1e8);
+        let b = Kernel::comm("ag_v", KernelKind::AllGather, 1e8);
+        let f = Kernel::fuse_comm(&[a, b]);
+        assert_eq!(f.comm_bytes, 2e8);
+    }
+}

@@ -1,0 +1,127 @@
+//! NVML-like energy meter.
+//!
+//! §5.3: NVML's energy counter updates roughly every 100 ms, so
+//! millisecond-scale measurements alias badly; the paper therefore
+//! measures over multi-second windows. We model a counter that
+//! integrates true power but is only *published* at a fixed sampling
+//! interval, plus small sensor noise — reproducing Figure 12a's
+//! high-variance short-window behaviour.
+
+use crate::util::rng::Rng;
+
+pub const NVML_SAMPLE_INTERVAL_S: f64 = 0.1;
+
+#[derive(Clone, Debug)]
+pub struct EnergyMeter {
+    /// True accumulated energy (J).
+    true_energy_j: f64,
+    /// Energy value at the last counter publication.
+    published_j: f64,
+    /// Energy accumulated during the last published interval (sets the
+    /// scale of per-reading sensor noise — the counter is a lifetime
+    /// accumulator, so noise must NOT scale with the lifetime total).
+    last_interval_j: f64,
+    /// Time since the last publication.
+    since_publish_s: f64,
+    /// Per-reading sensor noise as a fraction of one sampling interval's
+    /// energy (std dev).
+    pub noise_interval_frac: f64,
+}
+
+impl EnergyMeter {
+    pub fn new() -> Self {
+        EnergyMeter {
+            true_energy_j: 0.0,
+            published_j: 0.0,
+            last_interval_j: 0.0,
+            since_publish_s: 0.0,
+            noise_interval_frac: 0.15,
+        }
+    }
+
+    /// Integrate constant power `p_w` for `dt_s`, publishing the counter at
+    /// every 100 ms boundary crossed.
+    pub fn advance(&mut self, p_w: f64, dt_s: f64) {
+        let mut remaining = dt_s;
+        while remaining > 0.0 {
+            let to_boundary = NVML_SAMPLE_INTERVAL_S - self.since_publish_s;
+            let step = remaining.min(to_boundary);
+            self.true_energy_j += p_w * step;
+            self.since_publish_s += step;
+            remaining -= step;
+            if self.since_publish_s >= NVML_SAMPLE_INTERVAL_S - 1e-12 {
+                self.last_interval_j = self.true_energy_j - self.published_j;
+                self.published_j = self.true_energy_j;
+                self.since_publish_s = 0.0;
+            }
+        }
+    }
+
+    /// Read the counter as a driver would: the last *published* value plus
+    /// interval-scale sensor noise. Short windows therefore see stale,
+    /// aliased values.
+    pub fn read(&self, rng: &mut Rng) -> f64 {
+        self.published_j + self.noise_interval_frac * self.last_interval_j * rng.normal()
+    }
+
+    /// Ground truth (for tests and oracle comparisons).
+    pub fn true_energy(&self) -> f64 {
+        self.true_energy_j
+    }
+}
+
+impl Default for EnergyMeter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn integrates_power() {
+        let mut m = EnergyMeter::new();
+        m.advance(100.0, 2.0);
+        assert!((m.true_energy() - 200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn publication_quantized() {
+        let mut m = EnergyMeter::new();
+        m.advance(100.0, 0.05); // below one sampling interval
+        let mut rng = Rng::new(0);
+        // Nothing published yet: reading is (noisy) zero.
+        assert!(m.read(&mut rng).abs() < 1.0);
+        m.advance(100.0, 0.06); // crosses the 100 ms boundary
+        assert!(m.read(&mut rng) > 9.0);
+    }
+
+    #[test]
+    fn long_window_accurate() {
+        let mut m = EnergyMeter::new();
+        m.advance(250.0, 5.0);
+        let mut rng = Rng::new(1);
+        let r = m.read(&mut rng);
+        assert!((r - 1250.0).abs() / 1250.0 < 0.02, "read {r}");
+    }
+
+    #[test]
+    fn short_window_relative_error_larger() {
+        // Relative quantization error shrinks with window length.
+        let err_for = |window: f64| {
+            let mut m = EnergyMeter::new();
+            m.advance(300.0, 0.033); // desynchronize from the boundary
+            let start = m.published_j;
+            m.advance(300.0, window);
+            let end = m.published_j;
+            let measured = end - start;
+            let truth = 300.0 * window;
+            (measured - truth).abs() / truth
+        };
+        // Windows that are not multiples of the 100 ms publication
+        // interval see the staleness; relative error shrinks with window.
+        assert!(err_for(0.55) > err_for(5.05));
+    }
+}

@@ -1,0 +1,12 @@
+//! GPU execution & energy simulator — the substitute for the paper's
+//! 16×A100 testbed (see DESIGN.md §1 for the substitution argument).
+
+pub mod exec;
+pub mod gpu;
+pub mod kernel;
+pub mod meter;
+pub mod thermal;
+
+pub use exec::{execute_partition, ExecResult, LaunchAt, Schedule};
+pub use gpu::GpuSpec;
+pub use kernel::{Kernel, KernelKind};

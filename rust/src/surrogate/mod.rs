@@ -1,0 +1,8 @@
+//! Surrogate models for MBO (§4.3.2): gradient-boosted regression trees
+//! (XGBoost-like) built from scratch, plus bootstrap ensembles for the
+//! uncertainty acquisition pass.
+
+pub mod gbdt;
+pub mod tree;
+
+pub use gbdt::{r_squared, Ensemble, EnsembleParams, Gbdt, GbdtParams};

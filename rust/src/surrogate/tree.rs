@@ -1,0 +1,206 @@
+//! Regression tree (CART, squared loss) — the weak learner for the GBDT
+//! surrogate models. Exact greedy splits: the MBO feature space is tiny
+//! (3 dimensions: frequency, SM allocation, launch timing; Appendix C),
+//! so sorting-based exact search is both simplest and fastest.
+
+/// Flattened tree: internal nodes hold (feature, threshold, left, right);
+/// leaves hold a prediction value.
+#[derive(Clone, Debug)]
+pub enum Node {
+    Split { feature: usize, threshold: f64, left: usize, right: usize },
+    Leaf { value: f64 },
+}
+
+#[derive(Clone, Debug)]
+pub struct Tree {
+    pub nodes: Vec<Node>,
+}
+
+pub struct TreeParams {
+    pub max_depth: usize,
+    pub min_samples_leaf: usize,
+    /// L2 regularization on leaf values (XGBoost's lambda).
+    pub lambda: f64,
+}
+
+impl Default for TreeParams {
+    fn default() -> Self {
+        TreeParams { max_depth: 6, min_samples_leaf: 2, lambda: 1.0 }
+    }
+}
+
+impl Tree {
+    /// Fit on rows `idx` of `(x, y)`. `x` is row-major: x[i] is sample i.
+    pub fn fit(x: &[Vec<f64>], y: &[f64], idx: &[usize], p: &TreeParams) -> Tree {
+        assert!(!idx.is_empty());
+        let mut nodes = Vec::new();
+        let mut idx = idx.to_vec();
+        build(x, y, &mut idx, 0, p, &mut nodes);
+        Tree { nodes }
+    }
+
+    pub fn predict(&self, row: &[f64]) -> f64 {
+        let mut i = 0usize;
+        loop {
+            match &self.nodes[i] {
+                Node::Leaf { value } => return *value,
+                Node::Split { feature, threshold, left, right } => {
+                    i = if row[*feature] <= *threshold { *left } else { *right };
+                }
+            }
+        }
+    }
+
+    pub fn depth(&self) -> usize {
+        fn d(nodes: &[Node], i: usize) -> usize {
+            match &nodes[i] {
+                Node::Leaf { .. } => 1,
+                Node::Split { left, right, .. } => 1 + d(nodes, *left).max(d(nodes, *right)),
+            }
+        }
+        d(&self.nodes, 0)
+    }
+}
+
+/// Recursively build the subtree over `idx[..]`; returns node index.
+fn build(
+    x: &[Vec<f64>],
+    y: &[f64],
+    idx: &mut [usize],
+    depth: usize,
+    p: &TreeParams,
+    nodes: &mut Vec<Node>,
+) -> usize {
+    let sum: f64 = idx.iter().map(|&i| y[i]).sum();
+    let n = idx.len() as f64;
+    // Regularized leaf value (sum / (n + lambda), XGBoost-style shrinkage).
+    let leaf_value = sum / (n + p.lambda);
+
+    if depth >= p.max_depth || idx.len() < 2 * p.min_samples_leaf {
+        nodes.push(Node::Leaf { value: leaf_value });
+        return nodes.len() - 1;
+    }
+
+    match best_split(x, y, idx, p) {
+        None => {
+            nodes.push(Node::Leaf { value: leaf_value });
+            nodes.len() - 1
+        }
+        Some((feature, threshold)) => {
+            // Partition idx in place.
+            let mut lo = 0usize;
+            for i in 0..idx.len() {
+                if x[idx[i]][feature] <= threshold {
+                    idx.swap(i, lo);
+                    lo += 1;
+                }
+            }
+            debug_assert!(lo > 0 && lo < idx.len());
+            let me = nodes.len();
+            nodes.push(Node::Leaf { value: 0.0 }); // placeholder
+            let (l_idx, r_idx) = idx.split_at_mut(lo);
+            let left = build(x, y, l_idx, depth + 1, p, nodes);
+            let right = build(x, y, r_idx, depth + 1, p, nodes);
+            nodes[me] = Node::Split { feature, threshold, left, right };
+            me
+        }
+    }
+}
+
+/// Exact greedy best split by variance reduction (squared loss gain).
+fn best_split(x: &[Vec<f64>], y: &[f64], idx: &[usize], p: &TreeParams) -> Option<(usize, f64)> {
+    let n_features = x[0].len();
+    let total_sum: f64 = idx.iter().map(|&i| y[i]).sum();
+    let n = idx.len() as f64;
+    let parent_score = total_sum * total_sum / (n + p.lambda);
+
+    let mut best: Option<(f64, usize, f64)> = None; // (gain, feat, thr)
+    let mut order: Vec<usize> = idx.to_vec();
+    for f in 0..n_features {
+        order.sort_by(|&a, &b| x[a][f].partial_cmp(&x[b][f]).unwrap());
+        let mut left_sum = 0.0;
+        let mut left_n = 0.0;
+        for w in 0..order.len() - 1 {
+            let i = order[w];
+            left_sum += y[i];
+            left_n += 1.0;
+            // Can't split between equal feature values.
+            if x[order[w]][f] == x[order[w + 1]][f] {
+                continue;
+            }
+            let right_sum = total_sum - left_sum;
+            let right_n = n - left_n;
+            if (left_n as usize) < p.min_samples_leaf || (right_n as usize) < p.min_samples_leaf {
+                continue;
+            }
+            let score = left_sum * left_sum / (left_n + p.lambda)
+                + right_sum * right_sum / (right_n + p.lambda);
+            let gain = score - parent_score;
+            if gain > 1e-12 && best.map(|(g, _, _)| gain > g).unwrap_or(true) {
+                let thr = 0.5 * (x[order[w]][f] + x[order[w + 1]][f]);
+                best = Some((gain, f, thr));
+            }
+        }
+    }
+    best.map(|(_, f, t)| (f, t))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grid_2d() -> (Vec<Vec<f64>>, Vec<f64>) {
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for i in 0..20 {
+            for j in 0..20 {
+                x.push(vec![i as f64, j as f64]);
+                y.push(if i < 10 { 1.0 } else { 5.0 } + if j < 5 { 0.0 } else { 2.0 });
+            }
+        }
+        (x, y)
+    }
+
+    #[test]
+    fn fits_step_function_exactly() {
+        let (x, y) = grid_2d();
+        let idx: Vec<usize> = (0..x.len()).collect();
+        let t = Tree::fit(&x, &y, &idx, &TreeParams { lambda: 0.0, ..Default::default() });
+        for (xi, yi) in x.iter().zip(&y) {
+            assert!((t.predict(xi) - yi).abs() < 1e-9, "{:?} -> {}", xi, yi);
+        }
+    }
+
+    #[test]
+    fn respects_max_depth() {
+        let (x, y) = grid_2d();
+        let idx: Vec<usize> = (0..x.len()).collect();
+        let t = Tree::fit(&x, &y, &idx, &TreeParams { max_depth: 2, ..Default::default() });
+        assert!(t.depth() <= 3); // root + 2 levels
+    }
+
+    #[test]
+    fn constant_target_single_leaf() {
+        let x: Vec<Vec<f64>> = (0..10).map(|i| vec![i as f64]).collect();
+        let y = vec![3.0; 10];
+        let t = Tree::fit(&x, &y, &(0..10).collect::<Vec<_>>(), &TreeParams::default());
+        assert_eq!(t.nodes.len(), 1);
+    }
+
+    #[test]
+    fn single_sample() {
+        let x = vec![vec![1.0]];
+        let y = vec![7.0];
+        let t = Tree::fit(&x, &y, &[0], &TreeParams { lambda: 0.0, ..Default::default() });
+        assert!((t.predict(&[1.0]) - 7.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn duplicate_feature_values_no_split() {
+        let x = vec![vec![1.0], vec![1.0], vec![1.0], vec![1.0]];
+        let y = vec![0.0, 1.0, 2.0, 3.0];
+        let t = Tree::fit(&x, &y, &[0, 1, 2, 3], &TreeParams { lambda: 0.0, ..Default::default() });
+        assert_eq!(t.nodes.len(), 1); // cannot split identical features
+        assert!((t.predict(&[1.0]) - 1.5).abs() < 1e-9);
+    }
+}

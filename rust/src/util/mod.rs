@@ -1,0 +1,8 @@
+//! Offline substrates: JSON, PRNG, stats, thread pool, table printing.
+
+pub mod bench;
+pub mod json;
+pub mod pool;
+pub mod rng;
+pub mod stats;
+pub mod table;

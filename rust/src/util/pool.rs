@@ -1,0 +1,66 @@
+//! Tiny scoped parallel-map over OS threads (no rayon offline).
+//!
+//! MBO runs per-partition optimizations in parallel (the paper runs them in
+//! parallel across GPUs, Section 6.6); emulation sweeps use it too.
+
+/// Run `f` over `items` on up to `n_threads` threads, preserving order.
+pub fn parallel_map<T, R, F>(items: Vec<T>, n_threads: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let n_threads = n_threads.max(1);
+    if n_threads == 1 || items.len() <= 1 {
+        return items.into_iter().map(f).collect();
+    }
+    let n = items.len();
+    let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let work: Vec<(usize, T)> = items.into_iter().enumerate().collect();
+    let queue = std::sync::Mutex::new(work);
+    let slots_mtx = std::sync::Mutex::new(&mut slots);
+
+    std::thread::scope(|scope| {
+        for _ in 0..n_threads.min(n) {
+            scope.spawn(|| loop {
+                let job = { queue.lock().unwrap().pop() };
+                match job {
+                    Some((i, item)) => {
+                        let r = f(item);
+                        slots_mtx.lock().unwrap()[i] = Some(r);
+                    }
+                    None => break,
+                }
+            });
+        }
+    });
+    slots.into_iter().map(|s| s.expect("worker panicked")).collect()
+}
+
+/// Default parallelism: available cores, capped.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let out = parallel_map((0..100).collect::<Vec<_>>(), 8, |x| x * 2);
+        assert_eq!(out, (0..100).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_thread_path() {
+        let out = parallel_map(vec![1, 2, 3], 1, |x| x + 1);
+        assert_eq!(out, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn empty() {
+        let out: Vec<i32> = parallel_map(Vec::<i32>::new(), 4, |x| x);
+        assert!(out.is_empty());
+    }
+}

@@ -1,0 +1,9 @@
+//! Workload model: transformer architectures, parallelism, and the
+//! kernel-sequence builder that substitutes for profiling real
+//! Megatron-LM layers (DESIGN.md §1).
+
+pub mod builder;
+pub mod models;
+
+pub use builder::{build_nanobatch_pass, build_pass, Dir, MicrobatchWork, Segment};
+pub use models::{ModelSpec, Parallelism, TrainConfig};

@@ -1,0 +1,169 @@
+//! Model architecture presets for the paper's workloads (§6.1):
+//! Llama 3.2 3B and Qwen 3 1.7B on the testbed, Llama 3.3 70B in
+//! large-scale emulation.
+
+/// Transformer architecture description (decoder-only, GQA, SwiGLU).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ModelSpec {
+    pub name: &'static str,
+    pub n_layers: u32,
+    pub d_model: u32,
+    pub n_heads: u32,
+    pub n_kv_heads: u32,
+    pub d_ff: u32,
+    pub vocab: u32,
+}
+
+impl ModelSpec {
+    pub fn llama32_3b() -> Self {
+        ModelSpec {
+            name: "Llama 3.2 3B",
+            n_layers: 28,
+            d_model: 3072,
+            n_heads: 24,
+            n_kv_heads: 8,
+            d_ff: 8192,
+            vocab: 128_256,
+        }
+    }
+
+    pub fn qwen3_1_7b() -> Self {
+        ModelSpec {
+            name: "Qwen 3 1.7B",
+            n_layers: 28,
+            d_model: 2048,
+            n_heads: 16,
+            n_kv_heads: 8,
+            d_ff: 6144,
+            vocab: 151_936,
+        }
+    }
+
+    pub fn llama33_70b() -> Self {
+        ModelSpec {
+            name: "Llama 3.3 70B",
+            n_layers: 80,
+            d_model: 8192,
+            n_heads: 64,
+            n_kv_heads: 8,
+            d_ff: 28_672,
+            vocab: 128_256,
+        }
+    }
+
+    pub fn head_dim(&self) -> u32 {
+        self.d_model / self.n_heads
+    }
+
+    /// Approximate parameter count (embeddings + blocks).
+    pub fn n_params(&self) -> f64 {
+        let d = self.d_model as f64;
+        let ff = self.d_ff as f64;
+        let kv = (self.n_kv_heads as f64 / self.n_heads as f64) * d;
+        let per_layer = d * d      // wq
+            + 2.0 * d * kv         // wk, wv
+            + d * d                // wo
+            + 3.0 * d * ff         // gate, up, down
+            + 2.0 * d; // norms
+        self.n_layers as f64 * per_layer + 2.0 * (self.vocab as f64 * d)
+    }
+}
+
+/// Multi-GPU parallelization (§6.1): tensor, context, pipeline.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Parallelism {
+    pub tp: u32,
+    pub cp: u32,
+    pub pp: u32,
+}
+
+impl Parallelism {
+    pub fn new(tp: u32, cp: u32, pp: u32) -> Self {
+        assert!(tp >= 1 && cp >= 1 && pp >= 1);
+        Parallelism { tp, cp, pp }
+    }
+
+    pub fn gpus(&self) -> u32 {
+        self.tp * self.cp * self.pp
+    }
+
+    pub fn label(&self) -> String {
+        let mut s = String::new();
+        if self.cp > 1 {
+            s.push_str(&format!("CP{}", self.cp));
+        }
+        s.push_str(&format!("TP{}", self.tp));
+        s
+    }
+}
+
+/// One training workload row (the paper's Table 3 rows).
+#[derive(Clone, Copy, Debug)]
+pub struct TrainConfig {
+    pub model: ModelSpec,
+    pub par: Parallelism,
+    pub microbatch: u32,
+    pub seq_len: u32,
+    pub n_microbatches: u32,
+    /// Activation/weight element size in bytes (bf16 = 2).
+    pub dtype_bytes: u32,
+}
+
+impl TrainConfig {
+    /// Tokens processed per microbatch on one (TP, CP)-sharded GPU.
+    /// Context parallelism splits the sequence across CP ranks.
+    pub fn tokens_per_gpu(&self) -> f64 {
+        self.microbatch as f64 * self.seq_len as f64 / self.par.cp as f64
+    }
+
+    /// Layers resident on one pipeline stage (balanced split, §6.1).
+    pub fn layers_per_stage(&self) -> u32 {
+        self.model.n_layers.div_ceil(self.par.pp)
+    }
+
+    pub fn label(&self) -> String {
+        format!(
+            "{} {} µb{} seq{}K",
+            self.model.name,
+            self.par.label(),
+            self.microbatch,
+            self.seq_len / 1024
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_counts_roughly_match_names() {
+        let l3b = ModelSpec::llama32_3b().n_params() / 1e9;
+        assert!((2.0..4.5).contains(&l3b), "llama3b {l3b}B");
+        let q17 = ModelSpec::qwen3_1_7b().n_params() / 1e9;
+        assert!((1.2..2.5).contains(&q17), "qwen {q17}B");
+        let l70 = ModelSpec::llama33_70b().n_params() / 1e9;
+        assert!((60.0..80.0).contains(&l70), "llama70 {l70}B");
+    }
+
+    #[test]
+    fn parallelism_gpu_count() {
+        assert_eq!(Parallelism::new(4, 2, 2).gpus(), 16);
+        assert_eq!(Parallelism::new(8, 1, 2).label(), "TP8");
+        assert_eq!(Parallelism::new(4, 2, 2).label(), "CP2TP4");
+    }
+
+    #[test]
+    fn tokens_split_by_cp() {
+        let cfg = TrainConfig {
+            model: ModelSpec::qwen3_1_7b(),
+            par: Parallelism::new(4, 2, 2),
+            microbatch: 16,
+            seq_len: 4096,
+            n_microbatches: 8,
+            dtype_bytes: 2,
+        };
+        assert_eq!(cfg.tokens_per_gpu(), 16.0 * 4096.0 / 2.0);
+        assert_eq!(cfg.layers_per_stage(), 14);
+    }
+}

@@ -1,0 +1,136 @@
+//! Cross-layer integration tests: PJRT runtime ↔ AOT artifacts ↔ L1/L2
+//! numerics, and the coordinator's optimize→select→deploy path.
+//!
+//! Tests that need `artifacts/` skip (with a message) when it hasn't been
+//! built — run `make artifacts` first for full coverage.
+
+use std::path::PathBuf;
+
+use kareus::baselines::System;
+use kareus::coordinator::{Coordinator, Target};
+use kareus::runtime::Runtime;
+use kareus::sim::gpu::GpuSpec;
+use kareus::trainer::{synthetic_tokens, Trainer};
+use kareus::util::rng::Rng;
+use kareus::workload::{ModelSpec, Parallelism, TrainConfig};
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}
+
+/// The core L1 correctness signal at the Rust level: the Pallas-kernel
+/// forward and the pure-jnp oracle forward, both lowered to HLO and
+/// executed through PJRT, must agree on the same inputs.
+#[test]
+fn pallas_and_ref_artifacts_agree_through_pjrt() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let mut rt = Runtime::new(artifacts_dir()).unwrap();
+    let info = rt.manifest.configs.get("tiny").unwrap().clone();
+
+    // Materialize parameters with the init artifact.
+    let params = rt.execute("init_tiny", &[xla::Literal::scalar(3u32)]).unwrap();
+    assert_eq!(params.len(), info.n_param_arrays);
+
+    // Same tokens for both forwards.
+    let mut rng = Rng::new(9);
+    let toks = synthetic_tokens(&mut rng, info.batch, info.seq_len, info.vocab);
+    let tok_lit = xla::Literal::vec1(&toks)
+        .reshape(&[info.batch as i64, info.seq_len as i64])
+        .unwrap();
+
+    let mut args: Vec<xla::Literal> = params.clone();
+    args.push(tok_lit);
+    let logits_ref = rt.execute("fwd_ref_tiny", &args).unwrap();
+    let logits_pal = rt.execute("fwd_pallas_tiny", &args).unwrap();
+
+    let a = logits_ref[0].to_vec::<f32>().unwrap();
+    let b = logits_pal[0].to_vec::<f32>().unwrap();
+    assert_eq!(a.len(), b.len());
+    assert_eq!(a.len(), info.batch * info.seq_len * info.vocab);
+    let mut max_err = 0.0f32;
+    for (x, y) in a.iter().zip(&b) {
+        max_err = max_err.max((x - y).abs());
+    }
+    assert!(max_err < 5e-3, "pallas vs ref max err {max_err}");
+}
+
+#[test]
+fn train_step_reduces_loss_and_threads_state() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let rt = Runtime::new(artifacts_dir()).unwrap();
+    let mut tr = Trainer::new(rt, "tiny", 1).unwrap();
+    let n_state = tr.n_state();
+    let mut losses = Vec::new();
+    for _ in 0..25 {
+        losses.push(tr.step().unwrap());
+    }
+    assert_eq!(tr.n_state(), n_state, "state layout must be stable");
+    let head = losses[0];
+    let tail: f32 = losses[losses.len() - 5..].iter().sum::<f32>() / 5.0;
+    assert!(tail < head, "loss did not decrease: {head} -> {tail} ({losses:?})");
+}
+
+#[test]
+fn runtime_rejects_wrong_arity() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let mut rt = Runtime::new(artifacts_dir()).unwrap();
+    match rt.execute("init_tiny", &[]) {
+        Ok(_) => panic!("wrong arity accepted"),
+        Err(err) => assert!(format!("{err:#}").contains("expected"), "{err:#}"),
+    }
+}
+
+#[test]
+fn coordinator_full_path_megatron_perseus() {
+    // Optimizer-only path (no artifacts needed): optimize, select under
+    // three targets, emit a plan JSON.
+    let cfg = TrainConfig {
+        model: ModelSpec::llama32_3b(),
+        par: Parallelism::new(8, 1, 2),
+        microbatch: 8,
+        seq_len: 4096,
+        n_microbatches: 8,
+        dtype_bytes: 2,
+    };
+    let coord = Coordinator::new(GpuSpec::a100(), cfg);
+    let r = coord.optimize(System::MegatronPerseus, 5);
+    let fast = coord.select(&r, Target::MaxThroughput).unwrap();
+    let relaxed = coord.select(&r, Target::Deadline(fast.iter_time_s * 1.5)).unwrap();
+    assert!(relaxed.iter_energy_j < fast.iter_energy_j);
+    let json = coord.plan_json(&r, &relaxed).dump();
+    assert!(json.contains("frontier"));
+}
+
+#[test]
+fn kareus_beats_megatron_on_both_axes_qwen_tp8() {
+    // The headline end-to-end claim on the Table 3 flagship row.
+    let cfg = TrainConfig {
+        model: ModelSpec::qwen3_1_7b(),
+        par: Parallelism::new(8, 1, 2),
+        microbatch: 8,
+        seq_len: 4096,
+        n_microbatches: 8,
+        dtype_bytes: 2,
+    };
+    let gpu = GpuSpec::a100();
+    let coord = Coordinator::new(gpu, cfg);
+    let m = coord.optimize(System::Megatron, 11);
+    let k = coord.optimize(System::Kareus, 11);
+    let mp = m.frontier.min_time().unwrap();
+    let kp = k.frontier.min_time().unwrap();
+    assert!(kp.time < mp.time * 0.95, "time: kareus {} vs megatron {}", kp.time, mp.time);
+    assert!(kp.energy < mp.energy * 0.95, "energy: kareus {} vs megatron {}", kp.energy, mp.energy);
+}

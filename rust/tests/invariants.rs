@@ -1,0 +1,334 @@
+//! Property-based invariant tests (mini-proptest over the in-house PRNG —
+//! proptest is unavailable offline). Each property samples hundreds of
+//! random inputs and asserts a structural invariant of the simulator,
+//! frontier algebra, scheduler, or composition layers.
+
+use kareus::frontier::{Frontier, Point};
+use kareus::partition::Partition;
+use kareus::pipeline::{greedy_fill, simulate_1f1b, stage_order, StageMenu};
+use kareus::profiler::Profiler;
+use kareus::sim::exec::{execute_partition, LaunchAt, Schedule};
+use kareus::sim::gpu::GpuSpec;
+use kareus::sim::kernel::{Kernel, KernelKind};
+use kareus::util::rng::Rng;
+
+fn random_partition(rng: &mut Rng) -> Partition {
+    let n = 1 + rng.below(5);
+    let comps = (0..n)
+        .map(|i| {
+            if rng.f64() < 0.4 {
+                Kernel::comp(format!("mem{i}"), KernelKind::Norm, 1e8, 5e8 + rng.f64() * 4e9)
+            } else {
+                Kernel::comp(
+                    format!("comp{i}"),
+                    KernelKind::Linear,
+                    5e10 + rng.f64() * 8e11,
+                    1e9 + rng.f64() * 2e9,
+                )
+            }
+        })
+        .collect();
+    let comm = if rng.f64() < 0.85 {
+        Some(Kernel::comm("ar", KernelKind::AllReduce, 5e7 + rng.f64() * 3e9))
+    } else {
+        None
+    };
+    Partition { ptype: "prop".into(), comps, comm, count: 1 }
+}
+
+fn random_schedule(rng: &mut Rng, n_comps: usize) -> Schedule {
+    Schedule {
+        comm_sms: 1 + rng.below(30) as u32,
+        launch: LaunchAt::WithComp(rng.below(n_comps)),
+        freq_mhz: 900 + 30 * rng.below(18) as u32,
+    }
+}
+
+// ---------------------------------------------------------------------
+// Simulator invariants
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_exec_results_physical() {
+    let gpu = GpuSpec::a100();
+    let mut rng = Rng::new(1);
+    for _ in 0..300 {
+        let part = random_partition(&mut rng);
+        let sched = random_schedule(&mut rng, part.comps.len());
+        let r = execute_partition(&gpu, &part.comps, part.comm.as_ref(), &sched, 30.0, Some(gpu.tdp_w));
+        assert!(r.time_s.is_finite() && r.time_s > 0.0);
+        assert!(r.dyn_j >= 0.0 && r.static_j > 0.0);
+        assert!(r.exposed_comm_s <= r.time_s + 1e-12);
+        assert!(r.avg_freq_mhz <= sched.freq_mhz as f64 + 1e-9);
+        // The controller throttles the *clock*; memory/interconnect power
+        // is not frequency-gated, and the Jensen oscillation mixture can
+        // transiently exceed the limit — allow a 10% excursion.
+        assert!(r.peak_power_w <= gpu.tdp_w * 1.10 + 1.0, "peak {}", r.peak_power_w);
+        // Static energy = static power × time exactly (fixed temp).
+        let ps = gpu.static_power(30.0);
+        assert!((r.static_j - ps * r.time_s).abs() < 1e-6 * r.static_j.max(1.0));
+    }
+}
+
+#[test]
+fn prop_overlap_bounded_by_resource_envelopes() {
+    // An overlap schedule can be *much* slower than sequential when the
+    // comm kernel is SM-starved (that is Figure 3a's pathology!), but it
+    // is always bounded above by "each stream at its own allocated rate,
+    // serialized", and below by the best single-resource lower bound.
+    let gpu = GpuSpec::a100();
+    let mut rng = Rng::new(2);
+    for _ in 0..200 {
+        let part = random_partition(&mut rng);
+        let sched = random_schedule(&mut rng, part.comps.len());
+        let r = execute_partition(&gpu, &part.comps, part.comm.as_ref(), &sched, 30.0, None);
+        // Upper bound: compute stream with its reduced SMs, then comm at
+        // its own SM-limited rate, fully serialized, + launch overheads.
+        let comp_sms = gpu.n_sms - sched.comm_sms;
+        let t_comp_slow: f64 = part
+            .comps
+            .iter()
+            .map(|k| {
+                (k.flops / gpu.flop_rate(comp_sms, sched.freq_mhz)).max(k.bytes / (gpu.mem_bw * 0.3))
+            })
+            .sum();
+        let t_comm_slow = part
+            .comm
+            .as_ref()
+            .map(|c| c.comm_bytes / gpu.comm_bw(sched.comm_sms) + c.bytes / (gpu.mem_bw * 0.3))
+            .unwrap_or(0.0);
+        let upper = t_comp_slow + t_comm_slow + 1e-4;
+        assert!(r.time_s <= upper, "overlap {} > envelope {}", r.time_s, upper);
+        // Lower bound: compute-stream work at full SMs, and comm at link.
+        let t_comp: f64 = part
+            .comps
+            .iter()
+            .map(|k| (k.flops / gpu.flop_rate(gpu.n_sms, sched.freq_mhz)).max(k.bytes / gpu.mem_bw))
+            .sum();
+        let t_comm = part.comm.as_ref().map(|c| c.comm_bytes / gpu.link_bw).unwrap_or(0.0);
+        assert!(r.time_s >= t_comp.max(t_comm) * 0.999, "{} < {}", r.time_s, t_comp.max(t_comm));
+    }
+}
+
+#[test]
+fn prop_dynamic_energy_monotone_in_frequency() {
+    let gpu = GpuSpec::a100();
+    let mut rng = Rng::new(3);
+    for _ in 0..100 {
+        let part = random_partition(&mut rng);
+        let mk = |f: u32| {
+            execute_partition(
+                &gpu,
+                &part.comps,
+                part.comm.as_ref(),
+                &Schedule { comm_sms: 12, launch: LaunchAt::WithComp(0), freq_mhz: f },
+                30.0,
+                None,
+            )
+        };
+        let lo = mk(900);
+        let hi = mk(1410);
+        assert!(lo.dyn_j <= hi.dyn_j * 1.001, "dyn {} vs {}", lo.dyn_j, hi.dyn_j);
+        // Note: total TIME is deliberately NOT asserted monotone — §3.2.3:
+        // lowering frequency reduces the compute stream's HBM demand, so
+        // an overlapped comm kernel can run *faster* at lower clocks. Only
+        // the compute-only case must slow down.
+        let lo_solo = execute_partition(
+            &gpu,
+            &part.comps,
+            None,
+            &Schedule { comm_sms: 0, launch: LaunchAt::WithComp(0), freq_mhz: 900 },
+            30.0,
+            None,
+        );
+        let hi_solo = execute_partition(
+            &gpu,
+            &part.comps,
+            None,
+            &Schedule { comm_sms: 0, launch: LaunchAt::WithComp(0), freq_mhz: 1410 },
+            30.0,
+            None,
+        );
+        assert!(lo_solo.time_s >= hi_solo.time_s * 0.999);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Frontier algebra invariants
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_frontier_no_point_dominates_another() {
+    let mut rng = Rng::new(4);
+    for _ in 0..200 {
+        let pts: Vec<Point> = (0..50)
+            .map(|i| Point::new(rng.range_f64(1.0, 10.0), rng.range_f64(1.0, 10.0), i))
+            .collect();
+        let f = Frontier::from_points(pts.clone());
+        for a in f.points() {
+            for b in f.points() {
+                if a.tag != b.tag {
+                    assert!(!a.dominates(b), "{a:?} dominates {b:?}");
+                }
+            }
+        }
+        // Every input point is dominated-or-equal by some frontier point.
+        for p in &pts {
+            assert!(f
+                .points()
+                .iter()
+                .any(|q| q.dominates(p) || (q.time == p.time && q.energy == p.energy)));
+        }
+    }
+}
+
+#[test]
+fn prop_incremental_insert_equals_batch_build() {
+    let mut rng = Rng::new(5);
+    for _ in 0..100 {
+        let pts: Vec<Point> = (0..40)
+            .map(|i| Point::new(rng.range_f64(0.0, 5.0), rng.range_f64(0.0, 5.0), i))
+            .collect();
+        let batch = Frontier::from_points(pts.clone());
+        let mut inc = Frontier::new();
+        for p in pts {
+            inc.insert(p);
+        }
+        let a: Vec<(f64, f64)> = batch.points().iter().map(|p| (p.time, p.energy)).collect();
+        let b: Vec<(f64, f64)> = inc.points().iter().map(|p| (p.time, p.energy)).collect();
+        assert_eq!(a, b);
+    }
+}
+
+#[test]
+fn prop_hypervolume_monotone_and_bounded() {
+    let mut rng = Rng::new(6);
+    for _ in 0..100 {
+        let pts: Vec<Point> =
+            (0..20).map(|i| Point::new(rng.range_f64(0.1, 1.0), rng.range_f64(0.1, 1.0), i)).collect();
+        let f = Frontier::from_points(pts);
+        let r = (2.0, 2.0);
+        let hv = f.hypervolume(r);
+        assert!(hv >= 0.0 && hv <= 4.0);
+        // Adding any point never decreases HV.
+        let mut f2 = f.clone();
+        f2.insert(Point::new(rng.range_f64(0.1, 1.0), rng.range_f64(0.1, 1.0), 99));
+        assert!(f2.hypervolume(r) >= hv - 1e-12);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Pipeline invariants
+// ---------------------------------------------------------------------
+
+fn random_menu(rng: &mut Rng, n_pts: usize) -> StageMenu {
+    use kareus::compose::{MbFrontier, MbPoint, MicrobatchPlan};
+    let mk = |rng: &mut Rng| {
+        let mut t = rng.range_f64(0.5, 1.0);
+        let mut e = rng.range_f64(200.0, 400.0);
+        let pts: Vec<MbPoint> = (0..n_pts)
+            .map(|_| {
+                t += rng.range_f64(0.01, 0.2);
+                e -= rng.range_f64(5.0, 40.0);
+                MbPoint {
+                    time_s: t,
+                    total_j: e.max(1.0),
+                    dyn_j: e.max(1.0) * 0.7,
+                    plan: MicrobatchPlan {
+                        freq_mhz: 1410,
+                        configs: Default::default(),
+                        sequential: true,
+                    },
+                }
+            })
+            .collect();
+        MbFrontier::from_points(pts)
+    };
+    let f = mk(rng);
+    let b = mk(rng);
+    StageMenu::from_frontiers(&f, &b)
+}
+
+#[test]
+fn prop_1f1b_makespan_lower_bounds() {
+    let mut rng = Rng::new(7);
+    for _ in 0..100 {
+        let n_stages = 2 + rng.below(4);
+        let n_mb = 2 + rng.below(8);
+        let menus: Vec<StageMenu> = (0..n_stages).map(|_| random_menu(&mut rng, 4)).collect();
+        let choice = vec![vec![0usize; 2 * n_mb]; n_stages];
+        let (t, busy) = simulate_1f1b(&menus, &choice, n_mb);
+        // Makespan ≥ any single stage's busy time, and ≥ the pipeline-fill
+        // lower bound (first fwd chain + last bwd chain).
+        for b in &busy {
+            assert!(t >= *b - 1e-9, "makespan {t} < busy {b}");
+        }
+        assert!(t > 0.0);
+    }
+}
+
+#[test]
+fn prop_stage_order_valid_1f1b() {
+    let mut rng = Rng::new(8);
+    for _ in 0..200 {
+        let n_stages = 1 + rng.below(8);
+        let n_mb = 1 + rng.below(16);
+        for s in 0..n_stages {
+            let order = stage_order(s, n_stages, n_mb);
+            assert_eq!(order.len(), 2 * n_mb);
+            // fwd i precedes bwd i on the same stage; fwds in order.
+            let pos = |mb: usize, bwd: bool| {
+                order.iter().position(|t| t.mb == mb && t.is_bwd == bwd).unwrap()
+            };
+            for mb in 0..n_mb {
+                assert!(pos(mb, false) < pos(mb, true));
+                if mb > 0 {
+                    assert!(pos(mb - 1, false) < pos(mb, false));
+                    assert!(pos(mb - 1, true) < pos(mb, true));
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_greedy_fill_respects_deadline_and_improves() {
+    let mut rng = Rng::new(9);
+    for _ in 0..40 {
+        let n_stages = 2 + rng.below(3);
+        let n_mb = 2 + rng.below(6);
+        let menus: Vec<StageMenu> = (0..n_stages).map(|_| random_menu(&mut rng, 5)).collect();
+        let tight = greedy_fill(&menus, n_mb, 90.0, 0.0);
+        let deadline = tight.time_s * rng.range_f64(1.05, 1.6);
+        let plan = greedy_fill(&menus, n_mb, 90.0, deadline);
+        assert!(plan.time_s <= deadline * (1.0 + 1e-6), "{} > {}", plan.time_s, deadline);
+        assert!(plan.total_j <= tight.total_j + 1e-9);
+        assert!(plan.bubble_s >= -1e-9);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Profiler invariant: measurement tracks ground truth
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_profiler_tracks_truth_within_tolerance() {
+    let gpu = GpuSpec::a100();
+    let mut rng = Rng::new(10);
+    let mut prof = Profiler::new(gpu.clone(), Default::default(), 11);
+    for _ in 0..15 {
+        let part = random_partition(&mut rng);
+        let sched = random_schedule(&mut rng, part.comps.len());
+        let m = prof.measure(&part, &sched);
+        let truth = Profiler::true_eval(&gpu, &part, &sched);
+        assert!((m.time_s - truth.time_s).abs() / truth.time_s < 0.05);
+        // Profiled energy runs at load temperature (leakage above the
+        // reference-temperature truth) plus counter quantization noise.
+        assert!(
+            (m.energy_j - truth.energy_j).abs() / truth.energy_j < 0.20,
+            "energy {} vs truth {}",
+            m.energy_j,
+            truth.energy_j
+        );
+    }
+}
