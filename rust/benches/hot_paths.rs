@@ -1,6 +1,8 @@
 //! Microbenchmarks of the optimizer stack's hot paths — the §Perf
 //! targets in EXPERIMENTS.md. Run via `cargo bench --bench hot_paths`.
 
+use kareus::compose::optimize_all_partitions_with;
+use kareus::engine::EngineConfig;
 use kareus::frontier::{Frontier, Point};
 use kareus::mbo::space;
 use kareus::partition::{detect_partitions, Partition};
@@ -10,6 +12,7 @@ use kareus::sim::exec::{execute_partition, LaunchAt, Schedule};
 use kareus::sim::gpu::GpuSpec;
 use kareus::surrogate::{Gbdt, GbdtParams};
 use kareus::util::bench::bench;
+use kareus::util::pool::default_threads;
 use kareus::util::rng::Rng;
 use kareus::workload::{build_nanobatch_pass, Dir, ModelSpec, Parallelism, TrainConfig};
 
@@ -133,4 +136,42 @@ fn main() {
     bench("profiler::measure (5s window sim)", 1.0, || {
         std::hint::black_box(prof.measure(&part, &sched));
     });
+
+    // 7. Multi-partition MBO engine: sequential vs parallel vs warm-cache
+    //    replay (§5.1/§6.6 — per-partition optimizations fan out across
+    //    workers; identical candidates are simulated once).
+    let cfg = TrainConfig {
+        model: ModelSpec::qwen3_1_7b(),
+        par: Parallelism::new(8, 1, 2),
+        microbatch: 8,
+        seq_len: 4096,
+        n_microbatches: 8,
+        dtype_bytes: 2,
+    };
+    let fwd = build_nanobatch_pass(&cfg, Dir::Fwd, false, false);
+    let bwd = build_nanobatch_pass(&cfg, Dir::Bwd, false, false);
+    let mut parts = detect_partitions(&gpu, &fwd, true);
+    parts.extend(detect_partitions(&gpu, &bwd, true));
+    let comm_group = cfg.par.tp * cfg.par.cp;
+    let time_once = |label: &str, engine: &EngineConfig| -> f64 {
+        let t0 = std::time::Instant::now();
+        std::hint::black_box(optimize_all_partitions_with(42, &gpu, &parts, comm_group, engine));
+        let dt = t0.elapsed().as_secs_f64();
+        println!("{label:55} {dt:8.3} s");
+        dt
+    };
+    let n = default_threads();
+    println!("-- engine: {} partition types, {} workers available --", parts.len(), n);
+    let t_seq = time_once("engine::optimize_all_partitions (sequential)", &EngineConfig::sequential());
+    let par_engine = EngineConfig::new();
+    let t_par = time_once(
+        &format!("engine::optimize_all_partitions (parallel ×{n})"),
+        &par_engine,
+    );
+    let t_warm = time_once("engine::optimize_all_partitions (warm-cache replay)", &par_engine);
+    println!(
+        "engine speedup: parallel {:.2}x, warm replay {:.0}x",
+        t_seq / t_par.max(1e-9),
+        t_seq / t_warm.max(1e-9)
+    );
 }

@@ -18,9 +18,10 @@
 use std::collections::BTreeMap;
 
 use crate::compose::{
-    eval_overlapped_microbatch, eval_sequential_microbatch, microbatch_frontier, MbFrontier,
-    MbPoint,
+    eval_overlapped_microbatch_fp, eval_sequential_microbatch, microbatch_frontier, partition_fps,
+    MbFrontier, MbPoint,
 };
+use crate::engine::EngineConfig;
 use crate::frontier::Frontier;
 use crate::partition::{detect_partitions, Partition};
 use crate::pipeline::{iteration_frontier, IterationPlan, StageMenu};
@@ -108,11 +109,29 @@ fn n_deadlines(cfg: &TrainConfig) -> usize {
     }
 }
 
-/// Run one system on one workload.
+/// Run one system on one workload with default engine settings (auto
+/// thread count, fresh caches).
 pub fn run_system(gpu: &GpuSpec, cfg: &TrainConfig, system: System, seed: u64) -> SystemResult {
+    run_system_with(gpu, cfg, system, seed, &EngineConfig::default())
+}
+
+/// Run one system on one workload on a shared optimization engine: the
+/// per-partition MBO fans out across the engine's workers and both
+/// memoization layers (canonical executions, whole MBO results) are
+/// consulted, so repeated workloads — Table 8 ablations, sweep scenarios —
+/// replay instead of re-simulating. Byte-identical to the sequential,
+/// cache-free path for a fixed seed.
+pub fn run_system_with(
+    gpu: &GpuSpec,
+    cfg: &TrainConfig,
+    system: System,
+    seed: u64,
+    engine: &EngineConfig,
+) -> SystemResult {
     let freqs_all = gpu.search_freqs();
     let fmax = gpu.f_max_mhz;
     let mut mbo_profiling_s = 0.0;
+    let cache = Some(&engine.measure_cache);
 
     let menus: Vec<StageMenu> = match system {
         System::Megatron | System::MegatronPerseus => {
@@ -131,11 +150,20 @@ pub fn run_system(gpu: &GpuSpec, cfg: &TrainConfig, system: System, seed: u64) -
             stage_frontiers(cfg, |first, last, dir| {
                 let w = build_nanobatch_pass(cfg, dir, first, last);
                 let parts = detect_partitions(gpu, &w, true);
+                let fps = cache.map(|_| partition_fps(gpu, &parts));
                 let points: Vec<MbPoint> = freqs
                     .iter()
                     .map(|&f| {
                         let configs = default_configs(&parts, f);
-                        eval_overlapped_microbatch(gpu, &parts, &configs, f, &w.extra)
+                        eval_overlapped_microbatch_fp(
+                            gpu,
+                            &parts,
+                            fps.as_deref(),
+                            &configs,
+                            f,
+                            &w.extra,
+                            cache,
+                        )
                     })
                     .collect();
                 MbFrontier::from_points(points)
@@ -148,7 +176,8 @@ pub fn run_system(gpu: &GpuSpec, cfg: &TrainConfig, system: System, seed: u64) -
             let bwd_w = build_nanobatch_pass(cfg, Dir::Bwd, false, false);
             let mut parts = detect_partitions(gpu, &fwd_w, true);
             parts.extend(detect_partitions(gpu, &bwd_w, true));
-            let mbo = crate::compose::optimize_all_partitions(seed, gpu, &parts, comm_group);
+            let mbo =
+                crate::compose::optimize_all_partitions_with(seed, gpu, &parts, comm_group, engine);
             mbo_profiling_s =
                 mbo.values().map(|r| r.profiling_cost_s).fold(0.0f64, f64::max); // parallel across partitions (§6.6)
             stage_frontiers(cfg, |first, last, dir| {
@@ -156,7 +185,7 @@ pub fn run_system(gpu: &GpuSpec, cfg: &TrainConfig, system: System, seed: u64) -
                 let parts = detect_partitions(gpu, &nano_w, true);
                 let seq_w = build_pass(cfg, cfg.tokens_per_gpu(), dir, first, last);
                 let mut mbf =
-                    microbatch_frontier(gpu, &parts, &mbo, &nano_w.extra, Some(&seq_w));
+                    microbatch_frontier(gpu, &parts, &mbo, &nano_w.extra, Some(&seq_w), cache);
                 if system == System::KareusNoFreq {
                     let pts: Vec<MbPoint> = mbf
                         .points

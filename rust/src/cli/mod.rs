@@ -46,6 +46,17 @@ impl Args {
     pub fn has_flag(&self, key: &str) -> bool {
         self.flags.iter().any(|f| f == key)
     }
+
+    /// Comma-separated list option (`--gpus a100,h100`), with a default
+    /// when absent; empty items are dropped.
+    pub fn get_list(&self, key: &str, default: &str) -> Vec<String> {
+        self.get(key)
+            .unwrap_or(default)
+            .split(',')
+            .map(|x| x.trim().to_string())
+            .filter(|x| !x.is_empty())
+            .collect()
+    }
 }
 
 #[cfg(test)]
@@ -80,5 +91,15 @@ mod tests {
         let a = parse("--all --exp table1");
         assert!(a.has_flag("all"));
         assert_eq!(a.get("exp"), Some("table1"));
+    }
+
+    #[test]
+    fn list_option() {
+        let a = parse("sweep --gpus a100,h100, v100");
+        // Note: the space after the comma ends the option token; the
+        // remaining value arrives via the default-free first token only.
+        assert_eq!(a.get_list("gpus", "x"), vec!["a100", "h100"]);
+        assert_eq!(a.get_list("models", "qwen1.7b,llama3b"), vec!["qwen1.7b", "llama3b"]);
+        assert_eq!(a.get_list("empty", ""), Vec::<String>::new());
     }
 }

@@ -11,10 +11,11 @@
 
 use std::collections::BTreeMap;
 
+use crate::engine::{EngineConfig, MboCache};
 use crate::frontier::{Frontier, Point};
 use crate::mbo::MboResult;
 use crate::partition::Partition;
-use crate::profiler::Profiler;
+use crate::profiler::{MeasureCache, Profiler};
 use crate::sim::exec::{execute_partition, LaunchAt, Schedule};
 use crate::sim::gpu::GpuSpec;
 use crate::sim::kernel::Kernel;
@@ -68,6 +69,14 @@ impl MbFrontier {
     }
 }
 
+/// Per-partition measurement-cache fingerprints, hoisted so hot loops
+/// (the Cartesian product, per-frequency sweeps) don't rehash the GPU
+/// spec and every kernel on each cache probe.
+pub fn partition_fps(gpu: &GpuSpec, partitions: &[Partition]) -> Vec<u64> {
+    let gpu_fp = gpu.fingerprint();
+    partitions.iter().map(|p| crate::profiler::combine_fp(gpu_fp, p.fingerprint())).collect()
+}
+
 /// Evaluate one overlapped microbatch: partitions executed sequentially,
 /// each overlapping its comm with the paired nanobatch's computation
 /// (Figure 5, rows 2–3), plus non-partition extras and the trailing
@@ -78,17 +87,42 @@ pub fn eval_overlapped_microbatch(
     configs: &BTreeMap<String, Schedule>,
     freq_mhz: u32,
     extra: &[Kernel],
+    cache: Option<&MeasureCache>,
+) -> MbPoint {
+    let fps = cache.map(|_| partition_fps(gpu, partitions));
+    eval_overlapped_microbatch_fp(gpu, partitions, fps.as_deref(), configs, freq_mhz, extra, cache)
+}
+
+/// Hot-path variant of [`eval_overlapped_microbatch`]: `fps` are the
+/// caller-precomputed [`partition_fps`] (required when `cache` is set and
+/// the call sits inside a loop).
+#[allow(clippy::too_many_arguments)]
+pub fn eval_overlapped_microbatch_fp(
+    gpu: &GpuSpec,
+    partitions: &[Partition],
+    fps: Option<&[u64]>,
+    configs: &BTreeMap<String, Schedule>,
+    freq_mhz: u32,
+    extra: &[Kernel],
+    cache: Option<&MeasureCache>,
 ) -> MbPoint {
     let mut time = 0.0;
     let mut total = 0.0;
     let mut dynamic = 0.0;
     let mut last_comm: Option<(&Kernel, u32)> = None;
-    for part in partitions {
+    for (i, part) in partitions.iter().enumerate() {
         let mut sched = *configs
             .get(&part.ptype)
             .unwrap_or(&Schedule { comm_sms: 12, launch: LaunchAt::WithComp(0), freq_mhz });
         sched.freq_mhz = freq_mhz;
-        let r = execute_partition(
+        // A partition's execution depends only on its own schedule, so the
+        // Cartesian product over other types re-simulates identical
+        // (partition, schedule) pairs constantly — the shared cache
+        // collapses those to one execution each. Without precomputed
+        // fingerprints there is nothing to key on: run uncached.
+        let r = MeasureCache::exec_opt(
+            if fps.is_some() { cache } else { None },
+            fps.map_or(0, |f| f[i]),
             gpu,
             &part.comps,
             part.comm.as_ref(),
@@ -181,6 +215,7 @@ pub fn microbatch_frontier(
     mbo: &BTreeMap<String, MboResult>,
     extra: &[Kernel],
     seq_work: Option<&MicrobatchWork>,
+    cache: Option<&MeasureCache>,
 ) -> MbFrontier {
     // Distinct (sms, launch) configs that appear on each type's partition
     // frontier — the schedule vocabulary the Cartesian product ranges over.
@@ -213,6 +248,8 @@ pub fn microbatch_frontier(
     }
 
     let mut points: Vec<MbPoint> = Vec::new();
+    // Fingerprints are invariant across the whole product — hash once.
+    let fps = cache.map(|_| partition_fps(gpu, partitions));
     for &f in &gpu.search_freqs() {
         // Cartesian product across partition types.
         let mut combos: Vec<BTreeMap<String, Schedule>> = vec![BTreeMap::new()];
@@ -228,7 +265,15 @@ pub fn microbatch_frontier(
             combos = next;
         }
         for configs in combos {
-            points.push(eval_overlapped_microbatch(gpu, partitions, &configs, f, extra));
+            points.push(eval_overlapped_microbatch_fp(
+                gpu,
+                partitions,
+                fps.as_deref(),
+                &configs,
+                f,
+                extra,
+                cache,
+            ));
         }
         if let Some(w) = seq_work {
             points.push(eval_sequential_microbatch(gpu, w, f));
@@ -237,37 +282,57 @@ pub fn microbatch_frontier(
     MbFrontier::from_points(points)
 }
 
-/// Helper for tests/benches: run full MBO on every partition type.
+/// Run full MBO on every partition type with default engine settings
+/// (auto thread count, fresh caches).
 pub fn optimize_all_partitions(
     profiler_seed: u64,
     gpu: &GpuSpec,
     partitions: &[Partition],
     comm_group: u32,
 ) -> BTreeMap<String, MboResult> {
+    optimize_all_partitions_with(profiler_seed, gpu, partitions, comm_group, &EngineConfig::default())
+}
+
+/// The parallel multi-partition MBO engine (§5.1, §6.6): each partition's
+/// optimization runs on its own worker with its own `Profiler` — exactly
+/// the paper's model, where every partition is profiled on a separate GPU,
+/// so thermal state is per-(partition, GPU) and *never* shared across
+/// concurrent optimizations.
+///
+/// Determinism: each partition's seed derives only from `profiler_seed`
+/// and the partition type, never from worker identity or scheduling order,
+/// so results are byte-identical across any thread count. Warm caches are
+/// bit-exact replays (see `tests/engine.rs`).
+pub fn optimize_all_partitions_with(
+    profiler_seed: u64,
+    gpu: &GpuSpec,
+    partitions: &[Partition],
+    comm_group: u32,
+    engine: &EngineConfig,
+) -> BTreeMap<String, MboResult> {
     use crate::mbo::{optimize_partition, MboParams};
     use crate::profiler::ProfilerConfig;
     let results: Vec<(String, MboResult)> = crate::util::pool::parallel_map(
         partitions.to_vec(),
-        crate::util::pool::default_threads(),
+        engine.worker_threads(),
         |part| {
-            let mut prof =
-                Profiler::new(gpu.clone(), ProfilerConfig::default(), profiler_seed ^ hash(&part.ptype));
+            // Deterministic per-partition seed (type-keyed, thread-free).
+            let seed = profiler_seed ^ crate::util::hash::fnv1a_str(&part.ptype);
             let mut params = MboParams::for_class(part.size_class());
-            params.seed = profiler_seed ^ hash(&part.ptype);
+            params.seed = seed;
+            let prof_cfg = ProfilerConfig::default();
+            let key = MboCache::key(gpu, &part, comm_group, &params, &prof_cfg);
+            if let Some(r) = engine.mbo_cache.get(key) {
+                return (part.ptype.clone(), r);
+            }
+            let mut prof = Profiler::new(gpu.clone(), prof_cfg, seed)
+                .with_cache(engine.measure_cache.clone());
             let r = optimize_partition(&mut prof, &part, comm_group, &params);
+            engine.mbo_cache.put(key, r.clone());
             (part.ptype.clone(), r)
         },
     );
     results.into_iter().collect()
-}
-
-fn hash(s: &str) -> u64 {
-    let mut h = 0xcbf29ce484222325u64;
-    for b in s.bytes() {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x100000001b3);
-    }
-    h
 }
 
 #[cfg(test)]
@@ -312,7 +377,7 @@ mod tests {
                 Schedule { comm_sms: 12, launch: LaunchAt::WithComp(1), freq_mhz: 1410 },
             );
         }
-        let ovl = eval_overlapped_microbatch(&g, &parts, &configs, 1410, &nano_w.extra);
+        let ovl = eval_overlapped_microbatch(&g, &parts, &configs, 1410, &nano_w.extra, None);
         let seq = eval_sequential_microbatch(&g, &seq_w, 1410);
         assert!(ovl.time_s < seq.time_s, "ovl {} seq {}", ovl.time_s, seq.time_s);
     }
@@ -325,7 +390,7 @@ mod tests {
         let parts = detect_partitions(&g, &nano_w, true);
         let mbo = optimize_all_partitions(7, &g, &parts, c.par.tp * c.par.cp);
         let seq_w = build_pass(&c, c.tokens_per_gpu(), Dir::Fwd, false, false);
-        let mbf = microbatch_frontier(&g, &parts, &mbo, &nano_w.extra, Some(&seq_w));
+        let mbf = microbatch_frontier(&g, &parts, &mbo, &nano_w.extra, Some(&seq_w), None);
         assert!(mbf.frontier.len() >= 5, "frontier len {}", mbf.frontier.len());
         let freqs: std::collections::BTreeSet<u32> =
             mbf.pareto().iter().map(|p| p.plan.freq_mhz).collect();
@@ -346,7 +411,7 @@ mod tests {
         let parts = detect_partitions(&g, &nano_w, true);
         let mbo = optimize_all_partitions(13, &g, &parts, c.par.tp * c.par.cp);
         let seq_w = build_pass(&c, c.tokens_per_gpu(), Dir::Fwd, false, false);
-        let mbf = microbatch_frontier(&g, &parts, &mbo, &nano_w.extra, Some(&seq_w));
+        let mbf = microbatch_frontier(&g, &parts, &mbo, &nano_w.extra, Some(&seq_w), None);
         // Frontier min-time must be <= the best sequential point.
         let best_seq = (0..18)
             .map(|i| eval_sequential_microbatch(&g, &seq_w, 900 + 30 * i).time_s)
@@ -355,6 +420,31 @@ mod tests {
         assert!(ft <= best_seq * (1.0 + 1e-9), "frontier {ft} vs seq {best_seq}");
         // And sequential candidates are actually present in the point set.
         assert!(mbf.points.iter().any(|p| p.plan.sequential));
+    }
+
+    #[test]
+    fn cached_evaluation_is_bit_identical() {
+        let g = GpuSpec::a100();
+        let c = cfg();
+        let nano_w = build_nanobatch_pass(&c, Dir::Fwd, false, false);
+        let parts = detect_partitions(&g, &nano_w, true);
+        let mut configs = BTreeMap::new();
+        for p in &parts {
+            configs.insert(
+                p.ptype.clone(),
+                Schedule { comm_sms: 12, launch: LaunchAt::WithComp(1), freq_mhz: 1410 },
+            );
+        }
+        let cache = MeasureCache::new();
+        let plain = eval_overlapped_microbatch(&g, &parts, &configs, 1410, &nano_w.extra, None);
+        let cold = eval_overlapped_microbatch(&g, &parts, &configs, 1410, &nano_w.extra, Some(&cache));
+        let warm = eval_overlapped_microbatch(&g, &parts, &configs, 1410, &nano_w.extra, Some(&cache));
+        for p in [&cold, &warm] {
+            assert_eq!(plain.time_s.to_bits(), p.time_s.to_bits());
+            assert_eq!(plain.total_j.to_bits(), p.total_j.to_bits());
+            assert_eq!(plain.dyn_j.to_bits(), p.dyn_j.to_bits());
+        }
+        assert!(cache.hits() > 0, "warm pass never hit the cache");
     }
 
     #[test]

@@ -6,7 +6,8 @@
 
 use anyhow::Result;
 
-use crate::baselines::{run_system, System, SystemResult};
+use crate::baselines::{run_system_with, System, SystemResult};
+use crate::engine::EngineConfig;
 use crate::runtime::Runtime;
 use crate::sim::gpu::GpuSpec;
 use crate::trainer::{ScheduleAccounting, StepLog, Trainer};
@@ -34,16 +35,27 @@ pub struct Deployment {
 pub struct Coordinator {
     pub gpu: GpuSpec,
     pub cfg: TrainConfig,
+    /// Shared parallel-optimization engine: per-partition MBO fans out
+    /// across its workers, and its caches persist across `optimize` calls,
+    /// so comparing systems on the same workload (e.g. Kareus and its
+    /// Table 8 ablations) replays the expensive MBO instead of redoing it.
+    pub engine: EngineConfig,
 }
 
 impl Coordinator {
     pub fn new(gpu: GpuSpec, cfg: TrainConfig) -> Self {
-        Coordinator { gpu, cfg }
+        Coordinator { gpu, cfg, engine: EngineConfig::default() }
+    }
+
+    /// Replace the engine (thread count / shared caches).
+    pub fn with_engine(mut self, engine: EngineConfig) -> Self {
+        self.engine = engine;
+        self
     }
 
     /// Phases ①–③: run the full optimization for one system.
     pub fn optimize(&self, system: System, seed: u64) -> SystemResult {
-        run_system(&self.gpu, &self.cfg, system, seed)
+        run_system_with(&self.gpu, &self.cfg, system, seed, &self.engine)
     }
 
     /// Phase ④: select an operating point for the target.

@@ -50,13 +50,12 @@ impl Frontier {
         let mut out: Vec<Point> = Vec::new();
         let mut best_energy = f64::INFINITY;
         for p in pts {
+            // Sorted by (time, energy): a point survives iff it strictly
+            // improves on the best energy seen so far. Exact duplicate
+            // times keep only the first (lowest-energy) point, exactly
+            // matching `insert`'s dominance rules — the MBO maintains its
+            // frontiers incrementally, so the two builders must agree.
             if p.energy < best_energy {
-                // Drop duplicates in time: keep the first (lowest energy).
-                if let Some(last) = out.last() {
-                    if (last.time - p.time).abs() < 1e-15 {
-                        continue;
-                    }
-                }
                 out.push(p);
                 best_energy = p.energy;
             }
@@ -118,11 +117,37 @@ impl Frontier {
     }
 
     /// Hypervolume improvement of adding candidate `c` (§4.3.2, Figure 6).
+    ///
+    /// Computed directly as the area of the region dominated by `c` but by
+    /// no current frontier point — O(frontier) with no clone/rebuild. The
+    /// MBO scoring loop calls this for every unevaluated candidate on
+    /// three objective planes per batch, so it must stay allocation-free.
     pub fn hvi(&self, c: (f64, f64), r: (f64, f64)) -> f64 {
-        let base = self.hypervolume(r);
-        let mut with = self.clone();
-        with.insert(Point::new(c.0, c.1, usize::MAX));
-        (with.hypervolume(r) - base).max(0.0)
+        let (ct, ce) = c;
+        if !ct.is_finite() || !ce.is_finite() || ct >= r.0 || ce >= r.1 {
+            return 0.0;
+        }
+        // First frontier point strictly right of the candidate; everything
+        // at or left of `ct` caps the attainment envelope at `ct`.
+        let start = self.points.partition_point(|q| q.time <= ct);
+        let mut env = if start == 0 { r.1 } else { self.points[start - 1].energy.min(r.1) };
+        if env <= ce {
+            return 0.0; // dominated (or duplicated) by an existing point
+        }
+        let mut hv = 0.0;
+        let mut x = ct;
+        for p in &self.points[start..] {
+            if p.time >= r.0 {
+                break;
+            }
+            hv += (p.time - x) * (env - ce);
+            x = p.time;
+            env = env.min(p.energy);
+            if env <= ce {
+                return hv;
+            }
+        }
+        hv + (r.0 - x) * (env - ce)
     }
 
     /// The paper's reference point: 1.1 × the worst observed coordinates
@@ -260,5 +285,104 @@ mod tests {
         assert!(!f.insert(Point::new(f64::NAN, 1.0, 0)));
         assert!(!f.insert(Point::new(1.0, f64::INFINITY, 0)));
         assert!(f.is_empty());
+    }
+
+    #[test]
+    fn from_points_filters_non_finite() {
+        let f = Frontier::from_points(vec![
+            Point::new(f64::NAN, 1.0, 0),
+            Point::new(1.0, f64::NEG_INFINITY, 1),
+            Point::new(f64::INFINITY, 0.5, 2),
+            Point::new(2.0, 2.0, 3),
+        ]);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f.points()[0].tag, 3);
+    }
+
+    #[test]
+    fn equal_time_keeps_lower_energy() {
+        // Batch build: sorted (time, energy) keeps the lower-energy twin.
+        let f = Frontier::from_points(pts(&[(1.0, 5.0), (1.0, 3.0), (2.0, 2.0)]));
+        assert_eq!(f.len(), 2);
+        assert_eq!(f.points()[0].energy, 3.0);
+        // Incremental: the lower-energy point dominates the equal-time one
+        // regardless of arrival order.
+        for order in [[0usize, 1], [1, 0]] {
+            let cand = [Point::new(1.0, 5.0, 10), Point::new(1.0, 3.0, 11)];
+            let mut g = Frontier::new();
+            for &i in &order {
+                g.insert(cand[i]);
+            }
+            assert_eq!(g.len(), 1, "order {order:?}");
+            assert_eq!(g.points()[0].energy, 3.0, "order {order:?}");
+        }
+    }
+
+    #[test]
+    fn hypervolume_monotone_under_random_inserts() {
+        let mut rng = crate::util::rng::Rng::new(0xF407);
+        for _ in 0..50 {
+            let mut f = Frontier::new();
+            let r = (2.0, 2.0);
+            let mut prev = 0.0;
+            for i in 0..40 {
+                f.insert(Point::new(rng.range_f64(0.1, 1.5), rng.range_f64(0.1, 1.5), i));
+                let hv = f.hypervolume(r);
+                assert!(hv >= prev - 1e-12, "hv shrank: {prev} -> {hv}");
+                prev = hv;
+            }
+        }
+    }
+
+    #[test]
+    fn incremental_insert_agrees_with_batch_build() {
+        let mut rng = crate::util::rng::Rng::new(0xF408);
+        for round in 0..100 {
+            let points: Vec<Point> = (0..60)
+                .map(|i| Point::new(rng.range_f64(0.0, 4.0), rng.range_f64(0.0, 4.0), i))
+                .collect();
+            let batch = Frontier::from_points(points.clone());
+            let mut inc = Frontier::new();
+            for p in points {
+                inc.insert(p);
+            }
+            let a: Vec<(u64, u64, usize)> =
+                batch.points().iter().map(|p| (p.time.to_bits(), p.energy.to_bits(), p.tag)).collect();
+            let b: Vec<(u64, u64, usize)> =
+                inc.points().iter().map(|p| (p.time.to_bits(), p.energy.to_bits(), p.tag)).collect();
+            assert_eq!(a, b, "round {round}");
+        }
+    }
+
+    #[test]
+    fn hvi_matches_insert_based_reference() {
+        // The direct-area HVI must agree with the textbook
+        // clone → insert → HV-difference computation on random inputs.
+        let mut rng = crate::util::rng::Rng::new(0xF409);
+        for _ in 0..200 {
+            let n = 1 + rng.below(20);
+            let f = Frontier::from_points(
+                (0..n).map(|i| Point::new(rng.range_f64(0.0, 3.0), rng.range_f64(0.0, 3.0), i)).collect(),
+            );
+            let r = (3.5, 3.5);
+            let c = (rng.range_f64(0.0, 4.0), rng.range_f64(0.0, 4.0));
+            let fast = f.hvi(c, r);
+            let mut with = f.clone();
+            with.insert(Point::new(c.0, c.1, usize::MAX));
+            let slow = (with.hypervolume(r) - f.hypervolume(r)).max(0.0);
+            assert!((fast - slow).abs() <= 1e-9 * slow.max(1.0), "fast {fast} vs ref {slow}");
+        }
+    }
+
+    #[test]
+    fn hvi_candidate_beyond_reference_is_zero() {
+        let f = Frontier::from_points(pts(&[(1.0, 1.0)]));
+        let r = (5.0, 5.0);
+        assert_eq!(f.hvi((6.0, 0.5), r), 0.0); // too slow
+        assert_eq!(f.hvi((0.5, 6.0), r), 0.0); // too hungry
+        assert_eq!(f.hvi((f64::NAN, 1.0), r), 0.0);
+        assert_eq!(f.hvi((1.0, 1.0), r), 0.0); // exact duplicate
+        // Equal time, lower energy: a thin improvement strip remains.
+        assert!(f.hvi((1.0, 0.5), r) > 0.0);
     }
 }

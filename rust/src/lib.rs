@@ -2,6 +2,7 @@
 pub mod baselines;
 pub mod cli;
 pub mod coordinator;
+pub mod engine;
 pub mod runtime;
 pub mod trainer;
 pub mod paper;

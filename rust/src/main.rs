@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   paper     --exp <id> | --all          regenerate paper tables/figures
 //!   optimize  --model <m> --tp --cp --pp --microbatch --seq [--system <s>]
+//!   sweep     --gpus a100,h100 --models qwen1.7b,llama3b --pars tp8pp2 …
 //!   train     --config tiny|e2e --steps N [--artifacts DIR] [--baseline]
 //!   census                                 Appendix B space census
 //!   list                                   list experiments
@@ -10,6 +11,7 @@
 use kareus::baselines::System;
 use kareus::cli::Args;
 use kareus::coordinator::{Coordinator, Target};
+use kareus::engine::{parse_parallelism, run_sweep, scenario_matrix, sweep_json, EngineConfig};
 use kareus::paper;
 use kareus::runtime::Runtime;
 use kareus::sim::gpu::GpuSpec;
@@ -21,6 +23,7 @@ fn main() {
     let code = match cmd {
         "paper" => cmd_paper(&args),
         "optimize" => cmd_optimize(&args),
+        "sweep" => cmd_sweep(&args),
         "train" => cmd_train(&args),
         "census" => {
             println!("{}", paper::run_experiment("appB").unwrap());
@@ -35,7 +38,10 @@ fn main() {
                 "kareus — joint dynamic+static energy optimization for large model training\n\
                  usage:\n  kareus paper --exp <id>|--all\n  kareus optimize --model qwen1.7b|llama3b|llama70b \
                  [--tp 8 --cp 1 --pp 2 --microbatch 8 --seq 4096 --nmb 8] [--system kareus] \
-                 [--deadline S|--budget J]\n  kareus train --config tiny|e2e --steps 100 [--artifacts artifacts] [--baseline]\n  \
+                 [--deadline S|--budget J]\n  kareus sweep [--gpus a100,h100,v100] [--models qwen1.7b,llama3b] \
+                 [--pars tp8pp2,cp2tp4pp2] [--systems kareus,n+p] [--microbatch 8 --seq 4096 --nmb 8] \
+                 [--seed N] [--threads N] [--out FILE.json]\n  \
+                 kareus train --config tiny|e2e --steps 100 [--artifacts artifacts] [--baseline]\n  \
                  kareus census | kareus list"
             );
             if cmd == "help" {
@@ -142,6 +148,107 @@ fn cmd_optimize(args: &Args) -> i32 {
             1
         }
     }
+}
+
+/// Fan the full frontier pipeline over a GPUs × models × parallelism ×
+/// systems matrix and emit machine-readable JSON (BENCH_*.json schema).
+fn cmd_sweep(args: &Args) -> i32 {
+    // A space after a comma ("--gpus a100, h100") would silently strand
+    // "h100" as a positional token and shrink the matrix — reject instead.
+    if args.positional.len() > 1 {
+        eprintln!(
+            "unexpected arguments {:?} — list options take comma-separated values without spaces \
+             (e.g. --gpus a100,h100)",
+            &args.positional[1..]
+        );
+        return 2;
+    }
+    // A list option followed by another option ("--gpus --models …")
+    // parses as a bare flag; don't silently run the default matrix.
+    for key in ["gpus", "models", "pars", "systems"] {
+        if args.has_flag(key) {
+            eprintln!("--{key} requires a comma-separated value");
+            return 2;
+        }
+    }
+    let mut gpus = Vec::new();
+    for name in args.get_list("gpus", "a100,h100,v100") {
+        match GpuSpec::by_name(&name) {
+            Some(g) => gpus.push(g),
+            None => {
+                eprintln!("unknown gpu '{name}' (a100 | h100 | v100)");
+                return 2;
+            }
+        }
+    }
+    let mut models = Vec::new();
+    for name in args.get_list("models", "qwen1.7b") {
+        match parse_model(&name) {
+            Some(m) => models.push(m),
+            None => {
+                eprintln!("unknown model '{name}' (qwen1.7b | llama3b | llama70b)");
+                return 2;
+            }
+        }
+    }
+    let mut pars = Vec::new();
+    for spec in args.get_list("pars", "tp8pp2") {
+        match parse_parallelism(&spec) {
+            Some(p) => pars.push(p),
+            None => {
+                eprintln!("bad parallelism '{spec}' (e.g. tp8pp2, cp2tp4pp2)");
+                return 2;
+            }
+        }
+    }
+    let mut systems = Vec::new();
+    for name in args.get_list("systems", "kareus") {
+        match parse_system(&name) {
+            Some(s) => systems.push(s),
+            None => {
+                eprintln!("unknown system '{name}'");
+                return 2;
+            }
+        }
+    }
+
+    let scenarios = scenario_matrix(
+        &gpus,
+        &models,
+        &pars,
+        &systems,
+        args.get_u32("microbatch", 8),
+        args.get_u32("seq", 4096),
+        args.get_u32("nmb", 8),
+        args.get_u32("seed", 2026) as u64,
+    );
+    if scenarios.is_empty() {
+        eprintln!("empty scenario matrix");
+        return 2;
+    }
+    let engine = EngineConfig::new().with_threads(args.get_u32("threads", 0) as usize);
+    eprintln!(
+        "sweeping {} scenarios ({} gpus × {} models × {} parallelisms × {} systems) on {} workers",
+        scenarios.len(),
+        gpus.len(),
+        models.len(),
+        pars.len(),
+        systems.len(),
+        engine.worker_threads()
+    );
+    let outcomes = run_sweep(scenarios, &engine, |line| eprintln!("{line}"));
+    let json = sweep_json(&outcomes, &engine).dump();
+    match args.get("out") {
+        Some(path) => {
+            if let Err(e) = std::fs::write(path, &json) {
+                eprintln!("write {path}: {e}");
+                return 1;
+            }
+            eprintln!("wrote {path}");
+        }
+        None => println!("{json}"),
+    }
+    0
 }
 
 fn cmd_train(args: &Args) -> i32 {

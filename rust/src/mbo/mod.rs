@@ -111,6 +111,54 @@ impl MboResult {
     }
 }
 
+/// The three objective planes of §4.3 (total / dynamic / static energy vs
+/// time), maintained *incrementally*: every measurement is inserted into
+/// each plane's frontier as it lands, and the worst observed coordinates
+/// are tracked alongside, so the batch loop never rebuilds a frontier (or
+/// its reference point) from the full evaluation history.
+struct Planes {
+    f_tot: Frontier,
+    f_dyn: Frontier,
+    f_stat: Frontier,
+    p_static: f64,
+    t_max: f64,
+    e_tot_max: f64,
+    e_dyn_max: f64,
+}
+
+impl Planes {
+    fn new(p_static: f64) -> Self {
+        Planes {
+            f_tot: Frontier::new(),
+            f_dyn: Frontier::new(),
+            f_stat: Frontier::new(),
+            p_static,
+            t_max: f64::NEG_INFINITY,
+            e_tot_max: f64::NEG_INFINITY,
+            e_dyn_max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Fold measurement `i` into all three planes.
+    fn observe(&mut self, i: usize, m: &Measurement) {
+        self.f_tot.insert(Point::new(m.time_s, m.energy_j, i));
+        self.f_dyn.insert(Point::new(m.time_s, m.dyn_j, i));
+        self.f_stat.insert(Point::new(m.time_s, m.time_s * self.p_static, i));
+        self.t_max = self.t_max.max(m.time_s);
+        self.e_tot_max = self.e_tot_max.max(m.energy_j);
+        self.e_dyn_max = self.e_dyn_max.max(m.dyn_j);
+    }
+
+    /// Reference points for (total, dynamic, static), all derived through
+    /// the one canonical `Frontier::reference_of` rule (Appendix C: 1.1 ×
+    /// the worst observed coordinates). On the static plane energy is
+    /// time × P_static, so its worst energy is exactly `t_max · P_static`.
+    fn references(&self) -> ((f64, f64), (f64, f64), (f64, f64)) {
+        let of = |e_max: f64| Frontier::reference_of(&[Point::new(self.t_max, e_max, 0)]);
+        (of(self.e_tot_max), of(self.e_dyn_max), of(self.t_max * self.p_static))
+    }
+}
+
 /// Algorithm 1: multi-pass MBO for one partition.
 pub fn optimize_partition(
     profiler: &mut Profiler,
@@ -125,21 +173,26 @@ pub fn optimize_partition(
     let mut evaluated: Vec<Evaluated> = Vec::new();
     let mut chosen = vec![false; n];
     let mut surrogate_cost = 0.0f64;
+    let mut planes = Planes::new(gpu.static_w);
+    // Hoisted: the cache probe inside every measurement keys on this.
+    let part_fp = part.fingerprint();
 
     let eval = |idx: usize,
                     pass: Pass,
                     profiler: &mut Profiler,
                     evaluated: &mut Vec<Evaluated>,
-                    chosen: &mut Vec<bool>| {
+                    chosen: &mut Vec<bool>,
+                    planes: &mut Planes| {
         chosen[idx] = true;
-        let m = profiler.measure(part, &space[idx]);
+        let m = profiler.measure_fp(part, part_fp, &space[idx]);
+        planes.observe(evaluated.len(), &m);
         evaluated.push(Evaluated { sched: space[idx], m, pass });
     };
 
     // --- Initial random design ------------------------------------------
     let n_init = params.n_init.min(n);
     for idx in rng.sample_indices(n, n_init) {
-        eval(idx, Pass::Init, profiler, &mut evaluated, &mut chosen);
+        eval(idx, Pass::Init, profiler, &mut evaluated, &mut chosen, &mut planes);
     }
 
     let mut hv_history: Vec<f64> = Vec::new();
@@ -163,35 +216,11 @@ pub fn optimize_partition(
             let t_ens = Ensemble::fit(&x, &y_t, &ens_p);
             let e_ens = Ensemble::fit(&x, &y_e, &ens_p);
 
-            // ---- Current frontiers on each objective plane ------------
+            // ---- Current frontiers on each objective plane -------------
+            // Maintained incrementally by `planes` as measurements land;
+            // the references all follow Appendix C's 1.1× rule.
             let p_static = gpu.static_w;
-            let mk_front = |energy_of: &dyn Fn(&Evaluated) -> f64| {
-                Frontier::from_points(
-                    evaluated
-                        .iter()
-                        .enumerate()
-                        .map(|(i, e)| Point::new(e.m.time_s, energy_of(e), i))
-                        .collect(),
-                )
-            };
-            let f_tot = mk_front(&|e| e.m.energy_j);
-            let f_dyn = mk_front(&|e| e.m.dyn_j);
-            let f_stat = mk_front(&|e| e.m.time_s * p_static);
-            let r_tot = Frontier::reference_of(
-                &evaluated
-                    .iter()
-                    .enumerate()
-                    .map(|(i, e)| Point::new(e.m.time_s, e.m.energy_j, i))
-                    .collect::<Vec<_>>(),
-            );
-            let r_dyn = Frontier::reference_of(
-                &evaluated
-                    .iter()
-                    .enumerate()
-                    .map(|(i, e)| Point::new(e.m.time_s, e.m.dyn_j, i))
-                    .collect::<Vec<_>>(),
-            );
-            let r_stat = (r_tot.0, r_tot.0 * p_static * 1.1);
+            let (r_tot, r_dyn, r_stat) = planes.references();
 
             // ---- Score all unevaluated candidates ----------------------
             let mut cand: Vec<(usize, f64, f64, f64, f64)> = Vec::new(); // idx, hvi_tot, hvi_dyn, hvi_stat, unc
@@ -202,9 +231,9 @@ pub fn optimize_partition(
                 let feats = space::features(s);
                 let th = t_hat.predict(&feats).max(1e-9);
                 let eh = e_hat.predict(&feats).max(0.0);
-                let hvi_tot = f_tot.hvi((th, th * p_static + eh), r_tot);
-                let hvi_dyn = f_dyn.hvi((th, eh), r_dyn);
-                let hvi_stat = f_stat.hvi((th, th * p_static), r_stat);
+                let hvi_tot = planes.f_tot.hvi((th, th * p_static + eh), r_tot);
+                let hvi_dyn = planes.f_dyn.hvi((th, eh), r_dyn);
+                let hvi_stat = planes.f_stat.hvi((th, th * p_static), r_stat);
                 let (_, st) = t_ens.predict(&feats);
                 let (_, se) = e_ens.predict(&feats);
                 // Sum of per-objective std deviations (§4.3.2).
@@ -244,17 +273,14 @@ pub fn optimize_partition(
 
             // ---- Evaluate the batch ------------------------------------
             for (idx, pass) in picked {
-                eval(idx, pass, profiler, &mut evaluated, &mut chosen);
+                eval(idx, pass, profiler, &mut evaluated, &mut chosen, &mut planes);
             }
 
             // ---- Stopping: relative HV improvement ---------------------
-            let pts: Vec<Point> = evaluated
-                .iter()
-                .enumerate()
-                .map(|(i, e)| Point::new(e.m.time_s, e.m.energy_j, i))
-                .collect();
-            let r = Frontier::reference_of(&pts);
-            let hv = Frontier::from_points(pts).hypervolume(r);
+            // The total-energy plane already reflects the new batch; its
+            // reference tracks the worst coordinates seen so far.
+            let (r_now, _, _) = planes.references();
+            let hv = planes.f_tot.hypervolume(r_now);
             hv_history.push(hv);
             if hv_history.len() > params.r_window {
                 let w = params.r_window;
@@ -267,12 +293,9 @@ pub fn optimize_partition(
         }
     }
 
-    let pts: Vec<Point> = evaluated
-        .iter()
-        .enumerate()
-        .map(|(i, e)| Point::new(e.m.time_s, e.m.energy_j, i))
-        .collect();
-    let frontier = Frontier::from_points(pts);
+    // The total-energy plane *is* the result frontier — built once,
+    // incrementally, instead of a final from_points rebuild.
+    let frontier = planes.f_tot;
     let profiling_cost_s = evaluated.iter().map(|e| e.m.profiling_cost_s).sum();
     MboResult {
         evaluated,
@@ -383,6 +406,19 @@ mod tests {
         for w in r.hv_history.windows(2) {
             assert!(w[1] >= w[0] - 1e-9);
         }
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let a = run_mbo(8);
+        let b = run_mbo(8);
+        let key = |r: &MboResult| -> Vec<(u64, u64, usize)> {
+            r.frontier.points().iter().map(|p| (p.time.to_bits(), p.energy.to_bits(), p.tag)).collect()
+        };
+        assert_eq!(key(&a), key(&b));
+        let hv = |r: &MboResult| -> Vec<u64> { r.hv_history.iter().map(|h| h.to_bits()).collect() };
+        assert_eq!(hv(&a), hv(&b));
+        assert_eq!(a.evaluated.len(), b.evaluated.len());
     }
 
     #[test]

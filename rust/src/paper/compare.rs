@@ -2,7 +2,8 @@
 //! max-throughput comparison (vs Megatron-LM) and frontier improvement
 //! (iso-time energy / iso-energy time reductions vs Megatron-LM+Perseus).
 
-use crate::baselines::{run_system, System, SystemResult};
+use crate::baselines::{run_system_with, System, SystemResult};
+use crate::engine::EngineConfig;
 use crate::sim::gpu::GpuSpec;
 use crate::workload::TrainConfig;
 
@@ -17,12 +18,17 @@ pub struct WorkloadComparison {
 }
 
 pub fn compare_workload(gpu: &GpuSpec, cfg: &TrainConfig, seed: u64) -> WorkloadComparison {
+    // One shared engine across the four systems: identical (partition,
+    // schedule) simulations are memoized, so the cheaper baselines mostly
+    // replay work the Kareus run already did (results are bit-identical
+    // to per-system fresh engines).
+    let engine = EngineConfig::default();
     WorkloadComparison {
         cfg: *cfg,
-        megatron: run_system(gpu, cfg, System::Megatron, seed),
-        megatron_perseus: run_system(gpu, cfg, System::MegatronPerseus, seed),
-        nano_perseus: run_system(gpu, cfg, System::NanobatchingPerseus, seed),
-        kareus: run_system(gpu, cfg, System::Kareus, seed),
+        megatron: run_system_with(gpu, cfg, System::Megatron, seed, &engine),
+        megatron_perseus: run_system_with(gpu, cfg, System::MegatronPerseus, seed, &engine),
+        nano_perseus: run_system_with(gpu, cfg, System::NanobatchingPerseus, seed, &engine),
+        kareus: run_system_with(gpu, cfg, System::Kareus, seed, &engine),
     }
 }
 

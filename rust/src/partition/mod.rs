@@ -44,6 +44,39 @@ impl Partition {
             _ => SizeClass::Large,
         }
     }
+
+    /// Stable fingerprint of the partition's *physical* content (type key
+    /// plus every kernel's resource demands). Two partitions with equal
+    /// fingerprints execute identically under any schedule, so the
+    /// fingerprint keys the shared measurement cache and the engine's MBO
+    /// memoization. The instance `count` is deliberately excluded — it
+    /// scales results after execution, not the execution itself.
+    pub fn fingerprint(&self) -> u64 {
+        // Exhaustive destructuring (no `..`): adding a field to Partition
+        // or Kernel must break this build, not silently alias cache keys.
+        let Partition { ptype, comps, comm, count: _ } = self;
+        let mut h = crate::util::hash::Fnv64::new();
+        h.write_str(ptype);
+        let write_kernel = |h: &mut crate::util::hash::Fnv64, k: &Kernel| {
+            // `name` is a label; execution depends only on the resources.
+            let Kernel { name: _, kind, flops, bytes, comm_bytes } = k;
+            h.write_u64(*kind as u64).write_f64(*flops).write_f64(*bytes).write_f64(*comm_bytes);
+        };
+        h.write_u64(comps.len() as u64);
+        for k in comps {
+            write_kernel(&mut h, k);
+        }
+        match comm {
+            Some(c) => {
+                h.write_u64(1);
+                write_kernel(&mut h, c);
+            }
+            None => {
+                h.write_u64(0);
+            }
+        }
+        h.finish()
+    }
 }
 
 /// Threshold below which consecutive memory-bound kernels are grouped
@@ -177,6 +210,26 @@ mod tests {
         let grouped = group_short_membound(&g, &w.segments[0].comps);
         let after: f64 = grouped.iter().map(|k| k.flops + k.bytes).sum();
         assert!((before - after).abs() < 1e-6 * before.max(1.0));
+    }
+
+    #[test]
+    fn fingerprint_tracks_physical_content() {
+        let g = GpuSpec::a100();
+        let c = cfg();
+        let w = build_pass(&c, c.tokens_per_gpu() / 2.0, Dir::Fwd, false, false);
+        let parts = detect_partitions(&g, &w, true);
+        let again = detect_partitions(&g, &w, true);
+        for (a, b) in parts.iter().zip(&again) {
+            assert_eq!(a.fingerprint(), b.fingerprint());
+        }
+        // Distinct types have distinct fingerprints.
+        assert_ne!(parts[0].fingerprint(), parts[1].fingerprint());
+        // Count does not change the fingerprint; kernel content does.
+        let mut p = parts[0].clone();
+        p.count += 5;
+        assert_eq!(p.fingerprint(), parts[0].fingerprint());
+        p.comps[0].flops += 1.0;
+        assert_ne!(p.fingerprint(), parts[0].fingerprint());
     }
 
     #[test]

@@ -38,8 +38,9 @@ pub enum LaunchAt {
 }
 
 /// A complete execution schedule for one partition (the MBO decision
-/// variables, §4.1).
-#[derive(Clone, Copy, Debug, PartialEq)]
+/// variables, §4.1). `Eq + Hash` so schedules can key the shared
+/// measurement cache (all fields are integral).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct Schedule {
     pub comm_sms: u32,
     pub launch: LaunchAt,

@@ -73,6 +73,109 @@ impl GpuSpec {
         }
     }
 
+    /// NVIDIA H100-SXM5-80GB: the sweep engine's "next-gen" scenario.
+    /// 132 SMs × 4096 × 1.83 GHz ≈ 990 TFLOP/s bf16 dense; HBM3 at
+    /// 3.35 TB/s; NVLink4 at 450 GB/s per GPU. Power split calibrated the
+    /// same way as the A100's: fully-overlapped max-frequency work exceeds
+    /// the 700 W board limit, a typical training mix does not.
+    pub fn h100() -> Self {
+        GpuSpec {
+            name: "H100-SXM5-80GB",
+            n_sms: 132,
+            flops_per_sm_per_cycle: 4096.0,
+            mem_bw: 3.35e12,
+            link_bw: 450e9,
+            sm_copy_bw: 18e9,
+            f_min_mhz: 210,
+            f_max_mhz: 1830,
+            f_stride_mhz: 15,
+            static_w: 120.0,
+            leak_per_k: 0.008,
+            ref_temp_c: 30.0,
+            comp_w_max: 520.0,
+            mem_w_max: 110.0,
+            comm_w_max: 25.0,
+            tdp_w: 700.0,
+        }
+    }
+
+    /// NVIDIA V100-SXM2-32GB: the sweep engine's "legacy" scenario.
+    /// 80 SMs × 1024 × 1.53 GHz ≈ 125 TFLOP/s fp16; HBM2 at 0.9 TB/s;
+    /// NVLink2 at 150 GB/s per GPU.
+    pub fn v100() -> Self {
+        GpuSpec {
+            name: "V100-SXM2-32GB",
+            n_sms: 80,
+            flops_per_sm_per_cycle: 1024.0,
+            mem_bw: 0.9e12,
+            link_bw: 150e9,
+            sm_copy_bw: 7.5e9,
+            f_min_mhz: 135,
+            f_max_mhz: 1530,
+            f_stride_mhz: 15,
+            static_w: 70.0,
+            leak_per_k: 0.008,
+            ref_temp_c: 30.0,
+            comp_w_max: 180.0,
+            mem_w_max: 60.0,
+            comm_w_max: 12.0,
+            tdp_w: 300.0,
+        }
+    }
+
+    /// Look a spec up by short name (CLI sweep matrices).
+    pub fn by_name(name: &str) -> Option<GpuSpec> {
+        match name.to_ascii_lowercase().as_str() {
+            "a100" => Some(GpuSpec::a100()),
+            "h100" => Some(GpuSpec::h100()),
+            "v100" => Some(GpuSpec::v100()),
+            _ => None,
+        }
+    }
+
+    /// Stable fingerprint over every physical parameter — part of the
+    /// shared measurement-cache key, so two specs that differ in any field
+    /// never alias. Exhaustive destructuring (no `..`) makes adding a
+    /// field a compile error here rather than a silent stale-cache-hit.
+    pub fn fingerprint(&self) -> u64 {
+        let GpuSpec {
+            name,
+            n_sms,
+            flops_per_sm_per_cycle,
+            mem_bw,
+            link_bw,
+            sm_copy_bw,
+            f_min_mhz,
+            f_max_mhz,
+            f_stride_mhz,
+            static_w,
+            leak_per_k,
+            ref_temp_c,
+            comp_w_max,
+            mem_w_max,
+            comm_w_max,
+            tdp_w,
+        } = self;
+        let mut h = crate::util::hash::Fnv64::new();
+        h.write_str(name)
+            .write_u64(*n_sms as u64)
+            .write_f64(*flops_per_sm_per_cycle)
+            .write_f64(*mem_bw)
+            .write_f64(*link_bw)
+            .write_f64(*sm_copy_bw)
+            .write_u64(*f_min_mhz as u64)
+            .write_u64(*f_max_mhz as u64)
+            .write_u64(*f_stride_mhz as u64)
+            .write_f64(*static_w)
+            .write_f64(*leak_per_k)
+            .write_f64(*ref_temp_c)
+            .write_f64(*comp_w_max)
+            .write_f64(*mem_w_max)
+            .write_f64(*comm_w_max)
+            .write_f64(*tdp_w);
+        h.finish()
+    }
+
     #[inline]
     pub fn f_max_hz(&self) -> f64 {
         self.f_max_mhz as f64 * 1e6
@@ -207,6 +310,48 @@ mod tests {
         let g = GpuSpec::a100();
         assert!(g.static_power(70.0) > g.static_power(30.0));
         assert_eq!(g.static_power(20.0), g.static_w); // clamped below ref
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for n in ["a100", "h100", "v100", "A100"] {
+            let g = GpuSpec::by_name(n).unwrap();
+            assert!(g.name.to_ascii_lowercase().starts_with(&n.to_ascii_lowercase()[..4]));
+        }
+        assert!(GpuSpec::by_name("tpu").is_none());
+    }
+
+    #[test]
+    fn newer_parts_power_model_consistent() {
+        for g in [GpuSpec::h100(), GpuSpec::v100()] {
+            // Unconstrained full load exceeds TDP (throttling exists)…
+            let full = g.static_power(60.0)
+                + g.comp_power(g.flop_rate(g.n_sms, g.f_max_mhz), g.f_max_mhz)
+                + g.mem_power(g.mem_bw)
+                + g.comm_power(g.link_bw);
+            assert!(full > g.tdp_w, "{}: full {full}", g.name);
+            // …while a typical training mix fits.
+            let typical = g.static_power(55.0)
+                + g.comp_power(0.70 * g.flop_rate(g.n_sms, g.f_max_mhz), g.f_max_mhz)
+                + g.mem_power(0.5 * g.mem_bw);
+            assert!(typical < g.tdp_w, "{}: typical {typical}", g.name);
+            // Search range is non-empty and ends at f_max.
+            let s = g.search_freqs();
+            assert!(s.len() >= 10, "{}: {} freqs", g.name, s.len());
+            assert_eq!(*s.last().unwrap(), g.f_max_mhz);
+        }
+    }
+
+    #[test]
+    fn fingerprints_distinguish_specs() {
+        let a = GpuSpec::a100().fingerprint();
+        let h = GpuSpec::h100().fingerprint();
+        let v = GpuSpec::v100().fingerprint();
+        assert!(a != h && h != v && a != v);
+        assert_eq!(a, GpuSpec::a100().fingerprint());
+        let mut tweaked = GpuSpec::a100();
+        tweaked.static_w += 1.0;
+        assert_ne!(a, tweaked.fingerprint());
     }
 
     #[test]

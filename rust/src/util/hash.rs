@@ -1,0 +1,98 @@
+//! FNV-1a hashing for stable, deterministic fingerprints (partition
+//! identity, measurement-cache keys, MBO memoization). `std`'s hashers are
+//! randomly seeded per process, which would break cross-run determinism.
+
+/// Incremental 64-bit FNV-1a hasher.
+#[derive(Clone, Copy, Debug)]
+pub struct Fnv64(u64);
+
+pub const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+pub const FNV_PRIME: u64 = 0x100000001b3;
+
+impl Default for Fnv64 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Fnv64 {
+    pub fn new() -> Self {
+        Fnv64(FNV_OFFSET)
+    }
+
+    #[inline]
+    pub fn write_bytes(&mut self, bytes: &[u8]) -> &mut Self {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(FNV_PRIME);
+        }
+        self
+    }
+
+    #[inline]
+    pub fn write_u64(&mut self, v: u64) -> &mut Self {
+        self.write_bytes(&v.to_le_bytes())
+    }
+
+    /// Hash an f64 by bit pattern (exact: distinguishes -0.0/0.0, NaNs).
+    #[inline]
+    pub fn write_f64(&mut self, v: f64) -> &mut Self {
+        self.write_u64(v.to_bits())
+    }
+
+    #[inline]
+    pub fn write_str(&mut self, s: &str) -> &mut Self {
+        // Length prefix prevents concatenation ambiguity ("ab","c" vs "a","bc").
+        self.write_u64(s.len() as u64).write_bytes(s.as_bytes())
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+/// One-shot FNV-1a over a string (the partition-type seed hash). No
+/// length framing — bit-compatible with the textbook byte-stream FNV-1a.
+pub fn fnv1a_str(s: &str) -> u64 {
+    let mut h = Fnv64::new();
+    h.write_bytes(s.as_bytes());
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_sensitive() {
+        let mut a = Fnv64::new();
+        a.write_u64(1);
+        let mut b = Fnv64::new();
+        b.write_u64(1);
+        assert_eq!(a.finish(), b.finish());
+        let mut c = Fnv64::new();
+        c.write_u64(2);
+        assert_ne!(a.finish(), c.finish());
+        // f64 hashing is bit-exact: -0.0 and 0.0 differ.
+        let mut d = Fnv64::new();
+        d.write_f64(0.0);
+        let mut e = Fnv64::new();
+        e.write_f64(-0.0);
+        assert_ne!(d.finish(), e.finish());
+    }
+
+    #[test]
+    fn string_framing_unambiguous() {
+        let mut a = Fnv64::new();
+        a.write_str("ab").write_str("c");
+        let mut b = Fnv64::new();
+        b.write_str("a").write_str("bc");
+        assert_ne!(a.finish(), b.finish());
+    }
+
+    #[test]
+    fn one_shot_matches_known_vector() {
+        // FNV-1a("a") = 0xaf63dc4c8601ec8c.
+        assert_eq!(fnv1a_str("a"), 0xaf63dc4c8601ec8c);
+    }
+}

@@ -1,6 +1,8 @@
-//! Offline substrates: JSON, PRNG, stats, thread pool, table printing.
+//! Offline substrates: JSON, PRNG, stats, hashing, thread pool, table
+//! printing.
 
 pub mod bench;
+pub mod hash;
 pub mod json;
 pub mod pool;
 pub mod rng;

@@ -4,6 +4,11 @@
 //! parallel across GPUs, Section 6.6); emulation sweeps use it too.
 
 /// Run `f` over `items` on up to `n_threads` threads, preserving order.
+///
+/// Work is handed out through a shared iterator in ascending index order;
+/// each worker accumulates `(index, result)` pairs privately and the
+/// results are merged after all workers join, so the result path takes no
+/// locks and workers never contend on a shared output buffer.
 pub fn parallel_map<T, R, F>(items: Vec<T>, n_threads: usize, f: F) -> Vec<R>
 where
     T: Send,
@@ -15,26 +20,35 @@ where
         return items.into_iter().map(f).collect();
     }
     let n = items.len();
-    let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
-    let work: Vec<(usize, T)> = items.into_iter().enumerate().collect();
-    let queue = std::sync::Mutex::new(work);
-    let slots_mtx = std::sync::Mutex::new(&mut slots);
+    let queue = std::sync::Mutex::new(items.into_iter().enumerate());
 
-    std::thread::scope(|scope| {
-        for _ in 0..n_threads.min(n) {
-            scope.spawn(|| loop {
-                let job = { queue.lock().unwrap().pop() };
-                match job {
-                    Some((i, item)) => {
-                        let r = f(item);
-                        slots_mtx.lock().unwrap()[i] = Some(r);
+    let per_worker: Vec<Vec<(usize, R)>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..n_threads.min(n))
+            .map(|_| {
+                scope.spawn(|| {
+                    let mut local: Vec<(usize, R)> = Vec::new();
+                    loop {
+                        // Hold the queue lock only for the pop, never while
+                        // running `f`.
+                        let job = queue.lock().unwrap().next();
+                        match job {
+                            Some((i, item)) => local.push((i, f(item))),
+                            None => break,
+                        }
                     }
-                    None => break,
-                }
-            });
-        }
+                    local
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
     });
-    slots.into_iter().map(|s| s.expect("worker panicked")).collect()
+
+    let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    for (i, r) in per_worker.into_iter().flatten() {
+        debug_assert!(slots[i].is_none(), "index {i} produced twice");
+        slots[i] = Some(r);
+    }
+    slots.into_iter().map(|s| s.expect("missing result")).collect()
 }
 
 /// Default parallelism: available cores, capped.
@@ -62,5 +76,24 @@ mod tests {
     fn empty() {
         let out: Vec<i32> = parallel_map(Vec::<i32>::new(), 4, |x| x);
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn more_threads_than_items() {
+        let out = parallel_map(vec![10, 20], 16, |x| x + 1);
+        assert_eq!(out, vec![11, 21]);
+    }
+
+    #[test]
+    fn order_preserved_under_skewed_work() {
+        // Early items sleep; later items finish first on other workers, so
+        // any result-path ordering bug would scramble the output.
+        let out = parallel_map((0..32).collect::<Vec<_>>(), 8, |x| {
+            if x < 8 {
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+            x * x
+        });
+        assert_eq!(out, (0..32).map(|x| x * x).collect::<Vec<_>>());
     }
 }

@@ -1,0 +1,169 @@
+//! Engine acceptance tests: the parallel multi-partition MBO engine must
+//! produce *byte-identical* frontiers to the sequential path for a fixed
+//! seed (thread count, cache warmth, and worker scheduling must never leak
+//! into results), and the sweep must fan the pipeline over GPU × model
+//! scenarios with machine-readable JSON output.
+
+use std::collections::BTreeMap;
+
+use kareus::baselines::System;
+use kareus::compose::optimize_all_partitions_with;
+use kareus::coordinator::Coordinator;
+use kareus::engine::{run_sweep, scenario_matrix, sweep_json, EngineConfig, Scenario};
+use kareus::frontier::Frontier;
+use kareus::mbo::MboResult;
+use kareus::partition::{detect_partitions, Partition};
+use kareus::sim::gpu::GpuSpec;
+use kareus::util::json::Json;
+use kareus::workload::{build_nanobatch_pass, Dir, ModelSpec, Parallelism, TrainConfig};
+
+fn qwen_cfg() -> TrainConfig {
+    TrainConfig {
+        model: ModelSpec::qwen3_1_7b(),
+        par: Parallelism::new(8, 1, 2),
+        microbatch: 8,
+        seq_len: 4096,
+        n_microbatches: 8,
+        dtype_bytes: 2,
+    }
+}
+
+fn all_partitions(gpu: &GpuSpec, cfg: &TrainConfig) -> Vec<Partition> {
+    let fwd = build_nanobatch_pass(cfg, Dir::Fwd, false, false);
+    let bwd = build_nanobatch_pass(cfg, Dir::Bwd, false, false);
+    let mut parts = detect_partitions(gpu, &fwd, true);
+    parts.extend(detect_partitions(gpu, &bwd, true));
+    parts
+}
+
+/// Exact bit-level signature of a frontier.
+fn frontier_bits(f: &Frontier) -> Vec<(u64, u64, usize)> {
+    f.points().iter().map(|p| (p.time.to_bits(), p.energy.to_bits(), p.tag)).collect()
+}
+
+/// Exact bit-level signature of a full per-type MBO result set.
+fn mbo_bits(results: &BTreeMap<String, MboResult>) -> Vec<(String, Vec<(u64, u64, usize)>, Vec<u64>, usize)> {
+    results
+        .iter()
+        .map(|(ptype, r)| {
+            (
+                ptype.clone(),
+                frontier_bits(&r.frontier),
+                r.hv_history.iter().map(|h| h.to_bits()).collect(),
+                r.evaluated.len(),
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn parallel_engine_matches_sequential_bitwise() {
+    let gpu = GpuSpec::a100();
+    let cfg = qwen_cfg();
+    let parts = all_partitions(&gpu, &cfg);
+    assert!(parts.len() >= 3, "expected several partition types, got {}", parts.len());
+    let comm_group = cfg.par.tp * cfg.par.cp;
+
+    let seq = optimize_all_partitions_with(17, &gpu, &parts, comm_group, &EngineConfig::sequential());
+    let par = optimize_all_partitions_with(17, &gpu, &parts, comm_group, &EngineConfig::new().with_threads(8));
+    assert_eq!(mbo_bits(&seq), mbo_bits(&par), "thread count leaked into MBO results");
+}
+
+#[test]
+fn warm_cache_replay_is_bitwise_identical() {
+    let gpu = GpuSpec::a100();
+    let cfg = qwen_cfg();
+    let parts = all_partitions(&gpu, &cfg);
+    let comm_group = cfg.par.tp * cfg.par.cp;
+
+    let engine = EngineConfig::new();
+    let cold = optimize_all_partitions_with(23, &gpu, &parts, comm_group, &engine);
+    assert!(!engine.mbo_cache.is_empty(), "MBO memoization never populated");
+    let warm = optimize_all_partitions_with(23, &gpu, &parts, comm_group, &engine);
+    assert_eq!(mbo_bits(&cold), mbo_bits(&warm), "cache warmth leaked into MBO results");
+
+    // A *different* seed must not be served from the cache.
+    let other = optimize_all_partitions_with(24, &gpu, &parts, comm_group, &engine);
+    assert_ne!(mbo_bits(&cold), mbo_bits(&other), "distinct seeds must diverge");
+}
+
+#[test]
+fn parallel_coordinator_frontier_byte_identical_to_sequential() {
+    // The end-to-end acceptance check: the full coordinator pipeline
+    // (partition detection → parallel MBO → microbatch frontiers → 1F1B
+    // composition) is byte-identical across engine configurations.
+    let gpu = GpuSpec::a100();
+    let cfg = qwen_cfg();
+    let sequential = Coordinator::new(gpu.clone(), cfg).with_engine(EngineConfig::sequential());
+    let parallel = Coordinator::new(gpu, cfg).with_engine(EngineConfig::new());
+    let a = sequential.optimize(System::Kareus, 31);
+    let b = parallel.optimize(System::Kareus, 31);
+    assert_eq!(
+        frontier_bits(&a.frontier),
+        frontier_bits(&b.frontier),
+        "parallel coordinator diverged from sequential"
+    );
+    assert_eq!(a.mbo_profiling_s.to_bits(), b.mbo_profiling_s.to_bits());
+    assert_eq!(a.tflops_per_gpu.to_bits(), b.tflops_per_gpu.to_bits());
+}
+
+#[test]
+fn sweep_covers_gpu_model_matrix_and_emits_json() {
+    // Three GPU×model scenarios through the pipeline; cheap systems keep
+    // the test fast (the kareus path is covered by the coordinator test).
+    let scenarios: Vec<Scenario> = vec![
+        scenario_matrix(
+            &[GpuSpec::a100(), GpuSpec::h100()],
+            &[ModelSpec::qwen3_1_7b()],
+            &[Parallelism::new(8, 1, 2)],
+            &[System::MegatronPerseus],
+            8,
+            4096,
+            8,
+            5,
+        ),
+        scenario_matrix(
+            &[GpuSpec::v100()],
+            &[ModelSpec::llama32_3b()],
+            &[Parallelism::new(8, 1, 2)],
+            &[System::Megatron],
+            8,
+            4096,
+            8,
+            5,
+        ),
+    ]
+    .into_iter()
+    .flatten()
+    .collect();
+    assert_eq!(scenarios.len(), 3);
+
+    let engine = EngineConfig::new();
+    let mut lines = Vec::new();
+    let outcomes = run_sweep(scenarios, &engine, |l| lines.push(l.to_string()));
+    assert_eq!(outcomes.len(), 3);
+    assert!(lines.len() >= 3, "sweep reported no progress");
+    for o in &outcomes {
+        assert!(!o.result.frontier.is_empty(), "{}: empty frontier", o.scenario.label());
+        assert!(o.result.tflops_per_gpu > 0.0);
+    }
+    // Faster GPU, same workload, same system ⇒ faster iterations.
+    let t_a100 = outcomes[0].result.frontier.min_time().unwrap().time;
+    let t_h100 = outcomes[1].result.frontier.min_time().unwrap().time;
+    assert!(t_h100 < t_a100, "H100 ({t_h100}s) should beat A100 ({t_a100}s)");
+
+    // The JSON dump round-trips and carries the full schema.
+    let dump = sweep_json(&outcomes, &engine).dump();
+    let parsed = Json::parse(&dump).unwrap();
+    assert_eq!(parsed.get("bench").unwrap().as_str(), Some("kareus_sweep"));
+    let scen = parsed.get("scenarios").unwrap().as_arr().unwrap();
+    assert_eq!(scen.len(), 3);
+    for sc in scen {
+        assert!(sc.get("frontier").unwrap().as_arr().unwrap().len() >= 1);
+        for key in ["gpu", "model", "parallelism", "system"] {
+            assert!(sc.get(key).unwrap().as_str().is_some(), "missing {key}");
+        }
+        assert!(sc.get("min_iter_time_s").unwrap().as_f64().unwrap() > 0.0);
+    }
+    assert!(parsed.get("cache").unwrap().get("exec_misses").unwrap().as_f64().unwrap() >= 0.0);
+}

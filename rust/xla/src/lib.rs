@@ -1,0 +1,352 @@
+//! Offline stub of the `xla` (xla_extension 0.5.1) PJRT bindings.
+//!
+//! The kareus crate's execution engine (`runtime`, `trainer`) drives real
+//! training through PJRT when the artifacts and the native bindings are
+//! present. This container has neither, so this stub keeps the crate
+//! buildable and testable offline:
+//!
+//! * host-side data plumbing (`Literal`, shapes, reshape, tuples) is
+//!   fully functional — unit tests that only shuffle literals pass;
+//! * device-side entry points (`PjRtClient::cpu`, `compile`, `execute`)
+//!   return [`Error::Unavailable`] with an actionable message.
+//!
+//! The API surface intentionally mirrors the subset of the real bindings
+//! that kareus uses, so swapping this path dependency for the native crate
+//! requires no source changes.
+
+use std::fmt;
+
+/// Stub-wide error type; the real bindings surface `XlaError` here.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Error {
+    /// Raised by every device-side operation in the stub.
+    Unavailable(String),
+    /// Host-side usage errors (shape mismatch, wrong element type, …).
+    Invalid(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Unavailable(m) => write!(f, "xla unavailable (offline stub): {m}"),
+            Error::Invalid(m) => write!(f, "invalid xla usage: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable(op: &str) -> Error {
+    Error::Unavailable(format!(
+        "{op} requires the native xla_extension bindings; rebuild with the real `xla` crate"
+    ))
+}
+
+/// Element types we need to round-trip through literals.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PrimitiveType {
+    F32,
+    F64,
+    S32,
+    S64,
+    U32,
+    U8,
+}
+
+impl PrimitiveType {
+    pub fn byte_size(self) -> usize {
+        match self {
+            PrimitiveType::U8 => 1,
+            PrimitiveType::F32 | PrimitiveType::S32 | PrimitiveType::U32 => 4,
+            PrimitiveType::F64 | PrimitiveType::S64 => 8,
+        }
+    }
+}
+
+/// Host scalar types storable in a [`Literal`].
+pub trait NativeType: Copy {
+    const TY: PrimitiveType;
+    fn write_le(self, out: &mut Vec<u8>);
+    fn read_le(bytes: &[u8]) -> Self;
+}
+
+macro_rules! native {
+    ($t:ty, $ty:expr) => {
+        impl NativeType for $t {
+            const TY: PrimitiveType = $ty;
+            fn write_le(self, out: &mut Vec<u8>) {
+                out.extend_from_slice(&self.to_le_bytes());
+            }
+            fn read_le(bytes: &[u8]) -> Self {
+                let mut buf = [0u8; std::mem::size_of::<$t>()];
+                buf.copy_from_slice(&bytes[..std::mem::size_of::<$t>()]);
+                <$t>::from_le_bytes(buf)
+            }
+        }
+    };
+}
+
+native!(f32, PrimitiveType::F32);
+native!(f64, PrimitiveType::F64);
+native!(i32, PrimitiveType::S32);
+native!(i64, PrimitiveType::S64);
+native!(u32, PrimitiveType::U32);
+native!(u8, PrimitiveType::U8);
+
+/// Array shape: element type + dimensions.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArrayShape {
+    ty: PrimitiveType,
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn primitive_type(&self) -> PrimitiveType {
+        self.ty
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().map(|&d| d as usize).product()
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+enum Repr {
+    Array { ty: PrimitiveType, dims: Vec<i64>, data: Vec<u8> },
+    Tuple(Vec<Literal>),
+}
+
+/// Host-side tensor value (functional in the stub).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    repr: Repr,
+}
+
+impl Literal {
+    /// Rank-0 literal.
+    pub fn scalar<T: NativeType>(v: T) -> Literal {
+        let mut data = Vec::with_capacity(T::TY.byte_size());
+        v.write_le(&mut data);
+        Literal { repr: Repr::Array { ty: T::TY, dims: Vec::new(), data } }
+    }
+
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(vs: &[T]) -> Literal {
+        let mut data = Vec::with_capacity(vs.len() * T::TY.byte_size());
+        for &v in vs {
+            v.write_le(&mut data);
+        }
+        Literal { repr: Repr::Array { ty: T::TY, dims: vec![vs.len() as i64], data } }
+    }
+
+    /// Zero-initialized literal of the given shape.
+    pub fn create_from_shape(ty: PrimitiveType, dims: &[usize]) -> Literal {
+        let n: usize = dims.iter().product();
+        Literal {
+            repr: Repr::Array {
+                ty,
+                dims: dims.iter().map(|&d| d as i64).collect(),
+                data: vec![0u8; n * ty.byte_size()],
+            },
+        }
+    }
+
+    /// Tuple literal (what `execute` un-tuples in the real bindings).
+    pub fn tuple(parts: Vec<Literal>) -> Literal {
+        Literal { repr: Repr::Tuple(parts) }
+    }
+
+    /// Same data, new dimensions (element counts must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal, Error> {
+        match &self.repr {
+            Repr::Array { ty, dims: old, data } => {
+                let old_n: i64 = old.iter().product();
+                let new_n: i64 = dims.iter().product();
+                if old_n != new_n {
+                    return Err(Error::Invalid(format!(
+                        "reshape {old:?} ({old_n} elems) -> {dims:?} ({new_n} elems)"
+                    )));
+                }
+                Ok(Literal {
+                    repr: Repr::Array { ty: *ty, dims: dims.to_vec(), data: data.clone() },
+                })
+            }
+            Repr::Tuple(_) => Err(Error::Invalid("cannot reshape a tuple literal".into())),
+        }
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape, Error> {
+        match &self.repr {
+            Repr::Array { ty, dims, .. } => Ok(ArrayShape { ty: *ty, dims: dims.clone() }),
+            Repr::Tuple(_) => Err(Error::Invalid("tuple literal has no array shape".into())),
+        }
+    }
+
+    pub fn element_count(&self) -> usize {
+        match &self.repr {
+            Repr::Array { ty, data, .. } => data.len() / ty.byte_size(),
+            Repr::Tuple(parts) => parts.len(),
+        }
+    }
+
+    /// Copy the elements out as a host vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, Error> {
+        match &self.repr {
+            Repr::Array { ty, data, .. } => {
+                if *ty != T::TY {
+                    return Err(Error::Invalid(format!("literal is {ty:?}, asked for {:?}", T::TY)));
+                }
+                let sz = ty.byte_size();
+                Ok(data.chunks_exact(sz).map(T::read_le).collect())
+            }
+            Repr::Tuple(_) => Err(Error::Invalid("cannot read a tuple as a flat vector".into())),
+        }
+    }
+
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T, Error> {
+        match &self.repr {
+            Repr::Array { ty, data, .. } => {
+                if *ty != T::TY {
+                    return Err(Error::Invalid(format!("literal is {ty:?}, asked for {:?}", T::TY)));
+                }
+                if data.is_empty() {
+                    return Err(Error::Invalid("empty literal".into()));
+                }
+                Ok(T::read_le(data))
+            }
+            Repr::Tuple(_) => Err(Error::Invalid("tuple literal has no first element".into())),
+        }
+    }
+
+    /// Split a tuple literal into its parts.
+    pub fn to_tuple(self) -> Result<Vec<Literal>, Error> {
+        match self.repr {
+            Repr::Tuple(parts) => Ok(parts),
+            Repr::Array { .. } => Err(Error::Invalid("literal is not a tuple".into())),
+        }
+    }
+}
+
+/// Parsed HLO module (opaque in the stub).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    _text: String,
+}
+
+impl HloModuleProto {
+    /// The real bindings parse HLO text into a proto; the stub only checks
+    /// that the file is readable so missing-artifact errors stay accurate.
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto, Error> {
+        match std::fs::read_to_string(path) {
+            Ok(text) => Ok(HloModuleProto { _text: text }),
+            Err(e) => Err(Error::Invalid(format!("read {path}: {e}"))),
+        }
+    }
+}
+
+/// Computation wrapper (opaque in the stub).
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    _proto: HloModuleProto,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _proto: proto.clone() }
+    }
+}
+
+/// Device buffer handle returned by `execute`.
+#[derive(Debug, Clone)]
+pub struct PjRtBuffer {
+    _inner: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Compiled executable handle.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _inner: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// PJRT client handle.
+#[derive(Debug)]
+pub struct PjRtClient {
+    _inner: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_roundtrip() {
+        let l = Literal::scalar(3.5f32);
+        assert_eq!(l.get_first_element::<f32>().unwrap(), 3.5);
+        assert_eq!(l.array_shape().unwrap().dims(), &[] as &[i64]);
+    }
+
+    #[test]
+    fn vec1_reshape_to_vec() {
+        let l = Literal::vec1(&[1i32, 2, 3, 4, 5, 6]);
+        let m = l.reshape(&[2, 3]).unwrap();
+        assert_eq!(m.array_shape().unwrap().dims(), &[2, 3]);
+        assert_eq!(m.to_vec::<i32>().unwrap(), vec![1, 2, 3, 4, 5, 6]);
+        assert!(l.reshape(&[4, 2]).is_err());
+    }
+
+    #[test]
+    fn zeros_and_type_mismatch() {
+        let z = Literal::create_from_shape(PrimitiveType::F32, &[2, 2]);
+        assert_eq!(z.to_vec::<f32>().unwrap(), vec![0.0; 4]);
+        assert!(z.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn tuple_split() {
+        let t = Literal::tuple(vec![Literal::scalar(1i32), Literal::scalar(2i32)]);
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert!(Literal::scalar(0i32).to_tuple().is_err());
+    }
+
+    #[test]
+    fn device_side_is_unavailable() {
+        match PjRtClient::cpu() {
+            Err(Error::Unavailable(m)) => assert!(m.contains("xla")),
+            other => panic!("expected Unavailable, got {other:?}"),
+        }
+    }
+}
