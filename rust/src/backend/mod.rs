@@ -1,0 +1,712 @@
+//! Execution backends: the measurement seam between the optimization
+//! pipeline and whatever actually runs a partition.
+//!
+//! Kareus's pipeline (profile → per-partition MBO → compose → select →
+//! deploy) is backend-agnostic: every layer only needs *some* source of
+//! `(schedule, partition) → ExecResult` measurements. This module makes
+//! that seam explicit:
+//!
+//! * [`ExecutionBackend`] — the trait. The low-level entry point is
+//!   [`measure_kernels`](ExecutionBackend::measure_kernels) (raw kernel
+//!   lists plus a caller-hoisted fingerprint, used by the hot paths); the
+//!   convenience [`measure`](ExecutionBackend::measure) wraps it for a
+//!   whole [`Partition`]. Backends also expose a [`fingerprint`]
+//!   (so memoization layers never alias results from different
+//!   measurement sources) and a [`caps`](ExecutionBackend::caps)
+//!   capability descriptor.
+//! * [`SimBackend`] — the two-stream simulator (`sim::exec`), the default
+//!   everywhere and the reference for bit-exactness tests.
+//! * [`TraceBackend`] — records measurements to / replays them from a
+//!   JSON trace file. Record mode wraps the simulator and captures every
+//!   measurement it serves; replay mode answers **only** from the trace
+//!   (the simulator is structurally unreachable), which makes recorded
+//!   sweeps byte-reproducible offline and is the template for future
+//!   hardware-measured (PJRT/NVML) backends.
+//! * [`Measurer`] — a backend plus an optional shared
+//!   [`MeasureCache`](crate::profiler::MeasureCache), threaded through
+//!   the microbatch-evaluation layers in place of raw simulator calls.
+//!
+//! The memoization contract is unchanged from the cache-only design:
+//! every backend must be a pure function of
+//! `(fingerprint, schedule, temperature, power limit)` for a fixed
+//! backend identity, so replaying a cached/traced result is bit-identical
+//! to recomputing it.
+//!
+//! ## Trace file schema (version 1)
+//!
+//! ```jsonc
+//! {
+//!   "trace": "kareus_exec_trace",
+//!   "version": 1,
+//!   "entries": {
+//!     // key = <fp as hex>|<comm_sms>:<launch>:<freq_mhz>|<temp f64 bits>|<limit f64 bits>
+//!     "0f3a..|12:c1:1410|4043..|ffff..": {
+//!       "time_s": 0.0123, "dyn_j": 3.1, "static_j": 0.9,
+//!       "exposed_comm_s": 0.0, "avg_freq_mhz": 1410,
+//!       "throttled": false, "peak_power_w": 401.2
+//!     }
+//!   }
+//! }
+//! ```
+//!
+//! `launch` is `seq` (sequential execution model) or `c<i>` (launched
+//! with computation kernel `i`); floats are written with Rust's shortest
+//! round-trip formatting, so a decoded [`ExecResult`] is bit-identical to
+//! the recorded one. Entries live in a `BTreeMap`, so a saved trace is
+//! byte-deterministic for a given set of measurements.
+//!
+//! [`fingerprint`]: ExecutionBackend::fingerprint
+
+use std::collections::BTreeMap;
+use std::io;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::partition::Partition;
+use crate::profiler::MeasureCache;
+use crate::sim::exec::{execute_partition, ExecResult, LaunchAt, Schedule};
+use crate::sim::gpu::GpuSpec;
+use crate::sim::kernel::Kernel;
+use crate::util::hash::Fnv64;
+use crate::util::json::{num, obj, s, Json};
+
+/// What a backend can and cannot do. Pipeline layers use this to decide,
+/// e.g., whether asking for a never-seen schedule can possibly succeed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BackendCaps {
+    /// Repeating a measurement returns bit-identical results.
+    pub deterministic: bool,
+    /// The backend can produce *fresh* measurements (simulator, hardware).
+    /// `false` for replay-only backends: a measurement absent from their
+    /// store is unanswerable.
+    pub live: bool,
+}
+
+/// The measurement source behind the optimization pipeline.
+pub trait ExecutionBackend: Send + Sync {
+    /// Measure one canonical partition execution given raw kernel lists.
+    ///
+    /// `fp` is the caller-hoisted combined GPU+kernels fingerprint (see
+    /// [`combine_fp`](crate::profiler::combine_fp) / [`kernels_fp`]): the
+    /// backend-independent identity of the physical work, used by trace
+    /// keys and shared caches. Hot loops compute it once per (GPU,
+    /// partition), not per probe.
+    #[allow(clippy::too_many_arguments)]
+    fn measure_kernels(
+        &self,
+        gpu: &GpuSpec,
+        fp: u64,
+        comps: &[Kernel],
+        comm: Option<&Kernel>,
+        sched: &Schedule,
+        temp_c: f64,
+        power_limit: Option<f64>,
+    ) -> ExecResult;
+
+    /// Measure one whole [`Partition`] under `sched` at die temperature
+    /// `temp_c` (the convenience entry point named in the coordinator's
+    /// phase ① design).
+    fn measure(
+        &self,
+        gpu: &GpuSpec,
+        part: &Partition,
+        sched: &Schedule,
+        temp_c: f64,
+        power_limit: Option<f64>,
+    ) -> ExecResult {
+        let fp = crate::profiler::combine_fp(gpu.fingerprint(), part.fingerprint());
+        self.measure_kernels(gpu, fp, &part.comps, part.comm.as_ref(), sched, temp_c, power_limit)
+    }
+
+    /// Stable identity of this measurement source. Folded into the MBO
+    /// memoization key so results measured by different backends (or
+    /// different traces) never alias.
+    fn fingerprint(&self) -> u64;
+
+    /// Short display name (`sim`, `trace`).
+    fn name(&self) -> &'static str;
+
+    /// Capability descriptor.
+    fn caps(&self) -> BackendCaps {
+        BackendCaps { deterministic: true, live: true }
+    }
+}
+
+/// Fingerprint of a raw kernel list on one GPU — the ad-hoc counterpart
+/// of [`Partition::fingerprint`] for work that is not a partition
+/// (non-partition extras, sequential-model segments). Hashes exactly the
+/// physical resource demands, mirroring the partition rule.
+pub fn kernels_fp(gpu_fp: u64, comps: &[Kernel], comm: Option<&Kernel>) -> u64 {
+    let mut h = Fnv64::new();
+    h.write_str("kernels").write_u64(gpu_fp).write_u64(comps.len() as u64);
+    let write_kernel = |h: &mut Fnv64, k: &Kernel| {
+        // `name` is a label; execution depends only on the resources.
+        let Kernel { name: _, kind, flops, bytes, comm_bytes } = k;
+        h.write_u64(*kind as u64).write_f64(*flops).write_f64(*bytes).write_f64(*comm_bytes);
+    };
+    for k in comps {
+        write_kernel(&mut h, k);
+    }
+    match comm {
+        Some(c) => {
+            h.write_u64(1);
+            write_kernel(&mut h, c);
+        }
+        None => {
+            h.write_u64(0);
+        }
+    }
+    h.finish()
+}
+
+// ---------------------------------------------------------------------
+// SimBackend
+// ---------------------------------------------------------------------
+
+/// The two-stream execution-schedule simulator (`sim::exec`) as a
+/// backend: live, deterministic, and the bit-exactness reference every
+/// other backend is tested against.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SimBackend;
+
+/// The process-wide simulator backend instance ([`SimBackend`] is a unit
+/// struct; one static serves every [`Measurer::sim`]).
+pub static SIM: SimBackend = SimBackend;
+
+/// Precomputed: the cache key path probes
+/// [`ExecutionBackend::fingerprint`] per measurement, so the simulator's
+/// must not re-hash its tag string every time.
+const SIM_FINGERPRINT: u64 = crate::util::hash::fnv1a_const("kareus_backend:sim:v1");
+
+impl ExecutionBackend for SimBackend {
+    fn measure_kernels(
+        &self,
+        gpu: &GpuSpec,
+        _fp: u64,
+        comps: &[Kernel],
+        comm: Option<&Kernel>,
+        sched: &Schedule,
+        temp_c: f64,
+        power_limit: Option<f64>,
+    ) -> ExecResult {
+        execute_partition(gpu, comps, comm, sched, temp_c, power_limit)
+    }
+
+    fn fingerprint(&self) -> u64 {
+        SIM_FINGERPRINT
+    }
+
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+}
+
+// ---------------------------------------------------------------------
+// TraceBackend
+// ---------------------------------------------------------------------
+
+/// Trace-file schema tag.
+pub const TRACE_SCHEMA: &str = "kareus_exec_trace";
+/// Trace-file schema version.
+pub const TRACE_VERSION: u64 = 1;
+
+/// Records measurements to / replays them from a JSON trace file.
+///
+/// * **Record mode** ([`TraceBackend::record`]): wraps the simulator,
+///   captures every measurement it serves; [`save`](TraceBackend::save)
+///   writes the byte-deterministic trace file.
+/// * **Replay mode** ([`TraceBackend::replay`]): loads the file and
+///   answers exclusively from it. There is no simulator fallback — a
+///   missing entry panics with the offending key, because it means the
+///   trace was recorded for a different scenario/seed and silently
+///   recomputing would defeat the point of offline replay.
+pub struct TraceBackend {
+    path: PathBuf,
+    replay: bool,
+    /// Precomputed [`ExecutionBackend::fingerprint`] (the cache key path
+    /// is hot; don't rehash the path string per probe). Mode-independent,
+    /// so a record run and its replay share one identity.
+    fp: u64,
+    entries: Mutex<BTreeMap<String, ExecResult>>,
+    recorded: AtomicU64,
+    replayed: AtomicU64,
+}
+
+fn trace_fp(path: &Path) -> u64 {
+    let mut h = Fnv64::new();
+    h.write_str("kareus_backend:trace:v1").write_str(&path.to_string_lossy());
+    h.finish()
+}
+
+/// Canonical trace key of one measurement: combined fingerprint, the
+/// schedule, and the exact (bit-level) temperature and power limit.
+pub fn trace_key(fp: u64, sched: &Schedule, temp_c: f64, power_limit: Option<f64>) -> String {
+    let launch = match sched.launch {
+        LaunchAt::Sequential => "seq".to_string(),
+        LaunchAt::WithComp(i) => format!("c{i}"),
+    };
+    format!(
+        "{:016x}|{}:{}:{}|{:016x}|{:016x}",
+        fp,
+        sched.comm_sms,
+        launch,
+        sched.freq_mhz,
+        temp_c.to_bits(),
+        power_limit.map_or(u64::MAX, f64::to_bits)
+    )
+}
+
+/// Serialize one [`ExecResult`] (floats keep Rust's shortest round-trip
+/// formatting, so decoding restores the exact bits).
+pub fn exec_result_to_json(r: &ExecResult) -> Json {
+    obj(vec![
+        ("time_s", num(r.time_s)),
+        ("dyn_j", num(r.dyn_j)),
+        ("static_j", num(r.static_j)),
+        ("exposed_comm_s", num(r.exposed_comm_s)),
+        ("avg_freq_mhz", num(r.avg_freq_mhz)),
+        ("throttled", Json::Bool(r.throttled)),
+        ("peak_power_w", num(r.peak_power_w)),
+    ])
+}
+
+/// Decode one [`ExecResult`]; errors name the missing/ill-typed field.
+pub fn exec_result_from_json(j: &Json) -> Result<ExecResult, String> {
+    let f = |k: &str| {
+        j.get(k).and_then(|v| v.as_f64()).ok_or_else(|| format!("trace entry missing '{k}'"))
+    };
+    Ok(ExecResult {
+        time_s: f("time_s")?,
+        dyn_j: f("dyn_j")?,
+        static_j: f("static_j")?,
+        exposed_comm_s: f("exposed_comm_s")?,
+        avg_freq_mhz: f("avg_freq_mhz")?,
+        throttled: j
+            .get("throttled")
+            .and_then(|v| v.as_bool())
+            .ok_or("trace entry missing 'throttled'")?,
+        peak_power_w: f("peak_power_w")?,
+    })
+}
+
+impl TraceBackend {
+    /// Fresh recording trace that will be saved to `path`.
+    pub fn record(path: impl Into<PathBuf>) -> Self {
+        let path = path.into();
+        let fp = trace_fp(&path);
+        TraceBackend {
+            path,
+            replay: false,
+            fp,
+            entries: Mutex::new(BTreeMap::new()),
+            recorded: AtomicU64::new(0),
+            replayed: AtomicU64::new(0),
+        }
+    }
+
+    /// Load `path` for replay; the simulator is unreachable from the
+    /// returned backend.
+    pub fn replay(path: impl Into<PathBuf>) -> io::Result<Self> {
+        let path = path.into();
+        let text = std::fs::read_to_string(&path)?;
+        let bad = |msg: String| io::Error::new(io::ErrorKind::InvalidData, msg);
+        let json = Json::parse(&text).map_err(|e| bad(format!("{}: {e}", path.display())))?;
+        if json.get("trace").and_then(|v| v.as_str()) != Some(TRACE_SCHEMA) {
+            return Err(bad(format!("{}: not a {TRACE_SCHEMA} file", path.display())));
+        }
+        let version = json.get("version").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+        if version != TRACE_VERSION {
+            return Err(bad(format!(
+                "{}: unsupported trace version {version} (want {TRACE_VERSION})",
+                path.display()
+            )));
+        }
+        let mut entries = BTreeMap::new();
+        let obj = json
+            .get("entries")
+            .and_then(|v| v.as_obj())
+            .ok_or_else(|| bad(format!("{}: missing 'entries' object", path.display())))?;
+        for (k, v) in obj {
+            let r = exec_result_from_json(v)
+                .map_err(|e| bad(format!("{}: entry '{k}': {e}", path.display())))?;
+            entries.insert(k.clone(), r);
+        }
+        let fp = trace_fp(&path);
+        Ok(TraceBackend {
+            path,
+            replay: true,
+            fp,
+            entries: Mutex::new(entries),
+            recorded: AtomicU64::new(0),
+            replayed: AtomicU64::new(0),
+        })
+    }
+
+    /// Replay if `path` exists, otherwise start recording to it — the CLI
+    /// semantics of `--backend trace:<path>` (first run records, second
+    /// replays).
+    pub fn open(path: impl Into<PathBuf>) -> io::Result<Self> {
+        let path = path.into();
+        if path.exists() {
+            Self::replay(path)
+        } else {
+            Ok(Self::record(path))
+        }
+    }
+
+    pub fn is_replay(&self) -> bool {
+        self.replay
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Distinct measurements currently in the trace.
+    pub fn len(&self) -> usize {
+        self.entries.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Measurements served while recording (≥ [`len`](Self::len): repeated
+    /// keys overwrite in place).
+    pub fn recorded(&self) -> u64 {
+        self.recorded.load(Ordering::Relaxed)
+    }
+
+    /// Measurements answered from the trace in replay mode.
+    pub fn replayed(&self) -> u64 {
+        self.replayed.load(Ordering::Relaxed)
+    }
+
+    /// The whole trace as JSON (record or replay mode alike).
+    pub fn to_json(&self) -> Json {
+        let entries: BTreeMap<String, Json> = self
+            .entries
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), exec_result_to_json(v)))
+            .collect();
+        obj(vec![
+            ("trace", s(TRACE_SCHEMA)),
+            ("version", num(TRACE_VERSION as f64)),
+            ("entries", Json::Obj(entries)),
+        ])
+    }
+
+    /// Write the trace to its path (byte-deterministic: `BTreeMap` order).
+    pub fn save(&self) -> io::Result<()> {
+        std::fs::write(&self.path, self.to_json().dump())
+    }
+}
+
+impl ExecutionBackend for TraceBackend {
+    fn measure_kernels(
+        &self,
+        gpu: &GpuSpec,
+        fp: u64,
+        comps: &[Kernel],
+        comm: Option<&Kernel>,
+        sched: &Schedule,
+        temp_c: f64,
+        power_limit: Option<f64>,
+    ) -> ExecResult {
+        let key = trace_key(fp, sched, temp_c, power_limit);
+        if self.replay {
+            let hit = self.entries.lock().unwrap().get(&key).copied();
+            match hit {
+                Some(r) => {
+                    self.replayed.fetch_add(1, Ordering::Relaxed);
+                    r
+                }
+                None => panic!(
+                    "trace replay miss for key {key} in {}: the trace was recorded for a \
+                     different scenario/seed — re-record it",
+                    self.path.display()
+                ),
+            }
+        } else {
+            let r = execute_partition(gpu, comps, comm, sched, temp_c, power_limit);
+            self.recorded.fetch_add(1, Ordering::Relaxed);
+            self.entries.lock().unwrap().insert(key, r);
+            r
+        }
+    }
+
+    fn fingerprint(&self) -> u64 {
+        // Record and replay of the *same* trace share a fingerprint, so a
+        // record run and its replay produce identical memoization keys.
+        self.fp
+    }
+
+    fn name(&self) -> &'static str {
+        "trace"
+    }
+
+    fn caps(&self) -> BackendCaps {
+        BackendCaps { deterministic: true, live: !self.replay }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Measurer: backend + optional shared cache
+// ---------------------------------------------------------------------
+
+/// A backend plus an optional shared [`MeasureCache`], threaded through
+/// the microbatch-evaluation layers. The cache sits *above* the backend:
+/// a hit never reaches it, a miss consults it exactly once.
+#[derive(Clone, Copy)]
+pub struct Measurer<'a> {
+    pub backend: &'a dyn ExecutionBackend,
+    pub cache: Option<&'a MeasureCache>,
+}
+
+impl<'a> Measurer<'a> {
+    pub fn new(backend: &'a dyn ExecutionBackend, cache: Option<&'a MeasureCache>) -> Self {
+        Measurer { backend, cache }
+    }
+
+    /// Plain simulator, no cache — the default for tests and one-off
+    /// evaluations.
+    pub fn sim() -> Measurer<'static> {
+        Measurer { backend: &SIM, cache: None }
+    }
+
+    /// Cache-or-measure one canonical execution (see
+    /// [`MeasureCache::exec_opt`]).
+    #[allow(clippy::too_many_arguments)]
+    pub fn exec(
+        &self,
+        fp: u64,
+        gpu: &GpuSpec,
+        comps: &[Kernel],
+        comm: Option<&Kernel>,
+        sched: &Schedule,
+        temp_c: f64,
+        power_limit: Option<f64>,
+    ) -> ExecResult {
+        MeasureCache::exec_opt(
+            self.backend,
+            self.cache,
+            fp,
+            gpu,
+            comps,
+            comm,
+            sched,
+            temp_c,
+            power_limit,
+        )
+    }
+}
+
+// ---------------------------------------------------------------------
+// CLI backend specs
+// ---------------------------------------------------------------------
+
+/// Parsed `--backend` CLI value.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum BackendSpec {
+    /// The in-process simulator (default).
+    Sim,
+    /// Trace file: replay it if it exists, record into it otherwise.
+    Trace(PathBuf),
+}
+
+/// Parse a `--backend` value: `sim` or `trace:<path>`.
+pub fn parse_backend_spec(spec: &str) -> Result<BackendSpec, String> {
+    if spec == "sim" {
+        return Ok(BackendSpec::Sim);
+    }
+    if let Some(path) = spec.strip_prefix("trace:") {
+        if path.is_empty() {
+            return Err("backend 'trace:' needs a file path (trace:<path>)".to_string());
+        }
+        return Ok(BackendSpec::Trace(PathBuf::from(path)));
+    }
+    Err(format!("unknown backend '{spec}' (sim | trace:<path>)"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::kernel::KernelKind;
+
+    fn gpu() -> GpuSpec {
+        GpuSpec::a100()
+    }
+
+    fn part() -> Partition {
+        Partition {
+            ptype: "fwd/attn".into(),
+            comps: vec![
+                Kernel::comp("norm", KernelKind::Norm, 1e8, 8e8),
+                Kernel::comp("linear", KernelKind::Linear, 4e11, 2e9),
+            ],
+            comm: Some(Kernel::comm("ar", KernelKind::AllReduce, 4e8)),
+            count: 28,
+        }
+    }
+
+    fn sched() -> Schedule {
+        Schedule { comm_sms: 12, launch: LaunchAt::WithComp(1), freq_mhz: 1410 }
+    }
+
+    fn tmp_path(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("kareus_{tag}_{}.json", std::process::id()))
+    }
+
+    #[test]
+    fn sim_backend_matches_direct_simulator() {
+        let g = gpu();
+        let p = part();
+        let direct =
+            execute_partition(&g, &p.comps, p.comm.as_ref(), &sched(), 30.0, Some(g.tdp_w));
+        let via = SIM.measure(&g, &p, &sched(), 30.0, Some(g.tdp_w));
+        assert_eq!(direct.time_s.to_bits(), via.time_s.to_bits());
+        assert_eq!(direct.dyn_j.to_bits(), via.dyn_j.to_bits());
+        assert_eq!(direct.static_j.to_bits(), via.static_j.to_bits());
+        assert!(SIM.caps().live && SIM.caps().deterministic);
+        assert_eq!(SIM.name(), "sim");
+    }
+
+    #[test]
+    fn trace_records_and_replays_bit_identically() {
+        let path = tmp_path("trace_roundtrip");
+        let _ = std::fs::remove_file(&path);
+        let g = gpu();
+        let p = part();
+
+        let rec = TraceBackend::record(&path);
+        assert!(!rec.is_replay() && rec.caps().live);
+        let a = rec.measure(&g, &p, &sched(), 30.0, Some(g.tdp_w));
+        let b = rec.measure(&g, &p, &Schedule::sequential(1200), 42.5, None);
+        assert_eq!(rec.recorded(), 2);
+        assert_eq!(rec.len(), 2);
+        rec.save().unwrap();
+
+        let rep = TraceBackend::open(&path).unwrap();
+        assert!(rep.is_replay() && !rep.caps().live);
+        let a2 = rep.measure(&g, &p, &sched(), 30.0, Some(g.tdp_w));
+        let b2 = rep.measure(&g, &p, &Schedule::sequential(1200), 42.5, None);
+        assert_eq!(rep.replayed(), 2);
+        for (x, y) in [(a, a2), (b, b2)] {
+            assert_eq!(x.time_s.to_bits(), y.time_s.to_bits());
+            assert_eq!(x.dyn_j.to_bits(), y.dyn_j.to_bits());
+            assert_eq!(x.static_j.to_bits(), y.static_j.to_bits());
+            assert_eq!(x.exposed_comm_s.to_bits(), y.exposed_comm_s.to_bits());
+            assert_eq!(x.avg_freq_mhz.to_bits(), y.avg_freq_mhz.to_bits());
+            assert_eq!(x.throttled, y.throttled);
+            assert_eq!(x.peak_power_w.to_bits(), y.peak_power_w.to_bits());
+        }
+        // Record and replay of the same path share an identity.
+        assert_eq!(TraceBackend::record(&path).fingerprint(), rep.fingerprint());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    #[should_panic(expected = "trace replay miss")]
+    fn trace_replay_miss_panics_instead_of_simulating() {
+        let path = tmp_path("trace_miss");
+        let _ = std::fs::remove_file(&path);
+        let rec = TraceBackend::record(&path);
+        let g = gpu();
+        let p = part();
+        rec.measure(&g, &p, &sched(), 30.0, Some(g.tdp_w));
+        rec.save().unwrap();
+        let rep = TraceBackend::replay(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        // Different temperature → different key → must not fall back to sim.
+        rep.measure(&g, &p, &sched(), 31.0, Some(g.tdp_w));
+    }
+
+    #[test]
+    fn trace_rejects_malformed_files() {
+        let path = tmp_path("trace_bad");
+        std::fs::write(&path, "{\"trace\":\"something_else\",\"version\":1,\"entries\":{}}")
+            .unwrap();
+        assert!(TraceBackend::replay(&path).is_err());
+        std::fs::write(&path, "not json").unwrap();
+        assert!(TraceBackend::replay(&path).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn exec_result_json_roundtrip_is_exact() {
+        let r = ExecResult {
+            time_s: 0.12345678901234567,
+            dyn_j: 3.1e2,
+            static_j: 0.1 + 0.2, // deliberately non-representable sum
+            exposed_comm_s: 0.0,
+            avg_freq_mhz: 1403.7218374,
+            throttled: true,
+            peak_power_w: 401.25,
+        };
+        let dumped = exec_result_to_json(&r).dump();
+        let back = exec_result_from_json(&Json::parse(&dumped).unwrap()).unwrap();
+        assert_eq!(r.time_s.to_bits(), back.time_s.to_bits());
+        assert_eq!(r.static_j.to_bits(), back.static_j.to_bits());
+        assert_eq!(r.avg_freq_mhz.to_bits(), back.avg_freq_mhz.to_bits());
+        assert_eq!(r.throttled, back.throttled);
+    }
+
+    #[test]
+    fn kernels_fp_distinguishes_work() {
+        let p = part();
+        let a = kernels_fp(1, &p.comps, p.comm.as_ref());
+        let b = kernels_fp(1, &p.comps, None);
+        let c = kernels_fp(2, &p.comps, p.comm.as_ref());
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(a, kernels_fp(1, &p.comps, p.comm.as_ref()));
+    }
+
+    #[test]
+    fn backend_spec_parsing() {
+        assert_eq!(parse_backend_spec("sim").unwrap(), BackendSpec::Sim);
+        assert_eq!(
+            parse_backend_spec("trace:/tmp/t.json").unwrap(),
+            BackendSpec::Trace(PathBuf::from("/tmp/t.json"))
+        );
+        assert!(parse_backend_spec("trace:").is_err());
+        assert!(parse_backend_spec("hardware").is_err());
+    }
+
+    #[test]
+    fn backend_fingerprints_never_alias() {
+        let t = TraceBackend::record("/tmp/a.json");
+        let u = TraceBackend::record("/tmp/b.json");
+        assert_ne!(SIM.fingerprint(), t.fingerprint());
+        assert_ne!(t.fingerprint(), u.fingerprint());
+        // The compile-time sim fingerprint tracks the runtime FNV-1a.
+        assert_eq!(SIM.fingerprint(), crate::util::hash::fnv1a_str("kareus_backend:sim:v1"));
+    }
+
+    #[test]
+    fn shared_cache_never_aliases_across_backends() {
+        // Cloning an EngineConfig shares the MeasureCache while
+        // `with_backend` swaps the measurement source — a probe through a
+        // different backend must miss (and reach that backend), never
+        // replay another source's entry.
+        let g = gpu();
+        let p = part();
+        let cache = MeasureCache::new();
+        let fp = kernels_fp(g.fingerprint(), &p.comps, p.comm.as_ref());
+        let a = MeasureCache::exec_opt(
+            &SIM, Some(&cache), fp, &g, &p.comps, p.comm.as_ref(), &sched(), 30.0, Some(g.tdp_w),
+        );
+        let t = TraceBackend::record(tmp_path("alias"));
+        let m0 = cache.misses();
+        let b = MeasureCache::exec_opt(
+            &t, Some(&cache), fp, &g, &p.comps, p.comm.as_ref(), &sched(), 30.0, Some(g.tdp_w),
+        );
+        assert_eq!(cache.misses(), m0 + 1, "trace probe aliased the sim-warmed cache entry");
+        assert_eq!(t.recorded(), 1, "the trace backend never saw the measurement");
+        // Identical physics either way — only the cache identity differs.
+        assert_eq!(a.time_s.to_bits(), b.time_s.to_bits());
+    }
+}

@@ -18,8 +18,8 @@
 use std::collections::BTreeMap;
 
 use crate::compose::{
-    eval_overlapped_microbatch_fp, eval_sequential_microbatch, microbatch_frontier, partition_fps,
-    MbFrontier, MbPoint,
+    eval_overlapped_microbatch_fp, eval_sequential_microbatch_fp, microbatch_fps,
+    microbatch_frontier, sequential_fps, MbFrontier, MbPoint,
 };
 use crate::engine::EngineConfig;
 use crate::frontier::Frontier;
@@ -61,6 +61,21 @@ impl System {
             System::KareusNoSched => "Kareus w/o kernel schedule",
         }
     }
+
+    /// Inverse of [`name`](Self::name) (plan-file deserialization).
+    pub fn by_name(name: &str) -> Option<System> {
+        [
+            System::Megatron,
+            System::MegatronPerseus,
+            System::Nanobatching,
+            System::NanobatchingPerseus,
+            System::Kareus,
+            System::KareusNoFreq,
+            System::KareusNoSched,
+        ]
+        .into_iter()
+        .find(|s| s.name() == name)
+    }
 }
 
 /// One system's iteration-level result on one workload.
@@ -70,6 +85,10 @@ pub struct SystemResult {
     /// Per-GPU iteration (time, total energy) frontier.
     pub frontier: Frontier,
     pub plans: Vec<IterationPlan>,
+    /// The per-stage menus the plans index into — kept so a selected
+    /// operating point can be materialized into a typed
+    /// [`FrequencyPlan`](crate::plan::FrequencyPlan).
+    pub menus: Vec<StageMenu>,
     /// Simulated MBO profiling overhead (s), Kareus only.
     pub mbo_profiling_s: f64,
     /// Achieved TFLOP/s/GPU at the min-time point (Table 3's last column).
@@ -77,9 +96,10 @@ pub struct SystemResult {
 }
 
 impl SystemResult {
-    pub fn min_time_plan(&self) -> &IterationPlan {
-        let tag = self.frontier.min_time().expect("empty frontier").tag;
-        &self.plans[tag]
+    /// The max-throughput plan; `None` on an empty frontier (callers must
+    /// handle infeasible/degenerate results rather than unwrap blindly).
+    pub fn min_time_plan(&self) -> Option<&IterationPlan> {
+        Some(&self.plans[self.frontier.min_time()?.tag])
     }
 }
 
@@ -131,7 +151,8 @@ pub fn run_system_with(
     let freqs_all = gpu.search_freqs();
     let fmax = gpu.f_max_mhz;
     let mut mbo_profiling_s = 0.0;
-    let cache = Some(&engine.measure_cache);
+    // All measurements flow through the engine's backend + shared cache.
+    let m = engine.measurer();
 
     let menus: Vec<StageMenu> = match system {
         System::Megatron | System::MegatronPerseus => {
@@ -139,8 +160,12 @@ pub fn run_system_with(
                 if system == System::Megatron { vec![fmax] } else { freqs_all.clone() };
             stage_frontiers(cfg, |first, last, dir| {
                 let w = build_pass(cfg, cfg.tokens_per_gpu(), dir, first, last);
+                let fps = sequential_fps(gpu, &w);
                 MbFrontier::from_points(
-                    freqs.iter().map(|&f| eval_sequential_microbatch(gpu, &w, f)).collect(),
+                    freqs
+                        .iter()
+                        .map(|&f| eval_sequential_microbatch_fp(gpu, &w, Some(&fps), f, m))
+                        .collect(),
                 )
             })
         }
@@ -150,7 +175,7 @@ pub fn run_system_with(
             stage_frontiers(cfg, |first, last, dir| {
                 let w = build_nanobatch_pass(cfg, dir, first, last);
                 let parts = detect_partitions(gpu, &w, true);
-                let fps = cache.map(|_| partition_fps(gpu, &parts));
+                let fps = microbatch_fps(gpu, &parts, &w.extra);
                 let points: Vec<MbPoint> = freqs
                     .iter()
                     .map(|&f| {
@@ -158,11 +183,11 @@ pub fn run_system_with(
                         eval_overlapped_microbatch_fp(
                             gpu,
                             &parts,
-                            fps.as_deref(),
+                            Some(&fps),
                             &configs,
                             f,
                             &w.extra,
-                            cache,
+                            m,
                         )
                     })
                     .collect();
@@ -178,14 +203,15 @@ pub fn run_system_with(
             parts.extend(detect_partitions(gpu, &bwd_w, true));
             let mbo =
                 crate::compose::optimize_all_partitions_with(seed, gpu, &parts, comm_group, engine);
-            mbo_profiling_s =
-                mbo.values().map(|r| r.profiling_cost_s).fold(0.0f64, f64::max); // parallel across partitions (§6.6)
+            // Partitions profile in parallel across GPUs (§6.6), so the
+            // charged overhead is the slowest one, not the sum.
+            mbo_profiling_s = mbo.values().map(|r| r.profiling_cost_s).fold(0.0f64, f64::max);
             stage_frontiers(cfg, |first, last, dir| {
                 let nano_w = build_nanobatch_pass(cfg, dir, first, last);
                 let parts = detect_partitions(gpu, &nano_w, true);
                 let seq_w = build_pass(cfg, cfg.tokens_per_gpu(), dir, first, last);
                 let mut mbf =
-                    microbatch_frontier(gpu, &parts, &mbo, &nano_w.extra, Some(&seq_w), cache);
+                    microbatch_frontier(gpu, &parts, &mbo, &nano_w.extra, Some(&seq_w), m);
                 if system == System::KareusNoFreq {
                     let pts: Vec<MbPoint> = mbf
                         .points
@@ -208,7 +234,7 @@ pub fn run_system_with(
     let t_min = frontier.min_time().map(|p| p.time).unwrap_or(f64::NAN);
     let tflops = analytic_model_flops_per_gpu(cfg) / t_min / 1e12;
 
-    SystemResult { system, frontier, plans, mbo_profiling_s, tflops_per_gpu: tflops }
+    SystemResult { system, frontier, plans, menus, mbo_profiling_s, tflops_per_gpu: tflops }
 }
 
 fn default_configs(parts: &[Partition], f: u32) -> BTreeMap<String, Schedule> {
@@ -261,7 +287,24 @@ mod tests {
         let g = GpuSpec::a100();
         let r = run_system(&g, &cfg(), System::Megatron, 0);
         assert_eq!(r.frontier.len(), 1);
-        assert!(r.min_time_plan().time_s > 0.0);
+        assert!(r.min_time_plan().unwrap().time_s > 0.0);
+        assert_eq!(r.menus.len(), cfg().par.pp as usize);
+    }
+
+    #[test]
+    fn system_names_roundtrip() {
+        for sys in [
+            System::Megatron,
+            System::MegatronPerseus,
+            System::Nanobatching,
+            System::NanobatchingPerseus,
+            System::Kareus,
+            System::KareusNoFreq,
+            System::KareusNoSched,
+        ] {
+            assert_eq!(System::by_name(sys.name()), Some(sys));
+        }
+        assert_eq!(System::by_name("nope"), None);
     }
 
     #[test]

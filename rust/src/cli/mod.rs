@@ -1,5 +1,10 @@
 //! Minimal CLI argument parser (no clap offline): `--key value` /
 //! `--flag` options plus positional arguments.
+//!
+//! Malformed input is a proper `Err`, never a panic: a bare `--` or an
+//! empty option name (`--=v`) is rejected with a message the binary can
+//! print, and a trailing `--flag` with no following value parses as a
+//! flag.
 
 use std::collections::BTreeMap;
 
@@ -11,16 +16,25 @@ pub struct Args {
 }
 
 impl Args {
-    pub fn parse(argv: impl IntoIterator<Item = String>) -> Args {
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Result<Args, String> {
         let mut out = Args::default();
         let mut iter = argv.into_iter().peekable();
         while let Some(a) = iter.next() {
             if let Some(key) = a.strip_prefix("--") {
+                if key.is_empty() || key.starts_with('=') {
+                    return Err(format!("malformed option '{a}': empty option name"));
+                }
                 // `--key=value`, `--key value`, or bare `--flag`.
                 if let Some((k, v)) = key.split_once('=') {
                     out.options.insert(k.to_string(), v.to_string());
                 } else if iter.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
-                    out.options.insert(key.to_string(), iter.next().unwrap());
+                    // The peek guarantees a value token; `ok_or_else`
+                    // (rather than `unwrap`) keeps any future iterator
+                    // desync an error instead of a panic.
+                    let v = iter
+                        .next()
+                        .ok_or_else(|| format!("option '--{key}' expects a value"))?;
+                    out.options.insert(key.to_string(), v);
                 } else {
                     out.flags.push(key.to_string());
                 }
@@ -28,7 +42,7 @@ impl Args {
                 out.positional.push(a);
             }
         }
-        out
+        Ok(out)
     }
 
     pub fn get(&self, key: &str) -> Option<&str> {
@@ -64,7 +78,7 @@ mod tests {
     use super::*;
 
     fn parse(s: &str) -> Args {
-        Args::parse(s.split_whitespace().map(String::from))
+        Args::parse(s.split_whitespace().map(String::from)).expect("well-formed argv")
     }
 
     #[test]
@@ -101,5 +115,27 @@ mod tests {
         assert_eq!(a.get_list("gpus", "x"), vec!["a100", "h100"]);
         assert_eq!(a.get_list("models", "qwen1.7b,llama3b"), vec!["qwen1.7b", "llama3b"]);
         assert_eq!(a.get_list("empty", ""), Vec::<String>::new());
+    }
+
+    #[test]
+    fn trailing_option_with_no_value_is_a_flag_not_a_panic() {
+        // Regression: `--out` as the final token used to route through an
+        // `iter.next().unwrap()`-shaped path; it must parse as a flag.
+        let a = parse("sweep --out");
+        assert!(a.has_flag("out"));
+        assert_eq!(a.get("out"), None);
+        // Same when the trailing flag follows a consumed option.
+        let a = parse("sweep --seed 7 --verbose");
+        assert_eq!(a.get_u32("seed", 0), 7);
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn malformed_options_return_errors() {
+        assert!(Args::parse(["--".to_string()]).is_err());
+        assert!(Args::parse(["--=7".to_string()]).is_err());
+        assert!(Args::parse(["ok".to_string(), "--".to_string(), "x".to_string()]).is_err());
+        // Well-formed input still parses.
+        assert!(Args::parse(["--ok".to_string()]).is_ok());
     }
 }

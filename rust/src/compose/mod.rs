@@ -8,21 +8,27 @@
 //! across instances plus non-partition components, adds the
 //! sequential-execution candidate (§4.5 execution-model switching), and
 //! prunes to the Pareto frontier.
+//!
+//! Every execution in this module flows through a [`Measurer`] — an
+//! [`ExecutionBackend`](crate::backend::ExecutionBackend) plus optional
+//! shared [`MeasureCache`] — so the whole layer is measurement-source
+//! agnostic (simulator, trace replay, future hardware backends).
 
 use std::collections::BTreeMap;
 
+use crate::backend::{kernels_fp, Measurer};
 use crate::engine::{EngineConfig, MboCache};
 use crate::frontier::{Frontier, Point};
 use crate::mbo::MboResult;
 use crate::partition::Partition;
-use crate::profiler::{MeasureCache, Profiler};
-use crate::sim::exec::{execute_partition, LaunchAt, Schedule};
+use crate::profiler::Profiler;
+use crate::sim::exec::{LaunchAt, Schedule};
 use crate::sim::gpu::GpuSpec;
 use crate::sim::kernel::Kernel;
 use crate::workload::MicrobatchWork;
 
 /// The deployed configuration of one microbatch.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct MicrobatchPlan {
     pub freq_mhz: u32,
     /// Per-partition-type (SM allocation, launch timing); empty when
@@ -69,12 +75,29 @@ impl MbFrontier {
     }
 }
 
-/// Per-partition measurement-cache fingerprints, hoisted so hot loops
-/// (the Cartesian product, per-frequency sweeps) don't rehash the GPU
-/// spec and every kernel on each cache probe.
-pub fn partition_fps(gpu: &GpuSpec, partitions: &[Partition]) -> Vec<u64> {
+/// Caller-hoisted measurement fingerprints for one microbatch: the
+/// combined GPU+partition fingerprint per partition plus the fingerprint
+/// of the non-partition extras. Hot loops (the Cartesian product,
+/// per-frequency sweeps) hash the GPU spec and every kernel once instead
+/// of on each probe.
+#[derive(Clone, Debug)]
+pub struct MbFps {
+    /// `combine_fp(gpu, partition)`, parallel to the partition slice.
+    pub parts: Vec<u64>,
+    /// [`kernels_fp`] of the extras.
+    pub extra: u64,
+}
+
+/// Hoist all fingerprints for `(gpu, partitions, extra)`.
+pub fn microbatch_fps(gpu: &GpuSpec, partitions: &[Partition], extra: &[Kernel]) -> MbFps {
     let gpu_fp = gpu.fingerprint();
-    partitions.iter().map(|p| crate::profiler::combine_fp(gpu_fp, p.fingerprint())).collect()
+    MbFps {
+        parts: partitions
+            .iter()
+            .map(|p| crate::profiler::combine_fp(gpu_fp, p.fingerprint()))
+            .collect(),
+        extra: kernels_fp(gpu_fp, extra, None),
+    }
 }
 
 /// Evaluate one overlapped microbatch: partitions executed sequentially,
@@ -87,25 +110,32 @@ pub fn eval_overlapped_microbatch(
     configs: &BTreeMap<String, Schedule>,
     freq_mhz: u32,
     extra: &[Kernel],
-    cache: Option<&MeasureCache>,
+    m: Measurer<'_>,
 ) -> MbPoint {
-    let fps = cache.map(|_| partition_fps(gpu, partitions));
-    eval_overlapped_microbatch_fp(gpu, partitions, fps.as_deref(), configs, freq_mhz, extra, cache)
+    eval_overlapped_microbatch_fp(gpu, partitions, None, configs, freq_mhz, extra, m)
 }
 
 /// Hot-path variant of [`eval_overlapped_microbatch`]: `fps` are the
-/// caller-precomputed [`partition_fps`] (required when `cache` is set and
-/// the call sits inside a loop).
+/// caller-precomputed [`microbatch_fps`] (pass them whenever the call
+/// sits inside a loop; when `None` they are hashed on the spot).
 #[allow(clippy::too_many_arguments)]
 pub fn eval_overlapped_microbatch_fp(
     gpu: &GpuSpec,
     partitions: &[Partition],
-    fps: Option<&[u64]>,
+    fps: Option<&MbFps>,
     configs: &BTreeMap<String, Schedule>,
     freq_mhz: u32,
     extra: &[Kernel],
-    cache: Option<&MeasureCache>,
+    m: Measurer<'_>,
 ) -> MbPoint {
+    let computed;
+    let fps = match fps {
+        Some(f) => f,
+        None => {
+            computed = microbatch_fps(gpu, partitions, extra);
+            &computed
+        }
+    };
     let mut time = 0.0;
     let mut total = 0.0;
     let mut dynamic = 0.0;
@@ -116,13 +146,11 @@ pub fn eval_overlapped_microbatch_fp(
             .unwrap_or(&Schedule { comm_sms: 12, launch: LaunchAt::WithComp(0), freq_mhz });
         sched.freq_mhz = freq_mhz;
         // A partition's execution depends only on its own schedule, so the
-        // Cartesian product over other types re-simulates identical
+        // Cartesian product over other types re-measures identical
         // (partition, schedule) pairs constantly — the shared cache
-        // collapses those to one execution each. Without precomputed
-        // fingerprints there is nothing to key on: run uncached.
-        let r = MeasureCache::exec_opt(
-            if fps.is_some() { cache } else { None },
-            fps.map_or(0, |f| f[i]),
+        // collapses those to one backend probe each.
+        let r = m.exec(
+            fps.parts[i],
             gpu,
             &part.comps,
             part.comm.as_ref(),
@@ -140,14 +168,15 @@ pub fn eval_overlapped_microbatch_fp(
     // Drain: the final segment's comm has no following computation to
     // overlap with — it runs exposed once per microbatch.
     if let Some((c, sms)) = last_comm {
-        let t = c.comm_bytes / gpu.comm_bw(sms.max(1));
+        let bw = gpu.comm_bw(sms.max(1));
+        let t = c.comm_bytes / bw;
         time += t;
-        let p_dyn = gpu.comm_power(gpu.comm_bw(sms.max(1))) + gpu.mem_power(2.0 * gpu.comm_bw(sms.max(1)));
+        let p_dyn = gpu.comm_power(bw) + gpu.mem_power(2.0 * bw);
         total += (gpu.static_power(gpu.ref_temp_c) + p_dyn) * t;
         dynamic += p_dyn * t;
     }
     // Non-partition components run sequentially at the same frequency.
-    let (te, je, de) = eval_extra(gpu, extra, freq_mhz);
+    let (te, je, de) = eval_extra(gpu, fps.extra, extra, freq_mhz, m);
     time += te;
     total += je;
     dynamic += de;
@@ -159,11 +188,18 @@ pub fn eval_overlapped_microbatch_fp(
     }
 }
 
-fn eval_extra(gpu: &GpuSpec, extra: &[Kernel], freq_mhz: u32) -> (f64, f64, f64) {
+fn eval_extra(
+    gpu: &GpuSpec,
+    extra_fp: u64,
+    extra: &[Kernel],
+    freq_mhz: u32,
+    m: Measurer<'_>,
+) -> (f64, f64, f64) {
     if extra.is_empty() {
         return (0.0, 0.0, 0.0);
     }
-    let r = execute_partition(
+    let r = m.exec(
+        extra_fp,
         gpu,
         extra,
         None,
@@ -174,15 +210,67 @@ fn eval_extra(gpu: &GpuSpec, extra: &[Kernel], freq_mhz: u32) -> (f64, f64, f64)
     (r.time_s, r.total_j(), r.dyn_j)
 }
 
+/// Caller-hoisted fingerprints for the sequential execution model: one
+/// entry per segment plus the extras' fp. Frequency-invariant, so
+/// per-frequency sweeps hash the GPU spec and every kernel once.
+#[derive(Clone, Debug)]
+pub struct SeqFps {
+    /// [`kernels_fp`] per segment, parallel to `work.segments`.
+    pub segments: Vec<u64>,
+    /// [`kernels_fp`] of the extras.
+    pub extra: u64,
+}
+
+/// Hoist all fingerprints for the sequential model of `work` on `gpu`.
+pub fn sequential_fps(gpu: &GpuSpec, work: &MicrobatchWork) -> SeqFps {
+    let gpu_fp = gpu.fingerprint();
+    SeqFps {
+        segments: work
+            .segments
+            .iter()
+            .map(|seg| kernels_fp(gpu_fp, &seg.comps, seg.comm.as_ref()))
+            .collect(),
+        extra: kernels_fp(gpu_fp, &work.extra, None),
+    }
+}
+
 /// Evaluate the sequential execution model for one microbatch (§4.5;
 /// Megatron-LM's model, Figure 2a): each segment's computation then its
 /// comm, unsplit microbatch.
-pub fn eval_sequential_microbatch(gpu: &GpuSpec, work: &MicrobatchWork, freq_mhz: u32) -> MbPoint {
+pub fn eval_sequential_microbatch(
+    gpu: &GpuSpec,
+    work: &MicrobatchWork,
+    freq_mhz: u32,
+    m: Measurer<'_>,
+) -> MbPoint {
+    eval_sequential_microbatch_fp(gpu, work, None, freq_mhz, m)
+}
+
+/// Hot-path variant of [`eval_sequential_microbatch`]: `fps` are the
+/// caller-precomputed [`sequential_fps`] (pass them whenever the call
+/// sits inside a per-frequency loop; when `None` they are hashed on the
+/// spot).
+pub fn eval_sequential_microbatch_fp(
+    gpu: &GpuSpec,
+    work: &MicrobatchWork,
+    fps: Option<&SeqFps>,
+    freq_mhz: u32,
+    m: Measurer<'_>,
+) -> MbPoint {
+    let computed;
+    let fps = match fps {
+        Some(f) => f,
+        None => {
+            computed = sequential_fps(gpu, work);
+            &computed
+        }
+    };
     let mut time = 0.0;
     let mut total = 0.0;
     let mut dynamic = 0.0;
-    for seg in &work.segments {
-        let r = execute_partition(
+    for (i, seg) in work.segments.iter().enumerate() {
+        let r = m.exec(
+            fps.segments[i],
             gpu,
             &seg.comps,
             seg.comm.as_ref(),
@@ -194,7 +282,7 @@ pub fn eval_sequential_microbatch(gpu: &GpuSpec, work: &MicrobatchWork, freq_mhz
         total += r.total_j();
         dynamic += r.dyn_j;
     }
-    let (te, je, de) = eval_extra(gpu, &work.extra, freq_mhz);
+    let (te, je, de) = eval_extra(gpu, fps.extra, &work.extra, freq_mhz, m);
     time += te;
     total += je;
     dynamic += de;
@@ -215,7 +303,7 @@ pub fn microbatch_frontier(
     mbo: &BTreeMap<String, MboResult>,
     extra: &[Kernel],
     seq_work: Option<&MicrobatchWork>,
-    cache: Option<&MeasureCache>,
+    m: Measurer<'_>,
 ) -> MbFrontier {
     // Distinct (sms, launch) configs that appear on each type's partition
     // frontier — the schedule vocabulary the Cartesian product ranges over.
@@ -249,7 +337,8 @@ pub fn microbatch_frontier(
 
     let mut points: Vec<MbPoint> = Vec::new();
     // Fingerprints are invariant across the whole product — hash once.
-    let fps = cache.map(|_| partition_fps(gpu, partitions));
+    let fps = microbatch_fps(gpu, partitions, extra);
+    let seq_fps = seq_work.map(|w| sequential_fps(gpu, w));
     for &f in &gpu.search_freqs() {
         // Cartesian product across partition types.
         let mut combos: Vec<BTreeMap<String, Schedule>> = vec![BTreeMap::new()];
@@ -257,9 +346,9 @@ pub fn microbatch_frontier(
             let mut next = Vec::with_capacity(combos.len() * cfgs.len());
             for base in &combos {
                 for &(sms, launch) in cfgs {
-                    let mut m = base.clone();
-                    m.insert(ptype.clone(), Schedule { comm_sms: sms, launch, freq_mhz: f });
-                    next.push(m);
+                    let mut map = base.clone();
+                    map.insert(ptype.clone(), Schedule { comm_sms: sms, launch, freq_mhz: f });
+                    next.push(map);
                 }
             }
             combos = next;
@@ -268,36 +357,38 @@ pub fn microbatch_frontier(
             points.push(eval_overlapped_microbatch_fp(
                 gpu,
                 partitions,
-                fps.as_deref(),
+                Some(&fps),
                 &configs,
                 f,
                 extra,
-                cache,
+                m,
             ));
         }
         if let Some(w) = seq_work {
-            points.push(eval_sequential_microbatch(gpu, w, f));
+            points.push(eval_sequential_microbatch_fp(gpu, w, seq_fps.as_ref(), f, m));
         }
     }
     MbFrontier::from_points(points)
 }
 
 /// Run full MBO on every partition type with default engine settings
-/// (auto thread count, fresh caches).
+/// (simulator backend, auto thread count, fresh caches).
 pub fn optimize_all_partitions(
     profiler_seed: u64,
     gpu: &GpuSpec,
     partitions: &[Partition],
     comm_group: u32,
 ) -> BTreeMap<String, MboResult> {
-    optimize_all_partitions_with(profiler_seed, gpu, partitions, comm_group, &EngineConfig::default())
+    let engine = EngineConfig::default();
+    optimize_all_partitions_with(profiler_seed, gpu, partitions, comm_group, &engine)
 }
 
 /// The parallel multi-partition MBO engine (§5.1, §6.6): each partition's
 /// optimization runs on its own worker with its own `Profiler` — exactly
 /// the paper's model, where every partition is profiled on a separate GPU,
 /// so thermal state is per-(partition, GPU) and *never* shared across
-/// concurrent optimizations.
+/// concurrent optimizations. Every profiler measures through the engine's
+/// [`ExecutionBackend`](crate::backend::ExecutionBackend).
 ///
 /// Determinism: each partition's seed derives only from `profiler_seed`
 /// and the partition type, never from worker identity or scheduling order,
@@ -312,6 +403,7 @@ pub fn optimize_all_partitions_with(
 ) -> BTreeMap<String, MboResult> {
     use crate::mbo::{optimize_partition, MboParams};
     use crate::profiler::ProfilerConfig;
+    let backend_fp = engine.backend.fingerprint();
     let results: Vec<(String, MboResult)> = crate::util::pool::parallel_map(
         partitions.to_vec(),
         engine.worker_threads(),
@@ -321,12 +413,13 @@ pub fn optimize_all_partitions_with(
             let mut params = MboParams::for_class(part.size_class());
             params.seed = seed;
             let prof_cfg = ProfilerConfig::default();
-            let key = MboCache::key(gpu, &part, comm_group, &params, &prof_cfg);
+            let key = MboCache::key(backend_fp, gpu, &part, comm_group, &params, &prof_cfg);
             if let Some(r) = engine.mbo_cache.get(key) {
                 return (part.ptype.clone(), r);
             }
             let mut prof = Profiler::new(gpu.clone(), prof_cfg, seed)
-                .with_cache(engine.measure_cache.clone());
+                .with_cache(engine.measure_cache.clone())
+                .with_backend(engine.backend.clone());
             let r = optimize_partition(&mut prof, &part, comm_group, &params);
             engine.mbo_cache.put(key, r.clone());
             (part.ptype.clone(), r)
@@ -338,8 +431,12 @@ pub fn optimize_all_partitions_with(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::backend::{Measurer, SIM};
     use crate::partition::detect_partitions;
-    use crate::workload::{build_nanobatch_pass, build_pass, Dir, ModelSpec, Parallelism, TrainConfig};
+    use crate::profiler::MeasureCache;
+    use crate::workload::{
+        build_nanobatch_pass, build_pass, Dir, ModelSpec, Parallelism, TrainConfig,
+    };
 
     fn cfg() -> TrainConfig {
         TrainConfig {
@@ -357,7 +454,7 @@ mod tests {
         let g = GpuSpec::a100();
         let c = cfg();
         let w = build_pass(&c, c.tokens_per_gpu(), Dir::Fwd, false, false);
-        let p = eval_sequential_microbatch(&g, &w, 1410);
+        let p = eval_sequential_microbatch(&g, &w, 1410, Measurer::sim());
         assert!(p.time_s > 0.0 && p.total_j > 0.0);
         assert!(p.dyn_j < p.total_j);
         assert!(p.plan.sequential);
@@ -377,8 +474,9 @@ mod tests {
                 Schedule { comm_sms: 12, launch: LaunchAt::WithComp(1), freq_mhz: 1410 },
             );
         }
-        let ovl = eval_overlapped_microbatch(&g, &parts, &configs, 1410, &nano_w.extra, None);
-        let seq = eval_sequential_microbatch(&g, &seq_w, 1410);
+        let ovl =
+            eval_overlapped_microbatch(&g, &parts, &configs, 1410, &nano_w.extra, Measurer::sim());
+        let seq = eval_sequential_microbatch(&g, &seq_w, 1410, Measurer::sim());
         assert!(ovl.time_s < seq.time_s, "ovl {} seq {}", ovl.time_s, seq.time_s);
     }
 
@@ -390,7 +488,8 @@ mod tests {
         let parts = detect_partitions(&g, &nano_w, true);
         let mbo = optimize_all_partitions(7, &g, &parts, c.par.tp * c.par.cp);
         let seq_w = build_pass(&c, c.tokens_per_gpu(), Dir::Fwd, false, false);
-        let mbf = microbatch_frontier(&g, &parts, &mbo, &nano_w.extra, Some(&seq_w), None);
+        let mbf =
+            microbatch_frontier(&g, &parts, &mbo, &nano_w.extra, Some(&seq_w), Measurer::sim());
         assert!(mbf.frontier.len() >= 5, "frontier len {}", mbf.frontier.len());
         let freqs: std::collections::BTreeSet<u32> =
             mbf.pareto().iter().map(|p| p.plan.freq_mhz).collect();
@@ -411,10 +510,11 @@ mod tests {
         let parts = detect_partitions(&g, &nano_w, true);
         let mbo = optimize_all_partitions(13, &g, &parts, c.par.tp * c.par.cp);
         let seq_w = build_pass(&c, c.tokens_per_gpu(), Dir::Fwd, false, false);
-        let mbf = microbatch_frontier(&g, &parts, &mbo, &nano_w.extra, Some(&seq_w), None);
+        let mbf =
+            microbatch_frontier(&g, &parts, &mbo, &nano_w.extra, Some(&seq_w), Measurer::sim());
         // Frontier min-time must be <= the best sequential point.
         let best_seq = (0..18)
-            .map(|i| eval_sequential_microbatch(&g, &seq_w, 900 + 30 * i).time_s)
+            .map(|i| eval_sequential_microbatch(&g, &seq_w, 900 + 30 * i, Measurer::sim()).time_s)
             .fold(f64::INFINITY, f64::min);
         let ft = mbf.frontier.min_time().unwrap().time;
         assert!(ft <= best_seq * (1.0 + 1e-9), "frontier {ft} vs seq {best_seq}");
@@ -436,9 +536,11 @@ mod tests {
             );
         }
         let cache = MeasureCache::new();
-        let plain = eval_overlapped_microbatch(&g, &parts, &configs, 1410, &nano_w.extra, None);
-        let cold = eval_overlapped_microbatch(&g, &parts, &configs, 1410, &nano_w.extra, Some(&cache));
-        let warm = eval_overlapped_microbatch(&g, &parts, &configs, 1410, &nano_w.extra, Some(&cache));
+        let cached = Measurer::new(&SIM, Some(&cache));
+        let plain =
+            eval_overlapped_microbatch(&g, &parts, &configs, 1410, &nano_w.extra, Measurer::sim());
+        let cold = eval_overlapped_microbatch(&g, &parts, &configs, 1410, &nano_w.extra, cached);
+        let warm = eval_overlapped_microbatch(&g, &parts, &configs, 1410, &nano_w.extra, cached);
         for p in [&cold, &warm] {
             assert_eq!(plain.time_s.to_bits(), p.time_s.to_bits());
             assert_eq!(plain.total_j.to_bits(), p.total_j.to_bits());
@@ -452,7 +554,7 @@ mod tests {
         let g = GpuSpec::a100();
         let c = cfg();
         let w = build_pass(&c, c.tokens_per_gpu(), Dir::Fwd, true, true);
-        let p = eval_sequential_microbatch(&g, &w, 1200);
+        let p = eval_sequential_microbatch(&g, &w, 1200, Measurer::sim());
         assert!(p.static_j() > 0.0);
         assert!((p.static_j() + p.dyn_j - p.total_j).abs() < 1e-9 * p.total_j);
     }

@@ -3,11 +3,18 @@
 //! target (deadline / energy budget / max throughput) → ⑤ deploy to the
 //! execution engine (here: the PJRT trainer with schedule-driven
 //! accounting) → ⑥ frequency plan per microbatch.
+//!
+//! Deployment is *typed*: phase ④ materializes a
+//! [`FrequencyPlan`](crate::plan::FrequencyPlan) — per-(stage,
+//! microbatch, direction) schedule entries — which phases ⑤–⑥ and the
+//! schedule-plan files consume. The human-readable `freq_summary` string
+//! is derived from the plan for display only.
 
 use anyhow::Result;
 
 use crate::baselines::{run_system_with, System, SystemResult};
 use crate::engine::EngineConfig;
+use crate::plan::FrequencyPlan;
 use crate::runtime::Runtime;
 use crate::sim::gpu::GpuSpec;
 use crate::trainer::{ScheduleAccounting, StepLog, Trainer};
@@ -23,22 +30,58 @@ pub enum Target {
     EnergyBudget(f64),
 }
 
-/// A selected operating point, ready to deploy.
+/// A selected operating point, ready to deploy: the predicted iteration
+/// (time, energy) plus the typed per-slot frequency/schedule plan.
 #[derive(Clone, Debug)]
 pub struct Deployment {
     pub system: System,
     pub iter_time_s: f64,
     pub iter_energy_j: f64,
-    pub freq_summary: String,
+    /// Phase ⑥'s typed plan — the source of truth for what gets deployed.
+    pub plan: FrequencyPlan,
+}
+
+impl Deployment {
+    /// Display-only digest derived from the typed plan.
+    pub fn freq_summary(&self) -> String {
+        self.plan.summary()
+    }
+
+    /// Serde-free JSON form (round-trips through [`Deployment::from_json`]).
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("system", s(self.system.name())),
+            ("iter_time_s", num(self.iter_time_s)),
+            ("iter_energy_j", num(self.iter_energy_j)),
+            ("plan", self.plan.to_json()),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> std::result::Result<Deployment, String> {
+        let name =
+            j.get("system").and_then(|v| v.as_str()).ok_or("deployment missing 'system'")?;
+        let system =
+            System::by_name(name).ok_or_else(|| format!("unknown system '{name}'"))?;
+        let get_f64 = |k: &str| {
+            j.get(k).and_then(|v| v.as_f64()).ok_or_else(|| format!("deployment missing '{k}'"))
+        };
+        Ok(Deployment {
+            system,
+            iter_time_s: get_f64("iter_time_s")?,
+            iter_energy_j: get_f64("iter_energy_j")?,
+            plan: FrequencyPlan::from_json(j.get("plan").ok_or("deployment missing 'plan'")?)?,
+        })
+    }
 }
 
 pub struct Coordinator {
     pub gpu: GpuSpec,
     pub cfg: TrainConfig,
     /// Shared parallel-optimization engine: per-partition MBO fans out
-    /// across its workers, and its caches persist across `optimize` calls,
-    /// so comparing systems on the same workload (e.g. Kareus and its
-    /// Table 8 ablations) replays the expensive MBO instead of redoing it.
+    /// across its workers, its caches persist across `optimize` calls,
+    /// and its [`ExecutionBackend`](crate::backend::ExecutionBackend) is
+    /// the measurement source for every phase — swap in a trace backend
+    /// and the whole pipeline runs from recorded measurements.
     pub engine: EngineConfig,
 }
 
@@ -47,7 +90,7 @@ impl Coordinator {
         Coordinator { gpu, cfg, engine: EngineConfig::default() }
     }
 
-    /// Replace the engine (thread count / shared caches).
+    /// Replace the engine (thread count / shared caches / backend).
     pub fn with_engine(mut self, engine: EngineConfig) -> Self {
         self.engine = engine;
         self
@@ -59,6 +102,10 @@ impl Coordinator {
     }
 
     /// Phase ④: select an operating point for the target.
+    ///
+    /// Returns `None` when no frontier point satisfies the target — which
+    /// includes the empty-frontier case, so callers never need a guarded
+    /// `unwrap`. [`adapt`](Self::adapt) follows the same contract.
     pub fn select(&self, result: &SystemResult, target: Target) -> Option<Deployment> {
         let f = &result.frontier;
         let point = match target {
@@ -72,23 +119,17 @@ impl Coordinator {
                 f.points().iter().find(|p| (p.time - t).abs() < 1e-9).copied()
             }
         }?;
-        let plan = &result.plans[point.tag];
-        let n_slots: usize = plan.choice.iter().map(|c| c.len()).sum();
+        let plan = FrequencyPlan::from_iteration(&result.menus, &result.plans[point.tag]);
         Some(Deployment {
             system: result.system,
             iter_time_s: point.time,
             iter_energy_j: point.energy,
-            freq_summary: format!(
-                "{} stages, {} task slots, bubble {:.3}s",
-                plan.choice.len(),
-                n_slots,
-                plan.bubble_s
-            ),
+            plan,
         })
     }
 
     /// Phases ⑤–⑥: deploy to the training engine — run real train steps
-    /// through PJRT with the selected schedule driving accounting.
+    /// through PJRT with the selected typed plan driving accounting.
     pub fn deploy_and_train(
         &self,
         deployment: &Deployment,
@@ -102,6 +143,7 @@ impl Coordinator {
             label: deployment.system.name(),
             iter_time_s: deployment.iter_time_s,
             iter_energy_j: deployment.iter_energy_j,
+            freq_span_mhz: deployment.plan.freq_span_mhz().unwrap_or((0, 0)),
         };
         trainer.train(steps, &acct, (steps / 20).max(1))
     }
@@ -112,6 +154,7 @@ impl Coordinator {
     /// deadline for the *remaining* run, re-select an operating point that
     /// still meets the deadline — typically a faster (higher-energy) point
     /// that compensates for the slowdown without touching the optimizer.
+    /// `None` when recovery is infeasible (or nothing remains to adapt).
     pub fn adapt(
         &self,
         result: &SystemResult,
@@ -128,7 +171,8 @@ impl Coordinator {
         self.select(result, Target::Deadline(per_iter))
     }
 
-    /// Serialize a frontier + deployment for tooling (schedule-plan file).
+    /// Serialize a frontier + deployment for tooling (schedule-plan file):
+    /// the typed plan plus the derived display summary.
     pub fn plan_json(&self, result: &SystemResult, deployment: &Deployment) -> Json {
         obj(vec![
             ("system", s(result.system.name())),
@@ -144,6 +188,8 @@ impl Coordinator {
             ),
             ("iter_time_s", num(deployment.iter_time_s)),
             ("iter_energy_j", num(deployment.iter_energy_j)),
+            ("plan", deployment.plan.to_json()),
+            ("freq_summary", s(&deployment.freq_summary())),
             ("mbo_profiling_s", num(result.mbo_profiling_s)),
         ])
     }
@@ -152,6 +198,7 @@ impl Coordinator {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::frontier::Frontier;
     use crate::workload::{ModelSpec, Parallelism};
 
     fn coord() -> Coordinator {
@@ -181,6 +228,65 @@ mod tests {
         // Energy budget.
         let eb = c.select(&r, Target::EnergyBudget(max.iter_energy_j)).unwrap();
         assert!(eb.iter_energy_j <= max.iter_energy_j + 1e-9);
+    }
+
+    #[test]
+    fn select_produces_typed_plan() {
+        let c = coord();
+        let r = c.optimize(System::MegatronPerseus, 0);
+        let max = c.select(&r, Target::MaxThroughput).unwrap();
+        // One slot per (stage, microbatch, direction).
+        assert_eq!(
+            max.plan.n_slots(),
+            c.cfg.par.pp as usize * 2 * c.cfg.n_microbatches as usize
+        );
+        // Perseus varies per-microbatch frequency; a slack-free point runs
+        // everything at (or near) max frequency.
+        let (lo, hi) = max.plan.freq_span_mhz().unwrap();
+        assert!(lo >= 900 && hi <= c.gpu.f_max_mhz);
+        // The derived summary reflects the typed plan.
+        assert!(max.freq_summary().contains("task slots"));
+        // A looser deadline that actually saves energy must deploy a
+        // strictly lower minimum frequency somewhere in the plan.
+        let lean = c.select(&r, Target::Deadline(max.iter_time_s * 1.3)).unwrap();
+        if lean.iter_energy_j < max.iter_energy_j {
+            let (lean_lo, _) = lean.plan.freq_span_mhz().unwrap();
+            assert!(lean_lo < hi, "lean plan {lean_lo} should undercut max-throughput {hi}");
+        }
+    }
+
+    #[test]
+    fn deployment_json_roundtrips() {
+        let c = coord();
+        let r = c.optimize(System::MegatronPerseus, 0);
+        let d = c.select(&r, Target::MaxThroughput).unwrap();
+        let parsed = Json::parse(&d.to_json().dump()).unwrap();
+        let back = Deployment::from_json(&parsed).unwrap();
+        assert_eq!(back.system, d.system);
+        assert_eq!(back.iter_time_s.to_bits(), d.iter_time_s.to_bits());
+        assert_eq!(back.iter_energy_j.to_bits(), d.iter_energy_j.to_bits());
+        assert_eq!(back.plan, d.plan, "typed plan JSON round-trip diverged");
+    }
+
+    #[test]
+    fn select_and_adapt_survive_empty_frontier() {
+        // Degenerate result (no feasible operating point): every selector
+        // answers None instead of panicking.
+        let c = coord();
+        let empty = SystemResult {
+            system: System::Kareus,
+            frontier: Frontier::new(),
+            plans: Vec::new(),
+            menus: Vec::new(),
+            mbo_profiling_s: 0.0,
+            tflops_per_gpu: f64::NAN,
+        };
+        assert!(empty.min_time_plan().is_none());
+        for t in [Target::MaxThroughput, Target::Deadline(1.0), Target::EnergyBudget(1e6)] {
+            assert!(c.select(&empty, t).is_none());
+        }
+        assert!(c.adapt(&empty, 10, 100.0, 1.25).is_none());
+        assert!(c.adapt(&empty, 0, 100.0, 1.0).is_none());
     }
 
     #[test]
@@ -215,5 +321,9 @@ mod tests {
         let j = c.plan_json(&r, &d);
         let parsed = Json::parse(&j.dump()).unwrap();
         assert!(parsed.get("frontier").unwrap().as_arr().unwrap().len() >= 1);
+        // The typed plan rides along and decodes.
+        let plan = FrequencyPlan::from_json(parsed.get("plan").unwrap()).unwrap();
+        assert_eq!(plan, d.plan);
+        assert!(parsed.get("freq_summary").unwrap().as_str().is_some());
     }
 }

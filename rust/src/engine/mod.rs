@@ -18,6 +18,12 @@
 //! whether it runs on 1 thread or 16, cold or warm (see
 //! `tests/engine.rs`).
 //!
+//! Underneath both caches sits the engine's
+//! [`ExecutionBackend`](crate::backend::ExecutionBackend) — the
+//! measurement source every layer consults on a miss. The default is the
+//! simulator; a [`TraceBackend`](crate::backend::TraceBackend) swaps in
+//! recorded-measurement replay without touching any other layer.
+//!
 //! On top sits the *sweep*: a scenario matrix (GPUs × models × parallelism
 //! configs × systems) pushed through the full frontier pipeline with
 //! machine-readable JSON output for benchmark tracking.
@@ -25,6 +31,7 @@
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
+use crate::backend::{ExecutionBackend, Measurer, SimBackend};
 use crate::baselines::{run_system_with, System, SystemResult};
 use crate::mbo::{MboParams, MboResult};
 use crate::partition::Partition;
@@ -36,14 +43,29 @@ use crate::util::pool;
 use crate::workload::{ModelSpec, Parallelism, TrainConfig};
 
 /// Shared configuration of the parallel optimization engine. Cloning
-/// shares the underlying caches (they are `Arc`-backed), so one engine can
-/// be threaded through coordinators, sweeps, and benchmarks.
-#[derive(Clone, Default)]
+/// shares the underlying caches and backend (they are `Arc`-backed), so
+/// one engine can be threaded through coordinators, sweeps, and
+/// benchmarks.
+#[derive(Clone)]
 pub struct EngineConfig {
     /// Worker threads for per-partition MBO fan-out; 0 ⇒ auto (cores).
     pub threads: usize,
     pub measure_cache: MeasureCache,
     pub mbo_cache: MboCache,
+    /// The measurement source every pipeline layer consults (default:
+    /// the simulator; see [`crate::backend`] for trace record/replay).
+    pub backend: Arc<dyn ExecutionBackend>,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            threads: 0,
+            measure_cache: MeasureCache::default(),
+            mbo_cache: MboCache::default(),
+            backend: Arc::new(SimBackend),
+        }
+    }
 }
 
 impl EngineConfig {
@@ -59,6 +81,18 @@ impl EngineConfig {
     pub fn with_threads(mut self, threads: usize) -> Self {
         self.threads = threads;
         self
+    }
+
+    /// Swap the measurement source (builder style).
+    pub fn with_backend(mut self, backend: Arc<dyn ExecutionBackend>) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// The engine's backend + shared measurement cache as one value, in
+    /// the shape the microbatch-evaluation layers consume.
+    pub fn measurer(&self) -> Measurer<'_> {
+        Measurer::new(self.backend.as_ref(), Some(&self.measure_cache))
     }
 
     /// Resolved worker count.
@@ -84,12 +118,15 @@ impl MboCache {
     }
 
     /// Cache key: every input the cached MBO trajectory depends on —
-    /// GPU, partition, comm group, MBO hyperparameters (incl. seed), and
-    /// the profiler configuration that shapes each measurement.
-    /// Exhaustive destructuring (no `..`) turns a future field on either
-    /// params struct into a compile error here instead of a silent
-    /// stale-cache-hit.
+    /// the measurement backend's identity (`backend_fp`), GPU, partition,
+    /// comm group, MBO hyperparameters (incl. seed), and the profiler
+    /// configuration that shapes each measurement. Folding the backend
+    /// fingerprint in keeps results measured by different sources (sim vs
+    /// a trace) from ever aliasing. Exhaustive destructuring (no `..`)
+    /// turns a future field on either params struct into a compile error
+    /// here instead of a silent stale-cache-hit.
     pub fn key(
+        backend_fp: u64,
         gpu: &GpuSpec,
         part: &Partition,
         comm_group: u32,
@@ -109,7 +146,8 @@ impl MboCache {
             seed,
         } = params;
         let mut h = Fnv64::new();
-        h.write_u64(gpu.fingerprint())
+        h.write_u64(backend_fp)
+            .write_u64(gpu.fingerprint())
             .write_u64(part.fingerprint())
             .write_u64(comm_group as u64)
             .write_u64(*n_init as u64)
@@ -224,8 +262,13 @@ pub fn run_sweep(
         .map(|(i, scenario)| {
             progress(&format!("[{}/{}] {}", i + 1, total, scenario.label()));
             let t0 = std::time::Instant::now();
-            let result =
-                run_system_with(&scenario.gpu, &scenario.cfg, scenario.system, scenario.seed, engine);
+            let result = run_system_with(
+                &scenario.gpu,
+                &scenario.cfg,
+                scenario.system,
+                scenario.seed,
+                engine,
+            );
             let wall_s = t0.elapsed().as_secs_f64();
             progress(&format!(
                 "        {} frontier points in {:.2}s (min iter {:.4}s, {:.1} TFLOP/s/GPU)",
@@ -241,9 +284,20 @@ pub fn run_sweep(
 
 /// Machine-readable sweep dump (the `BENCH_*.json` tracking schema):
 /// one record per scenario with its full (time, energy) frontier.
-pub fn sweep_json(outcomes: &[ScenarioOutcome], engine: &EngineConfig) -> Json {
+///
+/// `deterministic` nulls the timing-dependent fields (`wall_s`, the
+/// cache hit/miss counters) so that two runs producing identical results
+/// — e.g. a trace record run and its replay — dump byte-identical JSON.
+/// Everything else in the schema is already a pure function of the
+/// scenario inputs.
+pub fn sweep_json(
+    outcomes: &[ScenarioOutcome],
+    engine: &EngineConfig,
+    deterministic: bool,
+) -> Json {
     // JSON has no NaN literal; degenerate values (empty frontier) become null.
     let fin = |v: Option<f64>| v.filter(|x| x.is_finite()).map(num).unwrap_or(Json::Null);
+    let timing = |v: f64| if deterministic { Json::Null } else { num(v) };
     let scenarios: Vec<Json> = outcomes
         .iter()
         .map(|o| {
@@ -274,21 +328,24 @@ pub fn sweep_json(outcomes: &[ScenarioOutcome], engine: &EngineConfig) -> Json {
                 ("min_iter_energy_j", fin(o.result.frontier.min_energy().map(|p| p.energy))),
                 ("tflops_per_gpu", fin(Some(o.result.tflops_per_gpu))),
                 ("mbo_profiling_s", num(o.result.mbo_profiling_s)),
-                ("wall_s", num(o.wall_s)),
+                ("wall_s", timing(o.wall_s)),
             ])
         })
         .collect();
     obj(vec![
         ("bench", s("kareus_sweep")),
         ("version", num(1.0)),
+        ("backend", s(engine.backend.name())),
         ("threads", num(engine.worker_threads() as f64)),
         ("scenarios", arr(scenarios)),
         (
             "cache",
             obj(vec![
-                ("exec_entries", num(engine.measure_cache.len() as f64)),
-                ("exec_hits", num(engine.measure_cache.hits() as f64)),
-                ("exec_misses", num(engine.measure_cache.misses() as f64)),
+                // Entry count is also scheduling-dependent once the cache
+                // bound evicts, so deterministic mode nulls it too.
+                ("exec_entries", timing(engine.measure_cache.len() as f64)),
+                ("exec_hits", timing(engine.measure_cache.hits() as f64)),
+                ("exec_misses", timing(engine.measure_cache.misses() as f64)),
                 ("mbo_entries", num(engine.mbo_cache.len() as f64)),
             ]),
         ),
@@ -380,5 +437,9 @@ mod tests {
         assert_eq!(EngineConfig::sequential().worker_threads(), 1);
         assert_eq!(EngineConfig::new().with_threads(3).worker_threads(), 3);
         assert!(e.mbo_cache.is_empty() && e.measure_cache.is_empty());
+        // The default measurement source is the live simulator.
+        assert_eq!(e.backend.name(), "sim");
+        assert!(e.backend.caps().live);
+        assert!(e.measurer().cache.is_some());
     }
 }

@@ -1,8 +1,10 @@
 //! Kareus reproduction library.
+pub mod backend;
 pub mod baselines;
 pub mod cli;
 pub mod coordinator;
 pub mod engine;
+pub mod plan;
 pub mod runtime;
 pub mod trainer;
 pub mod paper;

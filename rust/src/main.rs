@@ -4,10 +4,15 @@
 //!   paper     --exp <id> | --all          regenerate paper tables/figures
 //!   optimize  --model <m> --tp --cp --pp --microbatch --seq [--system <s>]
 //!   sweep     --gpus a100,h100 --models qwen1.7b,llama3b --pars tp8pp2 …
+//!             [--backend sim|trace:<path>]
 //!   train     --config tiny|e2e --steps N [--artifacts DIR] [--baseline]
+//!             [--backend sim|trace:<path>]
 //!   census                                 Appendix B space census
 //!   list                                   list experiments
 
+use std::sync::Arc;
+
+use kareus::backend::{parse_backend_spec, BackendSpec, TraceBackend};
 use kareus::baselines::System;
 use kareus::cli::Args;
 use kareus::coordinator::{Coordinator, Target};
@@ -18,7 +23,13 @@ use kareus::sim::gpu::GpuSpec;
 use kareus::workload::{ModelSpec, Parallelism, TrainConfig};
 
 fn main() {
-    let args = Args::parse(std::env::args().skip(1));
+    let args = match Args::parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("kareus: {e}");
+            std::process::exit(2);
+        }
+    };
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     let code = match cmd {
         "paper" => cmd_paper(&args),
@@ -40,9 +51,13 @@ fn main() {
                  [--tp 8 --cp 1 --pp 2 --microbatch 8 --seq 4096 --nmb 8] [--system kareus] \
                  [--deadline S|--budget J]\n  kareus sweep [--gpus a100,h100,v100] [--models qwen1.7b,llama3b] \
                  [--pars tp8pp2,cp2tp4pp2] [--systems kareus,n+p] [--microbatch 8 --seq 4096 --nmb 8] \
-                 [--seed N] [--threads N] [--out FILE.json]\n  \
-                 kareus train --config tiny|e2e --steps 100 [--artifacts artifacts] [--baseline]\n  \
-                 kareus census | kareus list"
+                 [--seed N] [--threads N] [--backend sim|trace:FILE] [--out FILE.json]\n  \
+                 kareus train --config tiny|e2e --steps 100 [--artifacts artifacts] [--baseline] \
+                 [--backend sim|trace:FILE]\n  \
+                 kareus census | kareus list\n\
+                 \n\
+                 --backend trace:FILE records measurements on the first run (FILE absent) and\n\
+                 replays them byte-identically, simulator disabled, on later runs (FILE present)."
             );
             if cmd == "help" {
                 0
@@ -99,6 +114,45 @@ fn parse_system(name: &str) -> Option<System> {
         "kareus" => Some(System::Kareus),
         _ => None,
     }
+}
+
+/// Resolve `--backend` + `--threads` into an engine, plus the trace handle
+/// when a trace backend is active (record mode must be saved afterwards).
+fn build_engine(args: &Args) -> Result<(EngineConfig, Option<Arc<TraceBackend>>), String> {
+    // A bare `--backend` followed by another option parses as a flag;
+    // don't silently fall back to the simulator.
+    if args.has_flag("backend") {
+        return Err("--backend requires a value (sim | trace:<path>)".to_string());
+    }
+    let engine = EngineConfig::new().with_threads(args.get_u32("threads", 0) as usize);
+    match parse_backend_spec(args.get("backend").unwrap_or("sim"))? {
+        BackendSpec::Sim => Ok((engine, None)),
+        BackendSpec::Trace(path) => {
+            let trace = Arc::new(
+                TraceBackend::open(&path)
+                    .map_err(|e| format!("backend trace:{}: {e}", path.display()))?,
+            );
+            eprintln!(
+                "backend: trace:{} ({})",
+                path.display(),
+                if trace.is_replay() { "replay, simulator disabled" } else { "recording" }
+            );
+            Ok((engine.with_backend(trace.clone()), Some(trace)))
+        }
+    }
+}
+
+/// Persist a recording trace; replay traces need no save.
+fn finish_trace(trace: &Option<Arc<TraceBackend>>) -> Result<(), String> {
+    if let Some(t) = trace {
+        if t.is_replay() {
+            eprintln!("replayed {} measurements from {}", t.replayed(), t.path().display());
+        } else {
+            t.save().map_err(|e| format!("saving trace {}: {e}", t.path().display()))?;
+            eprintln!("recorded {} measurements to {}", t.len(), t.path().display());
+        }
+    }
+    Ok(())
 }
 
 fn cmd_optimize(args: &Args) -> i32 {
@@ -165,9 +219,10 @@ fn cmd_sweep(args: &Args) -> i32 {
     }
     // A list option followed by another option ("--gpus --models …")
     // parses as a bare flag; don't silently run the default matrix.
+    // (`--backend` gets the same guard inside build_engine.)
     for key in ["gpus", "models", "pars", "systems"] {
         if args.has_flag(key) {
-            eprintln!("--{key} requires a comma-separated value");
+            eprintln!("--{key} requires a value");
             return 2;
         }
     }
@@ -226,9 +281,16 @@ fn cmd_sweep(args: &Args) -> i32 {
         eprintln!("empty scenario matrix");
         return 2;
     }
-    let engine = EngineConfig::new().with_threads(args.get_u32("threads", 0) as usize);
+    let (engine, trace) = match build_engine(args) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
     eprintln!(
-        "sweeping {} scenarios ({} gpus × {} models × {} parallelisms × {} systems) on {} workers",
+        "sweeping {} scenarios ({} gpus × {} models × {} parallelisms × {} systems) \
+         on {} workers",
         scenarios.len(),
         gpus.len(),
         models.len(),
@@ -237,7 +299,13 @@ fn cmd_sweep(args: &Args) -> i32 {
         engine.worker_threads()
     );
     let outcomes = run_sweep(scenarios, &engine, |line| eprintln!("{line}"));
-    let json = sweep_json(&outcomes, &engine).dump();
+    // Trace runs null the timing-dependent fields so a record run and its
+    // replay dump byte-identical JSON.
+    let json = sweep_json(&outcomes, &engine, trace.is_some()).dump();
+    if let Err(e) = finish_trace(&trace) {
+        eprintln!("{e}");
+        return 1;
+    }
     match args.get("out") {
         Some(path) => {
             if let Err(e) = std::fs::write(path, &json) {
@@ -268,17 +336,33 @@ fn cmd_train(args: &Args) -> i32 {
         n_microbatches: 8,
         dtype_bytes: 2,
     };
-    let coord = Coordinator::new(GpuSpec::a100(), wl);
+    let (engine, trace) = match build_engine(args) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let coord = Coordinator::new(GpuSpec::a100(), wl).with_engine(engine);
     let system = if args.has_flag("baseline") { System::Megatron } else { System::Kareus };
     eprintln!("selecting execution schedule ({}) ...", system.name());
     let result = coord.optimize(system, 2026);
-    let dep = coord.select(&result, Target::MaxThroughput).expect("frontier nonempty");
+    // All measurements happen inside optimize(); persist a recording trace
+    // now so even a failed selection doesn't discard it.
+    if let Err(e) = finish_trace(&trace) {
+        eprintln!("{e}");
+        return 1;
+    }
+    let Some(dep) = coord.select(&result, Target::MaxThroughput) else {
+        eprintln!("optimization produced an empty frontier; nothing to deploy");
+        return 1;
+    };
     eprintln!(
         "deployed: {} iter {:.3}s {:.0}J ({})",
         dep.system.name(),
         dep.iter_time_s,
         dep.iter_energy_j,
-        dep.freq_summary
+        dep.freq_summary()
     );
 
     // Phase ⑤: real training through PJRT.

@@ -6,6 +6,13 @@
 //! bootstrap-ensemble uncertainty exploration pass. Hyperparameters follow
 //! Appendix C (sample sizes by partition size class, pass proportions
 //! 0.4/0.2/0.2/0.2, stopping on relative HV improvement).
+//!
+//! The optimizer is measurement-source agnostic: every candidate is
+//! profiled through the [`Profiler`], whose canonical executions flow
+//! through its configured
+//! [`ExecutionBackend`](crate::backend::ExecutionBackend) — simulator by
+//! default, trace record/replay (or a future hardware backend) without
+//! any change here.
 
 pub mod exhaustive;
 pub mod space;
@@ -211,7 +218,11 @@ pub fn optimize_partition(
             let ens_p = EnsembleParams {
                 size: params.ensemble_size,
                 bootstrap_fraction: params.bootstrap_fraction,
-                gbdt: GbdtParams { seed: params.seed ^ 0xE45, subsample: 0.8, ..Default::default() },
+                gbdt: GbdtParams {
+                    seed: params.seed ^ 0xE45,
+                    subsample: 0.8,
+                    ..Default::default()
+                },
             };
             let t_ens = Ensemble::fit(&x, &y_t, &ens_p);
             let e_ens = Ensemble::fit(&x, &y_e, &ens_p);
@@ -223,7 +234,8 @@ pub fn optimize_partition(
             let (r_tot, r_dyn, r_stat) = planes.references();
 
             // ---- Score all unevaluated candidates ----------------------
-            let mut cand: Vec<(usize, f64, f64, f64, f64)> = Vec::new(); // idx, hvi_tot, hvi_dyn, hvi_stat, unc
+            // (idx, hvi_tot, hvi_dyn, hvi_stat, unc) per candidate.
+            let mut cand: Vec<(usize, f64, f64, f64, f64)> = Vec::new();
             for (idx, s) in space.iter().enumerate() {
                 if chosen[idx] {
                     continue;
@@ -253,8 +265,13 @@ pub fn optimize_partition(
             let k3 = ((k as f64 * params.pass_fracs[2]).round() as usize).max(1);
             let mut picked: Vec<(usize, Pass)> = Vec::new();
             let mut taken = vec![false; n];
-            let top_by = |key: usize, count: usize, pass: Pass, picked: &mut Vec<(usize, Pass)>, taken: &mut Vec<bool>| {
-                let mut order: Vec<&(usize, f64, f64, f64, f64)> = cand.iter().filter(|c| !taken[c.0]).collect();
+            let top_by = |key: usize,
+                          count: usize,
+                          pass: Pass,
+                          picked: &mut Vec<(usize, Pass)>,
+                          taken: &mut Vec<bool>| {
+                let mut order: Vec<&(usize, f64, f64, f64, f64)> =
+                    cand.iter().filter(|c| !taken[c.0]).collect();
                 order.sort_by(|a, b| {
                     let va = [a.1, a.2, a.3, a.4][key];
                     let vb = [b.1, b.2, b.3, b.4][key];
@@ -413,7 +430,11 @@ mod tests {
         let a = run_mbo(8);
         let b = run_mbo(8);
         let key = |r: &MboResult| -> Vec<(u64, u64, usize)> {
-            r.frontier.points().iter().map(|p| (p.time.to_bits(), p.energy.to_bits(), p.tag)).collect()
+            r.frontier
+                .points()
+                .iter()
+                .map(|p| (p.time.to_bits(), p.energy.to_bits(), p.tag))
+                .collect()
         };
         assert_eq!(key(&a), key(&b));
         let hv = |r: &MboResult| -> Vec<u64> { r.hv_history.iter().map(|h| h.to_bits()).collect() };

@@ -29,7 +29,7 @@ pub fn table1() -> String {
     let mut t = Table::new(&["System", "Iter time (s)", "Static (J)", "Dynamic (J)", "Total (J)"]);
     let mut add = |name: &str, sys: System| {
         let r = run_system(&gpu, &cfg, sys, SEED);
-        let p = r.min_time_plan();
+        let p = r.min_time_plan().expect("nonempty frontier").clone();
         t.row(vec![
             name.into(),
             format!("{:.2}", p.time_s),

@@ -10,7 +10,7 @@
 //! representation. Iteration energy adds the static power of idle bubble
 //! time (§4.4).
 
-use crate::compose::MbFrontier;
+use crate::compose::{MbFrontier, MicrobatchPlan};
 use crate::frontier::{Frontier, Point};
 
 /// One task in the pipeline: (stage, microbatch, direction).
@@ -58,11 +58,18 @@ pub struct IterationPlan {
     pub bubble_s: f64,
 }
 
-/// Per-(stage, dir) Pareto choices: (time, total, dyn) ascending in time.
+/// Per-(stage, dir) Pareto choices: (time, total, dyn) ascending in time,
+/// plus the deployed [`MicrobatchPlan`] behind every choice (same order),
+/// so a selected operating point can be materialized into a typed
+/// [`FrequencyPlan`](crate::plan::FrequencyPlan) instead of a summary
+/// string.
 #[derive(Clone, Debug)]
 pub struct StageMenu {
     pub fwd: Vec<(f64, f64, f64)>,
     pub bwd: Vec<(f64, f64, f64)>,
+    /// Plans parallel to `fwd` / `bwd`.
+    pub fwd_plans: Vec<MicrobatchPlan>,
+    pub bwd_plans: Vec<MicrobatchPlan>,
 }
 
 impl StageMenu {
@@ -70,7 +77,10 @@ impl StageMenu {
         let take = |f: &MbFrontier| {
             f.pareto().iter().map(|p| (p.time_s, p.total_j, p.dyn_j)).collect::<Vec<_>>()
         };
-        StageMenu { fwd: take(fwd), bwd: take(bwd) }
+        let plans = |f: &MbFrontier| {
+            f.pareto().iter().map(|p| p.plan.clone()).collect::<Vec<_>>()
+        };
+        StageMenu { fwd: take(fwd), bwd: take(bwd), fwd_plans: plans(fwd), bwd_plans: plans(bwd) }
     }
 
     fn menu(&self, is_bwd: bool) -> &[(f64, f64, f64)] {
@@ -79,6 +89,13 @@ impl StageMenu {
         } else {
             &self.fwd
         }
+    }
+
+    /// The deployed microbatch plan behind menu entry `idx` (clamped like
+    /// the scheduler's duration lookup).
+    pub fn plan(&self, is_bwd: bool, idx: usize) -> &MicrobatchPlan {
+        let plans = if is_bwd { &self.bwd_plans } else { &self.fwd_plans };
+        &plans[idx.min(plans.len() - 1)]
     }
 }
 
@@ -214,7 +231,8 @@ pub fn iteration_frontier(
     let mut plans = Vec::new();
     let mut pts = Vec::new();
     for k in 0..n_deadlines.max(2) {
-        let deadline = t_min + (t_max - t_min).max(0.0) * k as f64 / (n_deadlines - 1).max(1) as f64;
+        let deadline =
+            t_min + (t_max - t_min).max(0.0) * k as f64 / (n_deadlines - 1).max(1) as f64;
         let plan = greedy_fill(menus, n_microbatches, p_static, deadline);
         pts.push(Point::new(plan.time_s, plan.total_j, plans.len()));
         plans.push(plan);
@@ -397,7 +415,11 @@ mod tests {
                     time_s: t,
                     total_j: e,
                     dyn_j: d,
-                    plan: MicrobatchPlan { freq_mhz: 1410, configs: BTreeMap::new(), sequential: true },
+                    plan: MicrobatchPlan {
+                        freq_mhz: 1410,
+                        configs: BTreeMap::new(),
+                        sequential: true,
+                    },
                 })
                 .collect(),
         )

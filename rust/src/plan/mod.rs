@@ -1,0 +1,309 @@
+//! Typed deployment plans (phase ⑥ of the coordinator, §5.1).
+//!
+//! A [`FrequencyPlan`] is the machine-readable form of "what to deploy":
+//! for every (stage, microbatch, direction) slot of the 1F1B iteration it
+//! carries the chosen [`MicrobatchPlan`] — uniform GPU frequency,
+//! per-partition-type [`Schedule`] entries (SM allocation + launch
+//! timing), and the §4.5 sequential-execution flag. The legacy
+//! `freq_summary` string is *derived* from this plan for display only;
+//! the typed plan is what `deploy_and_train`/`ScheduleAccounting` and the
+//! schedule-plan files consume.
+//!
+//! Serialization is serde-free JSON via [`util::json`](crate::util::json)
+//! (floats use shortest round-trip formatting, so `to_json → from_json`
+//! restores bit-identical values).
+
+use std::collections::BTreeMap;
+
+use crate::compose::MicrobatchPlan;
+use crate::pipeline::{IterationPlan, StageMenu};
+use crate::sim::exec::{LaunchAt, Schedule};
+use crate::util::json::{arr, num, obj, s, Json};
+
+/// One deployed slot: the microbatch plan chosen for (stage, mb, dir).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SlotPlan {
+    pub stage: u32,
+    pub mb: u32,
+    pub bwd: bool,
+    pub plan: MicrobatchPlan,
+}
+
+/// The full per-slot deployment plan of one iteration operating point.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FrequencyPlan {
+    pub n_stages: u32,
+    pub n_microbatches: u32,
+    /// Idle (bubble) time summed over stages at this operating point (s).
+    pub bubble_s: f64,
+    /// One entry per (stage, microbatch, direction), stage-major then
+    /// microbatch then fwd-before-bwd — the same slot order as
+    /// `IterationPlan::choice`.
+    pub slots: Vec<SlotPlan>,
+}
+
+impl FrequencyPlan {
+    /// Resolve an [`IterationPlan`]'s frontier-index choices against the
+    /// stage menus that produced it, materializing the actual
+    /// [`MicrobatchPlan`] deployed in every slot.
+    pub fn from_iteration(menus: &[StageMenu], it: &IterationPlan) -> Self {
+        let n_microbatches = it.choice.first().map_or(0, |c| c.len() / 2);
+        let mut slots = Vec::with_capacity(menus.len() * 2 * n_microbatches);
+        for (stage, menu) in menus.iter().enumerate() {
+            for mb in 0..n_microbatches {
+                for d in 0..2 {
+                    let bwd = d == 1;
+                    let idx = it.choice[stage][2 * mb + d];
+                    slots.push(SlotPlan {
+                        stage: stage as u32,
+                        mb: mb as u32,
+                        bwd,
+                        plan: menu.plan(bwd, idx).clone(),
+                    });
+                }
+            }
+        }
+        FrequencyPlan {
+            n_stages: menus.len() as u32,
+            n_microbatches: n_microbatches as u32,
+            bubble_s: it.bubble_s,
+            slots,
+        }
+    }
+
+    pub fn n_slots(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// (min, max) deployed core frequency across all slots.
+    pub fn freq_span_mhz(&self) -> Option<(u32, u32)> {
+        let mut span: Option<(u32, u32)> = None;
+        for sl in &self.slots {
+            let f = sl.plan.freq_mhz;
+            span = Some(match span {
+                None => (f, f),
+                Some((lo, hi)) => (lo.min(f), hi.max(f)),
+            });
+        }
+        span
+    }
+
+    /// Human-readable digest (display only — the typed plan is the source
+    /// of truth).
+    pub fn summary(&self) -> String {
+        match self.freq_span_mhz() {
+            Some((lo, hi)) => format!(
+                "{} stages, {} task slots, {lo}-{hi} MHz, bubble {:.3}s",
+                self.n_stages,
+                self.n_slots(),
+                self.bubble_s
+            ),
+            None => "empty plan".to_string(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("n_stages", num(self.n_stages as f64)),
+            ("n_microbatches", num(self.n_microbatches as f64)),
+            ("bubble_s", num(self.bubble_s)),
+            ("slots", arr(self.slots.iter().map(slot_to_json).collect())),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<FrequencyPlan, String> {
+        let get_u32 = |k: &str| {
+            j.get(k)
+                .and_then(|v| v.as_f64())
+                .map(|n| n as u32)
+                .ok_or_else(|| format!("plan missing '{k}'"))
+        };
+        let slots = j
+            .get("slots")
+            .and_then(|v| v.as_arr())
+            .ok_or("plan missing 'slots'")?
+            .iter()
+            .map(slot_from_json)
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(FrequencyPlan {
+            n_stages: get_u32("n_stages")?,
+            n_microbatches: get_u32("n_microbatches")?,
+            bubble_s: j.get("bubble_s").and_then(|v| v.as_f64()).ok_or("plan missing 'bubble_s'")?,
+            slots,
+        })
+    }
+}
+
+fn slot_to_json(sl: &SlotPlan) -> Json {
+    obj(vec![
+        ("stage", num(sl.stage as f64)),
+        ("mb", num(sl.mb as f64)),
+        ("dir", s(if sl.bwd { "bwd" } else { "fwd" })),
+        ("plan", microbatch_plan_to_json(&sl.plan)),
+    ])
+}
+
+fn slot_from_json(j: &Json) -> Result<SlotPlan, String> {
+    let get_u32 = |k: &str| {
+        j.get(k)
+            .and_then(|v| v.as_f64())
+            .map(|n| n as u32)
+            .ok_or_else(|| format!("slot missing '{k}'"))
+    };
+    let bwd = match j.get("dir").and_then(|v| v.as_str()) {
+        Some("fwd") => false,
+        Some("bwd") => true,
+        _ => return Err("slot 'dir' must be \"fwd\" or \"bwd\"".to_string()),
+    };
+    Ok(SlotPlan {
+        stage: get_u32("stage")?,
+        mb: get_u32("mb")?,
+        bwd,
+        plan: microbatch_plan_from_json(
+            j.get("plan").ok_or("slot missing 'plan'")?,
+        )?,
+    })
+}
+
+/// Serialize one per-microbatch plan.
+pub fn microbatch_plan_to_json(p: &MicrobatchPlan) -> Json {
+    let configs: BTreeMap<String, Json> =
+        p.configs.iter().map(|(k, v)| (k.clone(), schedule_to_json(v))).collect();
+    obj(vec![
+        ("freq_mhz", num(p.freq_mhz as f64)),
+        ("sequential", Json::Bool(p.sequential)),
+        ("configs", Json::Obj(configs)),
+    ])
+}
+
+pub fn microbatch_plan_from_json(j: &Json) -> Result<MicrobatchPlan, String> {
+    let freq_mhz = j
+        .get("freq_mhz")
+        .and_then(|v| v.as_f64())
+        .map(|n| n as u32)
+        .ok_or("microbatch plan missing 'freq_mhz'")?;
+    let sequential = j
+        .get("sequential")
+        .and_then(|v| v.as_bool())
+        .ok_or("microbatch plan missing 'sequential'")?;
+    let mut configs = BTreeMap::new();
+    let cfgs =
+        j.get("configs").and_then(|v| v.as_obj()).ok_or("microbatch plan missing 'configs'")?;
+    for (ptype, sj) in cfgs {
+        configs.insert(ptype.clone(), schedule_from_json(sj)?);
+    }
+    Ok(MicrobatchPlan { freq_mhz, configs, sequential })
+}
+
+/// Serialize one partition schedule. `launch` is the string `"seq"` for
+/// the sequential execution model or the index of the computation kernel
+/// the comm launches with.
+pub fn schedule_to_json(sc: &Schedule) -> Json {
+    let launch = match sc.launch {
+        LaunchAt::Sequential => s("seq"),
+        LaunchAt::WithComp(i) => num(i as f64),
+    };
+    obj(vec![
+        ("sms", num(sc.comm_sms as f64)),
+        ("launch", launch),
+        ("freq_mhz", num(sc.freq_mhz as f64)),
+    ])
+}
+
+pub fn schedule_from_json(j: &Json) -> Result<Schedule, String> {
+    let get_u32 = |k: &str| {
+        j.get(k)
+            .and_then(|v| v.as_f64())
+            .map(|n| n as u32)
+            .ok_or_else(|| format!("schedule missing '{k}'"))
+    };
+    let launch = match j.get("launch") {
+        Some(Json::Str(t)) if t.as_str() == "seq" => LaunchAt::Sequential,
+        Some(Json::Num(n)) => LaunchAt::WithComp(*n as usize),
+        _ => return Err("schedule 'launch' must be \"seq\" or a kernel index".to_string()),
+    };
+    Ok(Schedule { comm_sms: get_u32("sms")?, launch, freq_mhz: get_u32("freq_mhz")? })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compose::{MbFrontier, MbPoint};
+    use crate::pipeline::{greedy_fill, StageMenu};
+
+    fn mb_point(t: f64, e: f64, freq: u32, seq: bool) -> MbPoint {
+        let mut configs = BTreeMap::new();
+        if !seq {
+            configs.insert(
+                "fwd/attn".to_string(),
+                Schedule { comm_sms: 12, launch: LaunchAt::WithComp(1), freq_mhz: freq },
+            );
+        }
+        MbPoint {
+            time_s: t,
+            total_j: e,
+            dyn_j: e * 0.7,
+            plan: MicrobatchPlan { freq_mhz: freq, configs, sequential: seq },
+        }
+    }
+
+    fn menus(n_stages: usize) -> Vec<StageMenu> {
+        let f = MbFrontier::from_points(vec![
+            mb_point(1.0, 300.0, 1410, false),
+            mb_point(1.2, 240.0, 1200, false),
+            mb_point(1.5, 200.0, 990, true),
+        ]);
+        let b = MbFrontier::from_points(vec![
+            mb_point(2.0, 600.0, 1410, false),
+            mb_point(3.0, 400.0, 990, false),
+        ]);
+        (0..n_stages).map(|_| StageMenu::from_frontiers(&f, &b)).collect()
+    }
+
+    #[test]
+    fn schedule_json_roundtrip() {
+        for sc in [
+            Schedule { comm_sms: 12, launch: LaunchAt::WithComp(2), freq_mhz: 1410 },
+            Schedule::sequential(990),
+        ] {
+            let j = schedule_to_json(&sc);
+            let back = schedule_from_json(&Json::parse(&j.dump()).unwrap()).unwrap();
+            assert_eq!(sc, back);
+        }
+        assert!(schedule_from_json(&Json::parse("{\"sms\":1}").unwrap()).is_err());
+    }
+
+    #[test]
+    fn frequency_plan_from_iteration_and_roundtrip() {
+        let m = menus(2);
+        let n_mb = 3;
+        let tight = greedy_fill(&m, n_mb, 90.0, 0.0);
+        let loose = greedy_fill(&m, n_mb, 90.0, tight.time_s * 1.4);
+        let plan = FrequencyPlan::from_iteration(&m, &loose);
+        assert_eq!(plan.n_stages, 2);
+        assert_eq!(plan.n_microbatches, n_mb as u32);
+        assert_eq!(plan.n_slots(), 2 * 2 * n_mb);
+        // Slot order matches IterationPlan::choice layout.
+        for (i, sl) in plan.slots.iter().enumerate() {
+            assert_eq!(sl.stage as usize, i / (2 * n_mb));
+            assert_eq!(sl.bwd, i % 2 == 1);
+        }
+        let (lo, hi) = plan.freq_span_mhz().unwrap();
+        assert!(lo <= hi && lo >= 990 && hi <= 1410);
+        assert!(plan.summary().contains("task slots"));
+
+        let dumped = plan.to_json().dump();
+        let back = FrequencyPlan::from_json(&Json::parse(&dumped).unwrap()).unwrap();
+        assert_eq!(plan, back, "typed plan JSON round-trip diverged");
+    }
+
+    #[test]
+    fn empty_plan_is_representable() {
+        let plan =
+            FrequencyPlan { n_stages: 0, n_microbatches: 0, bubble_s: 0.0, slots: Vec::new() };
+        assert_eq!(plan.freq_span_mhz(), None);
+        assert_eq!(plan.summary(), "empty plan");
+        let back = FrequencyPlan::from_json(&Json::parse(&plan.to_json().dump()).unwrap()).unwrap();
+        assert_eq!(plan, back);
+    }
+}

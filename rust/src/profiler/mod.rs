@@ -12,6 +12,7 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
+use crate::backend::{ExecutionBackend, SimBackend};
 use crate::partition::Partition;
 use crate::sim::exec::{execute_partition, ExecResult, Schedule};
 use crate::sim::gpu::GpuSpec;
@@ -30,11 +31,17 @@ pub fn combine_fp(gpu_fp: u64, part_fp: u64) -> u64 {
     h.finish()
 }
 
-/// Cache key for one canonical partition execution. `execute_partition`
-/// is a pure function of these inputs, so memoizing on them is exactly
-/// semantics-preserving: a hit returns bit-identical results to a recompute.
+/// Cache key for one canonical partition execution. Every backend is a
+/// pure function of these inputs for a fixed backend identity, so
+/// memoizing on them is exactly semantics-preserving: a hit returns
+/// bit-identical results to a recompute by the same backend.
 #[derive(Clone, Copy, PartialEq, Eq, Hash)]
 struct ExecKey {
+    /// The measurement source's [`ExecutionBackend::fingerprint`] — one
+    /// shared cache may serve engines with different backends (cloning an
+    /// `EngineConfig` shares the cache, `with_backend` swaps the source),
+    /// and results from different sources must never alias.
+    backend_fp: u64,
     /// Combined GPU + partition fingerprint (see [`combine_fp`]).
     fp: u64,
     sched: Schedule,
@@ -73,11 +80,13 @@ impl MeasureCache {
         Self::default()
     }
 
-    /// Cache-or-execute through an optional cache: the one shared branch
+    /// Cache-or-measure through an optional cache: the one shared branch
     /// for the profiler and microbatch-evaluation paths, so keying rules
-    /// and the executor call list can't drift apart between them.
+    /// and the backend call list can't drift apart between them. A cache
+    /// miss (or absent cache) consults `backend` exactly once.
     #[allow(clippy::too_many_arguments)]
     pub fn exec_opt(
+        backend: &dyn ExecutionBackend,
         cache: Option<&MeasureCache>,
         fp: u64,
         gpu: &GpuSpec,
@@ -88,17 +97,19 @@ impl MeasureCache {
         power_limit: Option<f64>,
     ) -> ExecResult {
         match cache {
-            Some(c) => c.exec(fp, gpu, comps, comm, sched, temp_c, power_limit),
-            None => execute_partition(gpu, comps, comm, sched, temp_c, power_limit),
+            Some(c) => c.exec(backend, fp, gpu, comps, comm, sched, temp_c, power_limit),
+            None => backend.measure_kernels(gpu, fp, comps, comm, sched, temp_c, power_limit),
         }
     }
 
-    /// Execute (or replay) one canonical partition execution. `fp` is the
-    /// combined GPU+partition fingerprint from [`combine_fp`] — computed
-    /// by the caller once per (GPU, partition), not per probe.
+    /// Measure (or replay) one canonical partition execution through
+    /// `backend`. `fp` is the combined GPU+partition fingerprint from
+    /// [`combine_fp`] — computed by the caller once per (GPU, partition),
+    /// not per probe.
     #[allow(clippy::too_many_arguments)]
     pub fn exec(
         &self,
+        backend: &dyn ExecutionBackend,
         fp: u64,
         gpu: &GpuSpec,
         comps: &[Kernel],
@@ -108,6 +119,7 @@ impl MeasureCache {
         power_limit: Option<f64>,
     ) -> ExecResult {
         let key = ExecKey {
+            backend_fp: backend.fingerprint(),
             fp,
             sched: *sched,
             temp_bits: temp_c.to_bits(),
@@ -117,7 +129,7 @@ impl MeasureCache {
             self.hits.fetch_add(1, Ordering::Relaxed);
             return *r;
         }
-        let r = execute_partition(gpu, comps, comm, sched, temp_c, power_limit);
+        let r = backend.measure_kernels(gpu, fp, comps, comm, sched, temp_c, power_limit);
         self.misses.fetch_add(1, Ordering::Relaxed);
         let mut map = self.inner.lock().unwrap();
         if map.len() < MAX_CACHE_ENTRIES {
@@ -199,6 +211,11 @@ pub struct Profiler {
     /// hits are bit-identical to recomputes, so attaching a cache never
     /// changes measurement values.
     cache: Option<MeasureCache>,
+    /// The measurement source behind every canonical execution (default:
+    /// the simulator). The thermal/meter substrates stay in the profiler —
+    /// a backend only answers "what does this schedule do", the profiler
+    /// models *measuring* it on a real, warming die.
+    backend: Arc<dyn ExecutionBackend>,
     /// `gpu.fingerprint()`, hoisted — `measure` probes the cache per
     /// candidate and must not rehash the spec every time.
     gpu_fp: u64,
@@ -213,12 +230,31 @@ impl Profiler {
         // Desynchronize the counter phase from the measurement windows.
         meter.advance(gpu.static_w, rng.f64() * 0.1);
         let gpu_fp = gpu.fingerprint();
-        Profiler { gpu, thermal, state, config, rng, meter, total_cost_s: 0.0, cache: None, gpu_fp }
+        Profiler {
+            gpu,
+            thermal,
+            state,
+            config,
+            rng,
+            meter,
+            total_cost_s: 0.0,
+            cache: None,
+            backend: Arc::new(SimBackend),
+            gpu_fp,
+        }
     }
 
     /// Attach a shared measurement cache (builder style).
     pub fn with_cache(mut self, cache: MeasureCache) -> Self {
         self.cache = Some(cache);
+        self
+    }
+
+    /// Swap the measurement source (builder style). All canonical
+    /// executions — and nothing else — go through the backend, so a
+    /// trace/hardware backend transparently drives the whole MBO stack.
+    pub fn with_backend(mut self, backend: Arc<dyn ExecutionBackend>) -> Self {
+        self.backend = backend;
         self
     }
 
@@ -247,6 +283,7 @@ impl Profiler {
         // One canonical execution: time and dynamic energy do not depend
         // on die temperature (only static power does).
         let r = MeasureCache::exec_opt(
+            self.backend.as_ref(),
             self.cache.as_ref(),
             combine_fp(self.gpu_fp, part_fp),
             &self.gpu,
@@ -290,11 +327,20 @@ impl Profiler {
 
         let cost = cfg.setup_s + cfg.cooldown_s + cfg.warmup_s + cfg.window_s;
         self.total_cost_s += cost;
-        Measurement { time_s, energy_j, dyn_j, profiling_cost_s: cost, temp_at_start_c: temp_at_start }
+        Measurement {
+            time_s,
+            energy_j,
+            dyn_j,
+            profiling_cost_s: cost,
+            temp_at_start_c: temp_at_start,
+        }
     }
 
     /// Noise-free, reference-temperature evaluation — the ground truth the
     /// profiler tries to estimate. Used by tests and the exhaustive oracle.
+    /// Deliberately backend-free: ground truth is defined by the simulator
+    /// physics, not by whichever measurement source a run is configured
+    /// with.
     pub fn true_eval(gpu: &GpuSpec, part: &Partition, sched: &Schedule) -> Measurement {
         let r = execute_partition(
             gpu,

@@ -38,13 +38,17 @@ pub struct StepLog {
     pub sim_energy_j: f64,
 }
 
-/// Simulated accounting plugged in by the coordinator: iteration
-/// (time, energy) of the schedule the run deploys.
+/// Simulated accounting plugged in by the coordinator, derived from the
+/// typed deployment plan: iteration (time, energy) plus the deployed
+/// frequency span of the schedule the run executes under.
 #[derive(Clone, Copy, Debug)]
 pub struct ScheduleAccounting {
     pub label: &'static str,
     pub iter_time_s: f64,
     pub iter_energy_j: f64,
+    /// (min, max) deployed core frequency across the plan's slots
+    /// (`(0, 0)` when no slot information is available).
+    pub freq_span_mhz: (u32, u32),
 }
 
 pub struct Trainer {
@@ -152,8 +156,15 @@ impl Trainer {
                     sim_energy_j: accounting.iter_energy_j,
                 };
                 println!(
-                    "step {:4}  loss {:.4}  wall {:.2}s  | sched[{}] iter {:.3}s {:.0}J",
-                    s, loss, wall, accounting.label, accounting.iter_time_s, accounting.iter_energy_j
+                    "step {:4}  loss {:.4}  wall {:.2}s  | sched[{}] iter {:.3}s {:.0}J {}-{} MHz",
+                    s,
+                    loss,
+                    wall,
+                    accounting.label,
+                    accounting.iter_time_s,
+                    accounting.iter_energy_j,
+                    accounting.freq_span_mhz.0,
+                    accounting.freq_span_mhz.1
                 );
                 logs.push(log);
             }
@@ -191,7 +202,12 @@ mod tests {
         }
         let rt = Runtime::new(&dir).unwrap();
         let mut tr = Trainer::new(rt, "tiny", 0).unwrap();
-        let acct = ScheduleAccounting { label: "test", iter_time_s: 0.0, iter_energy_j: 0.0 };
+        let acct = ScheduleAccounting {
+            label: "test",
+            iter_time_s: 0.0,
+            iter_energy_j: 0.0,
+            freq_span_mhz: (1410, 1410),
+        };
         let logs = tr.train(30, &acct, 100).unwrap();
         let first = logs.first().unwrap().loss;
         let last = logs.last().unwrap().loss;

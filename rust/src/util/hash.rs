@@ -59,6 +59,22 @@ pub fn fnv1a_str(s: &str) -> u64 {
     h.finish()
 }
 
+/// Compile-time [`fnv1a_str`] for `const` fingerprints (e.g. the sim
+/// backend identity probed on every measurement-cache key). Must stay
+/// bit-compatible with the runtime path — enforced by a unit test here
+/// and by `backend::tests::backend_fingerprints_never_alias`.
+pub const fn fnv1a_const(s: &str) -> u64 {
+    let bytes = s.as_bytes();
+    let mut h = FNV_OFFSET;
+    let mut i = 0;
+    while i < bytes.len() {
+        h ^= bytes[i] as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+        i += 1;
+    }
+    h
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -94,5 +110,12 @@ mod tests {
     fn one_shot_matches_known_vector() {
         // FNV-1a("a") = 0xaf63dc4c8601ec8c.
         assert_eq!(fnv1a_str("a"), 0xaf63dc4c8601ec8c);
+    }
+
+    #[test]
+    fn const_fnv1a_matches_runtime() {
+        const H: u64 = fnv1a_const("kareus_backend:sim:v1");
+        assert_eq!(H, fnv1a_str("kareus_backend:sim:v1"));
+        assert_eq!(fnv1a_const("a"), 0xaf63dc4c8601ec8c);
     }
 }

@@ -1,0 +1,104 @@
+//! Backend acceptance tests: a sweep recorded through `TraceBackend`
+//! replays to byte-identical BENCH JSON with the simulator disabled, the
+//! shared `MeasureCache` sees the identical probe sequence in both runs,
+//! and an explicit `SimBackend` engine is bit-identical to the default
+//! path.
+
+use std::sync::Arc;
+
+use kareus::backend::{ExecutionBackend, SimBackend, TraceBackend};
+use kareus::baselines::System;
+use kareus::engine::{run_sweep, scenario_matrix, sweep_json, EngineConfig, Scenario};
+use kareus::sim::gpu::GpuSpec;
+use kareus::workload::{ModelSpec, Parallelism};
+
+/// A small but multi-system scenario matrix: sequential-model and
+/// overlapped-model paths both exercise the backend seam, without the
+/// cost of a full Kareus MBO run (covered by `tests/engine.rs`).
+fn scenarios() -> Vec<Scenario> {
+    scenario_matrix(
+        &[GpuSpec::a100()],
+        &[ModelSpec::qwen3_1_7b()],
+        &[Parallelism::new(8, 1, 2)],
+        &[System::MegatronPerseus, System::Nanobatching],
+        8,
+        4096,
+        8,
+        11,
+    )
+}
+
+fn frontier_bits(outcomes: &[kareus::engine::ScenarioOutcome]) -> Vec<Vec<(u64, u64)>> {
+    outcomes
+        .iter()
+        .map(|o| {
+            o.result
+                .frontier
+                .points()
+                .iter()
+                .map(|p| (p.time.to_bits(), p.energy.to_bits()))
+                .collect()
+        })
+        .collect()
+}
+
+#[test]
+fn trace_record_then_replay_reproduces_sweep_bytes() {
+    let path = std::env::temp_dir()
+        .join(format!("kareus_sweep_trace_{}.json", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+
+    // Reference: the plain simulator engine.
+    let engine_sim = EngineConfig::new().with_threads(1).with_backend(Arc::new(SimBackend));
+    let out_sim = run_sweep(scenarios(), &engine_sim, |_| {});
+
+    // Record: trace wraps the simulator and must not perturb results.
+    let rec = Arc::new(TraceBackend::open(&path).unwrap());
+    assert!(!rec.is_replay() && rec.caps().live);
+    let engine_rec = EngineConfig::new().with_threads(1).with_backend(rec.clone());
+    let out_rec = run_sweep(scenarios(), &engine_rec, |_| {});
+    assert_eq!(
+        frontier_bits(&out_sim),
+        frontier_bits(&out_rec),
+        "recording through the trace backend changed results"
+    );
+    let json_rec = sweep_json(&out_rec, &engine_rec, true).dump();
+    rec.save().unwrap();
+    assert!(!rec.is_empty(), "record run captured no measurements");
+    let hits_rec = engine_rec.measure_cache.hits();
+    let misses_rec = engine_rec.measure_cache.misses();
+    assert!(misses_rec > 0, "record run never reached the backend");
+    assert!(hits_rec > 0, "shared cache never hit during the record run");
+
+    // Replay: answered exclusively from the trace (no live measurement
+    // path exists in replay mode — a miss would panic, not simulate).
+    let rep = Arc::new(TraceBackend::open(&path).unwrap());
+    assert!(rep.is_replay());
+    assert!(!rep.caps().live, "replay backend must not claim live measurement");
+    let engine_rep = EngineConfig::new().with_threads(1).with_backend(rep.clone());
+    let out_rep = run_sweep(scenarios(), &engine_rep, |_| {});
+    let json_rep = sweep_json(&out_rep, &engine_rep, true).dump();
+    assert_eq!(json_rec, json_rep, "trace replay diverged from the recorded sweep JSON");
+    assert!(rep.replayed() > 0);
+
+    // The memo cache sits above the backend: both runs issue the identical
+    // probe sequence, so the hit/miss counters replay exactly, and every
+    // replay-run miss was served from the trace.
+    assert_eq!(hits_rec, engine_rep.measure_cache.hits(), "cache hit pattern diverged");
+    assert_eq!(misses_rec, engine_rep.measure_cache.misses(), "cache miss pattern diverged");
+    assert_eq!(rep.replayed(), misses_rec, "replay served probes outside the cache-miss path");
+
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn explicit_sim_backend_matches_default_engine() {
+    // The default engine and an explicitly-constructed SimBackend engine
+    // are the same measurement source.
+    let default_engine = EngineConfig::new().with_threads(1);
+    let explicit = EngineConfig::new().with_threads(1).with_backend(Arc::new(SimBackend));
+    assert_eq!(default_engine.backend.fingerprint(), explicit.backend.fingerprint());
+    let a = run_sweep(scenarios(), &default_engine, |_| {});
+    let b = run_sweep(scenarios(), &explicit, |_| {});
+    assert_eq!(frontier_bits(&a), frontier_bits(&b));
+}

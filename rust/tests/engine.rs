@@ -42,7 +42,8 @@ fn frontier_bits(f: &Frontier) -> Vec<(u64, u64, usize)> {
 }
 
 /// Exact bit-level signature of a full per-type MBO result set.
-fn mbo_bits(results: &BTreeMap<String, MboResult>) -> Vec<(String, Vec<(u64, u64, usize)>, Vec<u64>, usize)> {
+type MboBits = Vec<(String, Vec<(u64, u64, usize)>, Vec<u64>, usize)>;
+fn mbo_bits(results: &BTreeMap<String, MboResult>) -> MboBits {
     results
         .iter()
         .map(|(ptype, r)| {
@@ -64,8 +65,10 @@ fn parallel_engine_matches_sequential_bitwise() {
     assert!(parts.len() >= 3, "expected several partition types, got {}", parts.len());
     let comm_group = cfg.par.tp * cfg.par.cp;
 
-    let seq = optimize_all_partitions_with(17, &gpu, &parts, comm_group, &EngineConfig::sequential());
-    let par = optimize_all_partitions_with(17, &gpu, &parts, comm_group, &EngineConfig::new().with_threads(8));
+    let sequential = EngineConfig::sequential();
+    let threaded = EngineConfig::new().with_threads(8);
+    let seq = optimize_all_partitions_with(17, &gpu, &parts, comm_group, &sequential);
+    let par = optimize_all_partitions_with(17, &gpu, &parts, comm_group, &threaded);
     assert_eq!(mbo_bits(&seq), mbo_bits(&par), "thread count leaked into MBO results");
 }
 
@@ -153,7 +156,7 @@ fn sweep_covers_gpu_model_matrix_and_emits_json() {
     assert!(t_h100 < t_a100, "H100 ({t_h100}s) should beat A100 ({t_a100}s)");
 
     // The JSON dump round-trips and carries the full schema.
-    let dump = sweep_json(&outcomes, &engine).dump();
+    let dump = sweep_json(&outcomes, &engine, false).dump();
     let parsed = Json::parse(&dump).unwrap();
     assert_eq!(parsed.get("bench").unwrap().as_str(), Some("kareus_sweep"));
     let scen = parsed.get("scenarios").unwrap().as_arr().unwrap();
