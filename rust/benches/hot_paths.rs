@@ -162,7 +162,8 @@ fn main() {
     };
     let n = default_threads();
     println!("-- engine: {} partition types, {} workers available --", parts.len(), n);
-    let t_seq = time_once("engine::optimize_all_partitions (sequential)", &EngineConfig::sequential());
+    let t_seq =
+        time_once("engine::optimize_all_partitions (sequential)", &EngineConfig::sequential());
     let par_engine = EngineConfig::new();
     let t_par = time_once(
         &format!("engine::optimize_all_partitions (parallel ×{n})"),

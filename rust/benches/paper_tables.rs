@@ -12,11 +12,15 @@ fn main() {
     let ids: Vec<&str> = match sel.as_str() {
         "fast" => fast.to_vec(),
         "all" => all.to_vec(),
-        s => s.split(',').map(|x| x.trim()).filter(|x| !x.is_empty()).collect::<Vec<_>>()
-            .into_iter().map(|x| {
+        s => s
+            .split(',')
+            .map(|x| x.trim())
+            .filter(|x| !x.is_empty())
+            .map(|x| {
                 // leak to 'static lifetime for uniform handling
                 Box::leak(x.to_string().into_boxed_str()) as &str
-            }).collect(),
+            })
+            .collect(),
     };
     println!("== kareus paper-table benches (KAREUS_BENCH={sel}) ==");
     for id in ids {

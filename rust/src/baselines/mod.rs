@@ -237,6 +237,41 @@ pub fn run_system_with(
     SystemResult { system, frontier, plans, menus, mbo_profiling_s, tflops_per_gpu: tflops }
 }
 
+/// The cluster-level reference policy: split the datacenter cap into N
+/// equal shares (one per job with a non-empty menu) and let each job
+/// independently pick its fastest operating point within its share —
+/// what a frontier-oblivious operator does with per-job power limits.
+/// Jobs whose *minimum*-power point still exceeds the share are pinned
+/// there and the allocation is flagged infeasible.
+///
+/// Compare against [`cluster::allocate`](crate::cluster::allocate), which
+/// pools the cap across jobs along their frontiers (`kareus paper --exp
+/// cluster` quantifies the gap).
+pub fn uniform_cap_allocation(
+    menus: &[crate::cluster::JobMenu],
+    cap_w: f64,
+) -> crate::cluster::Allocation {
+    let active = menus.iter().filter(|m| !m.points.is_empty()).count();
+    let share = if active == 0 { 0.0 } else { cap_w / active as f64 };
+    let slack = share * 1e-9;
+    let mut feasible = true;
+    let selection = menus
+        .iter()
+        .map(|m| {
+            if m.points.is_empty() {
+                return None;
+            }
+            // Menus ascend in time and descend in power, so the first
+            // point within the share is the fastest one that fits.
+            m.points.iter().position(|p| p.power_w <= share + slack).or_else(|| {
+                feasible = false;
+                m.min_power_point()
+            })
+        })
+        .collect();
+    crate::cluster::Allocation::from_selection(menus, selection, feasible)
+}
+
 fn default_configs(parts: &[Partition], f: u32) -> BTreeMap<String, Schedule> {
     parts
         .iter()

@@ -11,8 +11,9 @@
 //!
 //! Every execution in this module flows through a [`Measurer`] — an
 //! [`ExecutionBackend`](crate::backend::ExecutionBackend) plus optional
-//! shared [`MeasureCache`] — so the whole layer is measurement-source
-//! agnostic (simulator, trace replay, future hardware backends).
+//! shared [`MeasureCache`](crate::profiler::MeasureCache) — so the whole
+//! layer is measurement-source agnostic (simulator, trace replay, future
+//! hardware backends).
 
 use std::collections::BTreeMap;
 

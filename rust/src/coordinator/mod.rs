@@ -22,12 +22,18 @@ use crate::util::json::{arr, num, obj, s, Json};
 use crate::workload::TrainConfig;
 
 /// The job-level objective used to pick a point off the frontier (§4.1:
-/// deadlines, energy budgets, or max throughput).
+/// deadlines, energy budgets, or max throughput), plus the power-cap
+/// target the cluster scheduler hands a job when the datacenter cap
+/// changes.
 #[derive(Clone, Copy, Debug)]
 pub enum Target {
     MaxThroughput,
     Deadline(f64),
     EnergyBudget(f64),
+    /// Fastest point whose *average per-GPU* power (energy/time) stays
+    /// within the given wattage — re-selecting for a new cap touches
+    /// only the retained frontier, never the optimizer.
+    PowerCap(f64),
 }
 
 /// A selected operating point, ready to deploy: the predicted iteration
@@ -116,6 +122,10 @@ impl Coordinator {
             }
             Target::EnergyBudget(e) => {
                 let t = f.time_at_budget(e)?;
+                f.points().iter().find(|p| (p.time - t).abs() < 1e-9).copied()
+            }
+            Target::PowerCap(w) => {
+                let t = f.time_at_power(w)?;
                 f.points().iter().find(|p| (p.time - t).abs() < 1e-9).copied()
             }
         }?;
@@ -228,6 +238,19 @@ mod tests {
         // Energy budget.
         let eb = c.select(&r, Target::EnergyBudget(max.iter_energy_j)).unwrap();
         assert!(eb.iter_energy_j <= max.iter_energy_j + 1e-9);
+        // Power cap: an unconstrained cap reproduces max throughput; a
+        // cap between min and max power forces a slower, in-cap point.
+        let p_max = max.iter_energy_j / max.iter_time_s;
+        let p_min = r.frontier.min_energy().unwrap().avg_power_w();
+        assert!(p_min < p_max, "frontier power must span a range");
+        let uncapped = c.select(&r, Target::PowerCap(p_max * 2.0)).unwrap();
+        assert_eq!(uncapped.iter_time_s.to_bits(), max.iter_time_s.to_bits());
+        let mid_cap = 0.5 * (p_min + p_max);
+        let lean = c.select(&r, Target::PowerCap(mid_cap)).unwrap();
+        assert!(lean.iter_time_s > max.iter_time_s);
+        assert!(lean.iter_energy_j / lean.iter_time_s <= mid_cap * (1.0 + 1e-9));
+        // A cap below the frontier's minimum power is infeasible.
+        assert!(c.select(&r, Target::PowerCap(p_min * 0.5)).is_none());
     }
 
     #[test]
@@ -282,7 +305,13 @@ mod tests {
             tflops_per_gpu: f64::NAN,
         };
         assert!(empty.min_time_plan().is_none());
-        for t in [Target::MaxThroughput, Target::Deadline(1.0), Target::EnergyBudget(1e6)] {
+        let targets = [
+            Target::MaxThroughput,
+            Target::Deadline(1.0),
+            Target::EnergyBudget(1e6),
+            Target::PowerCap(1e6),
+        ];
+        for t in targets {
             assert!(c.select(&empty, t).is_none());
         }
         assert!(c.adapt(&empty, 10, 100.0, 1.25).is_none());

@@ -394,9 +394,43 @@ pub fn parse_parallelism(spec: &str) -> Option<Parallelism> {
     Some(Parallelism::new(tp.unwrap_or(1), cp.unwrap_or(1), pp.unwrap_or(1)))
 }
 
+/// Resolve a CLI model name (`qwen1.7b` / `qwen`, `llama3b`, `llama70b`)
+/// to its [`ModelSpec`].
+pub fn parse_model(name: &str) -> Option<ModelSpec> {
+    match name {
+        "qwen1.7b" | "qwen" => Some(ModelSpec::qwen3_1_7b()),
+        "llama3b" => Some(ModelSpec::llama32_3b()),
+        "llama70b" => Some(ModelSpec::llama33_70b()),
+        _ => None,
+    }
+}
+
+/// Resolve a CLI system name (`megatron`, `m+p`, `nanobatching`, `n+p`,
+/// `kareus`) to its [`System`].
+pub fn parse_system(name: &str) -> Option<System> {
+    match name {
+        "megatron" => Some(System::Megatron),
+        "megatron-perseus" | "m+p" => Some(System::MegatronPerseus),
+        "nanobatching" => Some(System::Nanobatching),
+        "nanobatching-perseus" | "n+p" => Some(System::NanobatchingPerseus),
+        "kareus" => Some(System::Kareus),
+        _ => None,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn model_and_system_parsing() {
+        assert_eq!(parse_model("qwen1.7b").unwrap().name, "Qwen 3 1.7B");
+        assert_eq!(parse_model("llama70b").unwrap().name, "Llama 3.3 70B");
+        assert!(parse_model("gpt99").is_none());
+        assert_eq!(parse_system("m+p"), Some(System::MegatronPerseus));
+        assert_eq!(parse_system("kareus"), Some(System::Kareus));
+        assert!(parse_system("zzz").is_none());
+    }
 
     #[test]
     fn parallelism_parsing() {

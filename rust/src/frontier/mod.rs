@@ -27,6 +27,13 @@ impl Point {
             && self.energy <= other.energy
             && (self.time < other.time || self.energy < other.energy)
     }
+
+    /// Average power of this operating point (energy over time, W).
+    /// Strictly decreasing left-to-right along a Pareto frontier, which
+    /// is what the cluster power-cap scheduler exploits.
+    pub fn avg_power_w(&self) -> f64 {
+        self.energy / self.time
+    }
 }
 
 /// A Pareto frontier, kept sorted by ascending time (thus descending
@@ -69,7 +76,8 @@ impl Frontier {
         if !p.time.is_finite() || !p.energy.is_finite() {
             return false;
         }
-        if self.points.iter().any(|q| q.dominates(&p) || (q.time == p.time && q.energy == p.energy)) {
+        let shadowed = |q: &Point| q.dominates(&p) || (q.time == p.time && q.energy == p.energy);
+        if self.points.iter().any(shadowed) {
             return false;
         }
         self.points.retain(|q| !p.dominates(q));
@@ -181,6 +189,18 @@ impl Frontier {
             .fold(None, |acc, t| Some(acc.map_or(t, |a: f64| a.min(t))))
     }
 
+    /// Minimum time among points whose average power (energy/time) stays
+    /// within `cap_w` — the per-GPU power-cap lookup behind
+    /// `Target::PowerCap` and the cluster scheduler. `None` when even the
+    /// minimum-power point draws more than the cap.
+    pub fn time_at_power(&self, cap_w: f64) -> Option<f64> {
+        self.points
+            .iter()
+            .filter(|p| p.avg_power_w() <= cap_w * (1.0 + 1e-9))
+            .map(|p| p.time)
+            .fold(None, |acc, t| Some(acc.map_or(t, |a: f64| a.min(t))))
+    }
+
     /// Merge another frontier in (e.g. sequential-execution candidates,
     /// §4.5 "execution model switching").
     pub fn merge(&mut self, other: &Frontier) {
@@ -200,7 +220,8 @@ mod tests {
 
     #[test]
     fn from_points_removes_dominated() {
-        let f = Frontier::from_points(pts(&[(1.0, 5.0), (2.0, 3.0), (1.5, 6.0), (3.0, 1.0), (2.5, 4.0)]));
+        let p = pts(&[(1.0, 5.0), (2.0, 3.0), (1.5, 6.0), (3.0, 1.0), (2.5, 4.0)]);
+        let f = Frontier::from_points(p);
         let coords: Vec<(f64, f64)> = f.points().iter().map(|p| (p.time, p.energy)).collect();
         assert_eq!(coords, vec![(1.0, 5.0), (2.0, 3.0), (3.0, 1.0)]);
     }
@@ -262,6 +283,18 @@ mod tests {
         assert_eq!(f.time_at_budget(0.5), None);
         assert_eq!(f.min_time().unwrap().time, 1.0);
         assert_eq!(f.min_energy().unwrap().energy, 1.0);
+    }
+
+    #[test]
+    fn power_lookup_follows_descending_power() {
+        // Average powers: 5.0, 1.5, 1/3 W — strictly descending with time.
+        let f = Frontier::from_points(pts(&[(1.0, 5.0), (2.0, 3.0), (3.0, 1.0)]));
+        assert_eq!(f.points()[0].avg_power_w(), 5.0);
+        assert_eq!(f.time_at_power(10.0), Some(1.0)); // cap above everything
+        assert_eq!(f.time_at_power(1.5), Some(2.0)); // mid-frontier cap
+        assert_eq!(f.time_at_power(0.5), Some(3.0)); // only min power fits
+        assert_eq!(f.time_at_power(0.1), None); // below min power
+        assert!(Frontier::new().time_at_power(10.0).is_none());
     }
 
     #[test]
@@ -346,10 +379,10 @@ mod tests {
             for p in points {
                 inc.insert(p);
             }
-            let a: Vec<(u64, u64, usize)> =
-                batch.points().iter().map(|p| (p.time.to_bits(), p.energy.to_bits(), p.tag)).collect();
-            let b: Vec<(u64, u64, usize)> =
-                inc.points().iter().map(|p| (p.time.to_bits(), p.energy.to_bits(), p.tag)).collect();
+            let bits = |f: &Frontier| -> Vec<(u64, u64, usize)> {
+                f.points().iter().map(|p| (p.time.to_bits(), p.energy.to_bits(), p.tag)).collect()
+            };
+            let (a, b) = (bits(&batch), bits(&inc));
             assert_eq!(a, b, "round {round}");
         }
     }
@@ -361,9 +394,10 @@ mod tests {
         let mut rng = crate::util::rng::Rng::new(0xF409);
         for _ in 0..200 {
             let n = 1 + rng.below(20);
-            let f = Frontier::from_points(
-                (0..n).map(|i| Point::new(rng.range_f64(0.0, 3.0), rng.range_f64(0.0, 3.0), i)).collect(),
-            );
+            let rand_pts: Vec<Point> = (0..n)
+                .map(|i| Point::new(rng.range_f64(0.0, 3.0), rng.range_f64(0.0, 3.0), i))
+                .collect();
+            let f = Frontier::from_points(rand_pts);
             let r = (3.5, 3.5);
             let c = (rng.range_f64(0.0, 4.0), rng.range_f64(0.0, 4.0));
             let fast = f.hvi(c, r);

@@ -1,22 +1,54 @@
-//! Kareus reproduction library.
+//! Kareus reproduction library — joint reduction of dynamic and static
+//! energy in large model training, grown into a multi-scenario,
+//! multi-backend optimization engine with a cluster-level power-cap
+//! scheduler on top.
+//!
+//! The end-to-end data flow (see `ARCHITECTURE.md` for the full map):
+//!
+//! 1. **profile** — [`workload`] builds kernel sequences, [`partition`]
+//!    detects computation–communication partitions, [`profiler`] measures
+//!    them thermally stably through an [`backend::ExecutionBackend`].
+//! 2. **optimize** — [`mbo`] runs the multi-pass multi-objective Bayesian
+//!    optimization per partition ([`surrogate`] provides the GBDT
+//!    ensemble), fanned out and memoized by [`engine`].
+//! 3. **compose** — [`compose`] builds microbatch frontiers, [`pipeline`]
+//!    composes them into the 1F1B iteration frontier ([`frontier`] holds
+//!    the Pareto machinery); [`baselines`] wraps the whole pipeline per
+//!    system under comparison.
+//! 4. **select + deploy** — [`coordinator`] picks an operating point for
+//!    a target (deadline / energy budget / power cap / max throughput)
+//!    and deploys the typed [`plan::FrequencyPlan`] through [`runtime`] /
+//!    [`trainer`].
+//! 5. **schedule the cluster** — [`cluster`] allocates a datacenter
+//!    power-cap timeline across N jobs by re-selecting along their
+//!    retained frontiers (no re-optimization).
+//!
+//! [`paper`] regenerates the evaluation tables/figures, [`sim`] is the
+//! default measurement source (GPU power model + two-stream executor),
+//! and [`util`] holds the offline substrates (JSON, RNG, stats, hashing,
+//! thread pool).
+
 pub mod backend;
 pub mod baselines;
 pub mod cli;
+pub mod cluster;
+pub mod compose;
 pub mod coordinator;
 pub mod engine;
-pub mod plan;
-pub mod runtime;
-pub mod trainer;
-pub mod paper;
-pub mod compose;
 pub mod frontier;
-pub mod pipeline;
 pub mod mbo;
+pub mod paper;
 pub mod partition;
+pub mod pipeline;
+pub mod plan;
 pub mod profiler;
+pub mod runtime;
 pub mod sim;
 pub mod surrogate;
-pub mod workload;
+pub mod trainer;
 pub mod util;
+pub mod workload;
 
-pub fn hello() -> &'static str { "kareus" }
+pub fn hello() -> &'static str {
+    "kareus"
+}

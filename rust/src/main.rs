@@ -3,8 +3,11 @@
 //! Subcommands:
 //!   paper     --exp <id> | --all          regenerate paper tables/figures
 //!   optimize  --model <m> --tp --cp --pp --microbatch --seq [--system <s>]
+//!             [--deadline S | --budget J | --power-cap W]
 //!   sweep     --gpus a100,h100 --models qwen1.7b,llama3b --pars tp8pp2 …
 //!             [--backend sim|trace:<path>]
+//!   cluster   --jobs gpu:model:par:system[:replicas],…
+//!             --cap W | --caps 0:W1,T2:W2,…  [--backend sim|trace:<path>]
 //!   train     --config tiny|e2e --steps N [--artifacts DIR] [--baseline]
 //!             [--backend sim|trace:<path>]
 //!   census                                 Appendix B space census
@@ -15,8 +18,12 @@ use std::sync::Arc;
 use kareus::backend::{parse_backend_spec, BackendSpec, TraceBackend};
 use kareus::baselines::System;
 use kareus::cli::Args;
+use kareus::cluster::{optimize_jobs, parse_job_spec, plan_cluster, PowerCapSchedule};
 use kareus::coordinator::{Coordinator, Target};
-use kareus::engine::{parse_parallelism, run_sweep, scenario_matrix, sweep_json, EngineConfig};
+use kareus::engine::{
+    parse_model, parse_parallelism, parse_system, run_sweep, scenario_matrix, sweep_json,
+    EngineConfig,
+};
 use kareus::paper;
 use kareus::runtime::Runtime;
 use kareus::sim::gpu::GpuSpec;
@@ -35,6 +42,7 @@ fn main() {
         "paper" => cmd_paper(&args),
         "optimize" => cmd_optimize(&args),
         "sweep" => cmd_sweep(&args),
+        "cluster" => cmd_cluster(&args),
         "train" => cmd_train(&args),
         "census" => {
             println!("{}", paper::run_experiment("appB").unwrap());
@@ -49,9 +57,12 @@ fn main() {
                 "kareus — joint dynamic+static energy optimization for large model training\n\
                  usage:\n  kareus paper --exp <id>|--all\n  kareus optimize --model qwen1.7b|llama3b|llama70b \
                  [--tp 8 --cp 1 --pp 2 --microbatch 8 --seq 4096 --nmb 8] [--system kareus] \
-                 [--deadline S|--budget J]\n  kareus sweep [--gpus a100,h100,v100] [--models qwen1.7b,llama3b] \
+                 [--deadline S|--budget J|--power-cap W]\n  kareus sweep [--gpus a100,h100,v100] [--models qwen1.7b,llama3b] \
                  [--pars tp8pp2,cp2tp4pp2] [--systems kareus,n+p] [--microbatch 8 --seq 4096 --nmb 8] \
                  [--seed N] [--threads N] [--backend sim|trace:FILE] [--out FILE.json]\n  \
+                 kareus cluster --jobs gpu:model:par:system[:replicas],… --cap WATTS|--caps 0:W1,T2:W2,… \
+                 [--microbatch 8 --seq 4096 --nmb 8] [--seed N] [--threads N] \
+                 [--backend sim|trace:FILE] [--out FILE.json]\n  \
                  kareus train --config tiny|e2e --steps 100 [--artifacts artifacts] [--baseline] \
                  [--backend sim|trace:FILE]\n  \
                  kareus census | kareus list\n\
@@ -93,26 +104,6 @@ fn cmd_paper(args: &Args) -> i32 {
             eprintln!("unknown experiment {id}; ids: {}", paper::ALL_EXPERIMENTS.join(" "));
             2
         }
-    }
-}
-
-fn parse_model(name: &str) -> Option<ModelSpec> {
-    match name {
-        "qwen1.7b" | "qwen" => Some(ModelSpec::qwen3_1_7b()),
-        "llama3b" => Some(ModelSpec::llama32_3b()),
-        "llama70b" => Some(ModelSpec::llama33_70b()),
-        _ => None,
-    }
-}
-
-fn parse_system(name: &str) -> Option<System> {
-    match name {
-        "megatron" => Some(System::Megatron),
-        "megatron-perseus" | "m+p" => Some(System::MegatronPerseus),
-        "nanobatching" => Some(System::Nanobatching),
-        "nanobatching-perseus" | "n+p" => Some(System::NanobatchingPerseus),
-        "kareus" => Some(System::Kareus),
-        _ => None,
     }
 }
 
@@ -189,6 +180,17 @@ fn cmd_optimize(args: &Args) -> i32 {
         Target::Deadline(d.parse().unwrap_or(f64::INFINITY))
     } else if let Some(b) = args.get("budget") {
         Target::EnergyBudget(b.parse().unwrap_or(f64::INFINITY))
+    } else if let Some(w) = args.get("power-cap") {
+        // Average per-GPU watts (energy/time along the frontier). A
+        // malformed value must NOT silently become "unconstrained" — that
+        // would drop the safety constraint the user asked for.
+        match w.parse::<f64>() {
+            Ok(v) if v.is_finite() && v > 0.0 => Target::PowerCap(v),
+            _ => {
+                eprintln!("bad --power-cap '{w}' (positive watts per GPU)");
+                return 2;
+            }
+        }
     } else {
         Target::MaxThroughput
     };
@@ -317,6 +319,110 @@ fn cmd_sweep(args: &Args) -> i32 {
         None => println!("{json}"),
     }
     0
+}
+
+/// Optimize N jobs and allocate a datacenter power-cap timeline across
+/// their retained frontiers (deterministic `ClusterPlan` JSON output).
+fn cmd_cluster(args: &Args) -> i32 {
+    if args.positional.len() > 1 {
+        eprintln!(
+            "unexpected arguments {:?} — --jobs and --caps take comma-separated values \
+             without spaces",
+            &args.positional[1..]
+        );
+        return 2;
+    }
+    // Guard against `--jobs --cap …`-style bare flags silently running a
+    // default (same rationale as cmd_sweep).
+    for key in ["jobs", "cap", "caps"] {
+        if args.has_flag(key) {
+            eprintln!("--{key} requires a value");
+            return 2;
+        }
+    }
+    let Some(jobs_spec) = args.get("jobs") else {
+        eprintln!(
+            "need --jobs gpu:model:par:system[:replicas],… \
+             (e.g. a100:qwen1.7b:tp8pp2:m+p,v100:llama3b:cp2tp4pp2:kareus)"
+        );
+        return 2;
+    };
+    let microbatch = args.get_u32("microbatch", 8);
+    let seq_len = args.get_u32("seq", 4096);
+    let nmb = args.get_u32("nmb", 8);
+    let seed = args.get_u32("seed", 2026) as u64;
+    let mut jobs = Vec::new();
+    for spec in jobs_spec.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+        match parse_job_spec(spec, microbatch, seq_len, nmb, seed) {
+            Ok(j) => jobs.push(j),
+            Err(e) => {
+                eprintln!("bad job '{spec}': {e}");
+                return 2;
+            }
+        }
+    }
+    if jobs.is_empty() {
+        eprintln!("empty job list");
+        return 2;
+    }
+    let schedule = match (args.get("cap"), args.get("caps")) {
+        (Some(_), Some(_)) => {
+            eprintln!("give either --cap or --caps, not both");
+            return 2;
+        }
+        (None, None) => {
+            eprintln!("need --cap WATTS or --caps 0:W1,T2:W2,… (cluster watts)");
+            return 2;
+        }
+        (Some(spec), None) | (None, Some(spec)) => match PowerCapSchedule::parse(spec) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("bad cap schedule '{spec}': {e}");
+                return 2;
+            }
+        },
+    };
+    let (engine, trace) = match build_engine(args) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    eprintln!(
+        "optimizing {} jobs, then allocating {} cap segment(s) on {} workers",
+        jobs.len(),
+        schedule.segments().len(),
+        engine.worker_threads()
+    );
+    let fronts = optimize_jobs(&jobs, &engine, |line| eprintln!("{line}"));
+    // All measurements happen inside optimize_jobs; persist a recording
+    // trace before planning so a degenerate schedule can't discard it.
+    if let Err(e) = finish_trace(&trace) {
+        eprintln!("{e}");
+        return 1;
+    }
+    let plan = plan_cluster(&fronts, &schedule, |w| eprintln!("warning: {w}"));
+    let json = plan.to_json().dump();
+    match args.get("out") {
+        Some(path) => {
+            if let Err(e) = std::fs::write(path, &json) {
+                eprintln!("write {path}: {e}");
+                return 1;
+            }
+            eprintln!("wrote {path}");
+        }
+        None => println!("{json}"),
+    }
+    if plan.feasible() {
+        0
+    } else {
+        eprintln!(
+            "warning: cap below the cluster-wide minimum power in at least one segment \
+             (jobs pinned at their minimum-power points)"
+        );
+        1
+    }
 }
 
 fn cmd_train(args: &Args) -> i32 {

@@ -5,8 +5,10 @@
 
 use std::collections::BTreeMap;
 
-use crate::baselines::{run_system, System};
+use crate::baselines::{run_system, uniform_cap_allocation, System};
+use crate::cluster::{allocate, demand_range, job_menu, optimize_jobs, ClusterJob, JobMenu};
 use crate::compose::optimize_all_partitions;
+use crate::engine::{EngineConfig, Scenario};
 use crate::mbo::{self, exhaustive, Pass};
 use crate::partition::detect_partitions;
 use crate::profiler::{Profiler, ProfilerConfig};
@@ -223,7 +225,8 @@ pub fn table3_table4() -> String {
 /// Tables 6 & 7 + Figure 14: Llama 3.3 70B strong-scaling emulation.
 pub fn table6_table7() -> String {
     let gpu = GpuSpec::a100();
-    let mut t6 = Table::new(&["#GPUs", "#µbatches", "ΔT% M+P", "ΔT% Kareus", "ΔE% M+P", "ΔE% Kareus"]);
+    let mut t6 =
+        Table::new(&["#GPUs", "#µbatches", "ΔT% M+P", "ΔT% Kareus", "ΔE% M+P", "ΔE% Kareus"]);
     let mut t7 = Table::new(&["#µbatches", "IsoT-E% Kareus", "IsoE-T% Kareus"]);
     let mut fig14 = String::new();
     for (gpus, mbs, cfg) in workloads::emulation_rows() {
@@ -347,7 +350,10 @@ pub fn fig12() -> String {
         a.row(vec![
             format!("{w}"),
             format!("{:.3}", crate::util::stats::mean(&es)),
-            format!("{:.2}", 100.0 * crate::util::stats::std_dev(&es) / crate::util::stats::mean(&es)),
+            format!(
+                "{:.2}",
+                100.0 * crate::util::stats::std_dev(&es) / crate::util::stats::mean(&es)
+            ),
             format!("{:.1}", crate::util::stats::mean(&temps)),
         ]);
     }
@@ -511,6 +517,72 @@ pub fn fig10() -> String {
     out
 }
 
+/// The cluster-experiment job mix: three heterogeneous 16-GPU jobs
+/// (different GPUs/models/parallelisms) whose frontiers a shared
+/// datacenter cap is split across.
+pub fn cluster_jobs() -> Vec<ClusterJob> {
+    let mk = |gpu: GpuSpec, model: ModelSpec, tp: u32, cp: u32| {
+        ClusterJob::new(Scenario {
+            gpu,
+            cfg: TrainConfig {
+                model,
+                par: Parallelism::new(tp, cp, 2),
+                microbatch: 8,
+                seq_len: 4096,
+                n_microbatches: 8,
+                dtype_bytes: 2,
+            },
+            system: System::MegatronPerseus,
+            seed: SEED,
+        })
+    };
+    vec![
+        mk(GpuSpec::a100(), ModelSpec::qwen3_1_7b(), 8, 1),
+        mk(GpuSpec::a100(), ModelSpec::llama32_3b(), 4, 2),
+        mk(GpuSpec::v100(), ModelSpec::qwen3_1_7b(), 8, 1),
+    ]
+}
+
+/// Cluster power-cap scheduling: frontier-aware water-filling vs the
+/// uniform equal-share baseline over the paper's per-job frontiers.
+pub fn cluster_powercap() -> String {
+    let jobs = cluster_jobs();
+    let engine = EngineConfig::default();
+    let fronts = optimize_jobs(&jobs, &engine, |_| {});
+    let menus: Vec<JobMenu> = fronts.iter().map(job_menu).collect();
+    let (peak, floor) = demand_range(&menus);
+
+    let mut t = Table::new(&[
+        "Cap (kW)",
+        "Uniform Mtok/s",
+        "Kareus Mtok/s",
+        "Δ throughput",
+        "Kareus draw (kW)",
+    ]);
+    for frac in [1.0, 0.75, 0.5, 0.25, 0.1] {
+        let cap = floor + frac * (peak - floor);
+        let uni = uniform_cap_allocation(&menus, cap);
+        let wf = allocate(&menus, cap);
+        let mark = |feasible: bool| if feasible { "" } else { " (infeasible)" };
+        t.row(vec![
+            format!("{:.1}", cap / 1e3),
+            format!("{:.3}{}", uni.tokens_per_s / 1e6, mark(uni.feasible)),
+            format!("{:.3}{}", wf.tokens_per_s / 1e6, mark(wf.feasible)),
+            pct(100.0 * (wf.tokens_per_s - uni.tokens_per_s) / uni.tokens_per_s),
+            format!("{:.1}", wf.total_power_w / 1e3),
+        ]);
+    }
+    format!(
+        "Cluster power-cap scheduling — {} jobs, unconstrained demand {:.1} kW, \
+         cluster minimum {:.1} kW\n\
+         (frontier-aware water-filling vs uniform per-job cap split)\n{}",
+        jobs.len(),
+        peak / 1e3,
+        floor / 1e3,
+        t.render()
+    )
+}
+
 /// Dispatch an experiment by id; returns the rendered text.
 pub fn run_experiment(id: &str) -> Option<String> {
     Some(match id {
@@ -523,6 +595,7 @@ pub fn run_experiment(id: &str) -> Option<String> {
         "table8" => table8(),
         "table9" | "table10" | "fig15" => table9_table10(),
         "fig12" => fig12(),
+        "cluster" => cluster_powercap(),
         "mbo-stats" => mbo_stats(),
         "appA" => appendix_a(),
         "appB" => appendix_b(),
@@ -532,7 +605,7 @@ pub fn run_experiment(id: &str) -> Option<String> {
 
 pub const ALL_EXPERIMENTS: &[&str] = &[
     "table1", "fig3", "fig7", "fig10", "table3", "table6", "table8", "table9", "fig12",
-    "mbo-stats", "appA", "appB",
+    "cluster", "mbo-stats", "appA", "appB",
 ];
 
 #[cfg(test)]

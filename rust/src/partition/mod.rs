@@ -87,7 +87,11 @@ pub const GROUP_THRESHOLD_S: f64 = 60e-6;
 ///
 /// `nanobatched` doubles the instance count: each microbatch runs two
 /// nanobatches, each contributing one instance per segment.
-pub fn detect_partitions(gpu: &GpuSpec, work: &MicrobatchWork, nanobatched: bool) -> Vec<Partition> {
+pub fn detect_partitions(
+    gpu: &GpuSpec,
+    work: &MicrobatchWork,
+    nanobatched: bool,
+) -> Vec<Partition> {
     let dir_label = match work.dir {
         Dir::Fwd => "fwd",
         Dir::Bwd => "bwd",

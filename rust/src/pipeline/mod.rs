@@ -58,6 +58,15 @@ pub struct IterationPlan {
     pub bubble_s: f64,
 }
 
+impl IterationPlan {
+    /// Average per-GPU power over the iteration (total energy / time, W)
+    /// — the quantity the power-cap selectors and the cluster scheduler
+    /// budget against.
+    pub fn avg_power_w(&self) -> f64 {
+        self.total_j / self.time_s
+    }
+}
+
 /// Per-(stage, dir) Pareto choices: (time, total, dyn) ascending in time,
 /// plus the deployed [`MicrobatchPlan`] behind every choice (same order),
 /// so a selected operating point can be materialized into a typed
@@ -483,6 +492,8 @@ mod tests {
         let loose = greedy_fill(&m, 4, 90.0, tight.time_s * 1.3);
         assert!(loose.total_j < tight.total_j, "loose {} tight {}", loose.total_j, tight.total_j);
         assert!(loose.time_s <= tight.time_s * 1.3 + 1e-9);
+        // Cheaper energy over a longer iteration ⇒ strictly lower draw.
+        assert!(loose.avg_power_w() < tight.avg_power_w());
     }
 
     #[test]

@@ -67,11 +67,14 @@ pub struct Manifest {
 
 impl Manifest {
     pub fn load(dir: &Path) -> Result<Manifest> {
-        let raw = std::fs::read_to_string(dir.join("manifest.json"))
-            .with_context(|| format!("reading {}/manifest.json (run `make artifacts`)", dir.display()))?;
+        let raw = std::fs::read_to_string(dir.join("manifest.json")).with_context(|| {
+            format!("reading {}/manifest.json (run `make artifacts`)", dir.display())
+        })?;
         let j = Json::parse(&raw).map_err(|e| anyhow!("manifest parse: {e}"))?;
         let mut artifacts = BTreeMap::new();
-        for (name, a) in j.get("artifacts").and_then(|a| a.as_obj()).ok_or_else(|| anyhow!("no artifacts"))? {
+        let listed =
+            j.get("artifacts").and_then(|a| a.as_obj()).ok_or_else(|| anyhow!("no artifacts"))?;
+        for (name, a) in listed {
             let file = a.get("file").and_then(|f| f.as_str()).ok_or_else(|| anyhow!("no file"))?;
             let parse_specs = |key: &str| -> Result<Vec<TensorSpec>> {
                 a.get(key)
@@ -81,10 +84,12 @@ impl Manifest {
                     .map(TensorSpec::from_json)
                     .collect()
             };
-            artifacts.insert(
-                name.clone(),
-                ArtifactSpec { file: file.into(), args: parse_specs("args")?, outputs: parse_specs("outputs")? },
-            );
+            let spec = ArtifactSpec {
+                file: file.into(),
+                args: parse_specs("args")?,
+                outputs: parse_specs("outputs")?,
+            };
+            artifacts.insert(name.clone(), spec);
         }
         let mut configs = BTreeMap::new();
         if let Some(cfgs) = j.get("configs").and_then(|c| c.as_obj()) {

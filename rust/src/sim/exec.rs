@@ -87,7 +87,9 @@ pub fn execute_partition(
     power_limit: Option<f64>,
 ) -> ExecResult {
     match sched.launch {
-        LaunchAt::Sequential => execute_sequential(gpu, comps, comm, sched.freq_mhz, temp_c, power_limit),
+        LaunchAt::Sequential => {
+            execute_sequential(gpu, comps, comm, sched.freq_mhz, temp_c, power_limit)
+        }
         LaunchAt::WithComp(launch_idx) => {
             execute_overlapped(gpu, comps, comm, sched, launch_idx, temp_c, power_limit)
         }
@@ -107,7 +109,8 @@ fn execute_sequential(
     let mut freq_time_weighted = 0.0;
 
     for k in comps {
-        run_solo_comp(gpu, k, gpu.n_sms, freq_mhz, p_static, power_limit, &mut res, &mut freq_time_weighted);
+        let fw = &mut freq_time_weighted;
+        run_solo_comp(gpu, k, gpu.n_sms, freq_mhz, p_static, power_limit, &mut res, fw);
     }
     if let Some(c) = comm {
         // NCCL-style default kernel: saturates the link when run alone.
@@ -184,8 +187,10 @@ fn execute_overlapped(
         let comm_active = comm_launched && comm_left > 1e-12;
         let comp_active = comp_idx < comps.len();
 
-        let comp_sms = if comm_active { gpu.n_sms.saturating_sub(sched.comm_sms) } else { gpu.n_sms };
-        let comp_arg = if comp_active { Some((&comps[comp_idx], comp_sms, comp_left)) } else { None };
+        let comp_sms =
+            if comm_active { gpu.n_sms.saturating_sub(sched.comm_sms) } else { gpu.n_sms };
+        let comp_arg =
+            if comp_active { Some((&comps[comp_idx], comp_sms, comp_left)) } else { None };
         let comm_arg = if comm_active {
             Some((comm.unwrap(), sched.comm_sms, comm_left))
         } else {
@@ -392,7 +397,8 @@ mod tests {
         let g = gpu();
         let comps = vec![linear(5e11)];
         let comm = allreduce(1e8);
-        let seq = execute_partition(&g, &comps, Some(&comm), &Schedule::sequential(1410), 30.0, None);
+        let seq_sched = Schedule::sequential(1410);
+        let seq = execute_partition(&g, &comps, Some(&comm), &seq_sched, 30.0, None);
         let ovl = execute_partition(
             &g,
             &comps,

@@ -187,7 +187,8 @@ mod tests {
     fn boosting_improves_over_single_tree() {
         let (x, y) = synth(300, 3);
         let (xt, yt) = synth(100, 4);
-        let one = Gbdt::fit(&x, &y, &GbdtParams { n_rounds: 1, learning_rate: 1.0, ..Default::default() });
+        let one_params = GbdtParams { n_rounds: 1, learning_rate: 1.0, ..Default::default() };
+        let one = Gbdt::fit(&x, &y, &one_params);
         let many = Gbdt::fit(&x, &y, &GbdtParams::default());
         assert!(r_squared(&many, &xt, &yt) > r_squared(&one, &xt, &yt));
     }

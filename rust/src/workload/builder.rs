@@ -69,7 +69,13 @@ pub struct MicrobatchWork {
 
 /// Build the forward kernel stream for `tokens` tokens (a full microbatch
 /// or one nanobatch) on one GPU.
-pub fn build_pass(cfg: &TrainConfig, tokens: f64, dir: Dir, first_stage: bool, last_stage: bool) -> MicrobatchWork {
+pub fn build_pass(
+    cfg: &TrainConfig,
+    tokens: f64,
+    dir: Dir,
+    first_stage: bool,
+    last_stage: bool,
+) -> MicrobatchWork {
     let m = &cfg.model;
     let b = cfg.dtype_bytes as f64;
     let tp = cfg.par.tp as f64;

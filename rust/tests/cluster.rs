@@ -1,0 +1,199 @@
+//! Cluster-scheduler acceptance tests: under a binding datacenter cap the
+//! water-filling allocator must stay within the cap in every schedule
+//! segment, beat (or match) the uniform equal-share baseline's aggregate
+//! throughput, survive degenerate jobs without panicking, and emit
+//! byte-deterministic `ClusterPlan` JSON.
+
+use std::sync::OnceLock;
+
+use kareus::baselines::{uniform_cap_allocation, System, SystemResult};
+use kareus::cluster::{
+    allocate, demand_range, job_menu, optimize_jobs, parse_job_spec, plan_cluster, CapSegment,
+    ClusterJob, ClusterPlan, JobFrontier, JobMenu, PowerCapSchedule,
+};
+use kareus::engine::{EngineConfig, Scenario};
+use kareus::frontier::Frontier;
+use kareus::sim::gpu::GpuSpec;
+use kareus::util::json::Json;
+use kareus::workload::{ModelSpec, Parallelism, TrainConfig};
+
+/// Three heterogeneous 16-GPU jobs (cheap M+P system: multi-point
+/// frontiers without MBO cost). Optimized once, shared across tests.
+fn fronts() -> &'static [JobFrontier] {
+    static FRONTS: OnceLock<Vec<JobFrontier>> = OnceLock::new();
+    FRONTS.get_or_init(|| {
+        let jobs: Vec<ClusterJob> = [
+            "a100:qwen1.7b:tp8pp2:m+p",
+            "a100:llama3b:cp2tp4pp2:m+p",
+            "v100:qwen1.7b:tp8pp2:m+p",
+        ]
+        .iter()
+        .map(|spec| parse_job_spec(spec, 8, 4096, 8, 11).expect("valid job spec"))
+        .collect();
+        optimize_jobs(&jobs, &EngineConfig::default(), |_| {})
+    })
+}
+
+fn menus() -> Vec<JobMenu> {
+    fronts().iter().map(job_menu).collect()
+}
+
+#[test]
+fn binding_cap_respected_and_beats_uniform() {
+    let menus = menus();
+    let (peak, floor) = demand_range(&menus);
+    assert!(floor < peak, "frontiers must span a power range ({floor} .. {peak})");
+    for frac in [0.75, 0.5, 0.25] {
+        let cap = floor + frac * (peak - floor);
+        let wf = allocate(&menus, cap);
+        assert!(wf.feasible, "cap {cap} above the floor must be feasible");
+        assert!(
+            wf.total_power_w <= cap * (1.0 + 1e-9),
+            "allocation {} exceeds cap {cap}",
+            wf.total_power_w
+        );
+        let uni = uniform_cap_allocation(&menus, cap);
+        assert!(
+            wf.tokens_per_s >= uni.tokens_per_s * (1.0 - 1e-12),
+            "water-filling {} below uniform {} at cap {cap}",
+            wf.tokens_per_s,
+            uni.tokens_per_s
+        );
+    }
+    // Unconstrained cap: everything runs at max throughput.
+    let loose = allocate(&menus, peak * 2.0);
+    assert!(loose.selection.iter().all(|s| *s == Some(0)));
+}
+
+#[test]
+fn cap_schedule_boundary_reallocates_without_reoptimizing() {
+    let menus = menus();
+    let (peak, floor) = demand_range(&menus);
+    let hi = peak * 1.05; // non-binding day cap
+    let lo = floor + 0.3 * (peak - floor); // binding night cap
+    let schedule = PowerCapSchedule::piecewise(vec![
+        CapSegment { start_s: 0.0, cap_w: hi },
+        CapSegment { start_s: 3600.0, cap_w: lo },
+    ])
+    .unwrap();
+    assert_eq!(schedule.cap_at(3599.9), hi);
+    assert_eq!(schedule.cap_at(3600.0), lo);
+
+    let plan = plan_cluster(fronts(), &schedule, |_| {});
+    assert!(plan.feasible());
+    assert_eq!(plan.slices.len(), 2);
+    for sl in &plan.slices {
+        assert!(
+            sl.total_power_w <= sl.cap_w * (1.0 + 1e-9),
+            "slice at {} s draws {} W over its {} W cap",
+            sl.start_s,
+            sl.total_power_w,
+            sl.cap_w
+        );
+        assert_eq!(sl.assignments.len(), plan.jobs.len());
+        for a in &sl.assignments {
+            // Each assignment carries a deployable typed plan with one
+            // slot per (stage, microbatch, direction).
+            let cfg = &fronts()[a.job].job.scenario.cfg;
+            assert_eq!(
+                a.plan.n_slots(),
+                cfg.par.pp as usize * 2 * cfg.n_microbatches as usize,
+                "job {} slot count",
+                a.job
+            );
+        }
+    }
+    // The binding segment must move at least one job down-frontier and
+    // cannot raise aggregate throughput.
+    let day = &plan.slices[0];
+    let night = &plan.slices[1];
+    assert!(night.tokens_per_s <= day.tokens_per_s * (1.0 + 1e-12));
+    assert!(
+        day.assignments
+            .iter()
+            .zip(&night.assignments)
+            .any(|(d, n)| d.point != n.point),
+        "cap drop did not change any operating point"
+    );
+    assert!(day.assignments.iter().all(|a| a.point == 0), "non-binding day cap must run fast");
+}
+
+#[test]
+fn cluster_plan_json_is_deterministic_and_roundtrips() {
+    let menus = menus();
+    let (peak, floor) = demand_range(&menus);
+    let schedule = PowerCapSchedule::piecewise(vec![
+        CapSegment { start_s: 0.0, cap_w: peak * 1.05 },
+        CapSegment { start_s: 3600.0, cap_w: floor + 0.3 * (peak - floor) },
+    ])
+    .unwrap();
+    let a = plan_cluster(fronts(), &schedule, |_| {});
+    let b = plan_cluster(fronts(), &schedule, |_| {});
+    let (da, db) = (a.to_json().dump(), b.to_json().dump());
+    assert_eq!(da, db, "two identical planning runs must dump identical bytes");
+
+    let back = ClusterPlan::from_json(&Json::parse(&da).unwrap()).unwrap();
+    assert_eq!(back, a, "ClusterPlan JSON round-trip diverged");
+    assert_eq!(back.to_json().dump(), da, "re-dump after round-trip diverged");
+
+    // Schema spot checks.
+    let parsed = Json::parse(&da).unwrap();
+    assert_eq!(parsed.get("plan").unwrap().as_str(), Some("kareus_cluster"));
+    assert_eq!(parsed.get("jobs").unwrap().as_arr().unwrap().len(), 3);
+    assert_eq!(parsed.get("slices").unwrap().as_arr().unwrap().len(), 2);
+}
+
+#[test]
+fn empty_frontier_job_skipped_with_warning() {
+    let real = fronts()[0].clone();
+    let degenerate = JobFrontier {
+        job: ClusterJob::new(Scenario {
+            gpu: GpuSpec::a100(),
+            cfg: TrainConfig {
+                model: ModelSpec::qwen3_1_7b(),
+                par: Parallelism::new(8, 1, 2),
+                microbatch: 8,
+                seq_len: 4096,
+                n_microbatches: 8,
+                dtype_bytes: 2,
+            },
+            system: System::Kareus,
+            seed: 0,
+        }),
+        result: SystemResult {
+            system: System::Kareus,
+            frontier: Frontier::new(),
+            plans: Vec::new(),
+            menus: Vec::new(),
+            mbo_profiling_s: 0.0,
+            tflops_per_gpu: f64::NAN,
+        },
+    };
+    let both = vec![real, degenerate];
+    let mut warnings = Vec::new();
+    let plan = plan_cluster(&both, &PowerCapSchedule::constant(1e9), |w| {
+        warnings.push(w.to_string())
+    });
+    assert_eq!(warnings.len(), 1, "exactly one skip warning expected: {warnings:?}");
+    assert!(warnings[0].contains("empty frontier"), "{warnings:?}");
+    assert!(!plan.jobs[0].skipped && plan.jobs[1].skipped);
+    assert!(plan.feasible());
+    assert_eq!(plan.slices[0].assignments.len(), 1, "skipped job must get no assignment");
+    assert_eq!(plan.slices[0].assignments[0].job, 0);
+}
+
+#[test]
+fn cap_below_cluster_minimum_pins_min_power_not_panics() {
+    let menus = menus();
+    let (_, floor) = demand_range(&menus);
+    let plan = plan_cluster(fronts(), &PowerCapSchedule::constant(floor * 0.5), |_| {});
+    assert!(!plan.feasible());
+    let sl = &plan.slices[0];
+    assert!(!sl.feasible);
+    // Pinned at minimum power: the selection equals each menu's min-power
+    // point and the (unavoidable) draw equals the cluster floor.
+    for a in &sl.assignments {
+        assert_eq!(Some(a.point), menus[a.job].min_power_point());
+    }
+    assert!((sl.total_power_w - floor).abs() <= floor * 1e-9);
+}

@@ -55,7 +55,8 @@ fn prop_exec_results_physical() {
     for _ in 0..300 {
         let part = random_partition(&mut rng);
         let sched = random_schedule(&mut rng, part.comps.len());
-        let r = execute_partition(&gpu, &part.comps, part.comm.as_ref(), &sched, 30.0, Some(gpu.tdp_w));
+        let r =
+            execute_partition(&gpu, &part.comps, part.comm.as_ref(), &sched, 30.0, Some(gpu.tdp_w));
         assert!(r.time_s.is_finite() && r.time_s > 0.0);
         assert!(r.dyn_j >= 0.0 && r.static_j > 0.0);
         assert!(r.exposed_comm_s <= r.time_s + 1e-12);
@@ -89,7 +90,8 @@ fn prop_overlap_bounded_by_resource_envelopes() {
             .comps
             .iter()
             .map(|k| {
-                (k.flops / gpu.flop_rate(comp_sms, sched.freq_mhz)).max(k.bytes / (gpu.mem_bw * 0.3))
+                let t_flops = k.flops / gpu.flop_rate(comp_sms, sched.freq_mhz);
+                t_flops.max(k.bytes / (gpu.mem_bw * 0.3))
             })
             .sum();
         let t_comm_slow = part
@@ -204,8 +206,9 @@ fn prop_incremental_insert_equals_batch_build() {
 fn prop_hypervolume_monotone_and_bounded() {
     let mut rng = Rng::new(6);
     for _ in 0..100 {
-        let pts: Vec<Point> =
-            (0..20).map(|i| Point::new(rng.range_f64(0.1, 1.0), rng.range_f64(0.1, 1.0), i)).collect();
+        let pts: Vec<Point> = (0..20)
+            .map(|i| Point::new(rng.range_f64(0.1, 1.0), rng.range_f64(0.1, 1.0), i))
+            .collect();
         let f = Frontier::from_points(pts);
         let r = (2.0, 2.0);
         let hv = f.hypervolume(r);
