@@ -4,7 +4,7 @@
 use kareus::compose::optimize_all_partitions_with;
 use kareus::engine::EngineConfig;
 use kareus::frontier::{Frontier, Point};
-use kareus::mbo::space;
+use kareus::mbo::{optimize_partition_with, space, HalvingParams, MboParams, StrategyKind};
 use kareus::partition::{detect_partitions, Partition};
 use kareus::pipeline::{greedy_fill, simulate_1f1b, StageMenu};
 use kareus::profiler::Profiler;
@@ -175,4 +175,30 @@ fn main() {
         t_seq / t_par.max(1e-9),
         t_seq / t_warm.max(1e-9)
     );
+
+    // 8. Search strategies on one partition: wall time + simulated
+    //    profiling seconds per strategy (the racing strategy's win is the
+    //    simulated bill; its wall time also drops with the probe count).
+    let n_cands = space::candidate_space(&gpu, &part, 8).len();
+    println!("-- strategies: one partition, {n_cands} candidates --");
+    for kind in [
+        StrategyKind::MultiPass,
+        StrategyKind::Halving(HalvingParams::default()),
+        StrategyKind::Random,
+    ] {
+        let mut params = MboParams::for_class(part.size_class());
+        params.seed = 42;
+        let strategy = kind.build(params).expect("defaults validate");
+        let mut prof = Profiler::new(gpu.clone(), Default::default(), 42);
+        let t0 = std::time::Instant::now();
+        let r = optimize_partition_with(strategy.as_ref(), &mut prof, &part, 8);
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "mbo::strategy {:10} {:8.3} s wall   {:8.0} GPU·s simulated   {:3} measured",
+            kind.name(),
+            dt,
+            r.profiling_cost_s,
+            r.evaluated.len()
+        );
+    }
 }

@@ -47,6 +47,11 @@ pub enum System {
     /// Table 8 ablation: frequency scaling only (default overlap schedule)
     /// — equivalent to Nanobatching + Perseus.
     KareusNoSched,
+    /// Strategy-ablation reference: the full Kareus pipeline with the
+    /// per-partition search swapped from multi-pass MBO to uniform random
+    /// sampling at the same measurement budget
+    /// ([`StrategyKind::Random`](crate::mbo::StrategyKind)).
+    KareusRandom,
 }
 
 impl System {
@@ -59,6 +64,7 @@ impl System {
             System::Kareus => "Kareus",
             System::KareusNoFreq => "Kareus w/o frequency",
             System::KareusNoSched => "Kareus w/o kernel schedule",
+            System::KareusRandom => "Kareus (random search)",
         }
     }
 
@@ -72,6 +78,7 @@ impl System {
             System::Kareus,
             System::KareusNoFreq,
             System::KareusNoSched,
+            System::KareusRandom,
         ]
         .into_iter()
         .find(|s| s.name() == name)
@@ -194,8 +201,18 @@ pub fn run_system_with(
                 MbFrontier::from_points(points)
             })
         }
-        System::Kareus | System::KareusNoFreq => {
-            // MBO once per partition type (types repeat across stages).
+        System::Kareus | System::KareusNoFreq | System::KareusRandom => {
+            // One search per partition type (types repeat across stages).
+            // The random-search reference rides the identical pipeline
+            // with only the strategy swapped; sharing the caches is safe
+            // because cache keys fold the strategy fingerprint.
+            let engine_random;
+            let engine = if system == System::KareusRandom {
+                engine_random = engine.clone().with_strategy(crate::mbo::StrategyKind::Random);
+                &engine_random
+            } else {
+                engine
+            };
             let comm_group = cfg.par.tp * cfg.par.cp;
             let fwd_w = build_nanobatch_pass(cfg, Dir::Fwd, false, false);
             let bwd_w = build_nanobatch_pass(cfg, Dir::Bwd, false, false);
@@ -336,6 +353,7 @@ mod tests {
             System::Kareus,
             System::KareusNoFreq,
             System::KareusNoSched,
+            System::KareusRandom,
         ] {
             assert_eq!(System::by_name(sys.name()), Some(sys));
         }
@@ -382,6 +400,23 @@ mod tests {
         let e_np = np.frontier.min_time().unwrap().energy;
         assert!(e_k <= e_np * 1.005, "kareus {e_k} vs n+p {e_np}");
         assert!(k.mbo_profiling_s > 0.0);
+    }
+
+    #[test]
+    fn random_search_reference_runs_full_pipeline() {
+        // The strategy-ablation row: same pipeline, random per-partition
+        // search. It must produce a real frontier and charge profiling
+        // time, and informed MBO must be at least as good at max
+        // throughput (small tolerance: both search the same space).
+        let g = GpuSpec::a100();
+        let c = cfg();
+        let r = run_system(&g, &c, System::KareusRandom, 1);
+        assert!(r.frontier.len() >= 3, "frontier len {}", r.frontier.len());
+        assert!(r.mbo_profiling_s > 0.0);
+        let k = run_system(&g, &c, System::Kareus, 1);
+        let t_r = r.frontier.min_time().unwrap().time;
+        let t_k = k.frontier.min_time().unwrap().time;
+        assert!(t_k <= t_r * 1.02, "kareus {t_k} vs random {t_r}");
     }
 
     #[test]

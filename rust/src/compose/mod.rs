@@ -384,17 +384,22 @@ pub fn optimize_all_partitions(
     optimize_all_partitions_with(profiler_seed, gpu, partitions, comm_group, &engine)
 }
 
-/// The parallel multi-partition MBO engine (§5.1, §6.6): each partition's
-/// optimization runs on its own worker with its own `Profiler` — exactly
-/// the paper's model, where every partition is profiled on a separate GPU,
-/// so thermal state is per-(partition, GPU) and *never* shared across
-/// concurrent optimizations. Every profiler measures through the engine's
-/// [`ExecutionBackend`](crate::backend::ExecutionBackend).
+/// The parallel multi-partition optimization engine (§5.1, §6.6): each
+/// partition's search runs on its own worker with its own `Profiler` —
+/// exactly the paper's model, where every partition is profiled on a
+/// separate GPU, so thermal state is per-(partition, GPU) and *never*
+/// shared across concurrent optimizations. Every profiler measures
+/// through the engine's
+/// [`ExecutionBackend`](crate::backend::ExecutionBackend), and every
+/// search dispatches through the engine's
+/// [`StrategyKind`](crate::mbo::StrategyKind) — multi-pass MBO by
+/// default, exhaustive / random / successive-halving on request.
 ///
 /// Determinism: each partition's seed derives only from `profiler_seed`
 /// and the partition type, never from worker identity or scheduling order,
 /// so results are byte-identical across any thread count. Warm caches are
-/// bit-exact replays (see `tests/engine.rs`).
+/// bit-exact replays (see `tests/engine.rs`); the cache key folds the
+/// strategy fingerprint, so strategies never alias each other's entries.
 pub fn optimize_all_partitions_with(
     profiler_seed: u64,
     gpu: &GpuSpec,
@@ -402,9 +407,16 @@ pub fn optimize_all_partitions_with(
     comm_group: u32,
     engine: &EngineConfig,
 ) -> BTreeMap<String, MboResult> {
-    use crate::mbo::{optimize_partition, MboParams};
+    use crate::mbo::{optimize_partition_with, MboParams};
     use crate::profiler::ProfilerConfig;
     let backend_fp = engine.backend.fingerprint();
+    let strategy_fp = engine.strategy.fingerprint();
+    // Fail fast on an invalid user-settable strategy config (halving
+    // hyperparameters): one clean typed panic here, instead of N worker
+    // panics re-thrown by the pool as an opaque "worker panicked".
+    if let Err(e) = engine.strategy.validate() {
+        panic!("invalid '{}' strategy: {e}", engine.strategy.name());
+    }
     let results: Vec<(String, MboResult)> = crate::util::pool::parallel_map(
         partitions.to_vec(),
         engine.worker_threads(),
@@ -414,14 +426,29 @@ pub fn optimize_all_partitions_with(
             let mut params = MboParams::for_class(part.size_class());
             params.seed = seed;
             let prof_cfg = ProfilerConfig::default();
-            let key = MboCache::key(backend_fp, gpu, &part, comm_group, &params, &prof_cfg);
+            let key = MboCache::key(
+                backend_fp,
+                strategy_fp,
+                gpu,
+                &part,
+                comm_group,
+                &params,
+                &prof_cfg,
+            );
             if let Some(r) = engine.mbo_cache.get(key) {
                 return (part.ptype.clone(), r);
             }
+            // Strategy configs come from the engine (user-settable for
+            // halving); surface the typed validation error verbatim
+            // instead of a generic expect message.
+            let strategy = match engine.strategy.build(params) {
+                Ok(s) => s,
+                Err(e) => panic!("invalid '{}' strategy: {e}", engine.strategy.name()),
+            };
             let mut prof = Profiler::new(gpu.clone(), prof_cfg, seed)
                 .with_cache(engine.measure_cache.clone())
                 .with_backend(engine.backend.clone());
-            let r = optimize_partition(&mut prof, &part, comm_group, &params);
+            let r = optimize_partition_with(strategy.as_ref(), &mut prof, &part, comm_group);
             engine.mbo_cache.put(key, r.clone());
             (part.ptype.clone(), r)
         },

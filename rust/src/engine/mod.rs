@@ -7,10 +7,16 @@
 //! * [`MeasureCache`](crate::profiler::MeasureCache): canonical partition
 //!   executions, pure-function memoization keyed by (GPU, partition
 //!   fingerprint, schedule, temperature, power limit);
-//! * [`MboCache`]: whole per-partition MBO results, keyed by (GPU,
-//!   partition, comm group, hyperparameters, seed) — Table 8's ablations
-//!   and repeated sweep scenarios re-optimize identical partitions, which
-//!   a warm engine replays for free.
+//! * [`MboCache`]: whole per-partition search results, keyed by (backend,
+//!   search strategy, GPU, partition, comm group, hyperparameters, seed) —
+//!   Table 8's ablations and repeated sweep scenarios re-optimize
+//!   identical partitions, which a warm engine replays for free.
+//!
+//! Which search runs per partition is the engine's
+//! [`StrategyKind`](crate::mbo::StrategyKind) — the paper's multi-pass
+//! MBO by default, swappable for the exhaustive oracle, random search, or
+//! successive-halving racing (`--strategy` on the CLI) without touching
+//! any other layer.
 //!
 //! Both layers are exactly semantics-preserving: every MBO trajectory is a
 //! deterministic function of its cache key, so a hit returns bit-identical
@@ -33,7 +39,7 @@ use std::sync::{Arc, Mutex};
 
 use crate::backend::{ExecutionBackend, Measurer, SimBackend};
 use crate::baselines::{run_system_with, System, SystemResult};
-use crate::mbo::{MboParams, MboResult};
+use crate::mbo::{MboParams, MboResult, StrategyKind};
 use crate::partition::Partition;
 use crate::profiler::{MeasureCache, ProfilerConfig};
 use crate::sim::gpu::GpuSpec;
@@ -55,6 +61,12 @@ pub struct EngineConfig {
     /// The measurement source every pipeline layer consults (default:
     /// the simulator; see [`crate::backend`] for trace record/replay).
     pub backend: Arc<dyn ExecutionBackend>,
+    /// The per-partition search strategy
+    /// ([`SearchStrategy`](crate::mbo::SearchStrategy)) the optimization
+    /// layer dispatches through (default: the paper's multi-pass MBO).
+    /// Its fingerprint is folded into every [`MboCache`] key, so results
+    /// from different strategies never alias.
+    pub strategy: StrategyKind,
 }
 
 impl Default for EngineConfig {
@@ -64,6 +76,7 @@ impl Default for EngineConfig {
             measure_cache: MeasureCache::default(),
             mbo_cache: MboCache::default(),
             backend: Arc::new(SimBackend),
+            strategy: StrategyKind::MultiPass,
         }
     }
 }
@@ -86,6 +99,16 @@ impl EngineConfig {
     /// Swap the measurement source (builder style).
     pub fn with_backend(mut self, backend: Arc<dyn ExecutionBackend>) -> Self {
         self.backend = backend;
+        self
+    }
+
+    /// Swap the per-partition search strategy (builder style). Strategy
+    /// configs are validated when the search runs: an invalid
+    /// [`HalvingParams`](crate::mbo::HalvingParams) panics at optimize
+    /// time with the typed
+    /// [`MboParamsError`](crate::mbo::MboParamsError) message.
+    pub fn with_strategy(mut self, strategy: StrategyKind) -> Self {
+        self.strategy = strategy;
         self
     }
 
@@ -117,16 +140,21 @@ impl MboCache {
         Self::default()
     }
 
-    /// Cache key: every input the cached MBO trajectory depends on —
-    /// the measurement backend's identity (`backend_fp`), GPU, partition,
-    /// comm group, MBO hyperparameters (incl. seed), and the profiler
+    /// Cache key: every input the cached trajectory depends on — the
+    /// measurement backend's identity (`backend_fp`), the search
+    /// strategy's identity (`strategy_fp`, covering strategy-specific
+    /// hyperparameters like the halving schedule), GPU, partition, comm
+    /// group, MBO hyperparameters (incl. seed), and the profiler
     /// configuration that shapes each measurement. Folding the backend
-    /// fingerprint in keeps results measured by different sources (sim vs
-    /// a trace) from ever aliasing. Exhaustive destructuring (no `..`)
-    /// turns a future field on either params struct into a compile error
-    /// here instead of a silent stale-cache-hit.
+    /// and strategy fingerprints in keeps results measured by different
+    /// sources (sim vs a trace) or searched by different strategies from
+    /// ever aliasing. Exhaustive destructuring (no `..`) turns a future
+    /// field on either params struct into a compile error here instead of
+    /// a silent stale-cache-hit.
+    #[allow(clippy::too_many_arguments)]
     pub fn key(
         backend_fp: u64,
+        strategy_fp: u64,
         gpu: &GpuSpec,
         part: &Partition,
         comm_group: u32,
@@ -147,6 +175,7 @@ impl MboCache {
         } = params;
         let mut h = Fnv64::new();
         h.write_u64(backend_fp)
+            .write_u64(strategy_fp)
             .write_u64(gpu.fingerprint())
             .write_u64(part.fingerprint())
             .write_u64(comm_group as u64)
@@ -406,7 +435,7 @@ pub fn parse_model(name: &str) -> Option<ModelSpec> {
 }
 
 /// Resolve a CLI system name (`megatron`, `m+p`, `nanobatching`, `n+p`,
-/// `kareus`) to its [`System`].
+/// `kareus`, `kareus-random`) to its [`System`].
 pub fn parse_system(name: &str) -> Option<System> {
     match name {
         "megatron" => Some(System::Megatron),
@@ -414,6 +443,7 @@ pub fn parse_system(name: &str) -> Option<System> {
         "nanobatching" => Some(System::Nanobatching),
         "nanobatching-perseus" | "n+p" => Some(System::NanobatchingPerseus),
         "kareus" => Some(System::Kareus),
+        "kareus-random" | "k+r" => Some(System::KareusRandom),
         _ => None,
     }
 }
@@ -475,5 +505,10 @@ mod tests {
         assert_eq!(e.backend.name(), "sim");
         assert!(e.backend.caps().live);
         assert!(e.measurer().cache.is_some());
+        // The default search strategy is the paper's multi-pass MBO.
+        assert_eq!(e.strategy, StrategyKind::MultiPass);
+        let r = EngineConfig::new().with_strategy(StrategyKind::Random);
+        assert_eq!(r.strategy, StrategyKind::Random);
+        assert_ne!(r.strategy.fingerprint(), e.strategy.fingerprint());
     }
 }

@@ -8,9 +8,12 @@
 //! 1. **profile** — [`workload`] builds kernel sequences, [`partition`]
 //!    detects computation–communication partitions, [`profiler`] measures
 //!    them thermally stably through an [`backend::ExecutionBackend`].
-//! 2. **optimize** — [`mbo`] runs the multi-pass multi-objective Bayesian
-//!    optimization per partition ([`surrogate`] provides the GBDT
-//!    ensemble), fanned out and memoized by [`engine`].
+//! 2. **optimize** — [`mbo`] searches each partition's joint schedule
+//!    space through a pluggable [`mbo::SearchStrategy`] (multi-pass
+//!    multi-objective Bayesian optimization by default; successive-halving
+//!    racing, random search, and the exhaustive oracle as alternatives;
+//!    [`surrogate`] provides the GBDT ensemble), fanned out and memoized
+//!    by [`engine`].
 //! 3. **compose** — [`compose`] builds microbatch frontiers, [`pipeline`]
 //!    composes them into the 1F1B iteration frontier ([`frontier`] holds
 //!    the Pareto machinery); [`baselines`] wraps the whole pipeline per

@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   paper     --exp <id> | --all          regenerate paper tables/figures
 //!   optimize  --model <m> --tp --cp --pp --microbatch --seq [--system <s>]
+//!             [--strategy mbo|exhaustive|random|halving]
 //!             [--deadline S | --budget J | --power-cap W]
 //!   sweep     --gpus a100,h100 --models qwen1.7b,llama3b --pars tp8pp2 …
 //!             [--backend sim|trace:<path>]
@@ -24,6 +25,7 @@ use kareus::engine::{
     parse_model, parse_parallelism, parse_system, run_sweep, scenario_matrix, sweep_json,
     EngineConfig,
 };
+use kareus::mbo::StrategyKind;
 use kareus::paper;
 use kareus::runtime::Runtime;
 use kareus::sim::gpu::GpuSpec;
@@ -44,10 +46,19 @@ fn main() {
         "sweep" => cmd_sweep(&args),
         "cluster" => cmd_cluster(&args),
         "train" => cmd_train(&args),
-        "census" => {
-            println!("{}", paper::run_experiment("appB").unwrap());
-            0
-        }
+        "census" => match paper::run_experiment("appB") {
+            // Propagate through the CLI error path instead of unwrapping:
+            // a missing built-in experiment is an internal error, not a
+            // panic the user has to decode.
+            Some(out) => {
+                println!("{out}");
+                0
+            }
+            None => {
+                eprintln!("internal error: census experiment (appB) is not registered");
+                1
+            }
+        },
         "list" => {
             println!("experiments: {}", paper::ALL_EXPERIMENTS.join(" "));
             0
@@ -57,16 +68,19 @@ fn main() {
                 "kareus — joint dynamic+static energy optimization for large model training\n\
                  usage:\n  kareus paper --exp <id>|--all\n  kareus optimize --model qwen1.7b|llama3b|llama70b \
                  [--tp 8 --cp 1 --pp 2 --microbatch 8 --seq 4096 --nmb 8] [--system kareus] \
+                 [--strategy mbo|exhaustive|random|halving] \
                  [--deadline S|--budget J|--power-cap W]\n  kareus sweep [--gpus a100,h100,v100] [--models qwen1.7b,llama3b] \
                  [--pars tp8pp2,cp2tp4pp2] [--systems kareus,n+p] [--microbatch 8 --seq 4096 --nmb 8] \
-                 [--seed N] [--threads N] [--backend sim|trace:FILE] [--out FILE.json]\n  \
+                 [--seed N] [--threads N] [--strategy S] [--backend sim|trace:FILE] [--out FILE.json]\n  \
                  kareus cluster --jobs gpu:model:par:system[:replicas],… --cap WATTS|--caps 0:W1,T2:W2,… \
-                 [--microbatch 8 --seq 4096 --nmb 8] [--seed N] [--threads N] \
+                 [--microbatch 8 --seq 4096 --nmb 8] [--seed N] [--threads N] [--strategy S] \
                  [--backend sim|trace:FILE] [--out FILE.json]\n  \
                  kareus train --config tiny|e2e --steps 100 [--artifacts artifacts] [--baseline] \
-                 [--backend sim|trace:FILE]\n  \
+                 [--strategy S] [--backend sim|trace:FILE]\n  \
                  kareus census | kareus list\n\
                  \n\
+                 --strategy picks the per-partition search (default mbo: the paper's multi-pass MBO;\n\
+                 halving: successive-halving racing; exhaustive: measure everything; random: baseline).\n\
                  --backend trace:FILE records measurements on the first run (FILE absent) and\n\
                  replays them byte-identically, simulator disabled, on later runs (FILE present)."
             );
@@ -107,15 +121,31 @@ fn cmd_paper(args: &Args) -> i32 {
     }
 }
 
-/// Resolve `--backend` + `--threads` into an engine, plus the trace handle
-/// when a trace backend is active (record mode must be saved afterwards).
+/// Resolve `--strategy` into the engine's per-partition search strategy
+/// (default: the paper's multi-pass MBO).
+fn parse_strategy(args: &Args) -> Result<StrategyKind, String> {
+    // A bare `--strategy` followed by another option parses as a flag;
+    // don't silently fall back to the default search.
+    if args.has_flag("strategy") {
+        return Err("--strategy requires a value (mbo | exhaustive | random | halving)".into());
+    }
+    let spec = args.get("strategy").unwrap_or("mbo");
+    StrategyKind::parse(spec)
+        .ok_or_else(|| format!("unknown strategy '{spec}' (mbo | exhaustive | random | halving)"))
+}
+
+/// Resolve `--backend` + `--threads` + `--strategy` into an engine, plus
+/// the trace handle when a trace backend is active (record mode must be
+/// saved afterwards).
 fn build_engine(args: &Args) -> Result<(EngineConfig, Option<Arc<TraceBackend>>), String> {
     // A bare `--backend` followed by another option parses as a flag;
     // don't silently fall back to the simulator.
     if args.has_flag("backend") {
         return Err("--backend requires a value (sim | trace:<path>)".to_string());
     }
-    let engine = EngineConfig::new().with_threads(args.get_u32("threads", 0) as usize);
+    let engine = EngineConfig::new()
+        .with_threads(args.get_u32("threads", 0) as usize)
+        .with_strategy(parse_strategy(args)?);
     match parse_backend_spec(args.get("backend").unwrap_or("sim"))? {
         BackendSpec::Sim => Ok((engine, None)),
         BackendSpec::Trace(path) => {
@@ -173,8 +203,21 @@ fn cmd_optimize(args: &Args) -> i32 {
             return 2;
         }
     };
-    let coord = Coordinator::new(GpuSpec::a100(), cfg);
-    eprintln!("optimizing {} with {} ...", cfg.label(), system.name());
+    let strategy = match parse_strategy(args) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let coord = Coordinator::new(GpuSpec::a100(), cfg)
+        .with_engine(EngineConfig::new().with_strategy(strategy));
+    eprintln!(
+        "optimizing {} with {} ({} search) ...",
+        cfg.label(),
+        system.name(),
+        strategy.name()
+    );
     let result = coord.optimize(system, args.get_u32("seed", 2026) as u64);
     let target = if let Some(d) = args.get("deadline") {
         Target::Deadline(d.parse().unwrap_or(f64::INFINITY))

@@ -1,0 +1,378 @@
+//! Shared evaluation state for pluggable search strategies.
+//!
+//! Every [`SearchStrategy`](super::SearchStrategy) optimizes one partition
+//! through an [`EvalContext`]: it owns the candidate space, the three
+//! incremental objective [`Planes`], the chosen-candidate bitmap, the
+//! evaluation history, and the profiling/surrogate cost accounting — so a
+//! strategy only decides *which* candidate to evaluate next (and at what
+//! fidelity), never how measurements are taken, deduplicated, or folded
+//! into the result frontier. The [`EvalBudget`] makes the stopping rules
+//! (measurement ceiling + Appendix C relative-HV convergence) first-class
+//! instead of burying them in a batch loop.
+
+use crate::frontier::{Frontier, Point};
+use crate::partition::Partition;
+use crate::profiler::{Measurement, Profiler, ProfilerConfig};
+use crate::sim::exec::Schedule;
+use crate::sim::gpu::GpuSpec;
+
+use super::{space, Evaluated, MboParams, MboResult, Pass};
+
+/// The three objective planes of §4.3 (total / dynamic / static energy vs
+/// time), maintained *incrementally*: every measurement is inserted into
+/// each plane's frontier as it lands, and the worst observed coordinates
+/// are tracked alongside, so strategies never rebuild a frontier (or its
+/// reference point) from the full evaluation history.
+#[derive(Clone, Debug)]
+pub struct Planes {
+    pub f_tot: Frontier,
+    pub f_dyn: Frontier,
+    pub f_stat: Frontier,
+    pub p_static: f64,
+    pub t_max: f64,
+    pub e_tot_max: f64,
+    pub e_dyn_max: f64,
+}
+
+impl Planes {
+    pub fn new(p_static: f64) -> Self {
+        Planes {
+            f_tot: Frontier::new(),
+            f_dyn: Frontier::new(),
+            f_stat: Frontier::new(),
+            p_static,
+            t_max: f64::NEG_INFINITY,
+            e_tot_max: f64::NEG_INFINITY,
+            e_dyn_max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Fold measurement `i` into all three planes.
+    pub fn observe(&mut self, i: usize, m: &Measurement) {
+        self.f_tot.insert(Point::new(m.time_s, m.energy_j, i));
+        self.f_dyn.insert(Point::new(m.time_s, m.dyn_j, i));
+        self.f_stat.insert(Point::new(m.time_s, m.time_s * self.p_static, i));
+        self.t_max = self.t_max.max(m.time_s);
+        self.e_tot_max = self.e_tot_max.max(m.energy_j);
+        self.e_dyn_max = self.e_dyn_max.max(m.dyn_j);
+    }
+
+    /// Reference points for (total, dynamic, static), all derived through
+    /// the one canonical `Frontier::reference_of` rule (Appendix C: 1.1 ×
+    /// the worst observed coordinates). On the static plane energy is
+    /// time × P_static, so its worst energy is exactly `t_max · P_static`.
+    pub fn references(&self) -> ((f64, f64), (f64, f64), (f64, f64)) {
+        let of = |e_max: f64| Frontier::reference_of(&[Point::new(self.t_max, e_max, 0)]);
+        (of(self.e_tot_max), of(self.e_dyn_max), of(self.t_max * self.p_static))
+    }
+}
+
+/// First-class evaluation budget: a measurement ceiling plus the
+/// Appendix C stopping rule (moving average of relative HV improvement
+/// over the last `r_window` recorded batches below `eps`). Previously
+/// buried in the multi-pass batch loop; now every strategy consults the
+/// same object.
+///
+/// The ceiling is *consulted, not enforced*: strategies query
+/// [`exhausted`](Self::exhausted)/[`remaining`](Self::remaining) and
+/// decide when to stop, while [`EvalContext::measure`] never drops a
+/// requested measurement. Enforcing the cap inside `measure` would
+/// silently change byte-level trajectories for hyperparameters whose own
+/// arithmetic can legitimately overshoot it (e.g. extreme `pass_fracs`
+/// in the multi-pass batch selection) — and bit-parity with the
+/// specification is this layer's load-bearing contract.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EvalBudget {
+    /// Ceiling on full-fidelity measurements that budget-driven
+    /// strategies consult (`usize::MAX` = unbounded).
+    pub max_measurements: usize,
+    /// HV-convergence window (batches); `usize::MAX` disables the rule.
+    pub r_window: usize,
+    /// Relative HV-improvement threshold.
+    pub eps: f64,
+}
+
+impl EvalBudget {
+    /// No ceiling, no convergence rule (the exhaustive oracle's budget).
+    pub fn unbounded() -> Self {
+        EvalBudget { max_measurements: usize::MAX, r_window: usize::MAX, eps: 0.0 }
+    }
+
+    /// The budget implied by a set of MBO hyperparameters: at most the
+    /// initial design plus `b_max` full batches, stopping early on HV
+    /// convergence.
+    pub fn from_params(p: &MboParams) -> Self {
+        EvalBudget {
+            max_measurements: p.n_init.saturating_add(p.b_max.saturating_mul(p.batch_k)),
+            r_window: p.r_window,
+            eps: p.eps,
+        }
+    }
+
+    pub fn exhausted(&self, used: usize) -> bool {
+        used >= self.max_measurements
+    }
+
+    pub fn remaining(&self, used: usize) -> usize {
+        self.max_measurements.saturating_sub(used)
+    }
+
+    /// Appendix C stopping: true once the moving average of relative HV
+    /// improvement over the last `r_window` entries of `hist` drops below
+    /// `eps`. Needs more than `r_window` recorded batches to trigger.
+    pub fn hv_converged(&self, hist: &[f64]) -> bool {
+        if self.r_window == 0 || hist.len() <= self.r_window {
+            return false;
+        }
+        let w = self.r_window;
+        let hv = hist[hist.len() - 1];
+        let prev = hist[hist.len() - 1 - w];
+        let delta = (hv - prev) / prev.max(1e-12) / w as f64;
+        delta < self.eps
+    }
+}
+
+/// Per-partition evaluation state shared by every search strategy: the
+/// candidate space, the incremental objective planes, the dedup bitmap,
+/// the evaluation history, and the cost accounting. Strategies interact
+/// with it through [`measure`](Self::measure) (full-fidelity, lands in the
+/// result) and [`probe`](Self::probe) (cheap screening, charged to the
+/// profiling bill but kept out of the result frontier).
+pub struct EvalContext<'a> {
+    profiler: &'a mut Profiler,
+    part: &'a Partition,
+    comm_group: u32,
+    space: Vec<Schedule>,
+    planes: Planes,
+    evaluated: Vec<Evaluated>,
+    chosen: Vec<bool>,
+    part_fp: u64,
+    budget: EvalBudget,
+    hv_history: Vec<f64>,
+    surrogate_cost_s: f64,
+    /// Profiling seconds charged by low-fidelity probes (not represented
+    /// in `evaluated`, but still real measurement time §6.6 must count).
+    probe_cost_s: f64,
+}
+
+impl<'a> EvalContext<'a> {
+    /// Build the context for one (partition, comm group) on a profiler:
+    /// enumerates the candidate space and hoists the partition fingerprint
+    /// so strategies never rehash kernels per probe.
+    pub fn new(profiler: &'a mut Profiler, part: &'a Partition, comm_group: u32) -> Self {
+        let space = space::candidate_space(&profiler.gpu, part, comm_group);
+        let n = space.len();
+        let planes = Planes::new(profiler.gpu.static_w);
+        let part_fp = part.fingerprint();
+        EvalContext {
+            profiler,
+            part,
+            comm_group,
+            space,
+            planes,
+            evaluated: Vec::new(),
+            chosen: vec![false; n],
+            part_fp,
+            budget: EvalBudget::unbounded(),
+            hv_history: Vec::new(),
+            surrogate_cost_s: 0.0,
+            probe_cost_s: 0.0,
+        }
+    }
+
+    pub fn gpu(&self) -> &GpuSpec {
+        &self.profiler.gpu
+    }
+
+    pub fn part(&self) -> &Partition {
+        self.part
+    }
+
+    pub fn comm_group(&self) -> u32 {
+        self.comm_group
+    }
+
+    /// The enumerated candidate schedules (immutable for the whole run).
+    pub fn space(&self) -> &[Schedule] {
+        &self.space
+    }
+
+    pub fn n_candidates(&self) -> usize {
+        self.space.len()
+    }
+
+    /// True once candidate `idx` has been measured at full fidelity.
+    pub fn is_chosen(&self, idx: usize) -> bool {
+        self.chosen[idx]
+    }
+
+    /// Full-fidelity measurements taken so far.
+    pub fn measured(&self) -> usize {
+        self.evaluated.len()
+    }
+
+    pub fn evaluated(&self) -> &[Evaluated] {
+        &self.evaluated
+    }
+
+    pub fn planes(&self) -> &Planes {
+        &self.planes
+    }
+
+    pub fn budget(&self) -> EvalBudget {
+        self.budget
+    }
+
+    pub fn set_budget(&mut self, budget: EvalBudget) {
+        self.budget = budget;
+    }
+
+    pub fn hv_history(&self) -> &[f64] {
+        &self.hv_history
+    }
+
+    /// Measure candidate `idx` at full fidelity: marks it chosen, folds the
+    /// measurement into all three planes, and appends it to the evaluation
+    /// history that the result frontier tags index into.
+    pub fn measure(&mut self, idx: usize, pass: Pass) -> Measurement {
+        self.chosen[idx] = true;
+        let m = self.profiler.measure_fp(self.part, self.part_fp, &self.space[idx]);
+        self.planes.observe(self.evaluated.len(), &m);
+        self.evaluated.push(Evaluated { sched: self.space[idx], m, pass });
+        m
+    }
+
+    /// Cheap screening measurement of candidate `idx` at a fraction of the
+    /// full profiling schedule (window, warm-up, cooldown, and setup all
+    /// scaled by `fidelity`). Shorter windows alias against the energy
+    /// counter's 100 ms publication cadence (Figure 12a), so probes are
+    /// noisy by construction — racing strategies screen with them and
+    /// re-measure survivors through [`measure`](Self::measure). The probe
+    /// is charged to the profiling bill but never enters `evaluated`, the
+    /// planes, or the dedup bitmap.
+    pub fn probe(&mut self, idx: usize, fidelity: f64) -> Measurement {
+        let full = self.profiler.config.clone();
+        let f = fidelity.clamp(0.01, 1.0);
+        self.profiler.config = ProfilerConfig {
+            window_s: full.window_s * f,
+            cooldown_s: full.cooldown_s * f,
+            warmup_s: full.warmup_s * f,
+            setup_s: full.setup_s * f,
+        };
+        let m = self.profiler.measure_fp(self.part, self.part_fp, &self.space[idx]);
+        self.profiler.config = full;
+        self.probe_cost_s += m.profiling_cost_s;
+        m
+    }
+
+    /// Real wall-clock spent in surrogate training + acquisition.
+    pub fn charge_surrogate(&mut self, seconds: f64) {
+        self.surrogate_cost_s += seconds;
+    }
+
+    /// Record the current dominated HV of the total-energy plane (w.r.t.
+    /// the Appendix C reference over the worst observed coordinates) into
+    /// the trajectory; returns the recorded value.
+    pub fn record_hv(&mut self) -> f64 {
+        let (r_now, _, _) = self.planes.references();
+        let hv = self.planes.f_tot.hypervolume(r_now);
+        self.hv_history.push(hv);
+        hv
+    }
+
+    /// True once the budget's HV-convergence rule fires on the recorded
+    /// trajectory.
+    pub fn hv_converged(&self) -> bool {
+        self.budget.hv_converged(&self.hv_history)
+    }
+
+    /// Package the accumulated state into an [`MboResult`]. The
+    /// total-energy plane *is* the result frontier — built incrementally,
+    /// never rebuilt from the history.
+    pub fn finish(&mut self) -> MboResult {
+        let evaluated = std::mem::take(&mut self.evaluated);
+        let frontier = std::mem::take(&mut self.planes.f_tot);
+        let profiling_cost_s =
+            evaluated.iter().map(|e| e.m.profiling_cost_s).sum::<f64>() + self.probe_cost_s;
+        MboResult {
+            evaluated,
+            frontier,
+            n_candidates: self.space.len(),
+            hv_history: std::mem::take(&mut self.hv_history),
+            profiling_cost_s,
+            surrogate_cost_s: self.surrogate_cost_s,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::kernel::{Kernel, KernelKind};
+
+    fn part() -> Partition {
+        Partition {
+            ptype: "fwd/attn".into(),
+            comps: vec![
+                Kernel::comp("norm", KernelKind::Norm, 1e8, 8e8),
+                Kernel::comp("linear", KernelKind::Linear, 5e11, 2.5e9),
+            ],
+            comm: Some(Kernel::comm("ar", KernelKind::AllReduce, 5e8)),
+            count: 28,
+        }
+    }
+
+    #[test]
+    fn budget_rules() {
+        let b = EvalBudget { max_measurements: 10, r_window: 2, eps: 1e-3 };
+        assert!(!b.exhausted(9));
+        assert!(b.exhausted(10));
+        assert_eq!(b.remaining(4), 6);
+        // Convergence needs more than r_window entries.
+        assert!(!b.hv_converged(&[1.0, 1.0]));
+        assert!(b.hv_converged(&[1.0, 1.0, 1.0]));
+        assert!(!b.hv_converged(&[1.0, 2.0, 4.0]));
+        // Unbounded budgets never stop.
+        let u = EvalBudget::unbounded();
+        assert!(!u.exhausted(usize::MAX - 1));
+        assert!(!u.hv_converged(&[1.0; 64]));
+    }
+
+    #[test]
+    fn probe_charges_less_than_measure() {
+        let gpu = GpuSpec::a100();
+        let mut prof = Profiler::new(gpu, ProfilerConfig::default(), 1);
+        let p = part();
+        let mut ctx = EvalContext::new(&mut prof, &p, 8);
+        let cheap = ctx.probe(0, 1.0 / 16.0);
+        let full = ctx.measure(0, Pass::Init);
+        assert!(cheap.profiling_cost_s < full.profiling_cost_s / 10.0);
+        assert!(cheap.time_s > 0.0 && cheap.energy_j > 0.0);
+        // Probes stay out of the evaluation history but on the bill.
+        assert_eq!(ctx.measured(), 1);
+        let r = ctx.finish();
+        let full_only: f64 = r.evaluated.iter().map(|e| e.m.profiling_cost_s).sum();
+        assert!(r.profiling_cost_s > full_only);
+    }
+
+    #[test]
+    fn measure_is_deduplicated_and_observed() {
+        let gpu = GpuSpec::a100();
+        let mut prof = Profiler::new(gpu, ProfilerConfig::default(), 2);
+        let p = part();
+        let mut ctx = EvalContext::new(&mut prof, &p, 8);
+        assert!(!ctx.is_chosen(3));
+        ctx.measure(3, Pass::Init);
+        assert!(ctx.is_chosen(3));
+        assert_eq!(ctx.planes().f_tot.len(), 1);
+        let hv0 = ctx.record_hv();
+        assert!(hv0 >= 0.0);
+        let r = ctx.finish();
+        assert_eq!(r.evaluated.len(), 1);
+        assert_eq!(r.n_candidates, ctx_space_len(&p));
+    }
+
+    fn ctx_space_len(p: &Partition) -> usize {
+        space::candidate_space(&GpuSpec::a100(), p, 8).len()
+    }
+}

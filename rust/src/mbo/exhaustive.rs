@@ -11,7 +11,7 @@ use crate::partition::Partition;
 use crate::profiler::Profiler;
 use crate::sim::gpu::GpuSpec;
 
-use super::space;
+use super::{space, MboResult};
 
 /// Evaluate every candidate with the noise-free oracle; return the true
 /// frontier on the (time, total energy) plane.
@@ -26,6 +26,26 @@ pub fn exhaustive_frontier(gpu: &GpuSpec, part: &Partition, comm_group: u32) -> 
         })
         .collect();
     Frontier::from_points(pts)
+}
+
+/// Noise-free re-evaluation of a search result's frontier schedules —
+/// the fair quality view for oracle comparisons (measured values carry
+/// load-temperature leakage and counter noise that the oracle does not).
+/// One definition shared by the strategy ablation (`paper --exp
+/// strategies`) and the quality bounds in `tests/strategy.rs`, so the
+/// published table and the CI guarantee measure the same quantity.
+pub fn true_frontier(gpu: &GpuSpec, part: &Partition, r: &MboResult) -> Frontier {
+    Frontier::from_points(
+        r.frontier
+            .points()
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                let m = Profiler::true_eval(gpu, part, &r.evaluated[p.tag].sched);
+                Point::new(m.time_s, m.energy_j, i)
+            })
+            .collect(),
+    )
 }
 
 /// Appendix B census of the *global* (un-partitioned) solution space for a

@@ -1,28 +1,47 @@
-//! Multi-pass multi-objective Bayesian optimization (§4.3, Algorithm 1).
+//! Per-partition schedule optimization (§4.3, Algorithm 1) behind a
+//! pluggable [`SearchStrategy`] layer.
 //!
-//! Two GBDT surrogates (time, dynamic energy), three hypervolume-
-//! improvement exploitation passes (total / dynamic / static energy) that
-//! expand the frontier in complementary directions (Figure 7), plus one
-//! bootstrap-ensemble uncertainty exploration pass. Hyperparameters follow
-//! Appendix C (sample sizes by partition size class, pass proportions
-//! 0.4/0.2/0.2/0.2, stopping on relative HV improvement).
+//! The module is split along the strategy seam:
 //!
-//! The optimizer is measurement-source agnostic: every candidate is
-//! profiled through the [`Profiler`], whose canonical executions flow
-//! through its configured
-//! [`ExecutionBackend`](crate::backend::ExecutionBackend) — simulator by
-//! default, trace record/replay (or a future hardware backend) without
-//! any change here.
+//! * [`space`] — the joint (frequency × SM × launch-timing) candidate
+//!   space (§4.1, Appendix C ranges);
+//! * [`context`] — the shared [`EvalContext`] every strategy drives: the
+//!   candidate space, the three incremental objective [`Planes`], the
+//!   dedup bitmap, the profiling/surrogate cost accounting, and the
+//!   first-class [`EvalBudget`] stopping rules;
+//! * [`strategy`] — the [`SearchStrategy`] trait, the engine-facing
+//!   [`StrategyKind`] selector, and the [`ExhaustiveStrategy`] oracle;
+//! * [`multipass`] — the paper's multi-pass MBO ([`MultiPassMbo`]), the
+//!   default strategy (byte-identical to the pre-refactor monolith);
+//! * [`racing`] — [`RandomSearch`] (ablation baseline) and
+//!   [`SuccessiveHalving`] (cheap screening + full re-measurement of
+//!   survivors);
+//! * [`exhaustive`] — the noise-free oracle frontier and the Appendix B
+//!   census (test/report machinery, distinct from [`ExhaustiveStrategy`],
+//!   which measures through the profiler like every other strategy).
+//!
+//! Every strategy is measurement-source agnostic: candidates are profiled
+//! through the [`Profiler`], whose canonical executions flow through its
+//! configured [`ExecutionBackend`](crate::backend::ExecutionBackend) —
+//! simulator by default, trace record/replay (or a future hardware
+//! backend) without any change here.
 
+pub mod context;
 pub mod exhaustive;
+pub mod multipass;
+pub mod racing;
 pub mod space;
+pub mod strategy;
 
-use crate::frontier::{Frontier, Point};
+pub use context::{EvalBudget, EvalContext, Planes};
+pub use multipass::MultiPassMbo;
+pub use racing::{HalvingParams, RandomSearch, SuccessiveHalving};
+pub use strategy::{optimize_partition_with, ExhaustiveStrategy, SearchStrategy, StrategyKind};
+
+use crate::frontier::Frontier;
 use crate::partition::{Partition, SizeClass};
 use crate::profiler::{Measurement, Profiler};
 use crate::sim::exec::Schedule;
-use crate::surrogate::{Ensemble, EnsembleParams, Gbdt, GbdtParams};
-use crate::util::rng::Rng;
 
 /// Which selection pass discovered a candidate (§6.6 attribution stats).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -32,6 +51,8 @@ pub enum Pass {
     Dynamic,
     Static,
     Uncertainty,
+    /// Survivor of a racing strategy's screening rounds.
+    Racing,
 }
 
 #[derive(Clone, Debug)]
@@ -58,6 +79,58 @@ pub struct MboParams {
     pub seed: u64,
 }
 
+/// A rejected [`MboParams`] / [`HalvingParams`] configuration. Raised at
+/// *strategy construction* ([`MultiPassMbo::new`] and friends), because
+/// the failure modes are silent at run time: pass fractions summing past
+/// 1.0 underflow the uncertainty pass's share, and a zero batch or
+/// initial-design size loops without progress.
+#[derive(Clone, Debug, PartialEq)]
+pub enum MboParamsError {
+    /// `pass_fracs` must be non-negative and finite.
+    BadPassFrac { index: usize, value: f64 },
+    /// `pass_fracs` must sum to at most 1.0 (the remainder funds the
+    /// uncertainty pass).
+    PassFracsExceedOne { sum: f64 },
+    /// `n_init == 0`: the surrogates would train on an empty design.
+    ZeroInit,
+    /// `batch_k == 0`: every batch would select nothing useful.
+    ZeroBatchK,
+    /// `ensemble_size == 0`: uncertainty estimates would be NaN.
+    ZeroEnsemble,
+    /// `bootstrap_fraction` must lie in (0, 1].
+    BadBootstrapFraction { value: f64 },
+    /// `r_window == 0`: the stopping rule would divide by zero.
+    ZeroWindow,
+    /// `eps` must be finite.
+    BadEps { value: f64 },
+    /// Invalid [`HalvingParams`] (racing strategy).
+    BadHalving(&'static str),
+}
+
+impl std::fmt::Display for MboParamsError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MboParamsError::BadPassFrac { index, value } => {
+                write!(f, "pass_fracs[{index}] = {value} must be finite and >= 0")
+            }
+            MboParamsError::PassFracsExceedOne { sum } => {
+                write!(f, "pass_fracs sum to {sum} > 1.0 (uncertainty share underflows)")
+            }
+            MboParamsError::ZeroInit => write!(f, "n_init must be >= 1"),
+            MboParamsError::ZeroBatchK => write!(f, "batch_k must be >= 1"),
+            MboParamsError::ZeroEnsemble => write!(f, "ensemble_size must be >= 1"),
+            MboParamsError::BadBootstrapFraction { value } => {
+                write!(f, "bootstrap_fraction = {value} must be in (0, 1]")
+            }
+            MboParamsError::ZeroWindow => write!(f, "r_window must be >= 1"),
+            MboParamsError::BadEps { value } => write!(f, "eps = {value} must be finite"),
+            MboParamsError::BadHalving(reason) => write!(f, "halving params: {reason}"),
+        }
+    }
+}
+
+impl std::error::Error for MboParamsError {}
+
 impl MboParams {
     /// Appendix C settings by partition size class.
     pub fn for_class(class: SizeClass) -> Self {
@@ -78,6 +151,39 @@ impl MboParams {
             seed: 0,
         }
     }
+
+    /// Reject configurations whose failure modes are silent at run time
+    /// (see [`MboParamsError`]). Called by every strategy constructor.
+    pub fn validate(&self) -> Result<(), MboParamsError> {
+        for (index, &value) in self.pass_fracs.iter().enumerate() {
+            if !value.is_finite() || value < 0.0 {
+                return Err(MboParamsError::BadPassFrac { index, value });
+            }
+        }
+        let sum: f64 = self.pass_fracs.iter().sum();
+        if sum > 1.0 {
+            return Err(MboParamsError::PassFracsExceedOne { sum });
+        }
+        if self.n_init == 0 {
+            return Err(MboParamsError::ZeroInit);
+        }
+        if self.batch_k == 0 {
+            return Err(MboParamsError::ZeroBatchK);
+        }
+        if self.ensemble_size == 0 {
+            return Err(MboParamsError::ZeroEnsemble);
+        }
+        if !(self.bootstrap_fraction > 0.0 && self.bootstrap_fraction <= 1.0) {
+            return Err(MboParamsError::BadBootstrapFraction { value: self.bootstrap_fraction });
+        }
+        if self.r_window == 0 {
+            return Err(MboParamsError::ZeroWindow);
+        }
+        if !self.eps.is_finite() {
+            return Err(MboParamsError::BadEps { value: self.eps });
+        }
+        Ok(())
+    }
 }
 
 #[derive(Clone, Debug)]
@@ -90,7 +196,8 @@ pub struct MboResult {
     pub n_candidates: usize,
     /// Dominated-HV trajectory after each batch (total-energy plane).
     pub hv_history: Vec<f64>,
-    /// Simulated profiling wall-clock charged to this partition (s).
+    /// Simulated profiling wall-clock charged to this partition (s) —
+    /// full-fidelity measurements plus any low-fidelity screening probes.
     pub profiling_cost_s: f64,
     /// Real wall-clock spent in surrogate training + acquisition (s).
     pub surrogate_cost_s: f64,
@@ -105,6 +212,7 @@ impl MboResult {
             (Pass::Dynamic, 0),
             (Pass::Static, 0),
             (Pass::Uncertainty, 0),
+            (Pass::Racing, 0),
         ];
         for p in self.frontier.points() {
             let pass = self.evaluated[p.tag].pass;
@@ -118,215 +226,26 @@ impl MboResult {
     }
 }
 
-/// The three objective planes of §4.3 (total / dynamic / static energy vs
-/// time), maintained *incrementally*: every measurement is inserted into
-/// each plane's frontier as it lands, and the worst observed coordinates
-/// are tracked alongside, so the batch loop never rebuilds a frontier (or
-/// its reference point) from the full evaluation history.
-struct Planes {
-    f_tot: Frontier,
-    f_dyn: Frontier,
-    f_stat: Frontier,
-    p_static: f64,
-    t_max: f64,
-    e_tot_max: f64,
-    e_dyn_max: f64,
-}
-
-impl Planes {
-    fn new(p_static: f64) -> Self {
-        Planes {
-            f_tot: Frontier::new(),
-            f_dyn: Frontier::new(),
-            f_stat: Frontier::new(),
-            p_static,
-            t_max: f64::NEG_INFINITY,
-            e_tot_max: f64::NEG_INFINITY,
-            e_dyn_max: f64::NEG_INFINITY,
-        }
-    }
-
-    /// Fold measurement `i` into all three planes.
-    fn observe(&mut self, i: usize, m: &Measurement) {
-        self.f_tot.insert(Point::new(m.time_s, m.energy_j, i));
-        self.f_dyn.insert(Point::new(m.time_s, m.dyn_j, i));
-        self.f_stat.insert(Point::new(m.time_s, m.time_s * self.p_static, i));
-        self.t_max = self.t_max.max(m.time_s);
-        self.e_tot_max = self.e_tot_max.max(m.energy_j);
-        self.e_dyn_max = self.e_dyn_max.max(m.dyn_j);
-    }
-
-    /// Reference points for (total, dynamic, static), all derived through
-    /// the one canonical `Frontier::reference_of` rule (Appendix C: 1.1 ×
-    /// the worst observed coordinates). On the static plane energy is
-    /// time × P_static, so its worst energy is exactly `t_max · P_static`.
-    fn references(&self) -> ((f64, f64), (f64, f64), (f64, f64)) {
-        let of = |e_max: f64| Frontier::reference_of(&[Point::new(self.t_max, e_max, 0)]);
-        (of(self.e_tot_max), of(self.e_dyn_max), of(self.t_max * self.p_static))
-    }
-}
-
-/// Algorithm 1: multi-pass MBO for one partition.
+/// Algorithm 1: multi-pass MBO for one partition — the pre-refactor entry
+/// point, now a thin wrapper over [`MultiPassMbo`] through the strategy
+/// seam (byte-identical results for identical `params`).
+///
+/// Panics on invalid `params`; construct a [`MultiPassMbo`] directly to
+/// handle [`MboParamsError`] instead.
 pub fn optimize_partition(
     profiler: &mut Profiler,
     part: &Partition,
     comm_group: u32,
     params: &MboParams,
 ) -> MboResult {
-    let gpu = profiler.gpu.clone();
-    let space = space::candidate_space(&gpu, part, comm_group);
-    let n = space.len();
-    let mut rng = Rng::new(params.seed ^ 0x5eed);
-    let mut evaluated: Vec<Evaluated> = Vec::new();
-    let mut chosen = vec![false; n];
-    let mut surrogate_cost = 0.0f64;
-    let mut planes = Planes::new(gpu.static_w);
-    // Hoisted: the cache probe inside every measurement keys on this.
-    let part_fp = part.fingerprint();
-
-    let eval = |idx: usize,
-                    pass: Pass,
-                    profiler: &mut Profiler,
-                    evaluated: &mut Vec<Evaluated>,
-                    chosen: &mut Vec<bool>,
-                    planes: &mut Planes| {
-        chosen[idx] = true;
-        let m = profiler.measure_fp(part, part_fp, &space[idx]);
-        planes.observe(evaluated.len(), &m);
-        evaluated.push(Evaluated { sched: space[idx], m, pass });
-    };
-
-    // --- Initial random design ------------------------------------------
-    let n_init = params.n_init.min(n);
-    for idx in rng.sample_indices(n, n_init) {
-        eval(idx, Pass::Init, profiler, &mut evaluated, &mut chosen, &mut planes);
-    }
-
-    let mut hv_history: Vec<f64> = Vec::new();
-    let exhausted = n_init >= n;
-
-    if !exhausted {
-        for _batch in 0..params.b_max {
-            let t0 = std::time::Instant::now();
-            // ---- Train surrogates on D --------------------------------
-            let x: Vec<Vec<f64>> = evaluated.iter().map(|e| space::features(&e.sched)).collect();
-            let y_t: Vec<f64> = evaluated.iter().map(|e| e.m.time_s).collect();
-            let y_e: Vec<f64> = evaluated.iter().map(|e| e.m.dyn_j).collect();
-            let gp = GbdtParams { seed: params.seed, subsample: 1.0, ..Default::default() };
-            let t_hat = Gbdt::fit(&x, &y_t, &gp);
-            let e_hat = Gbdt::fit(&x, &y_e, &gp);
-            let ens_p = EnsembleParams {
-                size: params.ensemble_size,
-                bootstrap_fraction: params.bootstrap_fraction,
-                gbdt: GbdtParams {
-                    seed: params.seed ^ 0xE45,
-                    subsample: 0.8,
-                    ..Default::default()
-                },
-            };
-            let t_ens = Ensemble::fit(&x, &y_t, &ens_p);
-            let e_ens = Ensemble::fit(&x, &y_e, &ens_p);
-
-            // ---- Current frontiers on each objective plane -------------
-            // Maintained incrementally by `planes` as measurements land;
-            // the references all follow Appendix C's 1.1× rule.
-            let p_static = gpu.static_w;
-            let (r_tot, r_dyn, r_stat) = planes.references();
-
-            // ---- Score all unevaluated candidates ----------------------
-            // (idx, hvi_tot, hvi_dyn, hvi_stat, unc) per candidate.
-            let mut cand: Vec<(usize, f64, f64, f64, f64)> = Vec::new();
-            for (idx, s) in space.iter().enumerate() {
-                if chosen[idx] {
-                    continue;
-                }
-                let feats = space::features(s);
-                let th = t_hat.predict(&feats).max(1e-9);
-                let eh = e_hat.predict(&feats).max(0.0);
-                let hvi_tot = planes.f_tot.hvi((th, th * p_static + eh), r_tot);
-                let hvi_dyn = planes.f_dyn.hvi((th, eh), r_dyn);
-                let hvi_stat = planes.f_stat.hvi((th, th * p_static), r_stat);
-                let (_, st) = t_ens.predict(&feats);
-                let (_, se) = e_ens.predict(&feats);
-                // Sum of per-objective std deviations (§4.3.2).
-                let unc = st / y_t.iter().sum::<f64>().max(1e-12) * y_t.len() as f64
-                    + se / y_e.iter().sum::<f64>().max(1e-12) * y_e.len() as f64;
-                cand.push((idx, hvi_tot, hvi_dyn, hvi_stat, unc));
-            }
-            surrogate_cost += t0.elapsed().as_secs_f64();
-            if cand.is_empty() {
-                break;
-            }
-
-            // ---- Multi-pass candidate selection ------------------------
-            let k = params.batch_k.min(cand.len());
-            let k1 = ((k as f64 * params.pass_fracs[0]).round() as usize).max(1);
-            let k2 = ((k as f64 * params.pass_fracs[1]).round() as usize).max(1);
-            let k3 = ((k as f64 * params.pass_fracs[2]).round() as usize).max(1);
-            let mut picked: Vec<(usize, Pass)> = Vec::new();
-            let mut taken = vec![false; n];
-            let top_by = |key: usize,
-                          count: usize,
-                          pass: Pass,
-                          picked: &mut Vec<(usize, Pass)>,
-                          taken: &mut Vec<bool>| {
-                let mut order: Vec<&(usize, f64, f64, f64, f64)> =
-                    cand.iter().filter(|c| !taken[c.0]).collect();
-                order.sort_by(|a, b| {
-                    let va = [a.1, a.2, a.3, a.4][key];
-                    let vb = [b.1, b.2, b.3, b.4][key];
-                    vb.partial_cmp(&va).unwrap()
-                });
-                for c in order.into_iter().take(count) {
-                    taken[c.0] = true;
-                    picked.push((c.0, pass));
-                }
-            };
-            top_by(0, k1, Pass::Total, &mut picked, &mut taken);
-            top_by(1, k2, Pass::Dynamic, &mut picked, &mut taken);
-            top_by(2, k3, Pass::Static, &mut picked, &mut taken);
-            let rest = k.saturating_sub(picked.len());
-            top_by(3, rest, Pass::Uncertainty, &mut picked, &mut taken);
-
-            // ---- Evaluate the batch ------------------------------------
-            for (idx, pass) in picked {
-                eval(idx, pass, profiler, &mut evaluated, &mut chosen, &mut planes);
-            }
-
-            // ---- Stopping: relative HV improvement ---------------------
-            // The total-energy plane already reflects the new batch; its
-            // reference tracks the worst coordinates seen so far.
-            let (r_now, _, _) = planes.references();
-            let hv = planes.f_tot.hypervolume(r_now);
-            hv_history.push(hv);
-            if hv_history.len() > params.r_window {
-                let w = params.r_window;
-                let prev = hv_history[hv_history.len() - 1 - w];
-                let delta = (hv - prev) / prev.max(1e-12) / w as f64;
-                if delta < params.eps {
-                    break;
-                }
-            }
-        }
-    }
-
-    // The total-energy plane *is* the result frontier — built once,
-    // incrementally, instead of a final from_points rebuild.
-    let frontier = planes.f_tot;
-    let profiling_cost_s = evaluated.iter().map(|e| e.m.profiling_cost_s).sum();
-    MboResult {
-        evaluated,
-        frontier,
-        n_candidates: n,
-        hv_history,
-        profiling_cost_s,
-        surrogate_cost_s: surrogate_cost,
-    }
+    let strategy = MultiPassMbo::new(params.clone()).expect("invalid MboParams");
+    optimize_partition_with(&strategy, profiler, part, comm_group)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::frontier::Point;
     use crate::profiler::ProfilerConfig;
     use crate::sim::gpu::GpuSpec;
     use crate::sim::kernel::{Kernel, KernelKind};
@@ -371,21 +290,7 @@ mod tests {
         // Fair comparison: re-evaluate the schedules MBO selected with the
         // noise-free oracle (measured values carry load-temperature
         // leakage and counter noise that the oracle does not).
-        let mbo_true = Frontier::from_points(
-            r.frontier
-                .points()
-                .iter()
-                .enumerate()
-                .map(|(i, p)| {
-                    let m = crate::profiler::Profiler::true_eval(
-                        &gpu,
-                        &part,
-                        &r.evaluated[p.tag].sched,
-                    );
-                    Point::new(m.time_s, m.energy_j, i)
-                })
-                .collect(),
-        );
+        let mbo_true = exhaustive::true_frontier(&gpu, &part, &r);
         let mut all: Vec<Point> = oracle.points().to_vec();
         all.extend(mbo_true.points().iter().copied());
         let rref = Frontier::reference_of(&all);
@@ -443,6 +348,32 @@ mod tests {
     }
 
     #[test]
+    fn wrapper_and_trait_path_are_byte_identical() {
+        // The load-bearing parity constraint of the strategy refactor: the
+        // legacy entry point and explicit trait dispatch must produce the
+        // same bits.
+        let gpu = GpuSpec::a100();
+        let part = test_partition();
+        let mut params = MboParams::for_class(part.size_class());
+        params.seed = 11;
+        let mut prof_a = Profiler::new(gpu.clone(), ProfilerConfig::default(), 11);
+        let a = optimize_partition(&mut prof_a, &part, 8, &params);
+        let strategy = MultiPassMbo::new(params).expect("valid");
+        let mut prof_b = Profiler::new(gpu, ProfilerConfig::default(), 11);
+        let b = optimize_partition_with(&strategy, &mut prof_b, &part, 8);
+        let bits = |r: &MboResult| -> Vec<(u64, u64, usize)> {
+            r.frontier
+                .points()
+                .iter()
+                .map(|p| (p.time.to_bits(), p.energy.to_bits(), p.tag))
+                .collect()
+        };
+        assert_eq!(bits(&a), bits(&b));
+        assert_eq!(a.evaluated.len(), b.evaluated.len());
+        assert_eq!(a.profiling_cost_s.to_bits(), b.profiling_cost_s.to_bits());
+    }
+
+    #[test]
     fn no_comm_partition_small_space() {
         let gpu = GpuSpec::a100();
         let mut prof = Profiler::new(gpu, ProfilerConfig::default(), 6);
@@ -452,5 +383,42 @@ mod tests {
         let r = optimize_partition(&mut prof, &part, 8, &params);
         assert_eq!(r.n_candidates, 18);
         assert!(r.evaluated.len() <= 18 + 1);
+    }
+
+    #[test]
+    fn validate_rejects_silent_misconfigurations() {
+        let ok = MboParams::for_class(SizeClass::Small);
+        assert!(ok.validate().is_ok());
+
+        let mut p = ok.clone();
+        p.pass_fracs = [0.6, 0.3, 0.3];
+        assert!(matches!(p.validate(), Err(MboParamsError::PassFracsExceedOne { .. })));
+
+        let mut p = ok.clone();
+        p.pass_fracs = [0.4, -0.1, 0.2];
+        assert!(matches!(p.validate(), Err(MboParamsError::BadPassFrac { index: 1, .. })));
+
+        let mut p = ok.clone();
+        p.n_init = 0;
+        assert_eq!(p.validate(), Err(MboParamsError::ZeroInit));
+
+        let mut p = ok.clone();
+        p.batch_k = 0;
+        assert_eq!(p.validate(), Err(MboParamsError::ZeroBatchK));
+
+        let mut p = ok.clone();
+        p.bootstrap_fraction = 0.0;
+        assert!(matches!(p.validate(), Err(MboParamsError::BadBootstrapFraction { .. })));
+
+        let mut p = ok.clone();
+        p.r_window = 0;
+        assert_eq!(p.validate(), Err(MboParamsError::ZeroWindow));
+
+        // Strategy constructors surface the same typed error.
+        let mut p = ok;
+        p.pass_fracs = [0.9, 0.9, 0.9];
+        assert!(MultiPassMbo::new(p.clone()).is_err());
+        assert!(RandomSearch::new(p.clone()).is_err());
+        assert!(SuccessiveHalving::new(p, HalvingParams::default()).is_err());
     }
 }

@@ -1,0 +1,168 @@
+//! The paper's multi-pass MBO (§4.3, Algorithm 1) as a
+//! [`SearchStrategy`].
+//!
+//! Two GBDT surrogates (time, dynamic energy), three hypervolume-
+//! improvement exploitation passes (total / dynamic / static energy) that
+//! expand the frontier in complementary directions (Figure 7), plus one
+//! bootstrap-ensemble uncertainty exploration pass. Hyperparameters follow
+//! Appendix C (sample sizes by partition size class, pass proportions
+//! 0.4/0.2/0.2/0.2, stopping on relative HV improvement via the shared
+//! [`EvalBudget`]).
+//!
+//! Parity is load-bearing: for identical hyperparameters and seeds this
+//! strategy reproduces the pre-refactor monolithic `optimize_partition`
+//! byte-for-byte — same RNG stream, same evaluation order, same frontier
+//! bits — which `tests/strategy.rs` and the engine cache tests enforce.
+
+use crate::surrogate::{Ensemble, EnsembleParams, Gbdt, GbdtParams};
+use crate::util::hash::fnv1a_str;
+use crate::util::rng::Rng;
+
+use super::strategy::SearchStrategy;
+use super::{space, EvalBudget, EvalContext, MboParams, MboParamsError, MboResult, Pass};
+
+/// Multi-pass MBO over a partition's joint (frequency × SM × launch
+/// timing) space.
+pub struct MultiPassMbo {
+    params: MboParams,
+}
+
+impl MultiPassMbo {
+    /// Validates the hyperparameters up front ([`MboParams::validate`]):
+    /// pass fractions summing past 1.0 or a zero batch/initial-design size
+    /// are configuration bugs, not search settings.
+    pub fn new(params: MboParams) -> Result<Self, MboParamsError> {
+        params.validate()?;
+        Ok(MultiPassMbo { params })
+    }
+
+    pub fn params(&self) -> &MboParams {
+        &self.params
+    }
+}
+
+impl SearchStrategy for MultiPassMbo {
+    fn name(&self) -> &'static str {
+        "mbo"
+    }
+
+    fn fingerprint(&self) -> u64 {
+        fnv1a_str(self.name())
+    }
+
+    fn optimize(&self, ctx: &mut EvalContext<'_>) -> MboResult {
+        let params = &self.params;
+        ctx.set_budget(EvalBudget::from_params(params));
+        let n = ctx.n_candidates();
+        let mut rng = Rng::new(params.seed ^ 0x5eed);
+
+        // --- Initial random design ------------------------------------
+        let n_init = params.n_init.min(n);
+        for idx in rng.sample_indices(n, n_init) {
+            ctx.measure(idx, Pass::Init);
+        }
+        let exhausted = n_init >= n;
+
+        if !exhausted {
+            for _batch in 0..params.b_max {
+                let t0 = std::time::Instant::now();
+                // ---- Train surrogates on D ---------------------------
+                let x: Vec<Vec<f64>> =
+                    ctx.evaluated().iter().map(|e| space::features(&e.sched)).collect();
+                let y_t: Vec<f64> = ctx.evaluated().iter().map(|e| e.m.time_s).collect();
+                let y_e: Vec<f64> = ctx.evaluated().iter().map(|e| e.m.dyn_j).collect();
+                let gp = GbdtParams { seed: params.seed, subsample: 1.0, ..Default::default() };
+                let t_hat = Gbdt::fit(&x, &y_t, &gp);
+                let e_hat = Gbdt::fit(&x, &y_e, &gp);
+                let ens_p = EnsembleParams {
+                    size: params.ensemble_size,
+                    bootstrap_fraction: params.bootstrap_fraction,
+                    gbdt: GbdtParams {
+                        seed: params.seed ^ 0xE45,
+                        subsample: 0.8,
+                        ..Default::default()
+                    },
+                };
+                let t_ens = Ensemble::fit(&x, &y_t, &ens_p);
+                let e_ens = Ensemble::fit(&x, &y_e, &ens_p);
+
+                // ---- Current frontiers on each objective plane --------
+                // Maintained incrementally by the context's planes; the
+                // references all follow Appendix C's 1.1× rule.
+                let p_static = ctx.gpu().static_w;
+                let (r_tot, r_dyn, r_stat) = ctx.planes().references();
+
+                // ---- Score all unevaluated candidates -----------------
+                // (idx, hvi_tot, hvi_dyn, hvi_stat, unc) per candidate.
+                let mut cand: Vec<(usize, f64, f64, f64, f64)> = Vec::new();
+                for (idx, s) in ctx.space().iter().enumerate() {
+                    if ctx.is_chosen(idx) {
+                        continue;
+                    }
+                    let feats = space::features(s);
+                    let th = t_hat.predict(&feats).max(1e-9);
+                    let eh = e_hat.predict(&feats).max(0.0);
+                    let planes = ctx.planes();
+                    let hvi_tot = planes.f_tot.hvi((th, th * p_static + eh), r_tot);
+                    let hvi_dyn = planes.f_dyn.hvi((th, eh), r_dyn);
+                    let hvi_stat = planes.f_stat.hvi((th, th * p_static), r_stat);
+                    let (_, st) = t_ens.predict(&feats);
+                    let (_, se) = e_ens.predict(&feats);
+                    // Sum of per-objective std deviations (§4.3.2).
+                    let unc = st / y_t.iter().sum::<f64>().max(1e-12) * y_t.len() as f64
+                        + se / y_e.iter().sum::<f64>().max(1e-12) * y_e.len() as f64;
+                    cand.push((idx, hvi_tot, hvi_dyn, hvi_stat, unc));
+                }
+                ctx.charge_surrogate(t0.elapsed().as_secs_f64());
+                if cand.is_empty() {
+                    break;
+                }
+
+                // ---- Multi-pass candidate selection -------------------
+                let k = params.batch_k.min(cand.len());
+                let k1 = ((k as f64 * params.pass_fracs[0]).round() as usize).max(1);
+                let k2 = ((k as f64 * params.pass_fracs[1]).round() as usize).max(1);
+                let k3 = ((k as f64 * params.pass_fracs[2]).round() as usize).max(1);
+                let mut picked: Vec<(usize, Pass)> = Vec::new();
+                let mut taken = vec![false; n];
+                let top_by = |key: usize,
+                              count: usize,
+                              pass: Pass,
+                              picked: &mut Vec<(usize, Pass)>,
+                              taken: &mut Vec<bool>| {
+                    let mut order: Vec<&(usize, f64, f64, f64, f64)> =
+                        cand.iter().filter(|c| !taken[c.0]).collect();
+                    order.sort_by(|a, b| {
+                        let va = [a.1, a.2, a.3, a.4][key];
+                        let vb = [b.1, b.2, b.3, b.4][key];
+                        vb.partial_cmp(&va).unwrap()
+                    });
+                    for c in order.into_iter().take(count) {
+                        taken[c.0] = true;
+                        picked.push((c.0, pass));
+                    }
+                };
+                top_by(0, k1, Pass::Total, &mut picked, &mut taken);
+                top_by(1, k2, Pass::Dynamic, &mut picked, &mut taken);
+                top_by(2, k3, Pass::Static, &mut picked, &mut taken);
+                let rest = k.saturating_sub(picked.len());
+                top_by(3, rest, Pass::Uncertainty, &mut picked, &mut taken);
+
+                // ---- Evaluate the batch -------------------------------
+                for (idx, pass) in picked {
+                    ctx.measure(idx, pass);
+                }
+
+                // ---- Stopping: relative HV improvement ----------------
+                // The total-energy plane already reflects the new batch;
+                // its reference tracks the worst coordinates seen so far.
+                ctx.record_hv();
+                if ctx.hv_converged() {
+                    break;
+                }
+            }
+        }
+
+        ctx.finish()
+    }
+}

@@ -134,4 +134,57 @@ mod tests {
         let s = Schedule { comm_sms: 12, launch: LaunchAt::WithComp(2), freq_mhz: 1200 };
         assert_eq!(features(&s), vec![1200.0, 12.0, 2.0]);
     }
+
+    #[test]
+    fn no_comm_partition_exactly_one_candidate_per_frequency() {
+        // Without communication the only knob is frequency: the space must
+        // contain each search frequency exactly once, with the SM/launch
+        // fields pinned to their neutral values.
+        let g = GpuSpec::a100();
+        let mut p = part(1e8);
+        p.comm = None;
+        let space = candidate_space(&g, &p, 8);
+        let freqs = g.search_freqs();
+        assert_eq!(space.len(), freqs.len());
+        for (s, &f) in space.iter().zip(freqs.iter()) {
+            assert_eq!(s.freq_mhz, f);
+            assert_eq!(s.comm_sms, 0);
+            assert_eq!(s.launch, LaunchAt::WithComp(0));
+        }
+    }
+
+    #[test]
+    fn comm_group_boundary_switches_sm_ranges_at_four() {
+        // Appendix C: groups below 4 GPUs search 1..=20 step 1; groups of
+        // 4 and above search 3..=30 step 3. The boundary sits exactly at
+        // comm_group == 4.
+        assert_eq!(sm_allocations(3), (1..=20).collect::<Vec<u32>>());
+        assert_eq!(sm_allocations(4), (1..=10).map(|i| 3 * i).collect::<Vec<u32>>());
+        assert_eq!(sm_allocations(3).len(), 20);
+        assert_eq!(sm_allocations(4).len(), 10);
+        // The boundary is visible in the candidate space itself.
+        let g = GpuSpec::a100();
+        let p = part(4e8);
+        let timings = launch_timings(&g, &p).len();
+        let small = candidate_space(&g, &p, 3);
+        let large = candidate_space(&g, &p, 4);
+        assert_eq!(small.len(), g.search_freqs().len() * 20 * timings);
+        assert_eq!(large.len(), g.search_freqs().len() * 10 * timings);
+    }
+
+    #[test]
+    fn candidate_counts_match_census_arithmetic() {
+        // The enumerated space must be the exact product the Appendix B
+        // census arithmetic predicts: |freqs| × |SM choices| × |timings|.
+        let g = GpuSpec::a100();
+        let p = part(4e8);
+        let freqs = g.search_freqs().len();
+        for group in [2u32, 8] {
+            let expected = freqs * sm_allocations(group).len() * launch_timings(&g, &p).len();
+            assert_eq!(candidate_space(&g, &p, group).len(), expected);
+        }
+        // And the census's own product identity holds for its shape.
+        let c = crate::mbo::exhaustive::census(9, 13.0, 16);
+        assert_eq!(c.total, c.n_freqs * c.n_sms * c.n_groupings);
+    }
 }

@@ -1,0 +1,206 @@
+//! The pluggable search-strategy seam of the optimization layer.
+//!
+//! A [`SearchStrategy`] decides *which* candidates to evaluate (and at
+//! what fidelity) for one partition; everything else — candidate space,
+//! incremental objective planes, dedup, budget, cost accounting — lives in
+//! the shared [`EvalContext`]. The paper's multi-pass MBO
+//! ([`MultiPassMbo`](super::MultiPassMbo)), the exhaustive oracle
+//! ([`ExhaustiveStrategy`]), a random-search baseline
+//! ([`RandomSearch`](super::RandomSearch)), and a successive-halving racer
+//! ([`SuccessiveHalving`](super::SuccessiveHalving)) all implement the
+//! same trait, so the engine, the CLI, and the paper ablations can swap
+//! and compare them freely.
+
+use crate::partition::Partition;
+use crate::profiler::Profiler;
+use crate::util::hash::fnv1a_str;
+
+use super::racing::{RandomSearch, SuccessiveHalving};
+use super::{
+    EvalBudget, EvalContext, HalvingParams, MboParams, MboParamsError, MboResult, MultiPassMbo,
+    Pass,
+};
+
+/// A per-partition candidate-search policy over a shared [`EvalContext`].
+///
+/// Implementations must be deterministic functions of their construction
+/// parameters and the context's profiler seed: the engine memoizes whole
+/// results by (strategy fingerprint, partition, hyperparameters, seed),
+/// so a cache hit must be a bit-identical replay.
+pub trait SearchStrategy: Send + Sync {
+    /// Short stable identifier (CLI value, table rows, cache diagnostics).
+    fn name(&self) -> &'static str;
+
+    /// Folded into [`MboCache`](crate::engine::MboCache) keys so results
+    /// from different strategies never alias. Must cover the strategy
+    /// identity plus any hyperparameters *not* already part of
+    /// [`MboParams`] (which the cache key folds separately).
+    fn fingerprint(&self) -> u64;
+
+    /// Run the search to completion, returning the packaged result
+    /// (usually via [`EvalContext::finish`]).
+    fn optimize(&self, ctx: &mut EvalContext<'_>) -> MboResult;
+}
+
+/// Run `strategy` on one (partition, comm group) through a fresh
+/// [`EvalContext`] on `profiler` — the one entry point every layer above
+/// the trait dispatches through.
+pub fn optimize_partition_with(
+    strategy: &dyn SearchStrategy,
+    profiler: &mut Profiler,
+    part: &Partition,
+    comm_group: u32,
+) -> MboResult {
+    let mut ctx = EvalContext::new(profiler, part, comm_group);
+    strategy.optimize(&mut ctx)
+}
+
+/// The strategy configuration an
+/// [`EngineConfig`](crate::engine::EngineConfig) carries: a cheap,
+/// copyable selector that builds a concrete [`SearchStrategy`] once the
+/// per-partition [`MboParams`] are resolved (size class + derived seed).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum StrategyKind {
+    /// The paper's multi-pass MBO (§4.3, Algorithm 1) — the default.
+    MultiPass,
+    /// Full-fidelity measurement of every candidate (the oracle).
+    Exhaustive,
+    /// Uniform random sampling at the MBO's measurement budget.
+    Random,
+    /// Successive-halving racing: cheap screening, full re-measurement of
+    /// survivors.
+    Halving(HalvingParams),
+}
+
+impl StrategyKind {
+    /// Parse a CLI value (`mbo | exhaustive | random | halving`).
+    pub fn parse(s: &str) -> Option<StrategyKind> {
+        match s {
+            "mbo" | "multipass" => Some(StrategyKind::MultiPass),
+            "exhaustive" | "oracle" => Some(StrategyKind::Exhaustive),
+            "random" => Some(StrategyKind::Random),
+            "halving" | "racing" => Some(StrategyKind::Halving(HalvingParams::default())),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            StrategyKind::MultiPass => "mbo",
+            StrategyKind::Exhaustive => "exhaustive",
+            StrategyKind::Random => "random",
+            StrategyKind::Halving(_) => "halving",
+        }
+    }
+
+    /// Validate the strategy-specific, partition-independent
+    /// configuration (today: [`HalvingParams`]). Lets the engine fail
+    /// fast with one clean typed error before fanning work out to
+    /// parallel workers; per-partition [`MboParams`] are validated again
+    /// by [`build`](Self::build).
+    pub fn validate(&self) -> Result<(), MboParamsError> {
+        match self {
+            StrategyKind::Halving(hp) => hp.validate(),
+            _ => Ok(()),
+        }
+    }
+
+    /// The fingerprint the built strategy will report — exposed on the
+    /// kind so the engine can fold it into cache keys without building a
+    /// strategy first.
+    pub fn fingerprint(&self) -> u64 {
+        match self {
+            StrategyKind::Halving(hp) => hp.fingerprint(),
+            _ => fnv1a_str(self.name()),
+        }
+    }
+
+    /// Build the concrete strategy for one partition's resolved
+    /// hyperparameters. Validates `params` ([`MboParams::validate`]) for
+    /// every strategy that consumes them.
+    pub fn build(&self, params: MboParams) -> Result<Box<dyn SearchStrategy>, MboParamsError> {
+        Ok(match self {
+            StrategyKind::MultiPass => Box::new(MultiPassMbo::new(params)?),
+            StrategyKind::Exhaustive => Box::new(ExhaustiveStrategy),
+            StrategyKind::Random => Box::new(RandomSearch::new(params)?),
+            StrategyKind::Halving(hp) => Box::new(SuccessiveHalving::new(params, *hp)?),
+        })
+    }
+}
+
+/// The exhaustive oracle as a strategy: measure every candidate at full
+/// fidelity. Only feasible against the simulator (Appendix B prices the
+/// real thing at thousands of GPU-hours), which is exactly its role —
+/// the ground-truth row of the strategy ablation table.
+pub struct ExhaustiveStrategy;
+
+impl SearchStrategy for ExhaustiveStrategy {
+    fn name(&self) -> &'static str {
+        "exhaustive"
+    }
+
+    fn fingerprint(&self) -> u64 {
+        fnv1a_str(self.name())
+    }
+
+    fn optimize(&self, ctx: &mut EvalContext<'_>) -> MboResult {
+        ctx.set_budget(EvalBudget::unbounded());
+        for idx in 0..ctx.n_candidates() {
+            ctx.measure(idx, Pass::Init);
+        }
+        ctx.record_hv();
+        ctx.finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parsing_roundtrip() {
+        for spec in ["mbo", "exhaustive", "random", "halving"] {
+            let kind = StrategyKind::parse(spec).expect(spec);
+            assert_eq!(kind.name(), spec);
+        }
+        assert_eq!(StrategyKind::parse("multipass"), Some(StrategyKind::MultiPass));
+        assert_eq!(StrategyKind::parse("racing"), StrategyKind::parse("halving"));
+        assert!(StrategyKind::parse("zzz").is_none());
+    }
+
+    #[test]
+    fn fingerprints_never_alias() {
+        let kinds = [
+            StrategyKind::MultiPass,
+            StrategyKind::Exhaustive,
+            StrategyKind::Random,
+            StrategyKind::Halving(HalvingParams::default()),
+        ];
+        for (i, a) in kinds.iter().enumerate() {
+            for b in &kinds[i + 1..] {
+                assert_ne!(a.fingerprint(), b.fingerprint(), "{a:?} vs {b:?}");
+            }
+        }
+        // Halving hyperparameters are part of the identity.
+        let tuned = HalvingParams { eta: 8, ..Default::default() };
+        assert_ne!(
+            StrategyKind::Halving(tuned).fingerprint(),
+            StrategyKind::Halving(HalvingParams::default()).fingerprint()
+        );
+    }
+
+    #[test]
+    fn kind_matches_built_strategy() {
+        for kind in [
+            StrategyKind::MultiPass,
+            StrategyKind::Exhaustive,
+            StrategyKind::Random,
+            StrategyKind::Halving(HalvingParams::default()),
+        ] {
+            let params = MboParams::for_class(crate::partition::SizeClass::Small);
+            let s = kind.build(params).expect("defaults validate");
+            assert_eq!(s.name(), kind.name());
+            assert_eq!(s.fingerprint(), kind.fingerprint());
+        }
+    }
+}

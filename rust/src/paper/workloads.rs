@@ -79,6 +79,26 @@ pub fn emulation_rows() -> Vec<(u32, u32, TrainConfig)> {
         .collect()
 }
 
+/// The pinned partition of the search-strategy ablation (`paper --exp
+/// strategies`) and the `tests/strategy.rs` racing bounds: medium size
+/// class, and on an A100 at comm group 8 exactly 18 freqs × 10 SM
+/// choices × 2 viable launch timings = 360 candidates. The racing
+/// strategy's cost margins are sized against this geometry — change it
+/// only together with those bounds (the test asserts the 360).
+pub fn strategy_ablation_partition() -> crate::partition::Partition {
+    use crate::sim::kernel::{Kernel, KernelKind};
+    crate::partition::Partition {
+        ptype: "fwd/mlp".into(),
+        comps: vec![
+            Kernel::comp("Norm", KernelKind::Norm, 1e8, 8e8),
+            Kernel::comp("Linear1", KernelKind::Linear, 5e11, 2.5e9),
+            Kernel::comp("Linear2", KernelKind::Linear, 5e11, 2.5e9),
+        ],
+        comm: Some(Kernel::comm("AR", KernelKind::AllReduce, 6e8)),
+        count: 28,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

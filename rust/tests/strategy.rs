@@ -1,0 +1,174 @@
+//! Strategy-layer acceptance tests.
+//!
+//! * Parity: the default `mbo` strategy through the trait + engine is
+//!   byte-identical across cold/warm/double runs (the refactor's
+//!   load-bearing constraint).
+//! * Racing quality: `halving` reaches ≥ 95% of the exhaustive oracle's
+//!   dominated hypervolume on a small partition space while charging
+//!   strictly fewer simulated profiling seconds than the multi-pass MBO.
+//! * Isolation: different strategies never alias each other's `MboCache`
+//!   entries.
+
+use kareus::compose::optimize_all_partitions_with;
+use kareus::engine::EngineConfig;
+use kareus::frontier::{Frontier, Point};
+use kareus::mbo::{
+    exhaustive, optimize_partition, optimize_partition_with, HalvingParams, MboParams, MboResult,
+    Pass, StrategyKind,
+};
+use kareus::paper::workloads::strategy_ablation_partition;
+use kareus::partition::{Partition, SizeClass};
+use kareus::profiler::{Profiler, ProfilerConfig};
+use kareus::sim::gpu::GpuSpec;
+use kareus::util::hash::fnv1a_str;
+
+/// The pinned strategy-ablation partition (shared with `paper --exp
+/// strategies`): medium size class, exactly 18 freqs × 10 SM choices × 2
+/// viable launch timings = 360 candidates — small enough for the
+/// exhaustive oracle, structured enough that search order matters.
+fn small_partition() -> Partition {
+    strategy_ablation_partition()
+}
+
+fn run_kind(kind: StrategyKind, seed: u64) -> MboResult {
+    let gpu = GpuSpec::a100();
+    let part = small_partition();
+    let mut params = MboParams::for_class(part.size_class());
+    params.seed = seed;
+    let strategy = kind.build(params).expect("defaults validate");
+    let mut prof = Profiler::new(gpu, ProfilerConfig::default(), seed);
+    optimize_partition_with(strategy.as_ref(), &mut prof, &part, 8)
+}
+
+/// Exact bit-level signature of a result.
+fn bits(r: &MboResult) -> (Vec<(u64, u64, usize)>, usize, u64) {
+    let f = &r.frontier;
+    (
+        f.points().iter().map(|p| (p.time.to_bits(), p.energy.to_bits(), p.tag)).collect(),
+        r.evaluated.len(),
+        r.profiling_cost_s.to_bits(),
+    )
+}
+
+/// Noise-free re-evaluation of a result's frontier schedules (the shared
+/// definition also used by the published ablation table).
+fn true_frontier(gpu: &GpuSpec, part: &Partition, r: &MboResult) -> Frontier {
+    exhaustive::true_frontier(gpu, part, r)
+}
+
+#[test]
+fn partition_space_is_the_intended_small_case() {
+    let part = small_partition();
+    assert_eq!(part.size_class(), SizeClass::Medium);
+    let space = kareus::mbo::space::candidate_space(&GpuSpec::a100(), &part, 8);
+    assert_eq!(space.len(), 360, "test geometry drifted; racing cost bounds assume 360");
+}
+
+#[test]
+fn default_strategy_double_run_is_byte_identical() {
+    // The CI strategy-parity smoke: two cold runs of the default `mbo`
+    // strategy must agree bit-for-bit, and the engine path must agree
+    // with the legacy `optimize_partition` entry point for the engine's
+    // derived per-partition seed.
+    let a = run_kind(StrategyKind::MultiPass, 2026);
+    let b = run_kind(StrategyKind::MultiPass, 2026);
+    assert_eq!(bits(&a), bits(&b));
+
+    let gpu = GpuSpec::a100();
+    let part = small_partition();
+    let engine = EngineConfig::sequential();
+    let seed = 17u64;
+    let results = optimize_all_partitions_with(seed, &gpu, &[part.clone()], 8, &engine);
+    let via_engine = results.get(&part.ptype).expect("partition optimized");
+    let derived = seed ^ fnv1a_str(&part.ptype);
+    let mut params = MboParams::for_class(part.size_class());
+    params.seed = derived;
+    let mut prof = Profiler::new(gpu, ProfilerConfig::default(), derived);
+    let legacy = optimize_partition(&mut prof, &part, 8, &params);
+    assert_eq!(bits(via_engine), bits(&legacy), "engine trait dispatch diverged from legacy path");
+}
+
+#[test]
+fn halving_near_oracle_hv_at_lower_profiling_cost() {
+    let gpu = GpuSpec::a100();
+    let part = small_partition();
+    let mbo = run_kind(StrategyKind::MultiPass, 2026);
+    let halving = run_kind(StrategyKind::Halving(HalvingParams::default()), 2026);
+
+    // Racing must be strictly cheaper in simulated profiling seconds —
+    // screening probes included in its bill.
+    assert!(
+        halving.profiling_cost_s < mbo.profiling_cost_s,
+        "halving {} s vs mbo {} s",
+        halving.profiling_cost_s,
+        mbo.profiling_cost_s
+    );
+    // Its full-fidelity measurement count is the survivor quota.
+    assert_eq!(halving.evaluated.len(), HalvingParams::default().survivors);
+    assert!(halving.evaluated.iter().all(|e| e.pass == Pass::Racing));
+
+    // …and still reach ≥ 95% of the exhaustive oracle's dominated HV
+    // (judged on noise-free re-evaluation of the selected schedules).
+    let oracle = exhaustive::exhaustive_frontier(&gpu, &part, 8);
+    let halving_true = true_frontier(&gpu, &part, &halving);
+    let mut all: Vec<Point> = oracle.points().to_vec();
+    all.extend(halving_true.points().iter().copied());
+    let rref = Frontier::reference_of(&all);
+    let hv_oracle = oracle.hypervolume(rref);
+    let hv_halving = halving_true.hypervolume(rref);
+    assert!(
+        hv_halving >= 0.95 * hv_oracle,
+        "halving hv {hv_halving} vs oracle {hv_oracle} ({:.3})",
+        hv_halving / hv_oracle
+    );
+}
+
+#[test]
+fn exhaustive_strategy_measures_every_candidate() {
+    let r = run_kind(StrategyKind::Exhaustive, 7);
+    assert_eq!(r.evaluated.len(), r.n_candidates);
+    assert_eq!(r.n_candidates, 360);
+    assert!(r.frontier.len() >= 3);
+    // Full coverage, no duplicates: every evaluated schedule is distinct.
+    let distinct: std::collections::HashSet<_> = r.evaluated.iter().map(|e| e.sched).collect();
+    assert_eq!(distinct.len(), r.n_candidates);
+}
+
+#[test]
+fn random_search_respects_measurement_budget() {
+    let r = run_kind(StrategyKind::Random, 5);
+    let params = MboParams::for_class(small_partition().size_class());
+    let budget = params.n_init + params.b_max * params.batch_k;
+    assert_eq!(r.evaluated.len(), budget.min(360));
+    assert!(r.evaluated.iter().all(|e| e.pass == Pass::Init));
+    assert!(!r.frontier.is_empty());
+    // Random is cheaper than exhaustive but not free.
+    assert!(r.profiling_cost_s > 0.0);
+}
+
+#[test]
+fn strategies_never_alias_cache_entries() {
+    let gpu = GpuSpec::a100();
+    let part = small_partition();
+    let parts = [part.clone()];
+    let engine = EngineConfig::sequential();
+    let a = optimize_all_partitions_with(7, &gpu, &parts, 8, &engine);
+    assert_eq!(engine.mbo_cache.len(), 1);
+
+    // Same shared caches, different strategy: must occupy a second slot.
+    let engine_h = engine.clone().with_strategy(StrategyKind::Halving(HalvingParams::default()));
+    let b = optimize_all_partitions_with(7, &gpu, &parts, 8, &engine_h);
+    assert_eq!(engine.mbo_cache.len(), 2, "strategies aliased one cache entry");
+    assert_ne!(
+        bits(a.get(&part.ptype).unwrap()),
+        bits(b.get(&part.ptype).unwrap()),
+        "mbo and halving produced identical bits — suspicious aliasing"
+    );
+
+    // Warm replays of each strategy stay byte-identical.
+    let a2 = optimize_all_partitions_with(7, &gpu, &parts, 8, &engine);
+    let b2 = optimize_all_partitions_with(7, &gpu, &parts, 8, &engine_h);
+    assert_eq!(engine.mbo_cache.len(), 2);
+    assert_eq!(bits(a.get(&part.ptype).unwrap()), bits(a2.get(&part.ptype).unwrap()));
+    assert_eq!(bits(b.get(&part.ptype).unwrap()), bits(b2.get(&part.ptype).unwrap()));
+}
