@@ -48,6 +48,47 @@ use crate::util::json::{arr, num, obj, s, Json};
 use crate::util::pool;
 use crate::workload::{ModelSpec, Parallelism, TrainConfig};
 
+/// Online-replanning knobs carried by the engine and consumed by the
+/// [`DriftMonitor`](crate::runtime::DriftMonitor) (CLI: `--drift-pct`,
+/// `--replan-cooldown` on `kareus train --replan`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ReplanConfig {
+    /// Relative deviation (in percent) of the smoothed observed/predicted
+    /// iteration ratio from its post-replan baseline before a drift
+    /// replan fires.
+    pub drift_pct: f64,
+    /// EWMA smoothing factor for the observed/predicted ratios, in (0, 1].
+    pub ewma_alpha: f64,
+    /// Consecutive over-threshold iterations required before firing.
+    pub patience: u32,
+    /// Minimum iterations between drift replans (hysteresis floor).
+    pub cooldown_iters: u64,
+}
+
+impl Default for ReplanConfig {
+    fn default() -> Self {
+        ReplanConfig { drift_pct: 5.0, ewma_alpha: 0.25, patience: 3, cooldown_iters: 20 }
+    }
+}
+
+impl ReplanConfig {
+    /// Reject configurations whose failure modes are silent at run time
+    /// (a non-positive threshold fires every iteration; a zero alpha
+    /// never updates the smoothed ratios).
+    pub fn validate(&self) -> Result<(), String> {
+        if !self.drift_pct.is_finite() || self.drift_pct <= 0.0 {
+            return Err(format!("drift_pct = {} must be a finite positive percent", self.drift_pct));
+        }
+        if !(self.ewma_alpha > 0.0 && self.ewma_alpha <= 1.0) {
+            return Err(format!("ewma_alpha = {} must be in (0, 1]", self.ewma_alpha));
+        }
+        if self.patience == 0 {
+            return Err("patience must be >= 1".to_string());
+        }
+        Ok(())
+    }
+}
+
 /// Shared configuration of the parallel optimization engine. Cloning
 /// shares the underlying caches and backend (they are `Arc`-backed), so
 /// one engine can be threaded through coordinators, sweeps, and
@@ -67,6 +108,11 @@ pub struct EngineConfig {
     /// Its fingerprint is folded into every [`MboCache`] key, so results
     /// from different strategies never alias.
     pub strategy: StrategyKind,
+    /// Drift-monitor knobs for the online replanning runtime
+    /// ([`runtime::TrainingLoop`](crate::runtime::TrainingLoop)). Not part
+    /// of any cache key: replanning consumes optimization results, it
+    /// never changes them.
+    pub replan: ReplanConfig,
 }
 
 impl Default for EngineConfig {
@@ -77,6 +123,7 @@ impl Default for EngineConfig {
             mbo_cache: MboCache::default(),
             backend: Arc::new(SimBackend),
             strategy: StrategyKind::MultiPass,
+            replan: ReplanConfig::default(),
         }
     }
 }
@@ -109,6 +156,12 @@ impl EngineConfig {
     /// [`MboParamsError`](crate::mbo::MboParamsError) message.
     pub fn with_strategy(mut self, strategy: StrategyKind) -> Self {
         self.strategy = strategy;
+        self
+    }
+
+    /// Swap the replanning knobs (builder style).
+    pub fn with_replan(mut self, replan: ReplanConfig) -> Self {
+        self.replan = replan;
         self
     }
 
@@ -510,5 +563,19 @@ mod tests {
         let r = EngineConfig::new().with_strategy(StrategyKind::Random);
         assert_eq!(r.strategy, StrategyKind::Random);
         assert_ne!(r.strategy.fingerprint(), e.strategy.fingerprint());
+        // The replanning knobs default sanely and swap builder-style.
+        assert_eq!(e.replan, ReplanConfig::default());
+        let tuned = ReplanConfig { drift_pct: 10.0, ..Default::default() };
+        assert_eq!(EngineConfig::new().with_replan(tuned).replan.drift_pct, 10.0);
+    }
+
+    #[test]
+    fn replan_config_validation() {
+        assert!(ReplanConfig::default().validate().is_ok());
+        assert!(ReplanConfig { drift_pct: 0.0, ..Default::default() }.validate().is_err());
+        assert!(ReplanConfig { drift_pct: f64::NAN, ..Default::default() }.validate().is_err());
+        assert!(ReplanConfig { ewma_alpha: 0.0, ..Default::default() }.validate().is_err());
+        assert!(ReplanConfig { ewma_alpha: 1.5, ..Default::default() }.validate().is_err());
+        assert!(ReplanConfig { patience: 0, ..Default::default() }.validate().is_err());
     }
 }

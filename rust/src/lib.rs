@@ -20,11 +20,17 @@
 //!    system under comparison.
 //! 4. **select + deploy** — [`coordinator`] picks an operating point for
 //!    a target (deadline / energy budget / power cap / max throughput)
-//!    and deploys the typed [`plan::FrequencyPlan`] through [`runtime`] /
-//!    [`trainer`].
+//!    and deploys the typed [`plan::FrequencyPlan`] through
+//!    [`runtime::pjrt`] / [`trainer`].
 //! 5. **schedule the cluster** — [`cluster`] allocates a datacenter
 //!    power-cap timeline across N jobs by re-selecting along their
 //!    retained frontiers (no re-optimization).
+//! 6. **replan online** — [`runtime`] steps training iterations under
+//!    time-varying conditions (thermal leakage, stragglers, cap changes),
+//!    a [`runtime::DriftMonitor`] flags stale plans, and replans run
+//!    incrementally: cap boundaries re-select along retained frontiers,
+//!    drift triggers warm-start from the engine's caches; every change is
+//!    a typed [`plan::PlanRevision`].
 //!
 //! [`paper`] regenerates the evaluation tables/figures, [`sim`] is the
 //! default measurement source (GPU power model + two-stream executor),

@@ -11,6 +11,9 @@
 //!             --cap W | --caps 0:W1,T2:W2,…  [--backend sim|trace:<path>]
 //!   train     --config tiny|e2e --steps N [--artifacts DIR] [--baseline]
 //!             [--backend sim|trace:<path>]
+//!   train     --replan [--iters N] [--policy static|drift|oracle]
+//!             [--slowdown ITER:F,…] [--caps 0:W,T:W] [--drift-pct N]
+//!             [--revisions-out FILE]       online replanning runtime
 //!   census                                 Appendix B space census
 //!   list                                   list experiments
 
@@ -27,7 +30,7 @@ use kareus::engine::{
 };
 use kareus::mbo::StrategyKind;
 use kareus::paper;
-use kareus::runtime::Runtime;
+use kareus::runtime::{DriftSchedule, LoopConfig, ReplanPolicy, Runtime, TrainingLoop};
 use kareus::sim::gpu::GpuSpec;
 use kareus::workload::{ModelSpec, Parallelism, TrainConfig};
 
@@ -77,6 +80,10 @@ fn main() {
                  [--backend sim|trace:FILE] [--out FILE.json]\n  \
                  kareus train --config tiny|e2e --steps 100 [--artifacts artifacts] [--baseline] \
                  [--strategy S] [--backend sim|trace:FILE]\n  \
+                 kareus train --replan [--iters 400] [--system kareus] [--policy static|drift|oracle] \
+                 [--slowdown ITER:FACTOR,…] [--cap WATTS|--caps 0:W1,T2:W2,…] [--drift-pct 5] \
+                 [--replan-cooldown 20] [--deadline S] [--seed N] [--revisions-out FILE] \
+                 [--out FILE] [--strategy S] [--backend sim|trace:FILE]\n  \
                  kareus census | kareus list\n\
                  \n\
                  --strategy picks the per-partition search (default mbo: the paper's multi-pass MBO;\n\
@@ -160,6 +167,19 @@ fn build_engine(args: &Args) -> Result<(EngineConfig, Option<Arc<TraceBackend>>)
             );
             Ok((engine.with_backend(trace.clone()), Some(trace)))
         }
+    }
+}
+
+/// Resolve `--cap W` / `--caps 0:W1,T2:W2,…` into a cap schedule (the
+/// shared format of `kareus cluster` and `kareus train --replan`).
+/// `Ok(None)` when neither flag is given; errors name the offending spec.
+fn parse_cap_args(args: &Args) -> Result<Option<PowerCapSchedule>, String> {
+    match (args.get("cap"), args.get("caps")) {
+        (Some(_), Some(_)) => Err("give either --cap or --caps, not both".to_string()),
+        (None, None) => Ok(None),
+        (Some(spec), None) | (None, Some(spec)) => PowerCapSchedule::parse(spec)
+            .map(Some)
+            .map_err(|e| format!("bad cap schedule '{spec}': {e}")),
     }
 }
 
@@ -408,22 +428,16 @@ fn cmd_cluster(args: &Args) -> i32 {
         eprintln!("empty job list");
         return 2;
     }
-    let schedule = match (args.get("cap"), args.get("caps")) {
-        (Some(_), Some(_)) => {
-            eprintln!("give either --cap or --caps, not both");
-            return 2;
-        }
-        (None, None) => {
+    let schedule = match parse_cap_args(args) {
+        Ok(Some(s)) => s,
+        Ok(None) => {
             eprintln!("need --cap WATTS or --caps 0:W1,T2:W2,… (cluster watts)");
             return 2;
         }
-        (Some(spec), None) | (None, Some(spec)) => match PowerCapSchedule::parse(spec) {
-            Ok(s) => s,
-            Err(e) => {
-                eprintln!("bad cap schedule '{spec}': {e}");
-                return 2;
-            }
-        },
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
     };
     let (engine, trace) = match build_engine(args) {
         Ok(e) => e,
@@ -468,7 +482,162 @@ fn cmd_cluster(args: &Args) -> i32 {
     }
 }
 
+/// `kareus train --replan`: the online replanning runtime — step a
+/// simulated training run under injected drift (straggler slowdowns, a
+/// per-GPU power-cap timeline, thermal leakage) and replan per the
+/// selected policy. Emits a deterministic summary JSON (stdout or
+/// `--out`) and, with `--revisions-out`, the full typed
+/// `RevisionLog` (byte-deterministic; the CI smoke `cmp`s two runs).
+fn cmd_train_replan(args: &Args) -> i32 {
+    let value_keys = [
+        "caps", "cap", "slowdown", "policy", "revisions-out", "drift-pct", "replan-cooldown",
+        "deadline",
+    ];
+    for key in value_keys {
+        if args.has_flag(key) {
+            eprintln!("--{key} requires a value");
+            return 2;
+        }
+    }
+    let system = match parse_system(args.get("system").unwrap_or("kareus")) {
+        Some(s) => s,
+        None => {
+            eprintln!("unknown system");
+            return 2;
+        }
+    };
+    let policy = match ReplanPolicy::parse(args.get("policy").unwrap_or("drift")) {
+        Some(p) => p,
+        None => {
+            eprintln!("unknown policy (static | drift | oracle)");
+            return 2;
+        }
+    };
+    let caps = match parse_cap_args(args) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("{e} (per-GPU watts)");
+            return 2;
+        }
+    };
+    let drift = match args.get("slowdown") {
+        Some(spec) => match DriftSchedule::parse(spec) {
+            Ok(d) => d,
+            Err(e) => {
+                eprintln!("bad slowdown schedule '{spec}': {e}");
+                return 2;
+            }
+        },
+        None => DriftSchedule::none(),
+    };
+    let deadline_s = match args.get("deadline") {
+        Some(v) => match v.parse::<f64>() {
+            Ok(d) if d.is_finite() && d > 0.0 => Some(d),
+            _ => {
+                eprintln!("bad --deadline '{v}' (positive seconds)");
+                return 2;
+            }
+        },
+        None => None,
+    };
+    let (engine, trace) = match build_engine(args) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let mut replan_cfg = engine.replan;
+    if let Some(v) = args.get("drift-pct") {
+        match v.parse::<f64>() {
+            Ok(p) => replan_cfg.drift_pct = p,
+            Err(_) => {
+                eprintln!("bad --drift-pct '{v}' (percent)");
+                return 2;
+            }
+        }
+    }
+    if let Some(v) = args.get("replan-cooldown") {
+        match v.parse::<u64>() {
+            Ok(c) => replan_cfg.cooldown_iters = c,
+            Err(_) => {
+                eprintln!("bad --replan-cooldown '{v}' (iterations)");
+                return 2;
+            }
+        }
+    }
+    if let Err(e) = replan_cfg.validate() {
+        eprintln!("bad replan config: {e}");
+        return 2;
+    }
+    let engine = engine.with_replan(replan_cfg);
+
+    let wl = TrainConfig {
+        model: ModelSpec::qwen3_1_7b(),
+        par: Parallelism::new(8, 1, 2),
+        microbatch: 8,
+        seq_len: 4096,
+        n_microbatches: 8,
+        dtype_bytes: 2,
+    };
+    let lc = LoopConfig {
+        n_iters: args.get_u32("iters", 400) as u64,
+        deadline_s,
+        deadline_slack: args.get_f64("deadline-slack", 0.02),
+        caps,
+        drift,
+        policy,
+        seed: args.get_u32("seed", 2026) as u64,
+    };
+    eprintln!(
+        "replanning run: {} · policy {} · {} iters · drift-pct {}",
+        system.name(),
+        policy.name(),
+        lc.n_iters,
+        engine.replan.drift_pct
+    );
+    let tl = TrainingLoop::new(GpuSpec::a100(), wl, system, engine).with_loop_config(lc);
+    let summary = match tl.run() {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("replanning run: {e}");
+            return 1;
+        }
+    };
+    // All measurements happen inside run(); persist a recording trace
+    // before any output can fail.
+    if let Err(e) = finish_trace(&trace) {
+        eprintln!("{e}");
+        return 1;
+    }
+    if let Some(path) = args.get("revisions-out") {
+        if let Err(e) = std::fs::write(path, summary.revisions.to_json().dump()) {
+            eprintln!("write {path}: {e}");
+            return 1;
+        }
+        eprintln!("wrote {path} ({} revisions)", summary.revisions.revisions.len());
+    }
+    let json = summary.to_json().dump();
+    match args.get("out") {
+        Some(path) => {
+            if let Err(e) = std::fs::write(path, &json) {
+                eprintln!("write {path}: {e}");
+                return 1;
+            }
+            eprintln!("wrote {path}");
+        }
+        None => println!("{json}"),
+    }
+    0
+}
+
 fn cmd_train(args: &Args) -> i32 {
+    // `--replan` normally parses as a bare flag; tolerate a stray value
+    // token after it rather than silently falling through to the PJRT
+    // training path.
+    if args.has_flag("replan") || args.get("replan").is_some() {
+        return cmd_train_replan(args);
+    }
     let config = args.get("config").unwrap_or("e2e").to_string();
     let steps = args.get_u32("steps", 100);
     let dir = args.get("artifacts").unwrap_or("artifacts").to_string();

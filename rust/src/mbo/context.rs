@@ -153,6 +153,11 @@ pub struct EvalContext<'a> {
     /// Profiling seconds charged by low-fidelity probes (not represented
     /// in `evaluated`, but still real measurement time §6.6 must count).
     probe_cost_s: f64,
+    /// Profiling seconds carried in by [`warm_start`](Self::warm_start):
+    /// already billed by the prior search, subtracted again in
+    /// [`finish`](Self::finish) so a warm continuation bills only *new*
+    /// work.
+    warm_cost_s: f64,
 }
 
 impl<'a> EvalContext<'a> {
@@ -177,7 +182,42 @@ impl<'a> EvalContext<'a> {
             hv_history: Vec::new(),
             surrogate_cost_s: 0.0,
             probe_cost_s: 0.0,
+            warm_cost_s: 0.0,
         }
+    }
+
+    /// Warm-start this context from a prior search result over the same
+    /// (partition, comm group): every previously measured candidate is
+    /// replayed into the planes, the dedup bitmap, and the evaluation
+    /// history — without re-measuring and without re-billing its
+    /// profiling cost — and the HV trajectory carries over. A strategy
+    /// run afterwards *continues* the search (e.g.
+    /// [`MultiPassMbo`](crate::mbo::MultiPassMbo) skips the
+    /// already-covered initial design), which is what makes an online
+    /// replan bill measurably fewer measurements than a cold
+    /// re-optimization.
+    ///
+    /// Prior evaluations whose schedule is absent from this context's
+    /// candidate space (the space geometry changed) are skipped. Returns
+    /// the number of carried-over measurements.
+    pub fn warm_start(&mut self, prior: &MboResult) -> usize {
+        use std::collections::HashMap;
+        let index: HashMap<Schedule, usize> =
+            self.space.iter().enumerate().map(|(i, s)| (*s, i)).collect();
+        let mut carried = 0usize;
+        for e in &prior.evaluated {
+            let Some(&idx) = index.get(&e.sched) else { continue };
+            if self.chosen[idx] {
+                continue;
+            }
+            self.chosen[idx] = true;
+            self.planes.observe(self.evaluated.len(), &e.m);
+            self.evaluated.push(e.clone());
+            self.warm_cost_s += e.m.profiling_cost_s;
+            carried += 1;
+        }
+        self.hv_history = prior.hv_history.clone();
+        carried
     }
 
     pub fn gpu(&self) -> &GpuSpec {
@@ -288,12 +328,15 @@ impl<'a> EvalContext<'a> {
 
     /// Package the accumulated state into an [`MboResult`]. The
     /// total-energy plane *is* the result frontier — built incrementally,
-    /// never rebuilt from the history.
+    /// never rebuilt from the history. Warm-started measurements appear
+    /// in the history/frontier but their (already billed) profiling cost
+    /// is excluded, so `profiling_cost_s` charges only this run's work.
     pub fn finish(&mut self) -> MboResult {
         let evaluated = std::mem::take(&mut self.evaluated);
         let frontier = std::mem::take(&mut self.planes.f_tot);
-        let profiling_cost_s =
-            evaluated.iter().map(|e| e.m.profiling_cost_s).sum::<f64>() + self.probe_cost_s;
+        let profiling_cost_s = evaluated.iter().map(|e| e.m.profiling_cost_s).sum::<f64>()
+            - self.warm_cost_s
+            + self.probe_cost_s;
         MboResult {
             evaluated,
             frontier,
@@ -374,5 +417,46 @@ mod tests {
 
     fn ctx_space_len(p: &Partition) -> usize {
         space::candidate_space(&GpuSpec::a100(), p, 8).len()
+    }
+
+    #[test]
+    fn warm_start_replays_without_rebilling() {
+        let gpu = GpuSpec::a100();
+        let p = part();
+        // Prior search: three full-fidelity measurements.
+        let mut prof_a = Profiler::new(gpu.clone(), ProfilerConfig::default(), 9);
+        let mut ctx_a = EvalContext::new(&mut prof_a, &p, 8);
+        for idx in [0, 5, 9] {
+            ctx_a.measure(idx, Pass::Init);
+        }
+        ctx_a.record_hv();
+        let prior = ctx_a.finish();
+        assert!(prior.profiling_cost_s > 0.0);
+
+        // Warm continuation: the prior's candidates are chosen, observed,
+        // and in the history — but their cost is not billed again.
+        let mut prof_b = Profiler::new(gpu, ProfilerConfig::default(), 10);
+        let mut ctx_b = EvalContext::new(&mut prof_b, &p, 8);
+        let carried = ctx_b.warm_start(&prior);
+        assert_eq!(carried, 3);
+        assert_eq!(ctx_b.measured(), 3);
+        assert!(ctx_b.is_chosen(0) && ctx_b.is_chosen(5) && ctx_b.is_chosen(9));
+        assert!(!ctx_b.is_chosen(1));
+        assert_eq!(ctx_b.hv_history().len(), prior.hv_history.len());
+        // Re-seeding the same prior is idempotent (dedup bitmap).
+        assert_eq!(ctx_b.warm_start(&prior), 0);
+
+        // One new measurement: only it is billed.
+        let m = ctx_b.measure(1, Pass::Total);
+        let r = ctx_b.finish();
+        assert_eq!(r.evaluated.len(), 4);
+        assert!(
+            (r.profiling_cost_s - m.profiling_cost_s).abs() < 1e-9,
+            "warm continuation billed {} but only {} is new",
+            r.profiling_cost_s,
+            m.profiling_cost_s
+        );
+        // The carried measurements still shape the frontier planes.
+        assert!(!r.frontier.is_empty());
     }
 }

@@ -36,7 +36,10 @@ pub mod strategy;
 pub use context::{EvalBudget, EvalContext, Planes};
 pub use multipass::MultiPassMbo;
 pub use racing::{HalvingParams, RandomSearch, SuccessiveHalving};
-pub use strategy::{optimize_partition_with, ExhaustiveStrategy, SearchStrategy, StrategyKind};
+pub use strategy::{
+    optimize_partition_warm, optimize_partition_with, ExhaustiveStrategy, SearchStrategy,
+    StrategyKind,
+};
 
 use crate::frontier::Frontier;
 use crate::partition::{Partition, SizeClass};

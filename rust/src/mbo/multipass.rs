@@ -57,11 +57,18 @@ impl SearchStrategy for MultiPassMbo {
         let mut rng = Rng::new(params.seed ^ 0x5eed);
 
         // --- Initial random design ------------------------------------
-        let n_init = params.n_init.min(n);
+        // A warm-started context already carries measurements: only the
+        // *remaining* initial-design quota is sampled, and candidates the
+        // prior search measured are never re-measured. Cold contexts take
+        // the exact pre-refactor path (same RNG stream, same order), so
+        // byte-parity with the monolith is preserved.
+        let n_init = params.n_init.min(n).saturating_sub(ctx.measured());
         for idx in rng.sample_indices(n, n_init) {
-            ctx.measure(idx, Pass::Init);
+            if !ctx.is_chosen(idx) {
+                ctx.measure(idx, Pass::Init);
+            }
         }
-        let exhausted = n_init >= n;
+        let exhausted = ctx.measured() >= n;
 
         if !exhausted {
             for _batch in 0..params.b_max {

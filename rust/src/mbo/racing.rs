@@ -51,7 +51,10 @@ impl SearchStrategy for RandomSearch {
         let k = ctx.budget().max_measurements.min(n);
         let mut rng = Rng::new(self.params.seed ^ 0x52_414e_44);
         for idx in rng.sample_indices(n, k) {
-            ctx.measure(idx, Pass::Init);
+            // Skip candidates a warm-started context already measured.
+            if !ctx.is_chosen(idx) {
+                ctx.measure(idx, Pass::Init);
+            }
         }
         ctx.record_hv();
         ctx.finish()
@@ -167,7 +170,14 @@ impl SearchStrategy for SuccessiveHalving {
             }
         }
         for idx in alive {
-            ctx.measure(idx, Pass::Racing);
+            // Dedup via the chosen-candidate bitmap: when the survivor
+            // pool underflows the quota (or the context was warm-started
+            // from a prior search), a survivor may already carry a
+            // full-fidelity measurement — re-measuring would double-bill
+            // the profiling budget and duplicate the evaluation history.
+            if !ctx.is_chosen(idx) {
+                ctx.measure(idx, Pass::Racing);
+            }
         }
         ctx.record_hv();
         ctx.finish()

@@ -55,6 +55,26 @@ pub fn optimize_partition_with(
     strategy.optimize(&mut ctx)
 }
 
+/// Warm-start entry point: run `strategy` on a context pre-seeded from a
+/// `prior` result over the same (partition, comm group) — previously
+/// measured candidates are replayed into the planes and the dedup bitmap
+/// without re-measuring (see [`EvalContext::warm_start`]), so the search
+/// *continues* instead of restarting and the returned result bills only
+/// the new measurements. This is how the online replanning runtime
+/// refreshes per-partition frontiers without paying a cold
+/// re-optimization (`tests/runtime.rs` asserts the billing gap).
+pub fn optimize_partition_warm(
+    strategy: &dyn SearchStrategy,
+    profiler: &mut Profiler,
+    part: &Partition,
+    comm_group: u32,
+    prior: &MboResult,
+) -> MboResult {
+    let mut ctx = EvalContext::new(profiler, part, comm_group);
+    ctx.warm_start(prior);
+    strategy.optimize(&mut ctx)
+}
+
 /// The strategy configuration an
 /// [`EngineConfig`](crate::engine::EngineConfig) carries: a cheap,
 /// copyable selector that builds a concrete [`SearchStrategy`] once the
@@ -146,7 +166,11 @@ impl SearchStrategy for ExhaustiveStrategy {
     fn optimize(&self, ctx: &mut EvalContext<'_>) -> MboResult {
         ctx.set_budget(EvalBudget::unbounded());
         for idx in 0..ctx.n_candidates() {
-            ctx.measure(idx, Pass::Init);
+            // Warm-started contexts already carry some measurements; the
+            // oracle completes the coverage without duplicating them.
+            if !ctx.is_chosen(idx) {
+                ctx.measure(idx, Pass::Init);
+            }
         }
         ctx.record_hv();
         ctx.finish()

@@ -225,6 +225,158 @@ pub fn schedule_from_json(j: &Json) -> Result<Schedule, String> {
     Ok(Schedule { comm_sms: get_u32("sms")?, launch, freq_mhz: get_u32("freq_mhz")? })
 }
 
+// ---------------------------------------------------------------------------
+// Plan revisions (the online replanning runtime's audit log)
+// ---------------------------------------------------------------------------
+
+/// Why a [`PlanRevision`] was created (see
+/// [`runtime`](crate::runtime) for the policies that emit them).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReplanTrigger {
+    /// The run's first plan.
+    Initial,
+    /// A [`PowerCapSchedule`](crate::cluster::PowerCapSchedule) segment
+    /// boundary arrived — pure re-selection along the retained frontier.
+    CapBoundary,
+    /// The [`DriftMonitor`](crate::runtime::DriftMonitor) flagged the
+    /// active plan as stale.
+    Drift,
+    /// An oracle-policy replan at an injected event boundary.
+    Oracle,
+}
+
+impl ReplanTrigger {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ReplanTrigger::Initial => "initial",
+            ReplanTrigger::CapBoundary => "cap",
+            ReplanTrigger::Drift => "drift",
+            ReplanTrigger::Oracle => "oracle",
+        }
+    }
+
+    pub fn parse(spec: &str) -> Option<ReplanTrigger> {
+        match spec {
+            "initial" => Some(ReplanTrigger::Initial),
+            "cap" => Some(ReplanTrigger::CapBoundary),
+            "drift" => Some(ReplanTrigger::Drift),
+            "oracle" => Some(ReplanTrigger::Oracle),
+            _ => None,
+        }
+    }
+}
+
+/// One deployed plan change of an online replanning run: when it
+/// happened, why, what it predicted, what it cost, and the full typed
+/// [`FrequencyPlan`] that went live.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PlanRevision {
+    /// 0-based revision counter (0 = the initial plan).
+    pub revision: u32,
+    /// Iteration index from which the plan is active.
+    pub at_iter: u64,
+    /// Simulated wall-clock at activation (s).
+    pub sim_time_s: f64,
+    pub trigger: ReplanTrigger,
+    /// Per-GPU power cap in force at activation (W); `None` = uncapped.
+    pub cap_w: Option<f64>,
+    /// The straggler-factor estimate the re-selection budgeted against.
+    pub slowdown_est: f64,
+    /// Predicted iteration time of the selected point (s).
+    pub iter_time_s: f64,
+    /// Predicted per-GPU iteration energy of the selected point (J).
+    pub iter_energy_j: f64,
+    /// Backend measurements (shared-cache misses) this revision billed —
+    /// warm replans replay from the caches and bill ~0.
+    pub measurements_billed: u64,
+    pub plan: FrequencyPlan,
+}
+
+/// Revision-log schema tag / version (`RevisionLog::to_json`).
+pub const REVISION_SCHEMA: &str = "kareus_revisions";
+pub const REVISION_VERSION: u64 = 1;
+
+/// The full typed audit log of one replanning run. Like
+/// [`ClusterPlan`](crate::cluster::ClusterPlan), the JSON dump is
+/// byte-deterministic for fixed inputs (no wall-clock or cache statistics
+/// in the schema) — the CI replanning smoke `cmp`s two runs' logs.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct RevisionLog {
+    pub revisions: Vec<PlanRevision>,
+}
+
+impl RevisionLog {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("log", s(REVISION_SCHEMA)),
+            ("version", num(REVISION_VERSION as f64)),
+            ("revisions", arr(self.revisions.iter().map(revision_to_json).collect())),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<RevisionLog, String> {
+        if j.get("log").and_then(|v| v.as_str()) != Some(REVISION_SCHEMA) {
+            return Err(format!("not a {REVISION_SCHEMA} log"));
+        }
+        let version = j.get("version").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+        if version != REVISION_VERSION {
+            return Err(format!(
+                "unsupported revision-log version {version} (want {REVISION_VERSION})"
+            ));
+        }
+        let revisions = j
+            .get("revisions")
+            .and_then(|v| v.as_arr())
+            .ok_or("revision log missing 'revisions'")?
+            .iter()
+            .map(revision_from_json)
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(RevisionLog { revisions })
+    }
+}
+
+fn revision_to_json(r: &PlanRevision) -> Json {
+    obj(vec![
+        ("revision", num(r.revision as f64)),
+        ("at_iter", num(r.at_iter as f64)),
+        ("sim_time_s", num(r.sim_time_s)),
+        ("trigger", s(r.trigger.as_str())),
+        ("cap_w", r.cap_w.map(num).unwrap_or(Json::Null)),
+        ("slowdown_est", num(r.slowdown_est)),
+        ("iter_time_s", num(r.iter_time_s)),
+        ("iter_energy_j", num(r.iter_energy_j)),
+        ("measurements_billed", num(r.measurements_billed as f64)),
+        ("plan", r.plan.to_json()),
+    ])
+}
+
+fn revision_from_json(j: &Json) -> Result<PlanRevision, String> {
+    let get_f64 = |k: &str| {
+        j.get(k).and_then(|v| v.as_f64()).ok_or_else(|| format!("revision missing '{k}'"))
+    };
+    let trigger = j
+        .get("trigger")
+        .and_then(|v| v.as_str())
+        .and_then(ReplanTrigger::parse)
+        .ok_or("revision 'trigger' must be initial|cap|drift|oracle")?;
+    let cap_w = match j.get("cap_w") {
+        Some(Json::Null) | None => None,
+        Some(v) => Some(v.as_f64().ok_or("revision 'cap_w' must be a number or null")?),
+    };
+    Ok(PlanRevision {
+        revision: get_f64("revision")? as u32,
+        at_iter: get_f64("at_iter")? as u64,
+        sim_time_s: get_f64("sim_time_s")?,
+        trigger,
+        cap_w,
+        slowdown_est: get_f64("slowdown_est")?,
+        iter_time_s: get_f64("iter_time_s")?,
+        iter_energy_j: get_f64("iter_energy_j")?,
+        measurements_billed: get_f64("measurements_billed")? as u64,
+        plan: FrequencyPlan::from_json(j.get("plan").ok_or("revision missing 'plan'")?)?,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -305,5 +457,63 @@ mod tests {
         assert_eq!(plan.summary(), "empty plan");
         let back = FrequencyPlan::from_json(&Json::parse(&plan.to_json().dump()).unwrap()).unwrap();
         assert_eq!(plan, back);
+    }
+
+    #[test]
+    fn trigger_names_roundtrip() {
+        for t in [
+            ReplanTrigger::Initial,
+            ReplanTrigger::CapBoundary,
+            ReplanTrigger::Drift,
+            ReplanTrigger::Oracle,
+        ] {
+            assert_eq!(ReplanTrigger::parse(t.as_str()), Some(t));
+        }
+        assert_eq!(ReplanTrigger::parse("nope"), None);
+    }
+
+    #[test]
+    fn revision_log_json_roundtrips_bit_exactly() {
+        let m = menus(2);
+        let tight = greedy_fill(&m, 3, 90.0, 0.0);
+        let plan = FrequencyPlan::from_iteration(&m, &tight);
+        let log = RevisionLog {
+            revisions: vec![
+                PlanRevision {
+                    revision: 0,
+                    at_iter: 0,
+                    sim_time_s: 0.0,
+                    trigger: ReplanTrigger::Initial,
+                    cap_w: None,
+                    slowdown_est: 1.0,
+                    iter_time_s: tight.time_s,
+                    iter_energy_j: tight.total_j,
+                    measurements_billed: 412,
+                    plan: plan.clone(),
+                },
+                PlanRevision {
+                    revision: 1,
+                    at_iter: 157,
+                    sim_time_s: 0.1 + 0.2, // deliberately non-representable sum
+                    trigger: ReplanTrigger::CapBoundary,
+                    cap_w: Some(287.5),
+                    slowdown_est: 1.25,
+                    iter_time_s: tight.time_s * 1.1,
+                    iter_energy_j: tight.total_j * 0.9,
+                    measurements_billed: 0,
+                    plan,
+                },
+            ],
+        };
+        let dumped = log.to_json().dump();
+        let back = RevisionLog::from_json(&Json::parse(&dumped).unwrap()).unwrap();
+        assert_eq!(back, log, "RevisionLog JSON round-trip diverged");
+        assert_eq!(back.to_json().dump(), dumped, "re-dump diverged");
+        // Identical logs always dump identical bytes.
+        assert_eq!(log.to_json().dump(), dumped);
+        // Schema violations are rejected with a message, not a panic.
+        assert!(RevisionLog::from_json(&Json::parse("{\"log\":\"x\"}").unwrap()).is_err());
+        let wrong_version = "{\"log\":\"kareus_revisions\",\"version\":9,\"revisions\":[]}";
+        assert!(RevisionLog::from_json(&Json::parse(wrong_version).unwrap()).is_err());
     }
 }

@@ -1,206 +1,881 @@
-//! PJRT runtime: loads the HLO-text artifacts emitted by
-//! `python/compile/aot.py` and executes them on the CPU PJRT client.
-//! Python never runs on this path — the Rust binary is self-contained
-//! once `make artifacts` has produced `artifacts/`.
+//! Online replanning runtime (data-flow step ⑦): train under
+//! *time-varying* conditions, replanning incrementally when the plan goes
+//! stale.
 //!
-//! Pattern follows /opt/xla-example/load_hlo: HLO *text* → HloModuleProto
-//! → XlaComputation → compile → execute (the text parser reassigns the
-//! 64-bit instruction ids that xla_extension 0.5.1 would reject in
-//! serialized protos).
+//! Kareus's frontier-pushing schedules are computed once, but both energy
+//! terms it optimizes drift during training: static power rises with the
+//! die's thermal state ([`sim::thermal`](crate::sim::thermal)), and the
+//! effective critical path moves when a straggler slows iterations or the
+//! cluster layer changes the power cap mid-run. This module closes the
+//! loop:
+//!
+//! * [`TrainingLoop`] steps iterations against the optimizer's retained
+//!   output (frontier + stage menus + typed plans), applying an injected
+//!   [`DriftSchedule`] (straggler slowdowns), the live per-GPU
+//!   [`PowerCapSchedule`](crate::cluster::PowerCapSchedule), and the
+//!   first-order thermal model — so observed iteration (time, energy)
+//!   deviates from the plan exactly the way §4.1's "changing
+//!   environments" describe.
+//! * [`DriftMonitor`] watches the smoothed observed/predicted ratios with
+//!   hysteresis (threshold + patience + cooldown, re-baselined after
+//!   every replan) and decides when the active
+//!   [`FrequencyPlan`](crate::plan::FrequencyPlan) is stale.
+//! * Replanning is **incremental**: a cap-segment boundary re-selects
+//!   along the retained frontier (no optimizer run at all), and a drift
+//!   trigger re-runs the optimizer *warm* — per-partition searches replay
+//!   from the engine's [`MboCache`](crate::engine::MboCache) and
+//!   canonical executions from the shared
+//!   [`MeasureCache`](crate::profiler::MeasureCache), so a replan bills
+//!   only true cache misses instead of a cold re-optimization
+//!   (`tests/runtime.rs` asserts the gap).
+//! * Every plan change is logged as a typed
+//!   [`PlanRevision`](crate::plan::PlanRevision); the
+//!   [`RevisionLog`](crate::plan::RevisionLog) JSON is byte-deterministic
+//!   (the CI replanning smoke `cmp`s two runs).
+//!
+//! Three [`ReplanPolicy`]s exist so `kareus paper --exp replanning` can
+//! quantify the win: `static` (plan once, never react), `drift`
+//! (monitor-triggered + cap boundaries), and `oracle` (replans exactly at
+//! the injected event boundaries with perfect knowledge — the reference
+//! the drift policy must land within 5% of).
+//!
+//! The PJRT execution runtime (phase ⑤'s artifact loader) lives in
+//! [`pjrt`] and is re-exported unchanged.
 
-use std::collections::BTreeMap;
-use std::path::{Path, PathBuf};
+pub mod pjrt;
 
-use anyhow::{anyhow, bail, Context, Result};
+pub use pjrt::{ArtifactSpec, Manifest, ModelInfo, Runtime, TensorSpec};
 
-use crate::util::json::Json;
+use crate::baselines::{run_system_with, System, SystemResult};
+use crate::cluster::PowerCapSchedule;
+use crate::engine::{EngineConfig, ReplanConfig};
+use crate::frontier::Frontier;
+use crate::plan::{FrequencyPlan, PlanRevision, ReplanTrigger, RevisionLog};
+use crate::sim::gpu::GpuSpec;
+use crate::sim::thermal::{ThermalModel, ThermalState};
+use crate::util::json::{arr, num, obj, s, Json};
+use crate::workload::TrainConfig;
 
-/// Tensor spec from the manifest.
+// ---------------------------------------------------------------------------
+// Injected environment drift
+// ---------------------------------------------------------------------------
+
+/// One segment of the injected straggler timeline: from iteration
+/// `start_iter` until the next segment, every iteration's wall time is
+/// multiplied by `slowdown` (1.0 = nominal).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DriftSegment {
+    pub start_iter: u64,
+    pub slowdown: f64,
+}
+
+/// Piecewise-constant straggler-slowdown timeline over iteration index —
+/// the injected "changing environment" the replanning experiments run
+/// under. Validated like [`PowerCapSchedule`]: strictly ascending starts,
+/// finite positive factors; a missing leading segment is implicitly
+/// nominal (factor 1.0 from iteration 0).
 #[derive(Clone, Debug, PartialEq)]
-pub struct TensorSpec {
-    pub shape: Vec<usize>,
-    pub dtype: String,
+pub struct DriftSchedule {
+    segments: Vec<DriftSegment>,
 }
 
-impl TensorSpec {
-    fn from_json(j: &Json) -> Result<Self> {
-        let shape = j
-            .get("shape")
-            .and_then(|s| s.as_arr())
-            .ok_or_else(|| anyhow!("bad shape"))?
-            .iter()
-            .map(|v| v.as_usize().unwrap_or(0))
-            .collect();
-        let dtype =
-            j.get("dtype").and_then(|d| d.as_str()).ok_or_else(|| anyhow!("bad dtype"))?.into();
-        Ok(TensorSpec { shape, dtype })
+impl DriftSchedule {
+    /// No injected drift (factor 1.0 throughout).
+    pub fn none() -> Self {
+        DriftSchedule { segments: vec![DriftSegment { start_iter: 0, slowdown: 1.0 }] }
     }
 
-    pub fn elements(&self) -> usize {
-        self.shape.iter().product()
-    }
-}
-
-#[derive(Clone, Debug)]
-pub struct ArtifactSpec {
-    pub file: String,
-    pub args: Vec<TensorSpec>,
-    pub outputs: Vec<TensorSpec>,
-}
-
-/// Model config entry from the manifest.
-#[derive(Clone, Debug)]
-pub struct ModelInfo {
-    pub vocab: usize,
-    pub seq_len: usize,
-    pub batch: usize,
-    pub n_param_arrays: usize,
-    pub n_params: usize,
-    pub lr: f64,
-}
-
-#[derive(Debug)]
-pub struct Manifest {
-    pub artifacts: BTreeMap<String, ArtifactSpec>,
-    pub configs: BTreeMap<String, ModelInfo>,
-}
-
-impl Manifest {
-    pub fn load(dir: &Path) -> Result<Manifest> {
-        let raw = std::fs::read_to_string(dir.join("manifest.json")).with_context(|| {
-            format!("reading {}/manifest.json (run `make artifacts`)", dir.display())
-        })?;
-        let j = Json::parse(&raw).map_err(|e| anyhow!("manifest parse: {e}"))?;
-        let mut artifacts = BTreeMap::new();
-        let listed =
-            j.get("artifacts").and_then(|a| a.as_obj()).ok_or_else(|| anyhow!("no artifacts"))?;
-        for (name, a) in listed {
-            let file = a.get("file").and_then(|f| f.as_str()).ok_or_else(|| anyhow!("no file"))?;
-            let parse_specs = |key: &str| -> Result<Vec<TensorSpec>> {
-                a.get(key)
-                    .and_then(|x| x.as_arr())
-                    .ok_or_else(|| anyhow!("no {key}"))?
-                    .iter()
-                    .map(TensorSpec::from_json)
-                    .collect()
-            };
-            let spec = ArtifactSpec {
-                file: file.into(),
-                args: parse_specs("args")?,
-                outputs: parse_specs("outputs")?,
-            };
-            artifacts.insert(name.clone(), spec);
+    /// Validate and build. A first segment starting after iteration 0 gets
+    /// an implicit nominal prefix.
+    pub fn piecewise(mut segments: Vec<DriftSegment>) -> Result<Self, String> {
+        if segments.is_empty() {
+            return Ok(Self::none());
         }
-        let mut configs = BTreeMap::new();
-        if let Some(cfgs) = j.get("configs").and_then(|c| c.as_obj()) {
-            for (name, c) in cfgs {
-                let u = |k: &str| c.get(k).and_then(|v| v.as_usize()).unwrap_or(0);
-                configs.insert(
-                    name.clone(),
-                    ModelInfo {
-                        vocab: u("vocab"),
-                        seq_len: u("seq_len"),
-                        batch: u("batch"),
-                        n_param_arrays: u("n_param_arrays"),
-                        n_params: u("n_params"),
-                        lr: c.get("lr").and_then(|v| v.as_f64()).unwrap_or(0.0),
-                    },
-                );
+        if segments[0].start_iter > 0 {
+            segments.insert(0, DriftSegment { start_iter: 0, slowdown: 1.0 });
+        }
+        for w in segments.windows(2) {
+            if w[1].start_iter <= w[0].start_iter {
+                return Err(format!(
+                    "drift segment starts must strictly ascend ({} then {})",
+                    w[0].start_iter, w[1].start_iter
+                ));
             }
         }
-        Ok(Manifest { artifacts, configs })
+        for seg in &segments {
+            if !seg.slowdown.is_finite() || seg.slowdown <= 0.0 {
+                return Err(format!(
+                    "drift segment (iter {}, x{}) must have a finite positive factor",
+                    seg.start_iter, seg.slowdown
+                ));
+            }
+        }
+        Ok(DriftSchedule { segments })
+    }
+
+    /// Parse the CLI format: either a plain factor (`"1.25"` — constant)
+    /// or comma-separated `iter:factor` pairs (`"150:1.25,300:1.0"`).
+    pub fn parse(spec: &str) -> Result<Self, String> {
+        let mut segments = Vec::new();
+        for item in spec.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+            let (start, factor) = match item.split_once(':') {
+                Some((a, b)) => (a, b),
+                None => ("0", item),
+            };
+            let start_iter: u64 =
+                start.trim().parse().map_err(|_| format!("bad drift start '{start}'"))?;
+            let slowdown: f64 =
+                factor.trim().parse().map_err(|_| format!("bad drift factor '{factor}'"))?;
+            segments.push(DriftSegment { start_iter, slowdown });
+        }
+        if segments.is_empty() {
+            return Err("empty drift schedule".to_string());
+        }
+        Self::piecewise(segments)
+    }
+
+    pub fn segments(&self) -> &[DriftSegment] {
+        &self.segments
+    }
+
+    /// The slowdown factor in force at iteration `iter`.
+    pub fn factor_at(&self, iter: u64) -> f64 {
+        let mut f = self.segments[0].slowdown;
+        for seg in &self.segments {
+            if seg.start_iter <= iter {
+                f = seg.slowdown;
+            } else {
+                break;
+            }
+        }
+        f
+    }
+
+    /// True iff a segment boundary sits exactly at `iter` (> 0) — the
+    /// oracle policy's replan instants.
+    pub fn is_boundary(&self, iter: u64) -> bool {
+        iter > 0 && self.segments.iter().any(|seg| seg.start_iter == iter)
     }
 }
 
-/// The PJRT runtime: one client, lazily compiled executables.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    dir: PathBuf,
-    pub manifest: Manifest,
-    compiled: BTreeMap<String, xla::PjRtLoadedExecutable>,
+// ---------------------------------------------------------------------------
+// Drift monitor
+// ---------------------------------------------------------------------------
+
+/// Hysteresis-guarded drift detector over the observed/predicted
+/// iteration ratios.
+///
+/// Both ratios (time, energy) are EWMA-smoothed; drift is the relative
+/// deviation of the smoothed ratio from its *baseline* — the smoothed
+/// value at the last replan — so a replan that absorbs the new conditions
+/// re-arms the monitor instead of re-firing forever (the thermal
+/// warm-up's leakage growth is the canonical slow drift this absorbs).
+/// A trigger needs the deviation to exceed the threshold for `patience`
+/// consecutive iterations, with at least `cooldown_iters` since the last
+/// replan.
+#[derive(Clone, Debug)]
+pub struct DriftMonitor {
+    cfg: ReplanConfig,
+    time_ratio: f64,
+    energy_ratio: f64,
+    baseline_time: f64,
+    baseline_energy: f64,
+    streak: u32,
+    last_replan_iter: Option<u64>,
 }
 
-impl Runtime {
-    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Runtime> {
-        let dir = artifact_dir.as_ref().to_path_buf();
-        let manifest = Manifest::load(&dir)?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e:?}"))?;
-        Ok(Runtime { client, dir, manifest, compiled: BTreeMap::new() })
+impl DriftMonitor {
+    pub fn new(cfg: ReplanConfig) -> Self {
+        DriftMonitor {
+            cfg,
+            time_ratio: 1.0,
+            energy_ratio: 1.0,
+            baseline_time: 1.0,
+            baseline_energy: 1.0,
+            streak: 0,
+            last_replan_iter: None,
+        }
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+    /// Fold one iteration's `(predicted, observed)` (time, energy) pair
+    /// in; returns true when a replan should fire.
+    pub fn observe(&mut self, iter: u64, predicted: (f64, f64), observed: (f64, f64)) -> bool {
+        let a = self.cfg.ewma_alpha;
+        let rt = observed.0 / predicted.0.max(1e-12);
+        let re = observed.1 / predicted.1.max(1e-12);
+        self.time_ratio += a * (rt - self.time_ratio);
+        self.energy_ratio += a * (re - self.energy_ratio);
+        let dev_t = (self.time_ratio / self.baseline_time - 1.0).abs();
+        let dev_e = (self.energy_ratio / self.baseline_energy - 1.0).abs();
+        if dev_t.max(dev_e) > self.cfg.drift_pct / 100.0 {
+            self.streak += 1;
+        } else {
+            self.streak = 0;
+        }
+        let cooled = self
+            .last_replan_iter
+            .is_none_or(|last| iter.saturating_sub(last) >= self.cfg.cooldown_iters);
+        self.streak >= self.cfg.patience && cooled
     }
 
-    /// Compile (and cache) one artifact.
-    pub fn compile(&mut self, name: &str) -> Result<()> {
-        if self.compiled.contains_key(name) {
-            return Ok(());
-        }
-        let spec = self
-            .manifest
-            .artifacts
-            .get(name)
-            .ok_or_else(|| anyhow!("unknown artifact {name}"))?;
-        let path = self.dir.join(&spec.file);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
-        )
-        .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp).map_err(|e| anyhow!("compile {name}: {e:?}"))?;
-        self.compiled.insert(name.to_string(), exe);
-        Ok(())
+    /// Re-arm after a replan at `iter`: the current smoothed ratios become
+    /// the new baseline (hysteresis).
+    pub fn rebaseline(&mut self, iter: u64) {
+        self.baseline_time = self.time_ratio;
+        self.baseline_energy = self.energy_ratio;
+        self.streak = 0;
+        self.last_replan_iter = Some(iter);
     }
 
-    /// Execute an artifact on host literals; returns the un-tupled output
-    /// literals (aot.py lowers with return_tuple=True).
-    pub fn execute(&mut self, name: &str, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        self.compile(name)?;
-        let spec = &self.manifest.artifacts[name];
-        if args.len() != spec.args.len() {
-            bail!("{name}: expected {} args, got {}", spec.args.len(), args.len());
-        }
-        let exe = &self.compiled[name];
-        let out = exe.execute::<xla::Literal>(args).map_err(|e| anyhow!("execute {name}: {e:?}"))?;
-        let lit = out[0][0].to_literal_sync().map_err(|e| anyhow!("to_literal: {e:?}"))?;
-        let parts = lit.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
-        if parts.len() != spec.outputs.len() {
-            bail!("{name}: expected {} outputs, got {}", spec.outputs.len(), parts.len());
-        }
-        Ok(parts)
+    /// The smoothed observed/predicted *time* ratio — the straggler-factor
+    /// estimate re-selection budgets against.
+    pub fn slowdown_estimate(&self) -> f64 {
+        self.time_ratio.max(1.0)
     }
+}
+
+// ---------------------------------------------------------------------------
+// Policies and loop configuration
+// ---------------------------------------------------------------------------
+
+/// When the runtime re-plans.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReplanPolicy {
+    /// Plan once, never react (the stale-plan baseline).
+    Static,
+    /// React to [`DriftMonitor`] triggers and cap-segment boundaries.
+    Drift,
+    /// Replan exactly at the injected event boundaries with perfect
+    /// knowledge of the new conditions — the reference the drift policy
+    /// is measured against.
+    Oracle,
+}
+
+impl ReplanPolicy {
+    pub fn parse(spec: &str) -> Option<ReplanPolicy> {
+        match spec {
+            "static" => Some(ReplanPolicy::Static),
+            "drift" => Some(ReplanPolicy::Drift),
+            "oracle" => Some(ReplanPolicy::Oracle),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ReplanPolicy::Static => "static",
+            ReplanPolicy::Drift => "drift",
+            ReplanPolicy::Oracle => "oracle",
+        }
+    }
+}
+
+/// Configuration of one [`TrainingLoop`] run.
+#[derive(Clone, Debug)]
+pub struct LoopConfig {
+    pub n_iters: u64,
+    /// Wall-clock deadline for the whole run (s). `None` derives
+    /// `n_iters × t_min × (1 + deadline_slack)` from the initial frontier.
+    pub deadline_s: Option<f64>,
+    pub deadline_slack: f64,
+    /// Per-GPU power-cap timeline over simulated wall-clock (W); `None`
+    /// means uncapped.
+    pub caps: Option<PowerCapSchedule>,
+    /// Injected straggler timeline.
+    pub drift: DriftSchedule,
+    pub policy: ReplanPolicy,
+    pub seed: u64,
+}
+
+impl Default for LoopConfig {
+    fn default() -> Self {
+        LoopConfig {
+            n_iters: 400,
+            deadline_s: None,
+            deadline_slack: 0.02,
+            caps: None,
+            drift: DriftSchedule::none(),
+            policy: ReplanPolicy::Drift,
+            seed: 2026,
+        }
+    }
+}
+
+/// Appendix A's Jensen penalty applied when a plan is board-throttled: a
+/// plan drawing `s×` the active cap runs at oscillating frequency, which
+/// costs more dynamic energy than the average-frequency equivalent.
+const THROTTLE_JENSEN: f64 = 0.15;
+
+/// One observed iteration (what the monitor and the totals see).
+#[derive(Clone, Copy, Debug)]
+pub struct ObservedIter {
+    pub time_s: f64,
+    pub energy_j: f64,
+    pub throttled: bool,
+}
+
+/// Physical outcome of running one deployed operating point for one
+/// iteration under the current conditions. Policy-independent by
+/// construction — it depends only on the deployed point's reference-
+/// temperature characteristics and the live (slowdown, cap, temperature):
+///
+/// * straggler: time × `slowdown`;
+/// * cap: a plan whose nominal draw exceeds the cap is throttled — time
+///   stretches by the overshoot `s` and dynamic energy pays the Jensen
+///   penalty `1 + 0.15·(s − 1)` (Appendix A: fluctuating frequency costs
+///   more than its average);
+/// * thermal: the static share scales with the stretched duration *and*
+///   the leakage factor `static_power(temp) / static_w`.
+pub fn observe_iteration(
+    gpu: &GpuSpec,
+    point_time_s: f64,
+    point_energy_j: f64,
+    plan_dyn_j: f64,
+    slowdown: f64,
+    cap_w: Option<f64>,
+    temp_c: f64,
+) -> ObservedIter {
+    let t_p = point_time_s.max(1e-12);
+    let dyn_j = plan_dyn_j.clamp(0.0, point_energy_j);
+    let stat_j = point_energy_j - dyn_j;
+    let p_plan = point_energy_j / t_p;
+    let (stretch, jensen, throttled) = match cap_w {
+        Some(cap) if p_plan > cap * (1.0 + 1e-9) => {
+            let s = p_plan / cap;
+            (s, 1.0 + THROTTLE_JENSEN * (s - 1.0), true)
+        }
+        _ => (1.0, 1.0, false),
+    };
+    let time_s = t_p * slowdown * stretch;
+    let leak = gpu.static_power(temp_c) / gpu.static_w;
+    let energy_j = dyn_j * jensen + stat_j * (time_s / t_p) * leak;
+    ObservedIter { time_s, energy_j, throttled }
+}
+
+/// Select an operating point: minimum energy among frontier points whose
+/// time fits `budget_s` and whose average draw fits `cap_w`; falls back
+/// to the fastest in-cap point when the budget is infeasible, then to the
+/// minimum-power point when even the cap is (mirroring the cluster
+/// allocator's pinning rule). `None` only on an empty frontier.
+pub fn select_operating_point(
+    frontier: &Frontier,
+    budget_s: f64,
+    cap_w: Option<f64>,
+) -> Option<usize> {
+    let pts = frontier.points();
+    if pts.is_empty() {
+        return None;
+    }
+    let in_cap = |p: &crate::frontier::Point| match cap_w {
+        Some(cap) => p.avg_power_w() <= cap * (1.0 + 1e-9),
+        None => true,
+    };
+    // Frontier points ascend in time and descend in energy: the last
+    // in-budget feasible point is the energy-minimal one.
+    let mut best: Option<usize> = None;
+    for (i, p) in pts.iter().enumerate() {
+        if in_cap(p) && p.time <= budget_s * (1.0 + 1e-9) {
+            best = Some(i);
+        }
+    }
+    if best.is_some() {
+        return best;
+    }
+    // Budget infeasible: fastest point that respects the cap.
+    if let Some(i) = pts.iter().position(|p| in_cap(p)) {
+        return Some(i);
+    }
+    // Cap below the frontier's minimum power: pin at minimum power.
+    pts.iter()
+        .enumerate()
+        .min_by(|(_, a), (_, b)| {
+            a.avg_power_w().partial_cmp(&b.avg_power_w()).expect("finite frontier powers")
+        })
+        .map(|(i, _)| i)
+}
+
+// ---------------------------------------------------------------------------
+// The training loop
+// ---------------------------------------------------------------------------
+
+/// Summary of one [`TrainingLoop`] run (JSON is byte-deterministic).
+#[derive(Clone, Debug)]
+pub struct RunSummary {
+    pub system: System,
+    pub policy: ReplanPolicy,
+    pub n_iters: u64,
+    /// Total observed wall-clock (s).
+    pub total_time_s: f64,
+    /// Total observed per-GPU energy (J).
+    pub total_energy_j: f64,
+    pub deadline_s: f64,
+    pub missed_deadline: bool,
+    pub throttled_iters: u64,
+    pub final_temp_c: f64,
+    /// Plan revisions beyond the initial plan.
+    pub replans: u64,
+    /// Backend measurements (shared-cache misses) billed across the
+    /// initial optimization and every replan.
+    pub measurements_billed: u64,
+    pub revisions: RevisionLog,
+}
+
+impl RunSummary {
+    /// Deterministic summary JSON. Revisions appear as metadata only (the
+    /// full typed log, plans included, is [`RevisionLog::to_json`]).
+    pub fn to_json(&self) -> Json {
+        let revs: Vec<Json> = self
+            .revisions
+            .revisions
+            .iter()
+            .map(|r| {
+                obj(vec![
+                    ("revision", num(r.revision as f64)),
+                    ("at_iter", num(r.at_iter as f64)),
+                    ("trigger", s(r.trigger.as_str())),
+                    ("iter_time_s", num(r.iter_time_s)),
+                    ("iter_energy_j", num(r.iter_energy_j)),
+                    ("measurements_billed", num(r.measurements_billed as f64)),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("summary", s("kareus_replan_run")),
+            ("system", s(self.system.name())),
+            ("policy", s(self.policy.name())),
+            ("n_iters", num(self.n_iters as f64)),
+            ("total_time_s", num(self.total_time_s)),
+            ("total_energy_j", num(self.total_energy_j)),
+            ("deadline_s", num(self.deadline_s)),
+            ("missed_deadline", Json::Bool(self.missed_deadline)),
+            ("throttled_iters", num(self.throttled_iters as f64)),
+            ("final_temp_c", num(self.final_temp_c)),
+            ("replans", num(self.replans as f64)),
+            ("measurements_billed", num(self.measurements_billed as f64)),
+            ("revisions", arr(revs)),
+        ])
+    }
+}
+
+/// The online replanning training loop: optimize once, then step
+/// `n_iters` iterations under the injected conditions, replanning per the
+/// configured [`ReplanPolicy`].
+pub struct TrainingLoop {
+    pub gpu: GpuSpec,
+    pub cfg: TrainConfig,
+    pub system: System,
+    /// Shared engine: its caches are what make replans warm (a drift
+    /// replan re-runs the optimizer and bills only cache misses), and its
+    /// [`ReplanConfig`](crate::engine::EngineConfig::replan) parameterizes
+    /// the drift monitor.
+    pub engine: EngineConfig,
+    pub loop_cfg: LoopConfig,
+}
+
+/// Mutable per-run state bundled so replans and the iteration loop share
+/// one borrow.
+struct LoopState {
+    result: SystemResult,
+    sel: usize,
+    revisions: Vec<PlanRevision>,
+    billed: u64,
+    sim_time_s: f64,
+}
+
+impl TrainingLoop {
+    pub fn new(gpu: GpuSpec, cfg: TrainConfig, system: System, engine: EngineConfig) -> Self {
+        TrainingLoop { gpu, cfg, system, engine, loop_cfg: LoopConfig::default() }
+    }
+
+    pub fn with_loop_config(mut self, loop_cfg: LoopConfig) -> Self {
+        self.loop_cfg = loop_cfg;
+        self
+    }
+
+    /// Deadline budget for one iteration given progress and the current
+    /// straggler estimate.
+    fn iter_budget(&self, deadline_s: f64, st: &LoopState, iters_done: u64, est: f64) -> f64 {
+        let remaining = (deadline_s - st.sim_time_s).max(0.0);
+        let left = (self.loop_cfg.n_iters - iters_done).max(1) as f64;
+        remaining / left / est.max(1.0)
+    }
+
+    /// Record a revision for the currently selected point.
+    fn log_revision(
+        &self,
+        st: &mut LoopState,
+        at_iter: u64,
+        trigger: ReplanTrigger,
+        cap_w: Option<f64>,
+        slowdown_est: f64,
+        billed: u64,
+    ) {
+        let point = st.result.frontier.points()[st.sel];
+        let plan = FrequencyPlan::from_iteration(&st.result.menus, &st.result.plans[point.tag]);
+        st.revisions.push(PlanRevision {
+            revision: st.revisions.len() as u32,
+            at_iter,
+            sim_time_s: st.sim_time_s,
+            trigger,
+            cap_w,
+            slowdown_est,
+            iter_time_s: point.time,
+            iter_energy_j: point.energy,
+            measurements_billed: billed,
+            plan,
+        });
+        st.billed += billed;
+    }
+
+    /// Full (warm) replan: re-run the optimizer on the shared engine —
+    /// per-partition searches replay from the `MboCache`, canonical
+    /// executions from the `MeasureCache`, so only true misses are billed
+    /// — then re-select under the given budget and cap.
+    fn replan(&self, st: &mut LoopState, budget_s: f64, cap_w: Option<f64>) -> u64 {
+        let m0 = self.engine.measure_cache.misses();
+        let refreshed =
+            run_system_with(&self.gpu, &self.cfg, self.system, self.loop_cfg.seed, &self.engine);
+        let billed = self.engine.measure_cache.misses() - m0;
+        // A refresh can only be adopted if it still has operating points
+        // (it always does for deterministic inputs — same seed, same
+        // caches — but a stale plan beats no plan).
+        if !refreshed.frontier.is_empty() {
+            st.result = refreshed;
+            if let Some(sel) = select_operating_point(&st.result.frontier, budget_s, cap_w) {
+                st.sel = sel;
+            }
+        }
+        billed
+    }
+
+    pub fn run(&self) -> Result<RunSummary, String> {
+        let lc = &self.loop_cfg;
+        let engine = &self.engine;
+
+        // Initial (possibly cold) optimization.
+        let m0 = engine.measure_cache.misses();
+        let result = run_system_with(&self.gpu, &self.cfg, self.system, lc.seed, engine);
+        let initial_billed = engine.measure_cache.misses() - m0;
+        let t_min = result
+            .frontier
+            .min_time()
+            .ok_or_else(|| "optimization produced an empty frontier".to_string())?
+            .time;
+        let nominal_deadline = lc.n_iters as f64 * t_min * (1.0 + lc.deadline_slack);
+        let deadline_s = lc.deadline_s.unwrap_or(nominal_deadline);
+
+        let thermal = ThermalModel::default();
+        let mut temp: ThermalState = thermal.initial();
+        let mut monitor = DriftMonitor::new(engine.replan);
+        let mut st =
+            LoopState { result, sel: 0, revisions: Vec::new(), billed: 0, sim_time_s: 0.0 };
+        let mut active_cap = lc.caps.as_ref().map(|c| c.cap_at(0.0));
+        let budget0 = self.iter_budget(deadline_s, &st, 0, 1.0);
+        st.sel = select_operating_point(&st.result.frontier, budget0, active_cap)
+            .ok_or_else(|| "no selectable operating point".to_string())?;
+        self.log_revision(&mut st, 0, ReplanTrigger::Initial, active_cap, 1.0, initial_billed);
+
+        let mut total_energy_j = 0.0;
+        let mut throttled_iters = 0u64;
+
+        for iter in 0..lc.n_iters {
+            // The cap in force now binds *physically* for every policy;
+            // reactive policies additionally re-select at its boundaries
+            // (retained frontier only — the optimizer never runs here).
+            let cap_now = lc.caps.as_ref().map(|c| c.cap_at(st.sim_time_s));
+            if lc.policy != ReplanPolicy::Static && cap_now != active_cap {
+                active_cap = cap_now;
+                let est = match lc.policy {
+                    ReplanPolicy::Oracle => lc.drift.factor_at(iter),
+                    _ => monitor.slowdown_estimate(),
+                };
+                let budget = self.iter_budget(deadline_s, &st, iter, est);
+                if let Some(sel) = select_operating_point(&st.result.frontier, budget, cap_now) {
+                    st.sel = sel;
+                }
+                self.log_revision(&mut st, iter, ReplanTrigger::CapBoundary, cap_now, est, 0);
+                monitor.rebaseline(iter);
+            }
+            if lc.policy == ReplanPolicy::Oracle && lc.drift.is_boundary(iter) {
+                let est = lc.drift.factor_at(iter);
+                let budget = self.iter_budget(deadline_s, &st, iter, est);
+                let billed = self.replan(&mut st, budget, active_cap);
+                self.log_revision(&mut st, iter, ReplanTrigger::Oracle, active_cap, est, billed);
+                monitor.rebaseline(iter);
+            }
+
+            let point = st.result.frontier.points()[st.sel];
+            let dyn_j = st.result.plans[point.tag].dyn_j;
+            let o = observe_iteration(
+                &self.gpu,
+                point.time,
+                point.energy,
+                dyn_j,
+                lc.drift.factor_at(iter),
+                cap_now,
+                temp.temp_c,
+            );
+            thermal.step(&mut temp, o.energy_j / o.time_s.max(1e-12), o.time_s);
+            st.sim_time_s += o.time_s;
+            total_energy_j += o.energy_j;
+            throttled_iters += o.throttled as u64;
+
+            if lc.policy == ReplanPolicy::Drift
+                && monitor.observe(iter, (point.time, point.energy), (o.time_s, o.energy_j))
+            {
+                let est = monitor.slowdown_estimate();
+                let budget = self.iter_budget(deadline_s, &st, iter + 1, est);
+                let billed = self.replan(&mut st, budget, active_cap);
+                self.log_revision(&mut st, iter + 1, ReplanTrigger::Drift, active_cap, est, billed);
+                monitor.rebaseline(iter);
+            }
+        }
+
+        let replans = st.revisions.len() as u64 - 1;
+        Ok(RunSummary {
+            system: self.system,
+            policy: lc.policy,
+            n_iters: lc.n_iters,
+            total_time_s: st.sim_time_s,
+            total_energy_j,
+            deadline_s,
+            missed_deadline: st.sim_time_s > deadline_s * (1.0 + 1e-9),
+            throttled_iters,
+            final_temp_c: temp.temp_c,
+            replans,
+            measurements_billed: st.billed,
+            revisions: RevisionLog { revisions: st.revisions },
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The pinned replanning comparison (paper experiment + acceptance tests)
+// ---------------------------------------------------------------------------
+
+/// Static vs drift-triggered vs oracle under one injected scenario.
+#[derive(Clone, Debug)]
+pub struct ReplanningComparison {
+    pub static_run: RunSummary,
+    pub drift_run: RunSummary,
+    pub oracle_run: RunSummary,
+}
+
+/// Build the pinned mid-run scenario for `paper --exp replanning` and
+/// `tests/runtime.rs`: a ×1.25 straggler from 40% of the run, and a
+/// per-GPU cap dropping to 75% of the span between the initial point's
+/// draw and the frontier's minimum power at ~60% of the nominal runtime.
+/// The deadline carries zero slack, so the initial selection is the
+/// max-throughput point and re-selection under the dropped cap is
+/// "fastest point that fits" — which a throttled static plan strictly
+/// loses to in both time (stretch `s` vs the frontier's ~`s^(1/3)` step)
+/// and energy (Jensen penalty vs a cheaper frontier point).
+pub fn replanning_scenario(
+    gpu: &GpuSpec,
+    cfg: &TrainConfig,
+    system: System,
+    engine: &EngineConfig,
+    n_iters: u64,
+    seed: u64,
+) -> Result<LoopConfig, String> {
+    let probe = run_system_with(gpu, cfg, system, seed, engine);
+    let fast = probe
+        .frontier
+        .min_time()
+        .ok_or_else(|| "empty frontier in replanning scenario".to_string())?;
+    let p_fast = fast.avg_power_w();
+    let p_min = probe
+        .frontier
+        .min_energy()
+        .ok_or_else(|| "empty frontier in replanning scenario".to_string())?
+        .avg_power_w();
+    let cap_lo = p_min + 0.75 * (p_fast - p_min);
+    let slow_at = (n_iters * 2) / 5;
+    // Boundary in wall-clock: 40% nominal iterations plus 20% slowed ones.
+    let t_boundary = slow_at as f64 * fast.time + (n_iters as f64 / 5.0) * 1.25 * fast.time;
+    let caps = PowerCapSchedule::piecewise(vec![
+        crate::cluster::CapSegment { start_s: 0.0, cap_w: p_fast * 2.0 },
+        crate::cluster::CapSegment { start_s: t_boundary, cap_w: cap_lo },
+    ])?;
+    let drift =
+        DriftSchedule::piecewise(vec![DriftSegment { start_iter: slow_at, slowdown: 1.25 }])?;
+    Ok(LoopConfig {
+        n_iters,
+        deadline_s: None,
+        deadline_slack: 0.0,
+        caps: Some(caps),
+        drift,
+        policy: ReplanPolicy::Drift,
+        seed,
+    })
+}
+
+/// Run all three policies over one scenario on a shared engine (the
+/// static run cold-starts the caches; the drift and oracle runs replay
+/// warm — deterministic because cache hits are bit-identical replays).
+pub fn run_replanning_comparison(
+    gpu: &GpuSpec,
+    cfg: &TrainConfig,
+    system: System,
+    engine: &EngineConfig,
+    base: &LoopConfig,
+) -> Result<ReplanningComparison, String> {
+    let run = |policy: ReplanPolicy| -> Result<RunSummary, String> {
+        let lc = LoopConfig { policy, ..base.clone() };
+        TrainingLoop::new(gpu.clone(), *cfg, system, engine.clone()).with_loop_config(lc).run()
+    };
+    Ok(ReplanningComparison {
+        static_run: run(ReplanPolicy::Static)?,
+        drift_run: run(ReplanPolicy::Drift)?,
+        oracle_run: run(ReplanPolicy::Oracle)?,
+    })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::frontier::Point;
 
-    fn artifacts_dir() -> PathBuf {
-        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
-    }
-
-    fn have_artifacts() -> bool {
-        artifacts_dir().join("manifest.json").exists()
+    #[test]
+    fn drift_schedule_parse_and_lookup() {
+        let d = DriftSchedule::parse("150:1.25,300:1.0").unwrap();
+        assert_eq!(d.segments().len(), 3, "implicit nominal prefix expected");
+        assert_eq!(d.factor_at(0), 1.0);
+        assert_eq!(d.factor_at(149), 1.0);
+        assert_eq!(d.factor_at(150), 1.25);
+        assert_eq!(d.factor_at(299), 1.25);
+        assert_eq!(d.factor_at(1_000_000), 1.0);
+        assert!(d.is_boundary(150) && d.is_boundary(300));
+        assert!(!d.is_boundary(0) && !d.is_boundary(151));
+        let constant = DriftSchedule::parse("1.4").unwrap();
+        assert_eq!(constant.factor_at(7), 1.4);
+        assert!(DriftSchedule::parse("").is_err());
+        assert!(DriftSchedule::parse("10:0").is_err());
+        assert!(DriftSchedule::parse("10:1.2,10:1.3").is_err());
+        assert_eq!(DriftSchedule::none().factor_at(123), 1.0);
     }
 
     #[test]
-    fn manifest_parses() {
-        if !have_artifacts() {
-            eprintln!("skipping: artifacts not built");
-            return;
+    fn monitor_fires_on_sustained_drift_with_hysteresis() {
+        let cfg = ReplanConfig { drift_pct: 5.0, ewma_alpha: 0.5, patience: 3, cooldown_iters: 4 };
+        let mut m = DriftMonitor::new(cfg);
+        // Nominal iterations never fire.
+        for i in 0..10 {
+            assert!(!m.observe(i, (1.0, 100.0), (1.0, 100.0)), "false positive at {i}");
         }
-        let m = Manifest::load(&artifacts_dir()).unwrap();
-        assert!(m.artifacts.contains_key("train_step_tiny"));
-        let tiny = &m.configs["tiny"];
-        assert!(tiny.n_param_arrays > 0);
-        let ts = &m.artifacts["train_step_tiny"];
-        assert_eq!(ts.args.len(), 3 * tiny.n_param_arrays + 2);
+        // A sustained 25% slowdown fires only after `patience` exceedances.
+        let mut fired_at = None;
+        for i in 10..20 {
+            if m.observe(i, (1.0, 100.0), (1.25, 100.0)) {
+                fired_at = Some(i);
+                break;
+            }
+        }
+        let fired_at = fired_at.expect("sustained drift must fire");
+        assert!(fired_at >= 12, "fired at {fired_at}, before the patience window");
+        assert!(m.slowdown_estimate() > 1.1);
+        // Rebaseline absorbs the new conditions: same observations stop
+        // firing (hysteresis), even well past the cooldown.
+        m.rebaseline(fired_at);
+        for i in fired_at + 1..fired_at + 40 {
+            assert!(!m.observe(i, (1.0, 100.0), (1.25, 100.0)), "re-fired at {i} after baseline");
+        }
     }
 
     #[test]
-    fn spec_elements() {
-        let s = TensorSpec { shape: vec![2, 3, 4], dtype: "float32".into() };
-        assert_eq!(s.elements(), 24);
+    fn monitor_respects_cooldown() {
+        let cfg = ReplanConfig { drift_pct: 5.0, ewma_alpha: 1.0, patience: 1, cooldown_iters: 10 };
+        let mut m = DriftMonitor::new(cfg);
+        assert!(m.observe(0, (1.0, 1.0), (2.0, 1.0)));
+        m.rebaseline(0);
+        // A *new* deviation inside the cooldown window stays silenced.
+        for i in 1..10 {
+            assert!(!m.observe(i, (1.0, 1.0), (4.0, 1.0)), "fired inside cooldown at {i}");
+        }
+        assert!(m.observe(10, (1.0, 1.0), (4.0, 1.0)), "cooldown expiry must re-arm");
+    }
+
+    #[test]
+    fn monitor_tracks_thermal_warmup_trace() {
+        // The pinned warm-up trace from sim::thermal: as the die warms,
+        // leakage inflates observed energy. With a tight threshold the
+        // monitor must flag it; with a loose one it must not.
+        let gpu = GpuSpec::a100();
+        let model = ThermalModel::default();
+        let trace = model.warmup_trace(320.0, 0.5, 40);
+        let observe_all = |drift_pct: f64| -> bool {
+            let cfg = ReplanConfig { drift_pct, ewma_alpha: 0.5, patience: 3, cooldown_iters: 5 };
+            let mut m = DriftMonitor::new(cfg);
+            let mut fired = false;
+            for (i, &t) in trace.iter().enumerate() {
+                let leak = gpu.static_power(t) / gpu.static_w;
+                // 25% static share at reference temperature.
+                let e_obs = 75.0 + 25.0 * leak;
+                fired |= m.observe(i as u64, (0.5, 100.0), (0.5, e_obs));
+            }
+            fired
+        };
+        assert!(observe_all(1.0), "1% threshold must flag thermal leakage growth");
+        assert!(!observe_all(25.0), "25% threshold must ignore it");
+    }
+
+    #[test]
+    fn selection_obeys_budget_and_cap() {
+        // Times 1..4, energies 40,30,20,10 → powers 40,15,6.67,2.5 W.
+        let f = Frontier::from_points(vec![
+            Point::new(1.0, 40.0, 0),
+            Point::new(2.0, 30.0, 1),
+            Point::new(3.0, 20.0, 2),
+            Point::new(4.0, 10.0, 3),
+        ]);
+        // Loose budget, no cap: min energy.
+        assert_eq!(select_operating_point(&f, 10.0, None), Some(3));
+        // Budget admits the first two: pick the cheaper of them.
+        assert_eq!(select_operating_point(&f, 2.0, None), Some(1));
+        // Budget infeasible: fastest point (in cap).
+        assert_eq!(select_operating_point(&f, 0.5, None), Some(0));
+        // Cap excludes the fast points.
+        assert_eq!(select_operating_point(&f, 0.5, Some(10.0)), Some(2));
+        // Cap below minimum power: pinned at the min-power point.
+        assert_eq!(select_operating_point(&f, 10.0, Some(1.0)), Some(3));
+        assert_eq!(select_operating_point(&Frontier::new(), 1.0, None), None);
+    }
+
+    #[test]
+    fn observed_iteration_physics() {
+        let gpu = GpuSpec::a100();
+        // 0.5 s, 150 J total, 100 J dynamic → 300 W nominal draw.
+        let base = observe_iteration(&gpu, 0.5, 150.0, 100.0, 1.0, None, gpu.ref_temp_c);
+        assert!(!base.throttled);
+        assert!((base.time_s - 0.5).abs() < 1e-12);
+        assert!((base.energy_j - 150.0).abs() < 1e-9, "baseline must equal the plan");
+
+        // Straggler: time and the static share stretch together.
+        let slow = observe_iteration(&gpu, 0.5, 150.0, 100.0, 1.25, None, gpu.ref_temp_c);
+        assert!((slow.time_s - 0.625).abs() < 1e-12);
+        assert!((slow.energy_j - (100.0 + 50.0 * 1.25)).abs() < 1e-9);
+
+        // Cap throttling: stretch + Jensen penalty, strictly worse than
+        // the plan in both coordinates.
+        let hot = observe_iteration(&gpu, 0.5, 150.0, 100.0, 1.0, Some(200.0), gpu.ref_temp_c);
+        assert!(hot.throttled);
+        assert!(hot.time_s > base.time_s && hot.energy_j > base.energy_j);
+        // In-cap plans are untouched.
+        let cool = observe_iteration(&gpu, 0.5, 150.0, 100.0, 1.0, Some(400.0), gpu.ref_temp_c);
+        assert!(!cool.throttled);
+        assert_eq!(cool.energy_j.to_bits(), base.energy_j.to_bits());
+
+        // Hot die: leakage inflates only the static share.
+        let warm = observe_iteration(&gpu, 0.5, 150.0, 100.0, 1.0, None, 60.0);
+        assert!(warm.energy_j > base.energy_j);
+        assert_eq!(warm.time_s.to_bits(), base.time_s.to_bits());
+    }
+
+    #[test]
+    fn policy_parsing() {
+        for p in [ReplanPolicy::Static, ReplanPolicy::Drift, ReplanPolicy::Oracle] {
+            assert_eq!(ReplanPolicy::parse(p.name()), Some(p));
+        }
+        assert!(ReplanPolicy::parse("never").is_none());
     }
 }

@@ -1,0 +1,208 @@
+//! PJRT execution runtime: loads the HLO-text artifacts emitted by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//! Python never runs on this path — the Rust binary is self-contained
+//! once `make artifacts` has produced `artifacts/`. (The *online
+//! replanning* runtime lives in the parent [`runtime`](crate::runtime)
+//! module; this file is only the PJRT loader behind phase ⑤.)
+//!
+//! Pattern follows /opt/xla-example/load_hlo: HLO *text* → HloModuleProto
+//! → XlaComputation → compile → execute (the text parser reassigns the
+//! 64-bit instruction ids that xla_extension 0.5.1 would reject in
+//! serialized protos).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Tensor spec from the manifest.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    fn from_json(j: &Json) -> Result<Self> {
+        let shape = j
+            .get("shape")
+            .and_then(|s| s.as_arr())
+            .ok_or_else(|| anyhow!("bad shape"))?
+            .iter()
+            .map(|v| v.as_usize().unwrap_or(0))
+            .collect();
+        let dtype =
+            j.get("dtype").and_then(|d| d.as_str()).ok_or_else(|| anyhow!("bad dtype"))?.into();
+        Ok(TensorSpec { shape, dtype })
+    }
+
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub file: String,
+    pub args: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Model config entry from the manifest.
+#[derive(Clone, Debug)]
+pub struct ModelInfo {
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub n_param_arrays: usize,
+    pub n_params: usize,
+    pub lr: f64,
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    pub configs: BTreeMap<String, ModelInfo>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let raw = std::fs::read_to_string(dir.join("manifest.json")).with_context(|| {
+            format!("reading {}/manifest.json (run `make artifacts`)", dir.display())
+        })?;
+        let j = Json::parse(&raw).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let mut artifacts = BTreeMap::new();
+        let listed =
+            j.get("artifacts").and_then(|a| a.as_obj()).ok_or_else(|| anyhow!("no artifacts"))?;
+        for (name, a) in listed {
+            let file = a.get("file").and_then(|f| f.as_str()).ok_or_else(|| anyhow!("no file"))?;
+            let parse_specs = |key: &str| -> Result<Vec<TensorSpec>> {
+                a.get(key)
+                    .and_then(|x| x.as_arr())
+                    .ok_or_else(|| anyhow!("no {key}"))?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect()
+            };
+            let spec = ArtifactSpec {
+                file: file.into(),
+                args: parse_specs("args")?,
+                outputs: parse_specs("outputs")?,
+            };
+            artifacts.insert(name.clone(), spec);
+        }
+        let mut configs = BTreeMap::new();
+        if let Some(cfgs) = j.get("configs").and_then(|c| c.as_obj()) {
+            for (name, c) in cfgs {
+                let u = |k: &str| c.get(k).and_then(|v| v.as_usize()).unwrap_or(0);
+                configs.insert(
+                    name.clone(),
+                    ModelInfo {
+                        vocab: u("vocab"),
+                        seq_len: u("seq_len"),
+                        batch: u("batch"),
+                        n_param_arrays: u("n_param_arrays"),
+                        n_params: u("n_params"),
+                        lr: c.get("lr").and_then(|v| v.as_f64()).unwrap_or(0.0),
+                    },
+                );
+            }
+        }
+        Ok(Manifest { artifacts, configs })
+    }
+}
+
+/// The PJRT runtime: one client, lazily compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    compiled: BTreeMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = artifact_dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e:?}"))?;
+        Ok(Runtime { client, dir, manifest, compiled: BTreeMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (and cache) one artifact.
+    pub fn compile(&mut self, name: &str) -> Result<()> {
+        if self.compiled.contains_key(name) {
+            return Ok(());
+        }
+        let spec = self
+            .manifest
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name}"))?;
+        let path = self.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+        )
+        .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        self.compiled.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact on host literals; returns the un-tupled output
+    /// literals (aot.py lowers with return_tuple=True).
+    pub fn execute(&mut self, name: &str, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        self.compile(name)?;
+        let spec = &self.manifest.artifacts[name];
+        if args.len() != spec.args.len() {
+            bail!("{name}: expected {} args, got {}", spec.args.len(), args.len());
+        }
+        let exe = &self.compiled[name];
+        let out = exe.execute::<xla::Literal>(args).map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let lit = out[0][0].to_literal_sync().map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        let parts = lit.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        if parts.len() != spec.outputs.len() {
+            bail!("{name}: expected {} outputs, got {}", spec.outputs.len(), parts.len());
+        }
+        Ok(parts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn manifest_parses() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        assert!(m.artifacts.contains_key("train_step_tiny"));
+        let tiny = &m.configs["tiny"];
+        assert!(tiny.n_param_arrays > 0);
+        let ts = &m.artifacts["train_step_tiny"];
+        assert_eq!(ts.args.len(), 3 * tiny.n_param_arrays + 2);
+    }
+
+    #[test]
+    fn spec_elements() {
+        let s = TensorSpec { shape: vec![2, 3, 4], dtype: "float32".into() };
+        assert_eq!(s.elements(), 24);
+    }
+}

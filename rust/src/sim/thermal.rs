@@ -51,6 +51,22 @@ impl ThermalModel {
     pub fn steady_state_c(&self, p_w: f64) -> f64 {
         self.ambient_c + self.theta_k_per_w * p_w
     }
+
+    /// Die-temperature trace of a cold start warming under constant power
+    /// `p_w`: `n` samples, one after each `dt_s` step. The pinned default
+    /// trace (320 W, 0.5 s steps) is shared between the tests here and
+    /// the [`DriftMonitor`](crate::runtime::DriftMonitor) thermal-drift
+    /// tests — the runtime's leakage-growth detection is exercised
+    /// against exactly this warm-up curve.
+    pub fn warmup_trace(&self, p_w: f64, dt_s: f64, n: usize) -> Vec<f64> {
+        let mut s = self.initial();
+        (0..n)
+            .map(|_| {
+                self.step(&mut s, p_w, dt_s);
+                s.temp_c
+            })
+            .collect()
+    }
 }
 
 #[cfg(test)]
@@ -101,5 +117,74 @@ mod tests {
         m.step(&mut a, 200.0, 10.0);
         m.step(&mut b, 400.0, 10.0);
         assert!(b.temp_c > a.temp_c);
+    }
+
+    #[test]
+    fn steady_state_convergence_is_exponential() {
+        // The closed-form RC step must contract the distance to steady
+        // state by exactly e^(−dt/τ) per step, from any starting point —
+        // the convergence-rate contract the warm-up trace tests pin.
+        let m = ThermalModel::default();
+        let t_ss = m.steady_state_c(320.0);
+        let a = (-0.5 / m.tau_s).exp();
+        for start in [25.0, 40.0, 80.0] {
+            let mut s = ThermalState { temp_c: start };
+            let mut err = (start - t_ss).abs();
+            for _ in 0..30 {
+                m.step(&mut s, 320.0, 0.5);
+                let next_err = (s.temp_c - t_ss).abs();
+                assert!(
+                    (next_err - err * a).abs() < 1e-9 * err.max(1e-9),
+                    "contraction drifted from e^(-dt/tau): {next_err} vs {}",
+                    err * a
+                );
+                err = next_err;
+            }
+            assert!(err < 0.1, "30 × 0.5 s must converge near steady state (err {err})");
+        }
+    }
+
+    #[test]
+    fn static_power_monotone_along_warmup() {
+        // The coupling the replanning runtime exploits: as the die warms,
+        // the GPU's temperature-dependent static power never decreases,
+        // and strictly increases once past the leakage reference point.
+        let m = ThermalModel::default();
+        let gpu = crate::sim::gpu::GpuSpec::a100();
+        let trace = m.warmup_trace(320.0, 0.5, 40);
+        let mut prev_p = gpu.static_power(m.ambient_c);
+        for &t in &trace {
+            let p = gpu.static_power(t);
+            assert!(p >= prev_p - 1e-12, "static power dipped while warming: {prev_p} -> {p}");
+            if t > gpu.ref_temp_c {
+                assert!(p > gpu.static_w, "above ref temp leakage must exceed P0");
+            }
+            prev_p = p;
+        }
+        // The warm trace ends well above the reference temperature, so the
+        // leakage excess the DriftMonitor watches is actually present.
+        assert!(*trace.last().unwrap() > gpu.ref_temp_c + 10.0);
+        assert!(gpu.static_power(*trace.last().unwrap()) > 1.1 * gpu.static_w);
+    }
+
+    #[test]
+    fn pinned_warmup_trace() {
+        // The exact trace the runtime's thermal-drift tests replay
+        // (320 W, 0.5 s steps from a cold start): T_k = T_ss − ΔT·a^k
+        // with T_ss = 53.8 °C, ΔT = 28.8 K, a = e^(−0.1).
+        let m = ThermalModel::default();
+        let trace = m.warmup_trace(320.0, 0.5, 40);
+        assert_eq!(trace.len(), 40);
+        let t_ss = m.steady_state_c(320.0);
+        assert!((t_ss - 53.8).abs() < 1e-12);
+        let a = (-0.1f64).exp();
+        for (k, &t) in trace.iter().enumerate() {
+            let expected = t_ss - 28.8 * a.powi(k as i32 + 1);
+            assert!((t - expected).abs() < 1e-9, "step {k}: {t} vs {expected}");
+        }
+        // Spot-pin a few absolute values so the curve can't silently move.
+        assert!((trace[0] - 27.740_682_360_564_4).abs() < 1e-6);
+        assert!((trace[4] - 36.331_917_000_276_2).abs() < 1e-6);
+        assert!((trace[19] - 49.902_343_842_785_6).abs() < 1e-6);
     }
 }

@@ -183,6 +183,39 @@ fn empty_frontier_job_skipped_with_warning() {
 }
 
 #[test]
+fn cluster_cli_stdout_is_pure_json() {
+    // The CI double-run smoke `cmp`s the CLI's stdout byte-for-byte, so
+    // progress lines and warnings must never leak into it: stdout is the
+    // ClusterPlan JSON and nothing else, stderr carries the rest. A
+    // binding second segment plus a below-minimum third exercises both
+    // the normal and the warning-adjacent paths.
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_kareus"))
+        .args([
+            "cluster",
+            "--jobs",
+            "a100:qwen1.7b:tp8pp2:m+p",
+            "--caps",
+            "0:1000000,3600:100",
+            "--threads",
+            "1",
+        ])
+        .output()
+        .expect("kareus binary runs");
+    // Exit code 1 = infeasible segment (the 100 W one), by contract.
+    assert_eq!(out.status.code(), Some(1), "expected the infeasible-segment exit code");
+    let stdout = String::from_utf8(out.stdout).expect("stdout is UTF-8");
+    let parsed = Json::parse(stdout.trim_end_matches('\n'))
+        .unwrap_or_else(|e| panic!("stdout is not pure JSON ({e}):\n{stdout}"));
+    let plan = ClusterPlan::from_json(&parsed).expect("stdout decodes as a ClusterPlan");
+    assert_eq!(plan.slices.len(), 2);
+    assert!(!plan.slices[1].feasible);
+    // Progress and warnings went to stderr instead.
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("optimizing"), "progress missing from stderr: {stderr}");
+    assert!(stderr.contains("warning"), "infeasible-cap warning missing from stderr: {stderr}");
+}
+
+#[test]
 fn cap_below_cluster_minimum_pins_min_power_not_panics() {
     let menus = menus();
     let (_, floor) = demand_range(&menus);
