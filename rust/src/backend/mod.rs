@@ -322,6 +322,14 @@ impl TraceBackend {
                 path.display()
             )));
         }
+        // The typed decode below accepts anything field-shaped; in debug
+        // builds run the full static verifier so a corrupted trace fails
+        // here, not as a silently-wrong measurement downstream.
+        #[cfg(debug_assertions)]
+        crate::check::assert_no_errors(
+            &format!("TraceBackend::replay({})", path.display()),
+            &crate::check::check_trace_json(&json),
+        );
         let mut entries = BTreeMap::new();
         let obj = json
             .get("entries")
@@ -400,8 +408,14 @@ impl TraceBackend {
     }
 
     /// Write the trace to its path (byte-deterministic: `BTreeMap` order).
+    /// A non-finite measurement is refused rather than written as
+    /// invalid JSON that no replay could load.
     pub fn save(&self) -> io::Result<()> {
-        std::fs::write(&self.path, self.to_json().dump())
+        let text = self
+            .to_json()
+            .try_dump()
+            .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e.to_string()))?;
+        std::fs::write(&self.path, text)
     }
 }
 

@@ -1,0 +1,1572 @@
+//! Static artifact verifier — the diagnostics engine behind `kareus check`
+//! (data-flow step ⑧).
+//!
+//! Every artifact the system emits or consumes — frequency plans, cluster
+//! plans, revision logs, execution traces, sweep reports, replan summaries
+//! — carries invariants no type system enforces: schedules must not
+//! oversubscribe SMs, frequencies must sit inside the `GpuSpec` range,
+//! per-slice power must stay under the cap, timelines must be monotonic.
+//! This module turns each invariant into a pass that produces
+//! [`Diagnostic`]s with stable codes (`K001`, `K010`, …) so violations can
+//! be asserted in tests, grepped in CI, and documented once.
+//!
+//! Reports are byte-deterministic: diagnostics are emitted in document
+//! order, messages contain no timestamps or addresses, and the JSON form
+//! goes through [`util::json`](crate::util::json) (sorted object keys).
+//!
+//! The same passes run as debug-mode assertions at the construction seams
+//! (`plan::FrequencyPlan::from_iteration`, `cluster::plan_cluster`,
+//! `backend::TraceBackend::replay`) via [`assert_no_errors`], so a corrupt
+//! artifact trips close to where it was built rather than where it is
+//! consumed.
+
+use std::collections::BTreeSet;
+
+use crate::backend::{TRACE_SCHEMA, TRACE_VERSION};
+use crate::compose::MicrobatchPlan;
+use crate::plan::{FrequencyPlan, ReplanTrigger, RevisionLog, REVISION_SCHEMA, REVISION_VERSION};
+use crate::sim::exec::LaunchAt;
+use crate::sim::gpu::GpuSpec;
+use crate::util::json::{arr, num, obj, s, Json};
+
+/// A launch anchor beyond any plausible kernel count in one microbatch.
+const MAX_LAUNCH_INDEX: usize = 4096;
+/// Absolute comm-SM ceiling applied when the GPU is unknown.
+const ABS_MAX_SMS: u32 = 1024;
+/// Relative tolerance for recomputed aggregates (sums replay the emitter's
+/// own iteration order, so they should match to the bit; the slack only
+/// absorbs decimal round-trips from hand-edited artifacts).
+const REL_TOL: f64 = 1e-9;
+
+// ---------------------------------------------------------------------------
+// Diagnostics
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Warn,
+    Error,
+}
+
+impl Severity {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Severity::Warn => "warn",
+            Severity::Error => "error",
+        }
+    }
+}
+
+/// Stable diagnostic codes. Codes are append-only: a released code never
+/// changes meaning or severity, so tests and CI greps stay valid.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Code {
+    K000,
+    K001,
+    K002,
+    K003,
+    K004,
+    K005,
+    K006,
+    K007,
+    K008,
+    K010,
+    K011,
+    K012,
+    K013,
+    K014,
+    K015,
+    K016,
+    K020,
+    K021,
+    K022,
+    K023,
+    K024,
+    K030,
+    K031,
+    K032,
+    K033,
+    K034,
+    K041,
+    K042,
+    K050,
+    K051,
+}
+
+impl Code {
+    pub const ALL: [Code; 30] = [
+        Code::K000,
+        Code::K001,
+        Code::K002,
+        Code::K003,
+        Code::K004,
+        Code::K005,
+        Code::K006,
+        Code::K007,
+        Code::K008,
+        Code::K010,
+        Code::K011,
+        Code::K012,
+        Code::K013,
+        Code::K014,
+        Code::K015,
+        Code::K016,
+        Code::K020,
+        Code::K021,
+        Code::K022,
+        Code::K023,
+        Code::K024,
+        Code::K030,
+        Code::K031,
+        Code::K032,
+        Code::K033,
+        Code::K034,
+        Code::K041,
+        Code::K042,
+        Code::K050,
+        Code::K051,
+    ];
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Code::K000 => "K000",
+            Code::K001 => "K001",
+            Code::K002 => "K002",
+            Code::K003 => "K003",
+            Code::K004 => "K004",
+            Code::K005 => "K005",
+            Code::K006 => "K006",
+            Code::K007 => "K007",
+            Code::K008 => "K008",
+            Code::K010 => "K010",
+            Code::K011 => "K011",
+            Code::K012 => "K012",
+            Code::K013 => "K013",
+            Code::K014 => "K014",
+            Code::K015 => "K015",
+            Code::K016 => "K016",
+            Code::K020 => "K020",
+            Code::K021 => "K021",
+            Code::K022 => "K022",
+            Code::K023 => "K023",
+            Code::K024 => "K024",
+            Code::K030 => "K030",
+            Code::K031 => "K031",
+            Code::K032 => "K032",
+            Code::K033 => "K033",
+            Code::K034 => "K034",
+            Code::K041 => "K041",
+            Code::K042 => "K042",
+            Code::K050 => "K050",
+            Code::K051 => "K051",
+        }
+    }
+
+    pub fn severity(self) -> Severity {
+        match self {
+            Code::K004
+            | Code::K008
+            | Code::K015
+            | Code::K016
+            | Code::K024
+            | Code::K033
+            | Code::K042 => Severity::Warn,
+            _ => Severity::Error,
+        }
+    }
+
+    /// One-line description of what the code means (the README table).
+    pub fn summary(self) -> &'static str {
+        match self {
+            Code::K000 => "unrecognized or undecodable artifact",
+            Code::K001 => "slot count does not match n_stages x n_microbatches x 2",
+            Code::K002 => "slots out of canonical (stage, microbatch, fwd/bwd) order",
+            Code::K003 => "frequency outside the GPU's supported range",
+            Code::K004 => "frequency off the GPU's supported step grid",
+            Code::K005 => "communication SM allocation oversubscribes the GPU",
+            Code::K006 => "launch/sequential inconsistency in a microbatch plan",
+            Code::K007 => "non-finite or out-of-range numeric field",
+            Code::K008 => "unknown GPU name; range checks skipped",
+            Code::K010 => "feasible slice draws more power than its cap",
+            Code::K011 => "recorded aggregate disagrees with recomputation from parts",
+            Code::K012 => "slice timeline inconsistent with the cap schedule",
+            Code::K013 => "job coverage violation in a slice",
+            Code::K014 => "assignment job/point index out of range",
+            Code::K015 => "assignment stats disagree with the referenced menu point",
+            Code::K016 => "job menu not ascending in time / descending in power",
+            Code::K020 => "revision counters not contiguous from 0",
+            Code::K021 => "iteration/time ordering violation in a revision sequence",
+            Code::K022 => "initial-revision invariant violated",
+            Code::K023 => "cap-triggered revision missing its cap value",
+            Code::K024 => "revision predicts per-GPU draw above its active cap",
+            Code::K030 => "artifact schema version mismatch",
+            Code::K031 => "malformed trace key",
+            Code::K032 => "invalid trace entry value",
+            Code::K033 => "duplicate JSON object key (parser keeps the last)",
+            Code::K034 => "trace average frequency exceeds the requested frequency",
+            Code::K041 => "invalid sweep scenario or frontier value",
+            Code::K042 => "sweep frontier not Pareto-ordered",
+            Code::K050 => "replan summary missing or invalid required field",
+            Code::K051 => "replan summary counters disagree with its revision list",
+        }
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Diagnostic {
+    pub code: Code,
+    /// Dotted path into the artifact (`slices[2].assignments[0].power_w`);
+    /// empty when the diagnostic applies to the document as a whole.
+    pub path: String,
+    pub message: String,
+}
+
+fn d(code: Code, path: impl Into<String>, message: impl Into<String>) -> Diagnostic {
+    Diagnostic { code, path: path.into(), message: message.into() }
+}
+
+pub fn has_errors(diags: &[Diagnostic]) -> bool {
+    diags.iter().any(|x| x.code.severity() == Severity::Error)
+}
+
+/// Panic with every error-level diagnostic. Debug-mode construction seams
+/// call this right after building an artifact.
+pub fn assert_no_errors(what: &str, diags: &[Diagnostic]) {
+    if has_errors(diags) {
+        let lines: Vec<String> = diags
+            .iter()
+            .filter(|x| x.code.severity() == Severity::Error)
+            .map(|x| format!("  {} {}: {}", x.code.as_str(), x.path, x.message))
+            .collect();
+        panic!("{what} failed self-check:\n{}", lines.join("\n"));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Reports
+// ---------------------------------------------------------------------------
+
+/// Which artifact schema a document was recognized as.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArtifactKind {
+    FrequencyPlan,
+    ClusterPlan,
+    RevisionLog,
+    ExecTrace,
+    Sweep,
+    ReplanSummary,
+}
+
+impl ArtifactKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ArtifactKind::FrequencyPlan => "frequency_plan",
+            ArtifactKind::ClusterPlan => "cluster_plan",
+            ArtifactKind::RevisionLog => "revision_log",
+            ArtifactKind::ExecTrace => "exec_trace",
+            ArtifactKind::Sweep => "sweep",
+            ArtifactKind::ReplanSummary => "replan_summary",
+        }
+    }
+}
+
+/// Identify an artifact from its schema tag. Frequency plans carry no tag
+/// and are recognized structurally, so tagged kinds are tried first.
+pub fn infer_kind(j: &Json) -> Option<ArtifactKind> {
+    let tag = |key: &str| j.get(key).and_then(Json::as_str);
+    if tag("plan") == Some("kareus_cluster") {
+        return Some(ArtifactKind::ClusterPlan);
+    }
+    if tag("log") == Some(REVISION_SCHEMA) {
+        return Some(ArtifactKind::RevisionLog);
+    }
+    if tag("trace") == Some(TRACE_SCHEMA) {
+        return Some(ArtifactKind::ExecTrace);
+    }
+    if tag("bench") == Some("kareus_sweep") {
+        return Some(ArtifactKind::Sweep);
+    }
+    if tag("summary") == Some("kareus_replan_run") {
+        return Some(ArtifactKind::ReplanSummary);
+    }
+    if j.get("slots").is_some() && j.get("n_stages").is_some() {
+        return Some(ArtifactKind::FrequencyPlan);
+    }
+    None
+}
+
+/// The result of checking one document.
+#[derive(Clone, Debug)]
+pub struct Report {
+    pub source: String,
+    /// `ArtifactKind::as_str()` or `"unknown"`.
+    pub kind: &'static str,
+    pub diagnostics: Vec<Diagnostic>,
+}
+
+impl Report {
+    pub fn errors(&self) -> usize {
+        self.diagnostics.iter().filter(|x| x.code.severity() == Severity::Error).count()
+    }
+
+    pub fn warnings(&self) -> usize {
+        self.diagnostics.iter().filter(|x| x.code.severity() == Severity::Warn).count()
+    }
+
+    pub fn has_errors(&self) -> bool {
+        self.errors() > 0
+    }
+
+    /// Human-readable report. Byte-deterministic for a given document.
+    pub fn to_text(&self) -> String {
+        let mut out = format!("{}: {}\n", self.source, self.kind);
+        for x in &self.diagnostics {
+            let path = if x.path.is_empty() { "-" } else { x.path.as_str() };
+            out.push_str(&format!(
+                "{} {:5} {}: {}\n",
+                x.code.as_str(),
+                x.code.severity().as_str(),
+                path,
+                x.message
+            ));
+        }
+        out.push_str(&format!("{} error(s), {} warning(s)\n", self.errors(), self.warnings()));
+        out
+    }
+
+    /// Machine-readable report (sorted keys, so byte-deterministic).
+    pub fn to_json(&self) -> Json {
+        let diags: Vec<Json> = self
+            .diagnostics
+            .iter()
+            .map(|x| {
+                obj(vec![
+                    ("code", s(x.code.as_str())),
+                    ("message", s(&x.message)),
+                    ("path", s(&x.path)),
+                    ("severity", s(x.code.severity().as_str())),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("check", s("kareus_check")),
+            ("version", num(1.0)),
+            ("source", s(&self.source)),
+            ("kind", s(self.kind)),
+            ("errors", num(self.errors() as f64)),
+            ("warnings", num(self.warnings() as f64)),
+            ("diagnostics", arr(diags)),
+        ])
+    }
+}
+
+/// Check a raw JSON document: parse, identify, and run the matching pass.
+/// `gpu` supplies range context for artifacts that do not name their GPU
+/// (frequency plans, revision logs); cluster plans name one per job.
+pub fn check_text(raw: &str, source: &str, gpu: Option<&GpuSpec>) -> Report {
+    let mut report = Report { source: source.to_string(), kind: "unknown", diagnostics: Vec::new() };
+    let j = match Json::parse(raw) {
+        Ok(j) => j,
+        Err(e) => {
+            report.diagnostics.push(d(Code::K000, "", format!("not valid JSON: {e}")));
+            return report;
+        }
+    };
+    let Some(kind) = infer_kind(&j) else {
+        report.diagnostics.push(d(
+            Code::K000,
+            "",
+            "no recognizable schema tag (expected a kareus plan, cluster plan, revision log, \
+             trace, sweep, or replan summary)",
+        ));
+        return report;
+    };
+    report.kind = kind.as_str();
+    for k in duplicate_object_keys(raw) {
+        report.diagnostics.push(d(
+            Code::K033,
+            "",
+            format!("duplicate object key \"{k}\" (the parser keeps the last occurrence)"),
+        ));
+    }
+    let mut diags = match kind {
+        ArtifactKind::FrequencyPlan => match FrequencyPlan::from_json(&j) {
+            Ok(p) => check_frequency_plan(&p, gpu),
+            Err(e) => vec![d(Code::K000, "", format!("frequency plan does not decode: {e}"))],
+        },
+        ArtifactKind::ClusterPlan => check_cluster_json(&j),
+        ArtifactKind::RevisionLog => {
+            let v = j.get("version").and_then(Json::as_f64);
+            if v != Some(REVISION_VERSION as f64) {
+                vec![d(
+                    Code::K030,
+                    "version",
+                    format!(
+                        "revision log version {} unsupported (expected {REVISION_VERSION})",
+                        fmt_opt(v)
+                    ),
+                )]
+            } else {
+                match RevisionLog::from_json(&j) {
+                    Ok(log) => check_revision_log(&log, gpu),
+                    Err(e) => vec![d(Code::K000, "", format!("revision log does not decode: {e}"))],
+                }
+            }
+        }
+        ArtifactKind::ExecTrace => check_trace_json(&j),
+        ArtifactKind::Sweep => check_sweep_json(&j),
+        ArtifactKind::ReplanSummary => check_summary_json(&j),
+    };
+    report.diagnostics.append(&mut diags);
+    report
+}
+
+/// Check a file on disk. IO failure is an `Err` (CLI exit 2), not a
+/// diagnostic.
+pub fn check_file(path: &std::path::Path, gpu: Option<&GpuSpec>) -> Result<Report, String> {
+    let raw =
+        std::fs::read_to_string(path).map_err(|e| format!("read {}: {e}", path.display()))?;
+    Ok(check_text(&raw, &path.display().to_string(), gpu))
+}
+
+/// Resolve a GPU by CLI short name (`a100`) or by the full device name
+/// cluster-plan jobs record (`A100-SXM4-40GB`).
+pub fn resolve_gpu(name: &str) -> Option<GpuSpec> {
+    GpuSpec::by_name(name).or_else(|| {
+        [GpuSpec::a100(), GpuSpec::h100(), GpuSpec::v100()]
+            .into_iter()
+            .find(|g| g.name == name)
+    })
+}
+
+fn fmt_opt(v: Option<f64>) -> String {
+    match v {
+        Some(x) => format!("{x}"),
+        None => "missing".to_string(),
+    }
+}
+
+fn close(a: f64, b: f64) -> bool {
+    (a - b).abs() <= REL_TOL * a.abs().max(b.abs()).max(1.0)
+}
+
+fn dir(bwd: bool) -> &'static str {
+    if bwd {
+        "bwd"
+    } else {
+        "fwd"
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Frequency plans (K001-K008)
+// ---------------------------------------------------------------------------
+
+pub fn check_frequency_plan(p: &FrequencyPlan, gpu: Option<&GpuSpec>) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    plan_pass(p, gpu, "", &mut out);
+    out
+}
+
+/// Shared pass over one frequency plan. `prefix` is empty or ends with
+/// `.` so embedded plans (cluster assignments, revisions) report full
+/// paths.
+fn plan_pass(p: &FrequencyPlan, gpu: Option<&GpuSpec>, prefix: &str, out: &mut Vec<Diagnostic>) {
+    if !p.bubble_s.is_finite() || p.bubble_s < 0.0 {
+        out.push(d(
+            Code::K007,
+            format!("{prefix}bubble_s"),
+            format!("bubble_s {} must be finite and >= 0", p.bubble_s),
+        ));
+    }
+    let want = p.n_stages as usize * p.n_microbatches as usize * 2;
+    if p.slots.len() != want {
+        out.push(d(
+            Code::K001,
+            format!("{prefix}slots"),
+            format!(
+                "{} slots, but n_stages x n_microbatches x 2 = {} (every stage runs one fwd \
+                 and one bwd per microbatch)",
+                p.slots.len(),
+                want
+            ),
+        ));
+    } else if p.n_microbatches > 0 {
+        let nmb = p.n_microbatches as usize;
+        for (i, slot) in p.slots.iter().enumerate() {
+            let stage = (i / (2 * nmb)) as u32;
+            let mb = ((i / 2) % nmb) as u32;
+            let bwd = i % 2 == 1;
+            if slot.stage != stage || slot.mb != mb || slot.bwd != bwd {
+                out.push(d(
+                    Code::K002,
+                    format!("{prefix}slots[{i}]"),
+                    format!(
+                        "slot is (stage {}, mb {}, {}); canonical stage-major order expects \
+                         (stage {stage}, mb {mb}, {})",
+                        slot.stage,
+                        slot.mb,
+                        dir(slot.bwd),
+                        dir(bwd)
+                    ),
+                ));
+                break; // later slots are shifted noise once one is out of place
+            }
+        }
+    }
+    for (i, slot) in p.slots.iter().enumerate() {
+        mb_plan_pass(&slot.plan, gpu, &format!("{prefix}slots[{i}].plan"), out);
+    }
+}
+
+fn mb_plan_pass(mp: &MicrobatchPlan, gpu: Option<&GpuSpec>, path: &str, out: &mut Vec<Diagnostic>) {
+    check_freq(mp.freq_mhz, gpu, &format!("{path}.freq_mhz"), out);
+    if mp.sequential && !mp.configs.is_empty() {
+        out.push(d(
+            Code::K006,
+            path,
+            format!(
+                "sequential plan carries {} per-partition configs (sequential plans must have \
+                 none)",
+                mp.configs.len()
+            ),
+        ));
+    }
+    for (name, sc) in &mp.configs {
+        let cpath = format!("{path}.configs[{name}]");
+        if sc.freq_mhz != mp.freq_mhz {
+            out.push(d(
+                Code::K006,
+                format!("{cpath}.freq_mhz"),
+                format!(
+                    "config frequency {} MHz disagrees with the plan frequency {} MHz",
+                    sc.freq_mhz, mp.freq_mhz
+                ),
+            ));
+        }
+        match sc.launch {
+            LaunchAt::Sequential => out.push(d(
+                Code::K006,
+                format!("{cpath}.launch"),
+                "overlapped config uses the sequential launch mode; sequential execution must \
+                 set the plan flag and drop configs",
+            )),
+            LaunchAt::WithComp(i) if i >= MAX_LAUNCH_INDEX => out.push(d(
+                Code::K006,
+                format!("{cpath}.launch"),
+                format!(
+                    "launch anchor c{i} exceeds any plausible kernel count (limit \
+                     {MAX_LAUNCH_INDEX})"
+                ),
+            )),
+            LaunchAt::WithComp(_) => {}
+        }
+        match gpu {
+            Some(g) if sc.comm_sms >= g.n_sms => out.push(d(
+                Code::K005,
+                format!("{cpath}.sms"),
+                format!(
+                    "{} comm SMs leaves no compute SMs on {} ({} SMs total)",
+                    sc.comm_sms, g.name, g.n_sms
+                ),
+            )),
+            None if sc.comm_sms >= ABS_MAX_SMS => out.push(d(
+                Code::K005,
+                format!("{cpath}.sms"),
+                format!(
+                    "{} comm SMs exceeds any known GPU (no GPU given; absolute limit \
+                     {ABS_MAX_SMS})",
+                    sc.comm_sms
+                ),
+            )),
+            _ => {}
+        }
+    }
+}
+
+fn check_freq(f_mhz: u32, gpu: Option<&GpuSpec>, path: &str, out: &mut Vec<Diagnostic>) {
+    let Some(g) = gpu else { return };
+    if f_mhz < g.f_min_mhz || f_mhz > g.f_max_mhz {
+        out.push(d(
+            Code::K003,
+            path,
+            format!(
+                "{f_mhz} MHz outside the [{}, {}] MHz range supported by {}",
+                g.f_min_mhz, g.f_max_mhz, g.name
+            ),
+        ));
+    } else if (f_mhz - g.f_min_mhz) % g.f_stride_mhz != 0 {
+        out.push(d(
+            Code::K004,
+            path,
+            format!(
+                "{f_mhz} MHz is not on {}'s {}-MHz step grid starting at {} MHz",
+                g.name, g.f_stride_mhz, g.f_min_mhz
+            ),
+        ));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Cluster plans (K010-K016)
+// ---------------------------------------------------------------------------
+
+/// Checked against the raw document (not the typed decoder) so corrupt
+/// timelines that the typed constructor would reject still get precise
+/// diagnostics instead of a blanket decode failure.
+pub fn check_cluster_json(j: &Json) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    if j.get("version").and_then(Json::as_f64) != Some(1.0) {
+        out.push(d(
+            Code::K030,
+            "version",
+            format!(
+                "cluster plan version {} unsupported (expected 1)",
+                fmt_opt(j.get("version").and_then(Json::as_f64))
+            ),
+        ));
+        return out;
+    }
+
+    // Cap timeline: starts at 0, strictly ascending, finite positive caps.
+    let mut cap_segs: Vec<(f64, f64)> = Vec::new();
+    let mut segs_ok = false;
+    match j.get("cap_schedule").and_then(Json::as_arr) {
+        None => out.push(d(Code::K012, "cap_schedule", "missing or not an array")),
+        Some(segs) => {
+            segs_ok = true;
+            for (i, seg) in segs.iter().enumerate() {
+                let start = seg.get("start_s").and_then(Json::as_f64);
+                let cap = seg.get("cap_w").and_then(Json::as_f64);
+                match (start, cap) {
+                    (Some(t), Some(w)) if t.is_finite() && t >= 0.0 && w.is_finite() && w > 0.0 => {
+                        cap_segs.push((t, w))
+                    }
+                    _ => {
+                        segs_ok = false;
+                        out.push(d(
+                            Code::K012,
+                            format!("cap_schedule[{i}]"),
+                            "segment needs finite start_s >= 0 and finite cap_w > 0",
+                        ));
+                    }
+                }
+            }
+            if let Some(&(t0, _)) = cap_segs.first() {
+                if t0 != 0.0 {
+                    out.push(d(
+                        Code::K012,
+                        "cap_schedule[0].start_s",
+                        format!("timeline starts at {t0} s; the first segment must start at 0"),
+                    ));
+                }
+            }
+            for w in cap_segs.windows(2) {
+                if w[1].0 <= w[0].0 {
+                    out.push(d(
+                        Code::K012,
+                        "cap_schedule",
+                        format!(
+                            "segment starts must be strictly ascending ({} s then {} s)",
+                            w[0].0, w[1].0
+                        ),
+                    ));
+                    break;
+                }
+            }
+        }
+    }
+
+    // Jobs: GPU resolution, menu shape and Pareto order, skipped flag.
+    struct JobInfo {
+        skipped: bool,
+        menu: Vec<(f64, f64, f64)>,
+        menu_ok: bool,
+        gpu: Option<GpuSpec>,
+    }
+    let mut jobs: Vec<JobInfo> = Vec::new();
+    match j.get("jobs").and_then(Json::as_arr) {
+        None => out.push(d(Code::K013, "jobs", "missing or not an array")),
+        Some(list) => {
+            for (ji, jj) in list.iter().enumerate() {
+                let label = jj.get("label").and_then(Json::as_str).unwrap_or("?").to_string();
+                let gpu_name = jj.get("gpu").and_then(Json::as_str).unwrap_or("");
+                let gpu = resolve_gpu(gpu_name);
+                if gpu.is_none() {
+                    out.push(d(
+                        Code::K008,
+                        format!("jobs[{ji}].gpu"),
+                        format!(
+                            "unknown GPU '{gpu_name}'; frequency and SM range checks skipped \
+                             for job '{label}'"
+                        ),
+                    ));
+                }
+                let skipped = jj.get("skipped").and_then(Json::as_bool).unwrap_or(false);
+                let mut menu = Vec::new();
+                let mut menu_ok = true;
+                match jj.get("menu").and_then(Json::as_arr) {
+                    None => {
+                        menu_ok = false;
+                        out.push(d(
+                            Code::K007,
+                            format!("jobs[{ji}].menu"),
+                            "missing or not an array",
+                        ));
+                    }
+                    Some(pts) => {
+                        for (pi, pt) in pts.iter().enumerate() {
+                            let p = pt.as_arr().unwrap_or(&[]);
+                            let t = p.first().and_then(Json::as_f64).unwrap_or(f64::NAN);
+                            let e = p.get(1).and_then(Json::as_f64).unwrap_or(f64::NAN);
+                            let w = p.get(2).and_then(Json::as_f64).unwrap_or(f64::NAN);
+                            if p.len() != 3
+                                || !t.is_finite()
+                                || t <= 0.0
+                                || !e.is_finite()
+                                || e < 0.0
+                                || !w.is_finite()
+                                || w <= 0.0
+                            {
+                                menu_ok = false;
+                                out.push(d(
+                                    Code::K007,
+                                    format!("jobs[{ji}].menu[{pi}]"),
+                                    "menu point must be [iter_time_s > 0, iter_energy_j >= 0, \
+                                     power_w > 0], all finite",
+                                ));
+                            } else {
+                                menu.push((t, e, w));
+                            }
+                        }
+                    }
+                }
+                if menu_ok {
+                    for w2 in menu.windows(2) {
+                        if w2[1].0 <= w2[0].0 || w2[1].2 >= w2[0].2 {
+                            out.push(d(
+                                Code::K016,
+                                format!("jobs[{ji}].menu"),
+                                format!(
+                                    "menu for '{label}' must be strictly ascending in time and \
+                                     strictly descending in power"
+                                ),
+                            ));
+                            break;
+                        }
+                    }
+                    if skipped != menu.is_empty() {
+                        out.push(d(
+                            Code::K013,
+                            format!("jobs[{ji}].skipped"),
+                            format!(
+                                "job '{label}': skipped={skipped} but its menu has {} points \
+                                 (skipped must mean an empty menu)",
+                                menu.len()
+                            ),
+                        ));
+                    }
+                }
+                jobs.push(JobInfo { skipped, menu, menu_ok, gpu });
+            }
+        }
+    }
+
+    // Slices: 1:1 with cap segments, power sums, coverage, embedded plans.
+    match j.get("slices").and_then(Json::as_arr) {
+        None => out.push(d(Code::K012, "slices", "missing or not an array")),
+        Some(slices) => {
+            if segs_ok && slices.len() != cap_segs.len() {
+                out.push(d(
+                    Code::K012,
+                    "slices",
+                    format!(
+                        "{} slices but {} cap segments (slices must be 1:1 with segments)",
+                        slices.len(),
+                        cap_segs.len()
+                    ),
+                ));
+            }
+            for (si, sl) in slices.iter().enumerate() {
+                let path = format!("slices[{si}]");
+                let start = sl.get("start_s").and_then(Json::as_f64).unwrap_or(f64::NAN);
+                let cap = sl.get("cap_w").and_then(Json::as_f64).unwrap_or(f64::NAN);
+                let feasible = sl.get("feasible").and_then(Json::as_bool).unwrap_or(true);
+                let total = sl.get("total_power_w").and_then(Json::as_f64).unwrap_or(f64::NAN);
+                let tokens = sl.get("tokens_per_s").and_then(Json::as_f64).unwrap_or(f64::NAN);
+                if segs_ok {
+                    if let Some(&(seg_t, seg_w)) = cap_segs.get(si) {
+                        if start != seg_t || cap != seg_w {
+                            out.push(d(
+                                Code::K012,
+                                &path,
+                                format!(
+                                    "slice (start {start} s, cap {cap} W) disagrees with cap \
+                                     segment {si} (start {seg_t} s, cap {seg_w} W)"
+                                ),
+                            ));
+                        }
+                    }
+                }
+                if !total.is_finite() || total < 0.0 {
+                    out.push(d(
+                        Code::K007,
+                        format!("{path}.total_power_w"),
+                        "must be finite and >= 0",
+                    ));
+                    continue;
+                }
+                if !tokens.is_finite() || tokens < 0.0 {
+                    out.push(d(
+                        Code::K007,
+                        format!("{path}.tokens_per_s"),
+                        "must be finite and >= 0",
+                    ));
+                }
+                let Some(asgs) = sl.get("assignments").and_then(Json::as_arr) else {
+                    out.push(d(
+                        Code::K013,
+                        format!("{path}.assignments"),
+                        "missing or not an array",
+                    ));
+                    continue;
+                };
+                let mut covered: Vec<u32> = vec![0; jobs.len()];
+                let mut sum_w = 0.0;
+                for (ai, a) in asgs.iter().enumerate() {
+                    let apath = format!("{path}.assignments[{ai}]");
+                    let aw = a.get("power_w").and_then(Json::as_f64).unwrap_or(f64::NAN);
+                    let at = a.get("iter_time_s").and_then(Json::as_f64).unwrap_or(f64::NAN);
+                    let ae = a.get("iter_energy_j").and_then(Json::as_f64).unwrap_or(f64::NAN);
+                    if !aw.is_finite() || aw < 0.0 || !at.is_finite() || at <= 0.0 || !ae.is_finite() || ae < 0.0 {
+                        out.push(d(
+                            Code::K007,
+                            &apath,
+                            "assignment stats must be finite (power_w >= 0, iter_time_s > 0, \
+                             iter_energy_j >= 0)",
+                        ));
+                    } else {
+                        sum_w += aw;
+                    }
+                    let Some(ji) = a.get("job").and_then(Json::as_usize) else {
+                        out.push(d(Code::K014, format!("{apath}.job"), "missing job index"));
+                        continue;
+                    };
+                    if ji >= jobs.len() {
+                        out.push(d(
+                            Code::K014,
+                            format!("{apath}.job"),
+                            format!("job index {ji} out of range ({} jobs)", jobs.len()),
+                        ));
+                        continue;
+                    }
+                    covered[ji] += 1;
+                    let job = &jobs[ji];
+                    if job.skipped {
+                        out.push(d(
+                            Code::K013,
+                            &apath,
+                            format!("job {ji} is skipped but assigned in this slice"),
+                        ));
+                    }
+                    if let Some(pi) = a.get("point").and_then(Json::as_usize) {
+                        if job.menu_ok {
+                            if pi >= job.menu.len() {
+                                out.push(d(
+                                    Code::K014,
+                                    format!("{apath}.point"),
+                                    format!(
+                                        "point index {pi} out of range (menu has {} points)",
+                                        job.menu.len()
+                                    ),
+                                ));
+                            } else {
+                                let (mt, me, mw) = job.menu[pi];
+                                if !close(at, mt) || !close(ae, me) || !close(aw, mw) {
+                                    out.push(d(
+                                        Code::K015,
+                                        &apath,
+                                        format!(
+                                            "assignment stats (t {at}, e {ae}, p {aw}) disagree \
+                                             with menu point {pi} (t {mt}, e {me}, p {mw})"
+                                        ),
+                                    ));
+                                }
+                            }
+                        }
+                    } else {
+                        out.push(d(Code::K014, format!("{apath}.point"), "missing point index"));
+                    }
+                    if let Some(pj) = a.get("plan") {
+                        match FrequencyPlan::from_json(pj) {
+                            Ok(p) => {
+                                plan_pass(&p, job.gpu.as_ref(), &format!("{apath}.plan."), &mut out)
+                            }
+                            Err(e) => out.push(d(
+                                Code::K000,
+                                format!("{apath}.plan"),
+                                format!("embedded frequency plan does not decode: {e}"),
+                            )),
+                        }
+                    }
+                }
+                for (ji, job) in jobs.iter().enumerate() {
+                    if job.skipped || !job.menu_ok {
+                        continue;
+                    }
+                    match covered[ji] {
+                        0 => out.push(d(
+                            Code::K013,
+                            &path,
+                            format!("job {ji} has no assignment in this slice"),
+                        )),
+                        1 => {}
+                        n => out.push(d(
+                            Code::K013,
+                            &path,
+                            format!("job {ji} assigned {n} times in this slice"),
+                        )),
+                    }
+                }
+                if feasible && cap.is_finite() && total > cap * (1.0 + 1e-8) {
+                    out.push(d(
+                        Code::K010,
+                        format!("{path}.total_power_w"),
+                        format!("feasible slice draws {total} W, above its {cap} W cap"),
+                    ));
+                }
+                if !close(total, sum_w) {
+                    out.push(d(
+                        Code::K011,
+                        format!("{path}.total_power_w"),
+                        format!("recorded {total} W but the assignments sum to {sum_w} W"),
+                    ));
+                }
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Revision logs (K020-K024)
+// ---------------------------------------------------------------------------
+
+pub fn check_revision_log(log: &RevisionLog, gpu: Option<&GpuSpec>) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    if log.revisions.is_empty() {
+        out.push(d(
+            Code::K022,
+            "revisions",
+            "log has no revisions; the initial deployment must be recorded as revision 0",
+        ));
+        return out;
+    }
+    for (i, r) in log.revisions.iter().enumerate() {
+        let path = format!("revisions[{i}]");
+        if r.revision as usize != i {
+            out.push(d(
+                Code::K020,
+                format!("{path}.revision"),
+                format!(
+                    "revision counter {} at position {i}; counters must run 0, 1, 2, ...",
+                    r.revision
+                ),
+            ));
+        }
+        if !r.sim_time_s.is_finite() || r.sim_time_s < 0.0 {
+            out.push(d(Code::K007, format!("{path}.sim_time_s"), "must be finite and >= 0"));
+        }
+        if !r.iter_time_s.is_finite() || r.iter_time_s <= 0.0 {
+            out.push(d(Code::K007, format!("{path}.iter_time_s"), "must be finite and > 0"));
+        }
+        if !r.iter_energy_j.is_finite() || r.iter_energy_j < 0.0 {
+            out.push(d(Code::K007, format!("{path}.iter_energy_j"), "must be finite and >= 0"));
+        }
+        if i == 0 {
+            if r.trigger != ReplanTrigger::Initial {
+                out.push(d(
+                    Code::K022,
+                    format!("{path}.trigger"),
+                    format!(
+                        "first revision triggered by '{}'; the first entry must be the \
+                         'initial' deployment",
+                        r.trigger.as_str()
+                    ),
+                ));
+            }
+            if r.at_iter != 0 {
+                out.push(d(
+                    Code::K022,
+                    format!("{path}.at_iter"),
+                    format!("initial revision deployed at iteration {}; must be 0", r.at_iter),
+                ));
+            }
+        } else if r.trigger == ReplanTrigger::Initial {
+            out.push(d(
+                Code::K022,
+                format!("{path}.trigger"),
+                "'initial' trigger on a non-first revision",
+            ));
+        }
+        if r.trigger == ReplanTrigger::CapBoundary && r.cap_w.is_none() {
+            out.push(d(
+                Code::K023,
+                format!("{path}.cap_w"),
+                "cap-triggered revision records no cap value (cause without effect)",
+            ));
+        }
+        if let Some(c) = r.cap_w {
+            if !c.is_finite() || c <= 0.0 {
+                out.push(d(Code::K007, format!("{path}.cap_w"), "must be finite and > 0"));
+            } else if r.iter_time_s > 0.0 && r.iter_energy_j / r.iter_time_s > c * 1.05 {
+                out.push(d(
+                    Code::K024,
+                    &path,
+                    format!(
+                        "predicted draw {:.1} W exceeds the {c} W cap by more than 5%",
+                        r.iter_energy_j / r.iter_time_s
+                    ),
+                ));
+            }
+        }
+        plan_pass(&r.plan, gpu, &format!("{path}.plan."), &mut out);
+    }
+    for i in 1..log.revisions.len() {
+        let (a, b) = (&log.revisions[i - 1], &log.revisions[i]);
+        if b.at_iter < a.at_iter {
+            out.push(d(
+                Code::K021,
+                format!("revisions[{i}].at_iter"),
+                format!("iteration {} is before the previous revision's {}", b.at_iter, a.at_iter),
+            ));
+        }
+        if b.sim_time_s < a.sim_time_s {
+            out.push(d(
+                Code::K021,
+                format!("revisions[{i}].sim_time_s"),
+                format!("time {} s is before the previous revision's {} s", b.sim_time_s, a.sim_time_s),
+            ));
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Execution traces (K030-K034)
+// ---------------------------------------------------------------------------
+
+pub fn check_trace_json(j: &Json) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    if j.get("trace").and_then(Json::as_str) != Some(TRACE_SCHEMA) {
+        out.push(d(Code::K000, "trace", "missing kareus_exec_trace schema tag"));
+        return out;
+    }
+    if j.get("version").and_then(Json::as_f64) != Some(TRACE_VERSION as f64) {
+        out.push(d(
+            Code::K030,
+            "version",
+            format!(
+                "trace version {} unsupported (expected {TRACE_VERSION})",
+                fmt_opt(j.get("version").and_then(Json::as_f64))
+            ),
+        ));
+        return out;
+    }
+    let Some(entries) = j.get("entries").and_then(Json::as_obj) else {
+        out.push(d(Code::K000, "entries", "missing or not an object"));
+        return out;
+    };
+    for (key, val) in entries {
+        let path = format!("entries[{key}]");
+        let req_freq = match parse_trace_key(key) {
+            Ok(f) => Some(f),
+            Err(why) => {
+                out.push(d(Code::K031, &path, why));
+                None
+            }
+        };
+        let mut field = |name: &str, strictly_positive: bool| -> Option<f64> {
+            match val.get(name).and_then(Json::as_f64) {
+                Some(x) if x.is_finite() && (x > 0.0 || (!strictly_positive && x >= 0.0)) => {
+                    Some(x)
+                }
+                _ => {
+                    out.push(d(
+                        Code::K032,
+                        format!("{path}.{name}"),
+                        format!(
+                            "must be finite and {}",
+                            if strictly_positive { "> 0" } else { ">= 0" }
+                        ),
+                    ));
+                    None
+                }
+            }
+        };
+        let _ = field("time_s", true);
+        let _ = field("dyn_j", false);
+        let _ = field("static_j", false);
+        let _ = field("exposed_comm_s", false);
+        let avg = field("avg_freq_mhz", true);
+        let _ = field("peak_power_w", false);
+        drop(field);
+        if let (Some(f), Some(a)) = (req_freq, avg) {
+            if a > f * (1.0 + REL_TOL) {
+                out.push(d(
+                    Code::K034,
+                    format!("{path}.avg_freq_mhz"),
+                    format!(
+                        "average frequency {a} MHz exceeds the requested {f} MHz (throttling \
+                         can only lower it)"
+                    ),
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// Validate one trace key (`fp|sms:launch:freq|temp_bits|limit_bits`) and
+/// return the requested frequency in MHz.
+fn parse_trace_key(key: &str) -> Result<f64, String> {
+    let parts: Vec<&str> = key.split('|').collect();
+    if parts.len() != 4 {
+        return Err(format!(
+            "key has {} '|'-separated parts, expected 4 (fp|sms:launch:freq|temp|limit)",
+            parts.len()
+        ));
+    }
+    let hex16 = |text: &str, what: &str| -> Result<u64, String> {
+        if text.len() != 16 {
+            return Err(format!("{what} field '{text}' must be 16 hex digits"));
+        }
+        u64::from_str_radix(text, 16).map_err(|_| format!("{what} field '{text}' must be 16 hex digits"))
+    };
+    hex16(parts[0], "fingerprint")?;
+    let temp = hex16(parts[2], "temperature")?;
+    if !f64::from_bits(temp).is_finite() {
+        return Err("temperature bits decode to a non-finite value".to_string());
+    }
+    let limit = hex16(parts[3], "power-limit")?;
+    if limit != u64::MAX {
+        let w = f64::from_bits(limit);
+        if !w.is_finite() || w <= 0.0 {
+            return Err("power-limit bits decode to a non-positive or non-finite value".to_string());
+        }
+    }
+    let mid: Vec<&str> = parts[1].split(':').collect();
+    if mid.len() != 3 {
+        return Err(format!("schedule field '{}' must be sms:launch:freq", parts[1]));
+    }
+    mid[0]
+        .parse::<u32>()
+        .map_err(|_| format!("comm-SM count '{}' is not an integer", mid[0]))?;
+    if mid[1] != "seq" {
+        let idx = mid[1]
+            .strip_prefix('c')
+            .ok_or_else(|| format!("launch '{}' must be 'seq' or 'c<i>'", mid[1]))?;
+        idx.parse::<u32>().map_err(|_| format!("launch '{}' must be 'seq' or 'c<i>'", mid[1]))?;
+    }
+    let freq: u32 =
+        mid[2].parse().map_err(|_| format!("frequency '{}' is not an integer", mid[2]))?;
+    if freq == 0 {
+        return Err("frequency must be > 0".to_string());
+    }
+    Ok(freq as f64)
+}
+
+// ---------------------------------------------------------------------------
+// Sweep reports (K041-K042)
+// ---------------------------------------------------------------------------
+
+pub fn check_sweep_json(j: &Json) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    if j.get("version").and_then(Json::as_f64) != Some(1.0) {
+        out.push(d(
+            Code::K030,
+            "version",
+            format!(
+                "sweep version {} unsupported (expected 1)",
+                fmt_opt(j.get("version").and_then(Json::as_f64))
+            ),
+        ));
+        return out;
+    }
+    let Some(scenarios) = j.get("scenarios").and_then(Json::as_arr) else {
+        out.push(d(Code::K041, "scenarios", "missing or not an array"));
+        return out;
+    };
+    for (i, sc) in scenarios.iter().enumerate() {
+        let path = format!("scenarios[{i}]");
+        let Some(front) = sc.get("frontier").and_then(Json::as_arr) else {
+            out.push(d(Code::K041, format!("{path}.frontier"), "missing or not an array"));
+            continue;
+        };
+        let mut pts = Vec::new();
+        let mut ok = true;
+        for (pi, pt) in front.iter().enumerate() {
+            let p = pt.as_arr().unwrap_or(&[]);
+            let t = p.first().and_then(Json::as_f64).unwrap_or(f64::NAN);
+            let e = p.get(1).and_then(Json::as_f64).unwrap_or(f64::NAN);
+            if p.len() != 2 || !t.is_finite() || t <= 0.0 || !e.is_finite() || e < 0.0 {
+                ok = false;
+                out.push(d(
+                    Code::K041,
+                    format!("{path}.frontier[{pi}]"),
+                    "frontier point must be [iter_time_s > 0, iter_energy_j >= 0], finite",
+                ));
+            } else {
+                pts.push((t, e));
+            }
+        }
+        if !ok {
+            continue;
+        }
+        for w in pts.windows(2) {
+            if w[1].0 <= w[0].0 || w[1].1 >= w[0].1 {
+                out.push(d(
+                    Code::K042,
+                    format!("{path}.frontier"),
+                    "frontier must be strictly ascending in time and strictly descending in \
+                     energy (dominated points filtered)",
+                ));
+                break;
+            }
+        }
+        if let (Some(min_t), Some(&(t0, _))) =
+            (sc.get("min_iter_time_s").and_then(Json::as_f64), pts.first())
+        {
+            if min_t.is_finite() && !close(min_t, t0) {
+                out.push(d(
+                    Code::K042,
+                    format!("{path}.min_iter_time_s"),
+                    format!("{min_t} disagrees with the frontier's fastest point {t0}"),
+                ));
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Replan summaries (K050-K051)
+// ---------------------------------------------------------------------------
+
+pub fn check_summary_json(j: &Json) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    for key in ["n_iters", "total_time_s", "total_energy_j", "deadline_s", "replans", "measurements_billed"]
+    {
+        match j.get(key).and_then(Json::as_f64) {
+            Some(x) if x.is_finite() && x >= 0.0 => {}
+            _ => out.push(d(
+                Code::K050,
+                key,
+                "required field missing or not a finite non-negative number",
+            )),
+        }
+    }
+    let Some(revs) = j.get("revisions").and_then(Json::as_arr) else {
+        out.push(d(Code::K050, "revisions", "missing or not an array"));
+        return out;
+    };
+    if revs.is_empty() {
+        out.push(d(Code::K050, "revisions", "summary records no revisions (need the initial one)"));
+        return out;
+    }
+    let mut prev_iter = -1.0;
+    for (i, r) in revs.iter().enumerate() {
+        let path = format!("revisions[{i}]");
+        match r.get("revision").and_then(Json::as_f64) {
+            Some(x) if x == i as f64 => {}
+            v => out.push(d(
+                Code::K020,
+                format!("{path}.revision"),
+                format!("revision counter {} at position {i}; counters must run 0, 1, 2, ...", fmt_opt(v)),
+            )),
+        }
+        let at = r.get("at_iter").and_then(Json::as_f64).unwrap_or(f64::NAN);
+        if !at.is_finite() || at < 0.0 {
+            out.push(d(Code::K050, format!("{path}.at_iter"), "missing or negative"));
+        } else {
+            if at < prev_iter {
+                out.push(d(
+                    Code::K021,
+                    format!("{path}.at_iter"),
+                    format!("iteration {at} is before the previous revision's {prev_iter}"),
+                ));
+            }
+            prev_iter = at;
+        }
+    }
+    if let Some(replans) = j.get("replans").and_then(Json::as_f64) {
+        let want = (revs.len() - 1) as f64;
+        if replans != want {
+            out.push(d(
+                Code::K051,
+                "replans",
+                format!(
+                    "summary records {replans} replans but lists {} revisions (expected {} = \
+                     revisions - 1, the initial deployment is not a replan)",
+                    revs.len(),
+                    want
+                ),
+            ));
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Duplicate-key scan (K033)
+// ---------------------------------------------------------------------------
+
+/// Scan well-formed JSON text for duplicate object keys. The parser's
+/// `BTreeMap` silently keeps the last occurrence, so duplicates can only
+/// be seen at the raw-text level. Keys are compared as raw (still-escaped)
+/// text; the emitter escapes deterministically, so that is exact for any
+/// artifact this crate wrote.
+pub fn duplicate_object_keys(raw: &str) -> Vec<String> {
+    enum Ctx {
+        Obj(BTreeSet<String>),
+        Arr,
+    }
+    let b = raw.as_bytes();
+    let mut stack: Vec<Ctx> = Vec::new();
+    let mut dups = Vec::new();
+    let mut expect_key = false;
+    let mut i = 0;
+    while i < b.len() {
+        match b[i] {
+            b'{' => {
+                stack.push(Ctx::Obj(BTreeSet::new()));
+                expect_key = true;
+                i += 1;
+            }
+            b'}' | b']' => {
+                stack.pop();
+                expect_key = false;
+                i += 1;
+            }
+            b'[' => {
+                stack.push(Ctx::Arr);
+                expect_key = false;
+                i += 1;
+            }
+            b',' => {
+                expect_key = matches!(stack.last(), Some(Ctx::Obj(_)));
+                i += 1;
+            }
+            b':' => {
+                expect_key = false;
+                i += 1;
+            }
+            b'"' => {
+                let start = i + 1;
+                let mut j = start;
+                while j < b.len() {
+                    match b[j] {
+                        b'\\' => j += 2,
+                        b'"' => break,
+                        _ => j += 1,
+                    }
+                }
+                if expect_key {
+                    let key = String::from_utf8_lossy(&b[start..j.min(b.len())]).into_owned();
+                    if let Some(Ctx::Obj(seen)) = stack.last_mut() {
+                        if !seen.insert(key.clone()) {
+                            dups.push(key);
+                        }
+                    }
+                    expect_key = false;
+                }
+                i = (j + 1).min(b.len());
+            }
+            _ => i += 1,
+        }
+    }
+    dups
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plan::SlotPlan;
+    use crate::sim::exec::Schedule;
+    use std::collections::BTreeMap;
+
+    fn tiny_plan(freq: u32, sms: u32) -> FrequencyPlan {
+        let mut configs = BTreeMap::new();
+        configs.insert(
+            "fwd/attn".to_string(),
+            Schedule { comm_sms: sms, launch: LaunchAt::WithComp(1), freq_mhz: freq },
+        );
+        FrequencyPlan {
+            n_stages: 1,
+            n_microbatches: 1,
+            bubble_s: 0.0,
+            slots: vec![
+                SlotPlan {
+                    stage: 0,
+                    mb: 0,
+                    bwd: false,
+                    plan: MicrobatchPlan { freq_mhz: freq, configs, sequential: false },
+                },
+                SlotPlan {
+                    stage: 0,
+                    mb: 0,
+                    bwd: true,
+                    plan: MicrobatchPlan {
+                        freq_mhz: 990,
+                        configs: BTreeMap::new(),
+                        sequential: true,
+                    },
+                },
+            ],
+        }
+    }
+
+    fn codes(diags: &[Diagnostic]) -> Vec<Code> {
+        diags.iter().map(|x| x.code).collect()
+    }
+
+    #[test]
+    fn valid_plan_is_clean() {
+        let g = GpuSpec::a100();
+        let diags = check_frequency_plan(&tiny_plan(1410, 12), Some(&g));
+        assert!(diags.is_empty(), "{diags:?}");
+    }
+
+    #[test]
+    fn freq_out_of_range_is_k003() {
+        let g = GpuSpec::a100();
+        let diags = check_frequency_plan(&tiny_plan(2000, 12), Some(&g));
+        assert!(codes(&diags).contains(&Code::K003), "{diags:?}");
+        assert!(has_errors(&diags));
+    }
+
+    #[test]
+    fn off_grid_freq_is_k004_warn_only() {
+        let g = GpuSpec::a100();
+        let diags = check_frequency_plan(&tiny_plan(1001, 12), Some(&g));
+        assert_eq!(codes(&diags), vec![Code::K004]);
+        assert!(!has_errors(&diags));
+    }
+
+    #[test]
+    fn sm_oversubscription_is_k005() {
+        let g = GpuSpec::a100();
+        let diags = check_frequency_plan(&tiny_plan(1410, 200), Some(&g));
+        assert!(codes(&diags).contains(&Code::K005), "{diags:?}");
+    }
+
+    #[test]
+    fn unknown_gpu_skips_range_checks() {
+        let diags = check_frequency_plan(&tiny_plan(2000, 200), None);
+        assert!(diags.is_empty(), "{diags:?}");
+    }
+
+    #[test]
+    fn slot_count_mismatch_is_k001() {
+        let mut p = tiny_plan(1410, 12);
+        p.slots.pop();
+        let diags = check_frequency_plan(&p, Some(&GpuSpec::a100()));
+        assert!(codes(&diags).contains(&Code::K001), "{diags:?}");
+    }
+
+    #[test]
+    fn slot_order_violation_is_k002() {
+        let mut p = tiny_plan(1410, 12);
+        p.slots.swap(0, 1);
+        let diags = check_frequency_plan(&p, Some(&GpuSpec::a100()));
+        assert!(codes(&diags).contains(&Code::K002), "{diags:?}");
+    }
+
+    #[test]
+    fn sequential_with_configs_is_k006() {
+        let mut p = tiny_plan(1410, 12);
+        p.slots[0].plan.sequential = true;
+        let diags = check_frequency_plan(&p, Some(&GpuSpec::a100()));
+        assert!(codes(&diags).contains(&Code::K006), "{diags:?}");
+    }
+
+    #[test]
+    fn trace_key_roundtrip_ok() {
+        let key = crate::backend::trace_key(
+            0xdeadbeef,
+            &Schedule { comm_sms: 12, launch: LaunchAt::WithComp(1), freq_mhz: 1410 },
+            30.0,
+            None,
+        );
+        assert_eq!(parse_trace_key(&key), Ok(1410.0));
+        let capped = crate::backend::trace_key(1, &Schedule::sequential(990), 45.5, Some(250.0));
+        assert_eq!(parse_trace_key(&capped), Ok(990.0));
+    }
+
+    #[test]
+    fn bad_trace_keys_rejected() {
+        assert!(parse_trace_key("garbage").is_err());
+        assert!(parse_trace_key("0000000000000000|12:tomorrow:1410|0000000000000000|ffffffffffffffff").is_err());
+        assert!(parse_trace_key("0000000000000000|12:c1:0|0000000000000000|ffffffffffffffff").is_err());
+        assert!(parse_trace_key("xyz|12:c1:1410|0000000000000000|ffffffffffffffff").is_err());
+        // NaN temperature bits
+        assert!(parse_trace_key("0000000000000000|12:c1:1410|7ff8000000000000|ffffffffffffffff").is_err());
+    }
+
+    #[test]
+    fn duplicate_keys_found_in_raw_text() {
+        assert_eq!(duplicate_object_keys(r#"{"a":1,"b":2,"a":3}"#), vec!["a".to_string()]);
+        // Values and nested scopes must not confuse the scanner.
+        assert!(duplicate_object_keys(r#"{"a":"a","b":{"a":1},"c":["a","a"]}"#).is_empty());
+        assert!(duplicate_object_keys(r#"{"a":1,"b":{"x":1,"x":2}}"#) == vec!["x".to_string()]);
+    }
+
+    #[test]
+    fn infer_kind_recognizes_all_tags() {
+        let cases = [
+            (r#"{"plan":"kareus_cluster"}"#, ArtifactKind::ClusterPlan),
+            (r#"{"log":"kareus_revisions"}"#, ArtifactKind::RevisionLog),
+            (r#"{"trace":"kareus_exec_trace"}"#, ArtifactKind::ExecTrace),
+            (r#"{"bench":"kareus_sweep"}"#, ArtifactKind::Sweep),
+            (r#"{"summary":"kareus_replan_run"}"#, ArtifactKind::ReplanSummary),
+            (r#"{"slots":[],"n_stages":1}"#, ArtifactKind::FrequencyPlan),
+        ];
+        for (src, want) in cases {
+            assert_eq!(infer_kind(&Json::parse(src).unwrap()), Some(want), "{src}");
+        }
+        assert_eq!(infer_kind(&Json::parse(r#"{"hello":1}"#).unwrap()), None);
+    }
+
+    #[test]
+    fn unknown_artifact_is_k000() {
+        let r = check_text(r#"{"hello":1}"#, "mem", None);
+        assert_eq!(r.kind, "unknown");
+        assert_eq!(codes(&r.diagnostics), vec![Code::K000]);
+    }
+
+    #[test]
+    fn report_is_byte_deterministic() {
+        let src = tiny_plan(2000, 200);
+        let json = src.to_json().dump();
+        let a = check_text(&json, "mem", Some(&GpuSpec::a100()));
+        let b = check_text(&json, "mem", Some(&GpuSpec::a100()));
+        assert_eq!(a.to_text(), b.to_text());
+        assert_eq!(a.to_json().dump(), b.to_json().dump());
+        assert!(a.has_errors());
+    }
+
+    #[test]
+    fn severity_partition_is_stable() {
+        // Warn codes are a fixed set; everything else is an error.
+        let warns: Vec<Code> =
+            Code::ALL.iter().copied().filter(|c| c.severity() == Severity::Warn).collect();
+        assert_eq!(
+            warns,
+            vec![Code::K004, Code::K008, Code::K015, Code::K016, Code::K024, Code::K033, Code::K042]
+        );
+        for c in Code::ALL {
+            assert!(c.as_str().starts_with('K'));
+            assert!(!c.summary().is_empty());
+        }
+    }
+}

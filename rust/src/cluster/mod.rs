@@ -675,7 +675,10 @@ pub fn plan_cluster(
             }
         })
         .collect();
-    ClusterPlan { schedule: schedule.clone(), jobs, slices }
+    let plan = ClusterPlan { schedule: schedule.clone(), jobs, slices };
+    #[cfg(debug_assertions)]
+    crate::check::assert_no_errors("plan_cluster", &crate::check::check_cluster_json(&plan.to_json()));
+    plan
 }
 
 impl ClusterPlan {

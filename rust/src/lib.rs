@@ -31,6 +31,10 @@
 //!    incrementally: cap boundaries re-select along retained frontiers,
 //!    drift triggers warm-start from the engine's caches; every change is
 //!    a typed [`plan::PlanRevision`].
+//! 7. **verify** — [`check`] statically verifies every emitted artifact
+//!    (plans, cluster plans, revision logs, traces, sweeps) against the
+//!    invariants above, as the `kareus check` subcommand and as
+//!    debug-mode assertions at the construction seams.
 //!
 //! [`paper`] regenerates the evaluation tables/figures, [`sim`] is the
 //! default measurement source (GPU power model + two-stream executor),
@@ -39,6 +43,7 @@
 
 pub mod backend;
 pub mod baselines;
+pub mod check;
 pub mod cli;
 pub mod cluster;
 pub mod compose;

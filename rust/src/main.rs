@@ -14,6 +14,8 @@
 //!   train     --replan [--iters N] [--policy static|drift|oracle]
 //!             [--slowdown ITER:F,…] [--caps 0:W,T:W] [--drift-pct N]
 //!             [--revisions-out FILE]       online replanning runtime
+//!   check     <file.json> [--gpu a100] [--format text|json]
+//!                                          statically verify an artifact
 //!   census                                 Appendix B space census
 //!   list                                   list experiments
 
@@ -49,6 +51,7 @@ fn main() {
         "sweep" => cmd_sweep(&args),
         "cluster" => cmd_cluster(&args),
         "train" => cmd_train(&args),
+        "check" => cmd_check(&args),
         "census" => match paper::run_experiment("appB") {
             // Propagate through the CLI error path instead of unwrapping:
             // a missing built-in experiment is an internal error, not a
@@ -84,6 +87,7 @@ fn main() {
                  [--slowdown ITER:FACTOR,…] [--cap WATTS|--caps 0:W1,T2:W2,…] [--drift-pct 5] \
                  [--replan-cooldown 20] [--deadline S] [--seed N] [--revisions-out FILE] \
                  [--out FILE] [--strategy S] [--backend sim|trace:FILE]\n  \
+                 kareus check FILE.json [--gpu a100|h100|v100] [--format text|json]\n  \
                  kareus census | kareus list\n\
                  \n\
                  --strategy picks the per-partition search (default mbo: the paper's multi-pass MBO;\n\
@@ -99,6 +103,59 @@ fn main() {
         }
     };
     std::process::exit(code);
+}
+
+/// Serialize an artifact document, refusing to write non-finite numbers
+/// (invalid JSON). Returns the CLI exit code on failure.
+fn emit(doc: &kareus::util::json::Json, what: &str) -> Result<String, i32> {
+    doc.try_dump().map_err(|e| {
+        eprintln!("{what}: {e}");
+        1
+    })
+}
+
+/// `kareus check <file.json>`: statically verify an emitted artifact.
+/// Exit 0 when clean (warnings allowed), 1 on errors, 2 on usage/IO.
+fn cmd_check(args: &Args) -> i32 {
+    let Some(path) = args.positional.get(1) else {
+        eprintln!("usage: kareus check <file.json> [--gpu a100|h100|v100] [--format text|json]");
+        return 2;
+    };
+    let gpu = match args.get("gpu") {
+        None => None,
+        Some(name) => match kareus::check::resolve_gpu(name) {
+            Some(g) => Some(g),
+            None => {
+                eprintln!("unknown gpu '{name}' (a100 | h100 | v100)");
+                return 2;
+            }
+        },
+    };
+    let format = args.get("format").unwrap_or("text");
+    if format != "text" && format != "json" {
+        eprintln!("unknown --format '{format}' (text | json)");
+        return 2;
+    }
+    let report = match kareus::check::check_file(std::path::Path::new(path), gpu.as_ref()) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("kareus check: {e}");
+            return 2;
+        }
+    };
+    if format == "json" {
+        match emit(&report.to_json(), "emit report") {
+            Ok(text) => println!("{text}"),
+            Err(code) => return code,
+        }
+    } else {
+        print!("{}", report.to_text());
+    }
+    if report.has_errors() {
+        1
+    } else {
+        0
+    }
 }
 
 fn cmd_paper(args: &Args) -> i32 {
@@ -258,10 +315,13 @@ fn cmd_optimize(args: &Args) -> i32 {
         Target::MaxThroughput
     };
     match coord.select(&result, target) {
-        Some(dep) => {
-            println!("{}", coord.plan_json(&result, &dep).dump());
-            0
-        }
+        Some(dep) => match emit(&coord.plan_json(&result, &dep), "emit plan") {
+            Ok(text) => {
+                println!("{text}");
+                0
+            }
+            Err(code) => code,
+        },
         None => {
             eprintln!("no frontier point satisfies the target");
             1
@@ -366,7 +426,10 @@ fn cmd_sweep(args: &Args) -> i32 {
     let outcomes = run_sweep(scenarios, &engine, |line| eprintln!("{line}"));
     // Trace runs null the timing-dependent fields so a record run and its
     // replay dump byte-identical JSON.
-    let json = sweep_json(&outcomes, &engine, trace.is_some()).dump();
+    let json = match emit(&sweep_json(&outcomes, &engine, trace.is_some()), "emit sweep") {
+        Ok(j) => j,
+        Err(code) => return code,
+    };
     if let Err(e) = finish_trace(&trace) {
         eprintln!("{e}");
         return 1;
@@ -460,7 +523,10 @@ fn cmd_cluster(args: &Args) -> i32 {
         return 1;
     }
     let plan = plan_cluster(&fronts, &schedule, |w| eprintln!("warning: {w}"));
-    let json = plan.to_json().dump();
+    let json = match emit(&plan.to_json(), "emit cluster plan") {
+        Ok(j) => j,
+        Err(code) => return code,
+    };
     match args.get("out") {
         Some(path) => {
             if let Err(e) = std::fs::write(path, &json) {
@@ -611,13 +677,20 @@ fn cmd_train_replan(args: &Args) -> i32 {
         return 1;
     }
     if let Some(path) = args.get("revisions-out") {
-        if let Err(e) = std::fs::write(path, summary.revisions.to_json().dump()) {
+        let revisions = match emit(&summary.revisions.to_json(), "emit revisions") {
+            Ok(j) => j,
+            Err(code) => return code,
+        };
+        if let Err(e) = std::fs::write(path, revisions) {
             eprintln!("write {path}: {e}");
             return 1;
         }
         eprintln!("wrote {path} ({} revisions)", summary.revisions.revisions.len());
     }
-    let json = summary.to_json().dump();
+    let json = match emit(&summary.to_json(), "emit summary") {
+        Ok(j) => j,
+        Err(code) => return code,
+    };
     match args.get("out") {
         Some(path) => {
             if let Err(e) = std::fs::write(path, &json) {

@@ -63,12 +63,18 @@ impl FrequencyPlan {
                 }
             }
         }
-        FrequencyPlan {
+        let plan = FrequencyPlan {
             n_stages: menus.len() as u32,
             n_microbatches: n_microbatches as u32,
             bubble_s: it.bubble_s,
             slots,
-        }
+        };
+        #[cfg(debug_assertions)]
+        crate::check::assert_no_errors(
+            "FrequencyPlan::from_iteration",
+            &crate::check::check_frequency_plan(&plan, None),
+        );
+        plan
     }
 
     pub fn n_slots(&self) -> usize {

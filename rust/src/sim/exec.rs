@@ -86,6 +86,21 @@ pub fn execute_partition(
     temp_c: f64,
     power_limit: Option<f64>,
 ) -> ExecResult {
+    debug_assert!(
+        sched.freq_mhz >= gpu.f_min_mhz && sched.freq_mhz <= gpu.f_max_mhz,
+        "schedule frequency {} MHz outside {}'s [{}, {}] MHz range",
+        sched.freq_mhz,
+        gpu.name,
+        gpu.f_min_mhz,
+        gpu.f_max_mhz
+    );
+    debug_assert!(
+        comm.is_none() || sched.comm_sms < gpu.n_sms,
+        "{} comm SMs oversubscribes {} ({} SMs)",
+        sched.comm_sms,
+        gpu.name,
+        gpu.n_sms
+    );
     match sched.launch {
         LaunchAt::Sequential => {
             execute_sequential(gpu, comps, comm, sched.freq_mhz, temp_c, power_limit)

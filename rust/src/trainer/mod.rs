@@ -155,7 +155,9 @@ impl Trainer {
                     sim_time_s: accounting.iter_time_s,
                     sim_energy_j: accounting.iter_energy_j,
                 };
-                println!(
+                // Progress goes to stderr: stdout is reserved for artifact
+                // JSON across every subcommand (srclint: stdout rule).
+                eprintln!(
                     "step {:4}  loss {:.4}  wall {:.2}s  | sched[{}] iter {:.3}s {:.0}J {}-{} MHz",
                     s,
                     loss,

@@ -31,6 +31,25 @@ impl fmt::Display for JsonError {
 
 impl std::error::Error for JsonError {}
 
+/// Error from [`Json::try_dump`]: the document contains a non-finite
+/// number, which has no JSON representation.
+#[derive(Debug, PartialEq)]
+pub struct EmitError {
+    /// Dotted path to the offending value (e.g. `scenarios[2].wall_s`).
+    pub path: String,
+    /// The offending value (NaN or ±inf).
+    pub value: f64,
+}
+
+impl fmt::Display for EmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let at = if self.path.is_empty() { "the document root" } else { self.path.as_str() };
+        write!(f, "cannot emit non-finite number {} at {at}", self.value)
+    }
+}
+
+impl std::error::Error for EmitError {}
+
 impl Json {
     pub fn parse(input: &str) -> Result<Json, JsonError> {
         let mut p = Parser { b: input.as_bytes(), i: 0 };
@@ -84,11 +103,39 @@ impl Json {
         }
     }
 
-    /// Serialize compactly.
+    /// Serialize compactly. NaN/Inf would serialize as the non-JSON
+    /// tokens `NaN`/`inf`; artifact emitters go through [`Json::try_dump`]
+    /// so that becomes a reportable error instead of a corrupt file.
     pub fn dump(&self) -> String {
         let mut s = String::new();
         self.write(&mut s);
         s
+    }
+
+    /// Serialize compactly, rejecting non-finite numbers with a typed
+    /// error that names the offending path.
+    pub fn try_dump(&self) -> Result<String, EmitError> {
+        if let Some(e) = self.find_nonfinite("") {
+            return Err(e);
+        }
+        Ok(self.dump())
+    }
+
+    /// Depth-first search for the first non-finite number (document order,
+    /// so the reported path is deterministic).
+    fn find_nonfinite(&self, at: &str) -> Option<EmitError> {
+        match self {
+            Json::Num(n) if !n.is_finite() => Some(EmitError { path: at.to_string(), value: *n }),
+            Json::Arr(a) => a
+                .iter()
+                .enumerate()
+                .find_map(|(i, v)| v.find_nonfinite(&format!("{at}[{i}]"))),
+            Json::Obj(m) => m.iter().find_map(|(k, v)| {
+                let child = if at.is_empty() { k.clone() } else { format!("{at}.{k}") };
+                v.find_nonfinite(&child)
+            }),
+            _ => None,
+        }
     }
 
     fn write(&self, out: &mut String) {
@@ -150,6 +197,7 @@ pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
     Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
 }
 pub fn num(n: f64) -> Json {
+    debug_assert!(n.is_finite(), "num({n}): non-finite numbers have no JSON representation");
     Json::Num(n)
 }
 pub fn s(v: &str) -> Json {
@@ -323,11 +371,15 @@ impl<'a> Parser<'a> {
         {
             self.i += 1;
         }
-        std::str::from_utf8(&self.b[start..self.i])
-            .ok()
-            .and_then(|s| s.parse::<f64>().ok())
-            .map(Json::Num)
-            .ok_or_else(|| self.err("bad number"))
+        match std::str::from_utf8(&self.b[start..self.i]).ok().and_then(|s| s.parse::<f64>().ok())
+        {
+            // str::parse overflows literals like 1e999 to inf; valid JSON
+            // has no non-finite numbers, so reject rather than smuggle
+            // them into a document that could never round-trip.
+            Some(n) if n.is_finite() => Ok(Json::Num(n)),
+            Some(_) => Err(self.err("number out of range")),
+            None => Err(self.err("bad number")),
+        }
     }
 }
 
@@ -398,5 +450,69 @@ mod tests {
     fn dump_escapes_control_chars() {
         let v = Json::Str("a\"b\\c\nd".to_string());
         assert_eq!(Json::parse(&v.dump()).unwrap(), v);
+    }
+
+    #[test]
+    fn escape_sequences_roundtrip() {
+        let v = Json::parse(r#""Aé\t\r\n\b\f\/\\\"""#).unwrap();
+        assert_eq!(v.as_str(), Some("Aé\t\r\n\u{0008}\u{000C}/\\\""));
+        // NUL and other C0 controls survive a dump/parse cycle as \uXXXX.
+        let nul = Json::Str("a\u{0000}b\u{0001}".to_string());
+        assert_eq!(Json::parse(&nul.dump()).unwrap(), nul);
+        // Lone surrogate escapes cannot be a char; the parser substitutes
+        // U+FFFD rather than erroring (matching from_utf8_lossy).
+        assert_eq!(Json::parse(r#""\ud800""#).unwrap().as_str(), Some("\u{FFFD}"));
+    }
+
+    #[test]
+    fn deep_nesting_roundtrips() {
+        let depth = 1000;
+        let mut src = String::new();
+        src.push_str(&"[".repeat(depth));
+        src.push('1');
+        src.push_str(&"]".repeat(depth));
+        let v = Json::parse(&src).unwrap();
+        assert_eq!(v.dump(), src);
+        let mut inner = &v;
+        for _ in 0..depth {
+            inner = &inner.as_arr().unwrap()[0];
+        }
+        assert_eq!(inner.as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn parser_rejects_nonfinite_literals() {
+        // Overflowing exponents would become inf through str::parse.
+        assert!(Json::parse("1e999").is_err());
+        assert!(Json::parse("-1e999").is_err());
+        assert!(Json::parse("[1, 1e999]").is_err());
+        // JSON has no NaN/Infinity tokens at all.
+        assert!(Json::parse("NaN").is_err());
+        assert!(Json::parse("Infinity").is_err());
+        // Large-but-finite still parses.
+        assert_eq!(Json::parse("1e308").unwrap().as_f64(), Some(1e308));
+    }
+
+    #[test]
+    fn try_dump_rejects_nonfinite_with_path() {
+        let doc = Json::Obj(
+            [
+                ("ok".to_string(), Json::Num(1.0)),
+                (
+                    "scenarios".to_string(),
+                    Json::Arr(vec![Json::Num(2.0), Json::Num(f64::NAN)]),
+                ),
+            ]
+            .into_iter()
+            .collect(),
+        );
+        let err = doc.try_dump().unwrap_err();
+        assert_eq!(err.path, "scenarios[1]");
+        assert!(err.value.is_nan());
+        assert!(err.to_string().contains("scenarios[1]"));
+        assert_eq!(Json::Num(f64::INFINITY).try_dump().unwrap_err().path, "");
+        // Finite documents pass through identically to dump().
+        let fine = Json::parse(r#"{"a":[1,2.5],"b":"x"}"#).unwrap();
+        assert_eq!(fine.try_dump().unwrap(), fine.dump());
     }
 }

@@ -1,0 +1,168 @@
+//! Integration tests for the static artifact verifier: every diagnostic
+//! code has a seeded negative fixture that must trip it, clean fixtures
+//! must stay clean, double runs must be byte-identical, and the CLI exit
+//! codes must follow the 0/1/2 convention.
+
+use std::path::PathBuf;
+
+use kareus::check::{check_file, Code, Severity};
+use kareus::sim::gpu::GpuSpec;
+use kareus::util::json::Json;
+
+fn fixture(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures").join(name)
+}
+
+/// (fixture, the code it was seeded to trip). The fixture trips at least
+/// that code; error-ness follows the code's own severity.
+const SEEDED: &[(&str, Code)] = &[
+    ("plan_k001_slot_count.json", Code::K001),
+    ("plan_k002_slot_order.json", Code::K002),
+    ("plan_k003_freq_range.json", Code::K003),
+    ("plan_k004_off_grid.json", Code::K004),
+    ("plan_k005_sm_oversub.json", Code::K005),
+    ("plan_k006_seq_conflict.json", Code::K006),
+    ("plan_k007_negative_bubble.json", Code::K007),
+    ("cluster_k008_unknown_gpu.json", Code::K008),
+    ("cluster_k010_over_cap.json", Code::K010),
+    ("cluster_k011_sum_mismatch.json", Code::K011),
+    ("cluster_k012_timeline.json", Code::K012),
+    ("cluster_k013_missing_job.json", Code::K013),
+    ("cluster_k014_bad_index.json", Code::K014),
+    ("cluster_k015_stats_mismatch.json", Code::K015),
+    ("cluster_k016_menu_order.json", Code::K016),
+    ("revisions_k020_counter.json", Code::K020),
+    ("revisions_k021_time_travel.json", Code::K021),
+    ("revisions_k022_first_trigger.json", Code::K022),
+    ("revisions_k023_cap_null.json", Code::K023),
+    ("revisions_k024_over_cap.json", Code::K024),
+    ("revisions_k030_version.json", Code::K030),
+    ("trace_k030_version.json", Code::K030),
+    ("trace_k031_bad_key.json", Code::K031),
+    ("trace_k032_bad_entry.json", Code::K032),
+    ("trace_k033_dup_key.json", Code::K033),
+    ("trace_k034_freq_exceeds.json", Code::K034),
+    ("sweep_k041_bad_point.json", Code::K041),
+    ("sweep_k042_not_pareto.json", Code::K042),
+    ("summary_k050_missing_field.json", Code::K050),
+    ("summary_k051_replan_count.json", Code::K051),
+    ("unknown_k000.json", Code::K000),
+];
+
+const CLEAN: &[&str] = &[
+    "plan_ok.json",
+    "cluster_ok.json",
+    "revisions_ok.json",
+    "trace_ok.json",
+    "sweep_ok.json",
+    "summary_ok.json",
+];
+
+fn gpu_for(name: &str) -> Option<GpuSpec> {
+    // Plan and revision fixtures target the A100 range; cluster plans
+    // name their GPU per job and the rest need none.
+    if name.starts_with("plan_") || name.starts_with("revisions_") {
+        Some(GpuSpec::a100())
+    } else {
+        None
+    }
+}
+
+#[test]
+fn every_seeded_fixture_trips_its_code() {
+    for (name, code) in SEEDED {
+        let report = check_file(&fixture(name), gpu_for(name).as_ref()).unwrap();
+        let codes: Vec<Code> = report.diagnostics.iter().map(|x| x.code).collect();
+        assert!(codes.contains(code), "{name}: expected {:?} in {codes:?}", code);
+        if code.severity() == Severity::Error {
+            assert!(report.has_errors(), "{name}: {code:?} is an error code");
+        } else {
+            // Warn-seeded fixtures are otherwise valid documents.
+            assert!(!report.has_errors(), "{name}: {}", report.to_text());
+        }
+    }
+}
+
+#[test]
+fn seeded_codes_cover_at_least_ten_distinct() {
+    let mut distinct: Vec<&str> = SEEDED.iter().map(|(_, c)| c.as_str()).collect();
+    distinct.sort();
+    distinct.dedup();
+    assert!(distinct.len() >= 10, "only {} distinct codes seeded", distinct.len());
+}
+
+#[test]
+fn clean_fixtures_have_no_diagnostics() {
+    for name in CLEAN {
+        let report = check_file(&fixture(name), gpu_for(name).as_ref()).unwrap();
+        assert!(report.diagnostics.is_empty(), "{name}:\n{}", report.to_text());
+    }
+}
+
+#[test]
+fn reports_are_byte_identical_across_runs() {
+    for (name, _) in SEEDED {
+        let a = check_file(&fixture(name), gpu_for(name).as_ref()).unwrap();
+        let b = check_file(&fixture(name), gpu_for(name).as_ref()).unwrap();
+        assert_eq!(a.to_text(), b.to_text(), "{name}: text report not deterministic");
+        assert_eq!(
+            a.to_json().try_dump().unwrap(),
+            b.to_json().try_dump().unwrap(),
+            "{name}: json report not deterministic"
+        );
+    }
+}
+
+fn run_check(args: &[&str]) -> (i32, String, String) {
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_kareus"))
+        .arg("check")
+        .args(args)
+        .output()
+        .expect("spawn kareus check");
+    (
+        out.status.code().unwrap_or(-1),
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+    )
+}
+
+#[test]
+fn cli_exit_codes_follow_convention() {
+    let ok = fixture("plan_ok.json");
+    let bad = fixture("cluster_k010_over_cap.json");
+    let warn_only = fixture("cluster_k015_stats_mismatch.json");
+
+    let (code, stdout, _) = run_check(&[ok.to_str().unwrap(), "--gpu", "a100"]);
+    assert_eq!(code, 0, "clean artifact must exit 0:\n{stdout}");
+    assert!(stdout.contains("0 error(s), 0 warning(s)"), "{stdout}");
+
+    let (code, stdout, _) = run_check(&[bad.to_str().unwrap()]);
+    assert_eq!(code, 1, "artifact with errors must exit 1");
+    assert!(stdout.contains("K010"), "{stdout}");
+
+    let (code, _, _) = run_check(&[warn_only.to_str().unwrap()]);
+    assert_eq!(code, 0, "warnings alone must not fail the check");
+
+    let (code, _, _) = run_check(&[]);
+    assert_eq!(code, 2, "missing file argument is a usage error");
+    let (code, _, _) = run_check(&["/nonexistent/definitely_missing.json"]);
+    assert_eq!(code, 2, "unreadable file is an IO error");
+    let (code, _, _) = run_check(&[ok.to_str().unwrap(), "--gpu", "tpu9"]);
+    assert_eq!(code, 2, "unknown gpu is a usage error");
+}
+
+#[test]
+fn cli_json_report_parses_and_is_deterministic() {
+    let bad = fixture("revisions_k020_counter.json");
+    let (code, a, _) = run_check(&[bad.to_str().unwrap(), "--format", "json"]);
+    assert_eq!(code, 1);
+    let (_, b, _) = run_check(&[bad.to_str().unwrap(), "--format", "json"]);
+    assert_eq!(a, b, "json report not byte-identical across runs");
+    let doc = Json::parse(a.trim()).expect("report must be valid JSON");
+    assert_eq!(doc.get("check").and_then(Json::as_str), Some("kareus_check"));
+    assert_eq!(doc.get("kind").and_then(Json::as_str), Some("revision_log"));
+    let diags = doc.get("diagnostics").and_then(Json::as_arr).unwrap();
+    assert!(diags
+        .iter()
+        .any(|x| x.get("code").and_then(Json::as_str) == Some("K020")));
+}

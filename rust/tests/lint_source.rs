@@ -1,0 +1,181 @@
+//! srclint: source-level determinism and hygiene lint.
+//!
+//! The compiler cannot enforce the crate's operational discipline — byte-
+//! deterministic artifacts, stdout reserved for artifact JSON, seeded
+//! randomness, `unsafe` confined to the FFI boundary. This harness walks
+//! `src/**` and enforces those rules with plain substring matching (no
+//! external deps), so it runs everywhere `cargo test` runs.
+//!
+//! Vetted exceptions live in `tests/lint_allowlist.txt`, one
+//! `rule path` pair per line (paths relative to `src/`). Allowlist
+//! entries that no longer match anything fail the lint too, so the list
+//! can only shrink.
+//!
+//! Scope: comment lines and everything from a column-0 `#[cfg(test)]`
+//! line onward (the crate's trailing-test-mod convention) are skipped.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+struct Rule {
+    id: &'static str,
+    /// A line violates the rule when it contains any of these...
+    needles: &'static [&'static str],
+    /// ...and (when non-empty) at least one of these too.
+    also: &'static [&'static str],
+    /// Path suffixes the rule never applies to. `dir/` prefixes match the
+    /// whole directory.
+    exempt: &'static [&'static str],
+    why: &'static str,
+}
+
+const RULES: &[Rule] = &[
+    Rule {
+        id: "stdout",
+        needles: &["println!", "print!", "eprintln!", "eprint!"],
+        also: &[],
+        exempt: &["main.rs"],
+        why: "stdout is reserved for artifact JSON and stderr for the CLI's own progress; \
+              library modules report through return values",
+    },
+    Rule {
+        id: "wallclock",
+        needles: &["Instant", "SystemTime"],
+        also: &[],
+        exempt: &["util/bench.rs"],
+        why: "wall-clock reads make output non-deterministic; confine them to util::bench",
+    },
+    Rule {
+        id: "hash-collections",
+        needles: &["HashMap", "HashSet"],
+        also: &[],
+        exempt: &["util/"],
+        why: "std hash iteration order is randomized per process; anything that can feed \
+              emitted output must use BTreeMap/BTreeSet",
+    },
+    Rule {
+        id: "randomness",
+        needles: &["thread_rng", "rand::", "RandomState", "getrandom"],
+        also: &[],
+        exempt: &["util/rng.rs"],
+        why: "all randomness flows through the seeded util::rng so runs replay bit-identically",
+    },
+    Rule {
+        id: "unsafe",
+        needles: &["unsafe"],
+        also: &[],
+        exempt: &["runtime/pjrt.rs", "xla/"],
+        why: "unsafe stays confined to the PJRT FFI boundary",
+    },
+    Rule {
+        id: "debug-fmt-json",
+        needles: &["{:?}"],
+        also: &["Json", ".dump("],
+        exempt: &[],
+        why: "Debug formatting is not JSON (floats, enums); emit through util::json",
+    },
+];
+
+fn collect(dir: &Path, out: &mut Vec<PathBuf>) {
+    let mut entries: Vec<PathBuf> =
+        fs::read_dir(dir).unwrap().map(|e| e.unwrap().path()).collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            collect(&p, out);
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+}
+
+fn exempted(rel: &str, exempt: &[&str]) -> bool {
+    exempt.iter().any(|e| rel == *e || (e.ends_with('/') && rel.starts_with(e)))
+}
+
+#[test]
+fn srclint() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let src = root.join("src");
+    let mut files = Vec::new();
+    collect(&src, &mut files);
+    assert!(!files.is_empty(), "no sources under {}", src.display());
+
+    let allow_path = root.join("tests/lint_allowlist.txt");
+    let allow_text = fs::read_to_string(&allow_path)
+        .unwrap_or_else(|e| panic!("read {}: {e}", allow_path.display()));
+    let mut allow: Vec<(String, String)> = Vec::new();
+    for line in allow_text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let rule = it.next().unwrap().to_string();
+        let path = it
+            .next()
+            .unwrap_or_else(|| panic!("allowlist line needs 'rule path': {line}"))
+            .to_string();
+        assert!(
+            RULES.iter().any(|r| r.id == rule),
+            "allowlist names unknown rule '{rule}' (known: {:?})",
+            RULES.iter().map(|r| r.id).collect::<Vec<_>>()
+        );
+        allow.push((rule, path));
+    }
+    let mut used = vec![false; allow.len()];
+
+    let mut violations: Vec<String> = Vec::new();
+    for f in &files {
+        let rel = f.strip_prefix(&src).unwrap().to_string_lossy().replace('\\', "/");
+        let text = fs::read_to_string(f).unwrap();
+        let mut in_tests = false;
+        for (ln, line) in text.lines().enumerate() {
+            if line.starts_with("#[cfg(test)]") {
+                in_tests = true;
+            }
+            if in_tests || line.trim_start().starts_with("//") {
+                continue;
+            }
+            for rule in RULES {
+                if exempted(&rel, rule.exempt) {
+                    continue;
+                }
+                let hit = rule.needles.iter().any(|n| line.contains(n))
+                    && (rule.also.is_empty() || rule.also.iter().any(|n| line.contains(n)));
+                if !hit {
+                    continue;
+                }
+                if let Some(i) =
+                    allow.iter().position(|(r, p)| r == rule.id && p == rel.as_str())
+                {
+                    used[i] = true;
+                    continue;
+                }
+                violations.push(format!(
+                    "[{}] {rel}:{}: {}\n    rule: {}",
+                    rule.id,
+                    ln + 1,
+                    line.trim(),
+                    rule.why
+                ));
+            }
+        }
+    }
+
+    let stale: Vec<String> = allow
+        .iter()
+        .zip(&used)
+        .filter(|(_, u)| !**u)
+        .map(|((r, p), _)| format!("{r} {p}"))
+        .collect();
+    assert!(
+        violations.is_empty() && stale.is_empty(),
+        "srclint failed.\n\n{} violation(s):\n{}\n\n{} stale allowlist entrie(s) (remove from \
+         tests/lint_allowlist.txt):\n{}\n",
+        violations.len(),
+        violations.join("\n"),
+        stale.len(),
+        stale.join("\n")
+    );
+}
