@@ -8,6 +8,7 @@ use kareus::mbo::{optimize_partition_with, space, HalvingParams, MboParams, Stra
 use kareus::partition::{detect_partitions, Partition};
 use kareus::pipeline::{greedy_fill, simulate_1f1b, StageMenu};
 use kareus::profiler::Profiler;
+use kareus::serve::{PlanService, ServeOptions, ServeRequest};
 use kareus::sim::exec::{execute_partition, LaunchAt, Schedule};
 use kareus::sim::gpu::GpuSpec;
 use kareus::surrogate::{Gbdt, GbdtParams};
@@ -176,7 +177,32 @@ fn main() {
         t_seq / t_warm.max(1e-9)
     );
 
-    // 8. Search strategies on one partition: wall time + simulated
+    // 8. Plan service request paths: the serve daemon's hit path (plan
+    //    cache + response serialization, the steady state) vs its miss
+    //    path (one full optimization). The gap is the daemon's reason to
+    //    exist — pin both so a regression in either is visible.
+    let svc = PlanService::new(EngineConfig::new(), ServeOptions::default());
+    let plan_req = ServeRequest::Plan {
+        job: "a100:qwen1.7b:tp8pp2:megatron".to_string(),
+        target: "max".to_string(),
+        seed: 42,
+        strategy: None,
+    }
+    .to_json()
+    .dump();
+    let t0 = std::time::Instant::now();
+    let (first, _) = svc.process_line(&plan_req);
+    assert!(first.is_ok(), "bench miss path failed: {first:?}");
+    println!("{:55} {:8.3} s", "serve::process_line (miss: full optimization)", t0.elapsed().as_secs_f64());
+    bench("serve::process_line (hit: warm plan cache)", 0.3, || {
+        std::hint::black_box(svc.process_line(&plan_req));
+    });
+    let stats_req = ServeRequest::Stats { deterministic: true }.to_json().dump();
+    bench("serve::process_line (stats)", 0.3, || {
+        std::hint::black_box(svc.process_line(&stats_req));
+    });
+
+    // 9. Search strategies on one partition: wall time + simulated
     //    profiling seconds per strategy (the racing strategy's win is the
     //    simulated bill; its wall time also drops with the probe count).
     let n_cands = space::candidate_space(&gpu, &part, 8).len();

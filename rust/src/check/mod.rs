@@ -91,10 +91,14 @@ pub enum Code {
     K042,
     K050,
     K051,
+    K060,
+    K061,
+    K062,
+    K063,
 }
 
 impl Code {
-    pub const ALL: [Code; 30] = [
+    pub const ALL: [Code; 34] = [
         Code::K000,
         Code::K001,
         Code::K002,
@@ -125,6 +129,10 @@ impl Code {
         Code::K042,
         Code::K050,
         Code::K051,
+        Code::K060,
+        Code::K061,
+        Code::K062,
+        Code::K063,
     ];
 
     pub fn as_str(self) -> &'static str {
@@ -159,6 +167,10 @@ impl Code {
             Code::K042 => "K042",
             Code::K050 => "K050",
             Code::K051 => "K051",
+            Code::K060 => "K060",
+            Code::K061 => "K061",
+            Code::K062 => "K062",
+            Code::K063 => "K063",
         }
     }
 
@@ -170,7 +182,8 @@ impl Code {
             | Code::K016
             | Code::K024
             | Code::K033
-            | Code::K042 => Severity::Warn,
+            | Code::K042
+            | Code::K063 => Severity::Warn,
             _ => Severity::Error,
         }
     }
@@ -208,6 +221,10 @@ impl Code {
             Code::K042 => "sweep frontier not Pareto-ordered",
             Code::K050 => "replan summary missing or invalid required field",
             Code::K051 => "replan summary counters disagree with its revision list",
+            Code::K060 => "loadgen report missing or invalid required field",
+            Code::K061 => "loadgen report counters inconsistent",
+            Code::K062 => "loadgen report p50 latency exceeds p99",
+            Code::K063 => "loadgen report mixes null and non-null wall-clock fields",
         }
     }
 }
@@ -255,6 +272,7 @@ pub enum ArtifactKind {
     ExecTrace,
     Sweep,
     ReplanSummary,
+    LoadgenReport,
 }
 
 impl ArtifactKind {
@@ -266,6 +284,7 @@ impl ArtifactKind {
             ArtifactKind::ExecTrace => "exec_trace",
             ArtifactKind::Sweep => "sweep",
             ArtifactKind::ReplanSummary => "replan_summary",
+            ArtifactKind::LoadgenReport => "loadgen_report",
         }
     }
 }
@@ -288,6 +307,9 @@ pub fn infer_kind(j: &Json) -> Option<ArtifactKind> {
     }
     if tag("summary") == Some("kareus_replan_run") {
         return Some(ArtifactKind::ReplanSummary);
+    }
+    if tag("report") == Some("kareus_loadgen") {
+        return Some(ArtifactKind::LoadgenReport);
     }
     if j.get("slots").is_some() && j.get("n_stages").is_some() {
         return Some(ArtifactKind::FrequencyPlan);
@@ -377,7 +399,7 @@ pub fn check_text(raw: &str, source: &str, gpu: Option<&GpuSpec>) -> Report {
             Code::K000,
             "",
             "no recognizable schema tag (expected a kareus plan, cluster plan, revision log, \
-             trace, sweep, or replan summary)",
+             trace, sweep, replan summary, or loadgen report)",
         ));
         return report;
     };
@@ -416,6 +438,7 @@ pub fn check_text(raw: &str, source: &str, gpu: Option<&GpuSpec>) -> Report {
         ArtifactKind::ExecTrace => check_trace_json(&j),
         ArtifactKind::Sweep => check_sweep_json(&j),
         ArtifactKind::ReplanSummary => check_summary_json(&j),
+        ArtifactKind::LoadgenReport => check_loadgen_json(&j),
     };
     report.diagnostics.append(&mut diags);
     report
@@ -1318,6 +1341,184 @@ pub fn check_summary_json(j: &Json) -> Vec<Diagnostic> {
 }
 
 // ---------------------------------------------------------------------------
+// Loadgen reports (K060-K063)
+// ---------------------------------------------------------------------------
+
+/// Verify a `kareus_loadgen` report (`kareus loadgen` output):
+/// counter presence and non-negativity (K060), counter identities
+/// `ok + busy + errors = requests` and `hits + misses = ok` (K061),
+/// percentile ordering `p50 <= p99` (K062), and consistent
+/// deterministic-mode nulling of the wall-clock fields (K063, warn).
+pub fn check_loadgen_json(j: &Json) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    if j.get("version").and_then(Json::as_f64) != Some(1.0) {
+        out.push(d(
+            Code::K030,
+            "version",
+            format!(
+                "loadgen report version {} unsupported (expected 1)",
+                fmt_opt(j.get("version").and_then(Json::as_f64))
+            ),
+        ));
+        return out;
+    }
+    // Required counters: finite non-negative integers.
+    let mut counter = |key: &str| -> Option<f64> {
+        match j.get(key).and_then(Json::as_f64) {
+            Some(x) if x.is_finite() && x >= 0.0 && x.fract() == 0.0 => Some(x),
+            _ => {
+                out.push(d(
+                    Code::K060,
+                    key,
+                    "required counter missing or not a non-negative integer",
+                ));
+                None
+            }
+        }
+    };
+    let requests = counter("requests");
+    let concurrency = counter("concurrency");
+    let ok = counter("ok");
+    let errors = counter("errors");
+    let busy = counter("busy");
+    let hits = counter("hits");
+    let misses = counter("misses");
+    if requests == Some(0.0) {
+        out.push(d(Code::K060, "requests", "report covers zero requests"));
+    }
+    if concurrency == Some(0.0) {
+        out.push(d(Code::K060, "concurrency", "concurrency must be >= 1"));
+    }
+    match j.get("jobs").and_then(Json::as_arr) {
+        Some(jobs) if !jobs.is_empty() => {
+            for (i, job) in jobs.iter().enumerate() {
+                if job.as_str().is_none() {
+                    out.push(d(Code::K060, format!("jobs[{i}]"), "job spec must be a string"));
+                }
+            }
+        }
+        _ => out.push(d(Code::K060, "jobs", "missing, not an array, or empty")),
+    }
+    if j.get("target").and_then(Json::as_str).is_none() {
+        out.push(d(Code::K060, "target", "missing or not a string"));
+    }
+    // Counter identities: every request resolves exactly one way, and
+    // every ok plan response came from the cache either warm or cold.
+    if let (Some(requests), Some(ok), Some(errors), Some(busy)) = (requests, ok, errors, busy) {
+        if ok + busy + errors != requests {
+            out.push(d(
+                Code::K061,
+                "requests",
+                format!("ok {ok} + busy {busy} + errors {errors} != requests {requests}"),
+            ));
+        }
+    }
+    if let (Some(ok), Some(hits), Some(misses)) = (ok, hits, misses) {
+        if hits + misses != ok {
+            out.push(d(
+                Code::K061,
+                "hits",
+                format!("hits {hits} + misses {misses} != ok {ok}"),
+            ));
+        }
+        match j.get("hit_rate") {
+            Some(Json::Null) | None => {
+                if hits + misses > 0.0 {
+                    out.push(d(
+                        Code::K061,
+                        "hit_rate",
+                        "null although the cache answered at least one request",
+                    ));
+                }
+            }
+            Some(v) => match v.as_f64() {
+                Some(r) if hits + misses > 0.0 => {
+                    let want = hits / (hits + misses);
+                    if !close(r, want) {
+                        out.push(d(
+                            Code::K061,
+                            "hit_rate",
+                            format!("{r} disagrees with hits/(hits+misses) = {want}"),
+                        ));
+                    }
+                }
+                Some(_) => out.push(d(
+                    Code::K061,
+                    "hit_rate",
+                    "non-null although the cache answered no requests",
+                )),
+                None => out.push(d(Code::K060, "hit_rate", "must be a number or null")),
+            },
+        }
+    }
+    // Wall-clock fields: each is null (deterministic mode) or a finite
+    // non-negative number, and the nulling must be all-or-nothing.
+    let latency = j.get("latency");
+    if latency.is_none() {
+        out.push(d(Code::K060, "latency", "missing latency object"));
+    }
+    let mut nulled = 0usize;
+    let mut live = 0usize;
+    let mut wall = |path: String, v: Option<&Json>| -> Option<f64> {
+        match v {
+            None => {
+                out.push(d(Code::K060, path, "missing wall-clock field (use null, not absence)"));
+                None
+            }
+            Some(Json::Null) => {
+                nulled += 1;
+                None
+            }
+            Some(x) => match x.as_f64() {
+                Some(f) if f.is_finite() && f >= 0.0 => {
+                    live += 1;
+                    Some(f)
+                }
+                _ => {
+                    out.push(d(Code::K060, path, "must be null or a finite non-negative number"));
+                    None
+                }
+            },
+        }
+    };
+    let p50 = wall("latency.p50_ms".into(), latency.and_then(|l| l.get("p50_ms")));
+    let p99 = wall("latency.p99_ms".into(), latency.and_then(|l| l.get("p99_ms")));
+    for key in ["mean_ms", "min_ms", "max_ms"] {
+        wall(format!("latency.{key}"), latency.and_then(|l| l.get(key)));
+    }
+    for key in ["requests_per_s", "wall_s"] {
+        wall(key.to_string(), j.get(key));
+    }
+    // addr is wall-ish provenance (ephemeral ports): null or a string.
+    match j.get("addr") {
+        None => out.push(d(Code::K060, "addr", "missing (use null in deterministic mode)")),
+        Some(Json::Null) => nulled += 1,
+        Some(v) if v.as_str().is_some() => live += 1,
+        Some(_) => out.push(d(Code::K060, "addr", "must be null or a string")),
+    }
+    if let (Some(p50), Some(p99)) = (p50, p99) {
+        if p50 > p99 {
+            out.push(d(
+                Code::K062,
+                "latency.p50_ms",
+                format!("p50 {p50} ms exceeds p99 {p99} ms"),
+            ));
+        }
+    }
+    if nulled > 0 && live > 0 {
+        out.push(d(
+            Code::K063,
+            "",
+            format!(
+                "{nulled} wall-clock field(s) are null but {live} are not — deterministic-mode \
+                 nulling must cover all of them or none"
+            ),
+        ));
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
 // Duplicate-key scan (K033)
 // ---------------------------------------------------------------------------
 
@@ -1529,6 +1730,7 @@ mod tests {
             (r#"{"trace":"kareus_exec_trace"}"#, ArtifactKind::ExecTrace),
             (r#"{"bench":"kareus_sweep"}"#, ArtifactKind::Sweep),
             (r#"{"summary":"kareus_replan_run"}"#, ArtifactKind::ReplanSummary),
+            (r#"{"report":"kareus_loadgen"}"#, ArtifactKind::LoadgenReport),
             (r#"{"slots":[],"n_stages":1}"#, ArtifactKind::FrequencyPlan),
         ];
         for (src, want) in cases {

@@ -417,10 +417,17 @@ pub fn optimize_all_partitions_with(
     if let Err(e) = engine.strategy.validate() {
         panic!("invalid '{}' strategy: {e}", engine.strategy.name());
     }
+    // The pool runs `'static` jobs, so the closure owns its context: the
+    // engine clone is cheap (Arc-backed caches/backend) and shares cache
+    // state with the caller's engine by construction.
+    let gpu_owned = gpu.clone();
+    let engine_owned = engine.clone();
     let results: Vec<(String, MboResult)> = crate::util::pool::parallel_map(
         partitions.to_vec(),
         engine.worker_threads(),
-        |part| {
+        move |part| {
+            let gpu = &gpu_owned;
+            let engine = &engine_owned;
             // Deterministic per-partition seed (type-keyed, thread-free).
             let seed = profiler_seed ^ crate::util::hash::fnv1a_str(&part.ptype);
             let mut params = MboParams::for_class(part.size_class());

@@ -35,6 +35,7 @@
 //! machine-readable JSON output for benchmark tracking.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering as AtomicOrdering};
 use std::sync::{Arc, Mutex};
 
 use crate::backend::{ExecutionBackend, Measurer, SimBackend};
@@ -183,9 +184,16 @@ impl EngineConfig {
 
 /// Memoized per-partition MBO results. The key folds in everything the
 /// trajectory depends on, so a hit is a bit-identical replay.
+///
+/// Clones share state *and* counters: the hit/miss tallies are
+/// observability for long-lived owners (the serve daemon's `stats`
+/// request), never inputs to any plan, so they stay out of every artifact
+/// that must be byte-deterministic.
 #[derive(Clone, Default)]
 pub struct MboCache {
     inner: Arc<Mutex<HashMap<u64, MboResult>>>,
+    hits: Arc<AtomicU64>,
+    misses: Arc<AtomicU64>,
 }
 
 impl MboCache {
@@ -251,7 +259,17 @@ impl MboCache {
     }
 
     pub fn get(&self, key: u64) -> Option<MboResult> {
-        self.inner.lock().unwrap().get(&key).cloned()
+        let hit = self.inner.lock().unwrap().get(&key).cloned();
+        match hit {
+            Some(r) => {
+                self.hits.fetch_add(1, AtomicOrdering::Relaxed);
+                Some(r)
+            }
+            None => {
+                self.misses.fetch_add(1, AtomicOrdering::Relaxed);
+                None
+            }
+        }
     }
 
     pub fn put(&self, key: u64, result: MboResult) {
@@ -264,6 +282,16 @@ impl MboCache {
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Lookups answered from the cache since construction.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(AtomicOrdering::Relaxed)
+    }
+
+    /// Lookups that fell through to a fresh optimization.
+    pub fn misses(&self) -> u64 {
+        self.misses.load(AtomicOrdering::Relaxed)
     }
 }
 

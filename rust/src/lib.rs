@@ -32,9 +32,14 @@
 //!    drift triggers warm-start from the engine's caches; every change is
 //!    a typed [`plan::PlanRevision`].
 //! 7. **verify** — [`check`] statically verifies every emitted artifact
-//!    (plans, cluster plans, revision logs, traces, sweeps) against the
-//!    invariants above, as the `kareus check` subcommand and as
-//!    debug-mode assertions at the construction seams.
+//!    (plans, cluster plans, revision logs, traces, sweeps, load-test
+//!    reports) against the invariants above, as the `kareus check`
+//!    subcommand and as debug-mode assertions at the construction seams.
+//! 8. **serve** — [`serve`] wraps the whole stack in a long-running
+//!    plan-serving daemon (`kareus serve`): concurrent clients get plans
+//!    over newline-delimited JSON, answered from the process-wide warm
+//!    caches when possible; `kareus loadgen` load-tests it
+//!    deterministically.
 //!
 //! [`paper`] regenerates the evaluation tables/figures, [`sim`] is the
 //! default measurement source (GPU power model + two-stream executor),
@@ -57,6 +62,7 @@ pub mod pipeline;
 pub mod plan;
 pub mod profiler;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod surrogate;
 pub mod trainer;

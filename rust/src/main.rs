@@ -14,6 +14,12 @@
 //!   train     --replan [--iters N] [--policy static|drift|oracle]
 //!             [--slowdown ITER:F,…] [--caps 0:W,T:W] [--drift-pct N]
 //!             [--revisions-out FILE]       online replanning runtime
+//!   serve     [--addr 127.0.0.1:4500] [--threads N] [--max-inflight N]
+//!             [--strategy S] [--backend sim|trace:<path>]
+//!                                          long-running plan-serving daemon
+//!   loadgen   --addr HOST:PORT [--requests N] [--concurrency C]
+//!             [--jobs spec,…] [--target T] [--seed N] [--deterministic]
+//!             [--shutdown] [--out FILE]    drive a server, emit a report
 //!   check     <file.json> [--gpu a100] [--format text|json]
 //!                                          statically verify an artifact
 //!   census                                 Appendix B space census
@@ -33,6 +39,7 @@ use kareus::engine::{
 use kareus::mbo::StrategyKind;
 use kareus::paper;
 use kareus::runtime::{DriftSchedule, LoopConfig, ReplanPolicy, Runtime, TrainingLoop};
+use kareus::serve::{run_loadgen, send_shutdown, LoadgenConfig, ServeConfig, ServeOptions, Server};
 use kareus::sim::gpu::GpuSpec;
 use kareus::workload::{ModelSpec, Parallelism, TrainConfig};
 
@@ -51,6 +58,8 @@ fn main() {
         "sweep" => cmd_sweep(&args),
         "cluster" => cmd_cluster(&args),
         "train" => cmd_train(&args),
+        "serve" => cmd_serve(&args),
+        "loadgen" => cmd_loadgen(&args),
         "check" => cmd_check(&args),
         "census" => match paper::run_experiment("appB") {
             // Propagate through the CLI error path instead of unwrapping:
@@ -87,6 +96,11 @@ fn main() {
                  [--slowdown ITER:FACTOR,…] [--cap WATTS|--caps 0:W1,T2:W2,…] [--drift-pct 5] \
                  [--replan-cooldown 20] [--deadline S] [--seed N] [--revisions-out FILE] \
                  [--out FILE] [--strategy S] [--backend sim|trace:FILE]\n  \
+                 kareus serve [--addr 127.0.0.1:4500] [--threads N] [--max-inflight 2] \
+                 [--microbatch 8 --seq 4096 --nmb 8] [--strategy S] [--backend sim|trace:FILE]\n  \
+                 kareus loadgen --addr HOST:PORT [--requests 16] [--concurrency 4] \
+                 [--jobs gpu:model:par:system,…] [--target max|deadline:S|budget:J|power-cap:W] \
+                 [--seed N] [--deterministic] [--shutdown] [--out FILE.json]\n  \
                  kareus check FILE.json [--gpu a100|h100|v100] [--format text|json]\n  \
                  kareus census | kareus list\n\
                  \n\
@@ -112,6 +126,120 @@ fn emit(doc: &kareus::util::json::Json, what: &str) -> Result<String, i32> {
         eprintln!("{what}: {e}");
         1
     })
+}
+
+/// `kareus serve`: the long-running plan-serving daemon (data-flow step
+/// ⑨). Blocks in the accept loop until a client sends a `shutdown`
+/// control request, then drains in-flight work and exits 0.
+fn cmd_serve(args: &Args) -> i32 {
+    for key in ["addr", "max-inflight"] {
+        if args.has_flag(key) {
+            eprintln!("--{key} requires a value");
+            return 2;
+        }
+    }
+    // --threads feeds both pools: build_engine sizes the per-partition
+    // MBO fan-out, ServeConfig sizes the connection workers.
+    let (engine, trace) = match build_engine(args) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let cfg = ServeConfig {
+        addr: args.get("addr").unwrap_or("127.0.0.1:4500").to_string(),
+        threads: args.get_u32("threads", 0) as usize,
+        opts: ServeOptions {
+            max_inflight: args.get_u32("max-inflight", 2) as usize,
+            microbatch: args.get_u32("microbatch", 8),
+            seq_len: args.get_u32("seq", 4096),
+            n_microbatches: args.get_u32("nmb", 8),
+        },
+    };
+    let server = match Server::bind(engine, &cfg, |line| eprintln!("{line}")) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("kareus serve: bind {}: {e}", cfg.addr);
+            return 2;
+        }
+    };
+    if let Err(e) = server.run() {
+        eprintln!("kareus serve: {e}");
+        return 1;
+    }
+    // Persist a recording trace only after the daemon drained, so the
+    // trace covers every optimization the run admitted.
+    if let Err(e) = finish_trace(&trace) {
+        eprintln!("{e}");
+        return 1;
+    }
+    0
+}
+
+/// `kareus loadgen`: drive a running server with a deterministic request
+/// mix and emit the `kareus_loadgen` report (stdout or `--out`).
+fn cmd_loadgen(args: &Args) -> i32 {
+    for key in ["addr", "requests", "concurrency", "jobs", "target", "seed"] {
+        if args.has_flag(key) {
+            eprintln!("--{key} requires a value");
+            return 2;
+        }
+    }
+    let cfg = LoadgenConfig {
+        addr: args.get("addr").unwrap_or("127.0.0.1:4500").to_string(),
+        requests: args.get_u32("requests", 16) as usize,
+        concurrency: args.get_u32("concurrency", 4) as usize,
+        jobs: args.get_list("jobs", "a100:qwen1.7b:tp8pp2:megatron"),
+        target: args.get("target").unwrap_or("max").to_string(),
+        seed: args.get_u32("seed", 2026) as u64,
+        deterministic: args.has_flag("deterministic"),
+    };
+    // Validate the request mix client-side (usage errors exit 2 before
+    // any connection is made; the server would reject them anyway).
+    if cfg.requests == 0 {
+        eprintln!("--requests must be >= 1");
+        return 2;
+    }
+    for job in &cfg.jobs {
+        if let Err(e) = parse_job_spec(job, 8, 4096, 8, cfg.seed) {
+            eprintln!("bad job spec '{job}': {e}");
+            return 2;
+        }
+    }
+    if let Err(e) = kareus::serve::parse_target(&cfg.target) {
+        eprintln!("{e}");
+        return 2;
+    }
+    let report = match run_loadgen(&cfg) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("kareus loadgen: {e}");
+            return 1;
+        }
+    };
+    let json = match emit(&report, "emit loadgen report") {
+        Ok(j) => j,
+        Err(code) => return code,
+    };
+    match args.get("out") {
+        Some(path) => {
+            if let Err(e) = std::fs::write(path, &json) {
+                eprintln!("write {path}: {e}");
+                return 1;
+            }
+            eprintln!("wrote {path}");
+        }
+        None => println!("{json}"),
+    }
+    if args.has_flag("shutdown") {
+        if let Err(e) = send_shutdown(&cfg.addr) {
+            eprintln!("kareus loadgen: {e}");
+            return 1;
+        }
+        eprintln!("server at {} acknowledged shutdown", cfg.addr);
+    }
+    0
 }
 
 /// `kareus check <file.json>`: statically verify an emitted artifact.

@@ -1,0 +1,1455 @@
+//! Plan-serving daemon (data-flow step ⑨): `kareus serve` / `kareus loadgen`.
+//!
+//! Every other surface in this crate is a one-shot CLI that cold-starts the
+//! optimizer per invocation. Production plan traffic is recurring — the same
+//! (job, target) pairs arrive again and again — so the natural deployment
+//! shape is a long-lived process whose steady-state request path is a cache
+//! hit over state the [`engine`](crate::engine) layer already knows how to
+//! share. This module is that process:
+//!
+//! * **Protocol** — newline-delimited JSON over TCP, schema-tagged
+//!   `kareus_serve` v1. Typed [`ServeRequest`] / [`ServeResponse`] structs
+//!   round-trip byte-deterministically through [`crate::util::json`] (no
+//!   serde; the crate's no-external-deps discipline holds on the wire too).
+//! * **Service** — [`PlanService`] owns one shared [`EngineConfig`]
+//!   (process-wide `MboCache` / `MeasureCache` behind the existing locking)
+//!   plus a plan cache keyed by (job, target, seed). Known pairs are
+//!   answered without touching the optimizer; unknown pairs run per-partition
+//!   MBO inline under bounded admission — overflow gets a typed `busy`
+//!   response, never a hang. Identical in-flight requests coalesce onto one
+//!   optimization, so concurrent duplicates cost one miss total and the
+//!   hit/miss split is deterministic under any scheduling.
+//! * **Server** — [`Server`] is a fixed accept/worker thread model over a
+//!   persistent [`WorkerPool`] (spawn-per-call `parallel_map` is the wrong
+//!   shape for a daemon). Graceful shutdown is a control request: the
+//!   listener stops accepting, blocked readers are unblocked with a
+//!   read-side socket shutdown (responses still flush), and the pool drains
+//!   every in-flight request before the process exits.
+//! * **Loadgen** — [`run_loadgen`] drives a server from a deterministic
+//!   job-spec mix and emits a `kareus_loadgen` report (requests/sec,
+//!   p50/p99 latency, hit rate). In deterministic mode every wall-clock
+//!   field is nulled exactly like `sweep_json`, so double runs against a
+//!   trace backend are byte-identical (`kareus check` verifies the report).
+//!
+//! Determinism contract: plans served over the wire are byte-identical to a
+//! direct `run_system_with` + `Coordinator::select` call with the same spec
+//! and seed (see `tests/serve.rs`). Logging goes through a caller-supplied
+//! callback (stderr in `main`), keeping stdout pure for artifacts.
+
+use std::io::{BufRead, BufReader, Write as IoWrite};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use crate::baselines::run_system_with;
+use crate::cluster::parse_job_spec;
+use crate::coordinator::{Coordinator, Target};
+use crate::engine::EngineConfig;
+use crate::mbo::StrategyKind;
+use crate::util::json::{arr, num, obj, s, Json};
+use crate::util::pool::WorkerPool;
+use crate::util::stats::{max, mean, min, percentile};
+
+/// Schema tag carried by every request and response.
+pub const SERVE_SCHEMA: &str = "kareus_serve";
+/// Protocol version; requests with any other version are rejected.
+pub const SERVE_VERSION: u64 = 1;
+/// Hard cap on one request line. Longer lines get a typed parse error and
+/// the connection is closed (the remainder of the line is unread, so there
+/// is no way to resynchronize the stream).
+pub const MAX_REQUEST_LINE: usize = 64 * 1024;
+/// Client-side cap on one response line (plans with many slots are big).
+const MAX_RESPONSE_LINE: usize = 16 * 1024 * 1024;
+
+// ---------------------------------------------------------------------------
+// Target specs
+// ---------------------------------------------------------------------------
+
+/// Parse a target spec: `max` | `deadline:<s>` | `budget:<J>` |
+/// `power-cap:<W>`. The numeric forms require a finite positive value.
+pub fn parse_target(spec: &str) -> Result<Target, String> {
+    fn positive(what: &str, v: &str) -> Result<f64, String> {
+        match v.parse::<f64>() {
+            Ok(x) if x.is_finite() && x > 0.0 => Ok(x),
+            _ => Err(format!("{what} wants a finite positive number, got '{v}'")),
+        }
+    }
+    if spec == "max" || spec == "max-throughput" {
+        return Ok(Target::MaxThroughput);
+    }
+    match spec.split_once(':') {
+        Some(("deadline", v)) => Ok(Target::Deadline(positive("deadline", v)?)),
+        Some(("budget", v)) => Ok(Target::EnergyBudget(positive("budget", v)?)),
+        Some(("power-cap", v)) | Some(("cap", v)) => Ok(Target::PowerCap(positive("cap", v)?)),
+        _ => Err(format!(
+            "bad target '{spec}' (max | deadline:<s> | budget:<J> | power-cap:<W>)"
+        )),
+    }
+}
+
+/// Canonical string form of a target — the inverse of [`parse_target`],
+/// used for cache keys and response provenance so `deadline:1.50` and
+/// `deadline:1.5` never alias as distinct cache entries.
+pub fn target_spec(t: &Target) -> String {
+    match t {
+        Target::MaxThroughput => "max".to_string(),
+        Target::Deadline(v) => format!("deadline:{v}"),
+        Target::EnergyBudget(v) => format!("budget:{v}"),
+        Target::PowerCap(v) => format!("power-cap:{v}"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Typed protocol structs
+// ---------------------------------------------------------------------------
+
+/// One request line. `job` is the cluster job-spec grammar
+/// (`gpu:model:par:system`); `target` is canonical (see [`target_spec`]);
+/// `strategy` optionally overrides the server's search strategy for this
+/// request (safe: the MBO cache key folds the strategy fingerprint).
+#[derive(Clone, Debug, PartialEq)]
+pub enum ServeRequest {
+    Plan { job: String, target: String, seed: u64, strategy: Option<StrategyKind> },
+    Stats { deterministic: bool },
+    Shutdown,
+}
+
+impl ServeRequest {
+    /// Byte-deterministic wire form (the envelope fields are always
+    /// present, so a round-trip through [`ServeRequest::from_json`] is
+    /// exact).
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("serve", s(SERVE_SCHEMA)),
+            ("version", num(SERVE_VERSION as f64)),
+        ];
+        match self {
+            ServeRequest::Plan { job, target, seed, strategy } => {
+                fields.push(("type", s("plan")));
+                fields.push(("job", s(job)));
+                fields.push(("target", s(target)));
+                fields.push(("seed", num(*seed as f64)));
+                fields.push((
+                    "strategy",
+                    match strategy {
+                        Some(k) => s(k.name()),
+                        None => Json::Null,
+                    },
+                ));
+            }
+            ServeRequest::Stats { deterministic } => {
+                fields.push(("type", s("stats")));
+                fields.push(("deterministic", Json::Bool(*deterministic)));
+            }
+            ServeRequest::Shutdown => fields.push(("type", s("shutdown"))),
+        }
+        obj(fields)
+    }
+
+    /// Decode and validate one parsed request. Every error message names
+    /// the offending field; the server maps them to a typed `bad_request`.
+    pub fn from_json(j: &Json) -> Result<ServeRequest, String> {
+        let tag = j.get("serve").and_then(|v| v.as_str());
+        if tag != Some(SERVE_SCHEMA) {
+            return Err(format!("missing or wrong schema tag (want \"serve\":\"{SERVE_SCHEMA}\")"));
+        }
+        let version = j.get("version").and_then(|v| v.as_f64());
+        if version != Some(SERVE_VERSION as f64) {
+            return Err(format!("unsupported protocol version (want {SERVE_VERSION})"));
+        }
+        let rtype = j
+            .get("type")
+            .and_then(|v| v.as_str())
+            .ok_or("missing request 'type' (plan | stats | shutdown)")?;
+        match rtype {
+            "plan" => {
+                let job = j
+                    .get("job")
+                    .and_then(|v| v.as_str())
+                    .ok_or("plan request missing 'job' (gpu:model:par:system)")?
+                    .to_string();
+                let target_raw = match j.get("target") {
+                    None | Some(Json::Null) => "max",
+                    Some(v) => v.as_str().ok_or("'target' must be a string")?,
+                };
+                // Canonicalize now so equivalent spellings share one
+                // cache entry and one provenance string.
+                let target = target_spec(&parse_target(target_raw)?);
+                let seed = match j.get("seed") {
+                    None | Some(Json::Null) => 2026,
+                    Some(v) => {
+                        let f = v.as_f64().ok_or("'seed' must be a non-negative integer")?;
+                        if !(f.is_finite() && f >= 0.0 && f.fract() == 0.0) {
+                            return Err("'seed' must be a non-negative integer".to_string());
+                        }
+                        f as u64
+                    }
+                };
+                let strategy = match j.get("strategy") {
+                    None | Some(Json::Null) => None,
+                    Some(v) => {
+                        let name = v.as_str().ok_or("'strategy' must be a string")?;
+                        Some(StrategyKind::parse(name).ok_or_else(|| {
+                            format!("unknown strategy '{name}' (mbo | exhaustive | random | halving)")
+                        })?)
+                    }
+                };
+                Ok(ServeRequest::Plan { job, target, seed, strategy })
+            }
+            "stats" => {
+                let deterministic = match j.get("deterministic") {
+                    None | Some(Json::Null) => false,
+                    Some(v) => v.as_bool().ok_or("'deterministic' must be a boolean")?,
+                };
+                Ok(ServeRequest::Stats { deterministic })
+            }
+            "shutdown" => Ok(ServeRequest::Shutdown),
+            other => Err(format!("unknown request type '{other}' (plan | stats | shutdown)")),
+        }
+    }
+}
+
+/// Typed error categories on the wire.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// The request line was not valid JSON (or exceeded the line cap).
+    Parse,
+    /// Valid JSON, but not a valid request (schema/field errors, bad job
+    /// spec, bad target).
+    BadRequest,
+    /// Miss-path admission was full; retry later.
+    Busy,
+    /// No frontier point satisfies the requested target.
+    Infeasible,
+    /// The server is draining and accepts no new work.
+    ShuttingDown,
+    /// The optimizer panicked; the panic text is in the message.
+    Internal,
+}
+
+impl ErrorCode {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ErrorCode::Parse => "parse",
+            ErrorCode::BadRequest => "bad_request",
+            ErrorCode::Busy => "busy",
+            ErrorCode::Infeasible => "infeasible",
+            ErrorCode::ShuttingDown => "shutting_down",
+            ErrorCode::Internal => "internal",
+        }
+    }
+
+    pub fn parse_code(v: &str) -> Option<ErrorCode> {
+        match v {
+            "parse" => Some(ErrorCode::Parse),
+            "bad_request" => Some(ErrorCode::BadRequest),
+            "busy" => Some(ErrorCode::Busy),
+            "infeasible" => Some(ErrorCode::Infeasible),
+            "shutting_down" => Some(ErrorCode::ShuttingDown),
+            "internal" => Some(ErrorCode::Internal),
+            _ => None,
+        }
+    }
+}
+
+/// One response line. The envelope keys are always present (null when not
+/// applicable) so the wire shape — and therefore the byte form — never
+/// depends on which path produced the response.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeResponse {
+    /// Mirrors the request type (`plan` | `stats` | `shutdown`); `error`
+    /// for lines that never decoded into a request.
+    pub rtype: String,
+    /// `ok` | `busy` | `error`.
+    pub status: String,
+    /// Plan responses only: whether the plan cache answered.
+    pub cache_hit: Option<bool>,
+    /// Non-ok responses only.
+    pub code: Option<ErrorCode>,
+    pub message: Option<String>,
+    /// Ok responses only: the typed result payload.
+    pub result: Option<Json>,
+}
+
+impl ServeResponse {
+    pub fn ok(rtype: &str, result: Json) -> ServeResponse {
+        ServeResponse {
+            rtype: rtype.to_string(),
+            status: "ok".to_string(),
+            cache_hit: None,
+            code: None,
+            message: None,
+            result: Some(result),
+        }
+    }
+
+    pub fn error(rtype: &str, code: ErrorCode, message: &str) -> ServeResponse {
+        ServeResponse {
+            rtype: rtype.to_string(),
+            status: "error".to_string(),
+            cache_hit: None,
+            code: Some(code),
+            message: Some(message.to_string()),
+            result: None,
+        }
+    }
+
+    pub fn busy(message: &str) -> ServeResponse {
+        ServeResponse {
+            rtype: "plan".to_string(),
+            status: "busy".to_string(),
+            cache_hit: None,
+            code: Some(ErrorCode::Busy),
+            message: Some(message.to_string()),
+            result: None,
+        }
+    }
+
+    pub fn is_ok(&self) -> bool {
+        self.status == "ok"
+    }
+
+    /// Byte-deterministic wire form.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("serve", s(SERVE_SCHEMA)),
+            ("version", num(SERVE_VERSION as f64)),
+            ("type", s(&self.rtype)),
+            ("status", s(&self.status)),
+            (
+                "cache_hit",
+                match self.cache_hit {
+                    Some(b) => Json::Bool(b),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "code",
+                match self.code {
+                    Some(c) => s(c.as_str()),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "message",
+                match &self.message {
+                    Some(m) => s(m),
+                    None => Json::Null,
+                },
+            ),
+            ("result", self.result.clone().unwrap_or(Json::Null)),
+        ])
+    }
+
+    /// Decode one response line (the loadgen client and tests).
+    pub fn from_json(j: &Json) -> Result<ServeResponse, String> {
+        if j.get("serve").and_then(|v| v.as_str()) != Some(SERVE_SCHEMA) {
+            return Err("response missing schema tag".to_string());
+        }
+        if j.get("version").and_then(|v| v.as_f64()) != Some(SERVE_VERSION as f64) {
+            return Err("response has unsupported version".to_string());
+        }
+        let rtype =
+            j.get("type").and_then(|v| v.as_str()).ok_or("response missing 'type'")?.to_string();
+        let status = j
+            .get("status")
+            .and_then(|v| v.as_str())
+            .ok_or("response missing 'status'")?
+            .to_string();
+        let cache_hit = match j.get("cache_hit") {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(v.as_bool().ok_or("'cache_hit' must be a boolean")?),
+        };
+        let code = match j.get("code") {
+            None | Some(Json::Null) => None,
+            Some(v) => {
+                let name = v.as_str().ok_or("'code' must be a string")?;
+                Some(ErrorCode::parse_code(name).ok_or_else(|| format!("unknown code '{name}'"))?)
+            }
+        };
+        let message = match j.get("message") {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(v.as_str().ok_or("'message' must be a string")?.to_string()),
+        };
+        let result = match j.get("result") {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(v.clone()),
+        };
+        Ok(ServeResponse { rtype, status, cache_hit, code, message, result })
+    }
+}
+
+/// What the connection loop should do after writing a response.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Control {
+    Continue,
+    Shutdown,
+}
+
+// ---------------------------------------------------------------------------
+// Wire reading
+// ---------------------------------------------------------------------------
+
+enum LineError {
+    /// The line exceeded the cap; the payload is how many bytes were seen.
+    Oversized(usize),
+    Io,
+}
+
+/// Read one newline-terminated line, capped at `cap` bytes.
+///
+/// `Ok(None)` is clean EOF. A truncated final line (EOF with no newline) is
+/// surfaced as a line so the parser can answer it with a typed error rather
+/// than silently dropping bytes. A trailing `\r` is stripped. Invalid UTF-8
+/// is replaced (the JSON parser then reports a typed error on the
+/// replacement characters).
+fn read_line_capped(r: &mut impl BufRead, cap: usize) -> Result<Option<String>, LineError> {
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        let (found, used) = {
+            let chunk = match r.fill_buf() {
+                Ok(c) => c,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => return Err(LineError::Io),
+            };
+            if chunk.is_empty() {
+                // EOF: surface a trailing partial line exactly once.
+                if buf.is_empty() {
+                    return Ok(None);
+                }
+                (true, 0)
+            } else {
+                match chunk.iter().position(|&b| b == b'\n') {
+                    Some(i) => {
+                        buf.extend_from_slice(&chunk[..i]);
+                        (true, i + 1)
+                    }
+                    None => {
+                        buf.extend_from_slice(chunk);
+                        (false, chunk.len())
+                    }
+                }
+            }
+        };
+        r.consume(used);
+        if buf.len() > cap {
+            return Err(LineError::Oversized(buf.len()));
+        }
+        if found {
+            if buf.last() == Some(&b'\r') {
+                buf.pop();
+            }
+            return Ok(Some(String::from_utf8_lossy(&buf).into_owned()));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The plan service (transport-free core)
+// ---------------------------------------------------------------------------
+
+/// Workload shape shared by every request (matches the `kareus cluster`
+/// defaults), plus the admission bound.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeOptions {
+    /// Concurrent miss-path optimizations admitted before requests get a
+    /// typed `busy` response. Zero means every miss is refused (useful for
+    /// testing the busy path deterministically).
+    pub max_inflight: usize,
+    pub microbatch: u32,
+    pub seq_len: u32,
+    pub n_microbatches: u32,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions { max_inflight: 2, microbatch: 8, seq_len: 4096, n_microbatches: 8 }
+    }
+}
+
+/// A coalescing cell: the first requester computes, everyone else waits.
+#[derive(Default)]
+struct Slot {
+    ready: Mutex<Option<Json>>,
+    cv: Condvar,
+}
+
+impl Slot {
+    fn wait(&self) -> Json {
+        let mut g = self.ready.lock().unwrap();
+        while g.is_none() {
+            g = self.cv.wait(g).unwrap();
+        }
+        g.clone().unwrap()
+    }
+
+    fn fill(&self, payload: Json) {
+        *self.ready.lock().unwrap() = Some(payload);
+        self.cv.notify_all();
+    }
+}
+
+#[derive(Default)]
+struct Counters {
+    requests: AtomicU64,
+    plans: AtomicU64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    busy: AtomicU64,
+    errors: AtomicU64,
+}
+
+/// The transport-free request processor: caches, counters, admission, and
+/// the optimizer entry point. [`Server`] feeds it lines from TCP;
+/// `benches/hot_paths.rs` and unit tests feed it lines directly.
+pub struct PlanService {
+    engine: EngineConfig,
+    opts: ServeOptions,
+    /// Plan cache + coalescing map, keyed `job|target|seed|strategy`.
+    /// BTreeMap keeps iteration (and therefore any debugging dump)
+    /// deterministic. Filled slots double as negative cache for
+    /// deterministic failures (infeasible targets), so the hit/miss split
+    /// is a pure function of the request multiset.
+    plans: Mutex<std::collections::BTreeMap<String, Arc<Slot>>>,
+    counters: Counters,
+    inflight: AtomicUsize,
+    shutting_down: AtomicBool,
+    started: Instant,
+}
+
+impl PlanService {
+    pub fn new(engine: EngineConfig, opts: ServeOptions) -> PlanService {
+        PlanService {
+            engine,
+            opts,
+            plans: Mutex::new(std::collections::BTreeMap::new()),
+            counters: Counters::default(),
+            inflight: AtomicUsize::new(0),
+            shutting_down: AtomicBool::new(false),
+            started: Instant::now(),
+        }
+    }
+
+    pub fn is_shutting_down(&self) -> bool {
+        self.shutting_down.load(Ordering::SeqCst)
+    }
+
+    /// Total request lines processed (including unparseable ones).
+    pub fn requests(&self) -> u64 {
+        self.counters.requests.load(Ordering::Relaxed)
+    }
+
+    /// Plan requests answered from the plan cache (including coalesced
+    /// waiters — they never re-entered the optimizer).
+    pub fn hits(&self) -> u64 {
+        self.counters.hits.load(Ordering::Relaxed)
+    }
+
+    /// Plan requests that ran the optimizer.
+    pub fn misses(&self) -> u64 {
+        self.counters.misses.load(Ordering::Relaxed)
+    }
+
+    /// Count an oversized request line that never reached
+    /// [`PlanService::process_line`].
+    pub fn note_oversized(&self) {
+        self.counters.requests.fetch_add(1, Ordering::Relaxed);
+        self.counters.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Process one request line into one response. This is the entire
+    /// per-request path; the TCP layer only moves bytes.
+    pub fn process_line(&self, line: &str) -> (ServeResponse, Control) {
+        self.counters.requests.fetch_add(1, Ordering::Relaxed);
+        let parsed = match Json::parse(line) {
+            Ok(j) => j,
+            Err(e) => {
+                self.counters.errors.fetch_add(1, Ordering::Relaxed);
+                return (
+                    ServeResponse::error("error", ErrorCode::Parse, &e.to_string()),
+                    Control::Continue,
+                );
+            }
+        };
+        let req = match ServeRequest::from_json(&parsed) {
+            Ok(r) => r,
+            Err(m) => {
+                self.counters.errors.fetch_add(1, Ordering::Relaxed);
+                return (
+                    ServeResponse::error("error", ErrorCode::BadRequest, &m),
+                    Control::Continue,
+                );
+            }
+        };
+        if self.is_shutting_down() {
+            return (
+                ServeResponse::error(
+                    "error",
+                    ErrorCode::ShuttingDown,
+                    "server is draining; no new requests",
+                ),
+                Control::Continue,
+            );
+        }
+        match req {
+            ServeRequest::Plan { job, target, seed, strategy } => {
+                (self.plan(&job, &target, seed, strategy), Control::Continue)
+            }
+            ServeRequest::Stats { deterministic } => {
+                (ServeResponse::ok("stats", self.stats_json(deterministic)), Control::Continue)
+            }
+            ServeRequest::Shutdown => {
+                self.shutting_down.store(true, Ordering::SeqCst);
+                (
+                    ServeResponse::ok("shutdown", obj(vec![("draining", Json::Bool(true))])),
+                    Control::Shutdown,
+                )
+            }
+        }
+    }
+
+    fn plan(
+        &self,
+        job: &str,
+        target: &str,
+        seed: u64,
+        strategy: Option<StrategyKind>,
+    ) -> ServeResponse {
+        self.counters.plans.fetch_add(1, Ordering::Relaxed);
+        let strat_name = strategy.map(|k| k.name()).unwrap_or("");
+        let key = format!("{job}|{target}|{seed}|{strat_name}");
+        enum Role {
+            Owner(Arc<Slot>),
+            Waiter(Arc<Slot>),
+        }
+        let role = {
+            let mut map = self.plans.lock().unwrap();
+            if let Some(slot) = map.get(&key) {
+                Role::Waiter(Arc::clone(slot))
+            } else {
+                if !self.admit() {
+                    drop(map);
+                    self.counters.busy.fetch_add(1, Ordering::Relaxed);
+                    return ServeResponse::busy(&format!(
+                        "server at max in-flight optimizations ({}); retry later",
+                        self.opts.max_inflight
+                    ));
+                }
+                let slot = Arc::new(Slot::default());
+                map.insert(key, Arc::clone(&slot));
+                Role::Owner(slot)
+            }
+        };
+        match role {
+            Role::Waiter(slot) => {
+                let payload = slot.wait();
+                self.counters.hits.fetch_add(1, Ordering::Relaxed);
+                Self::respond_from_payload(&payload, true)
+            }
+            Role::Owner(slot) => {
+                self.counters.misses.fetch_add(1, Ordering::Relaxed);
+                // The optimizer panicking (e.g. a trace replay miss) must
+                // not strand coalesced waiters or kill the worker: catch,
+                // convert to a typed internal error, and cache it — the
+                // panic is deterministic for the same request.
+                let computed =
+                    catch_unwind(AssertUnwindSafe(|| self.compute(job, target, seed, strategy)));
+                self.inflight.fetch_sub(1, Ordering::SeqCst);
+                let payload = match computed {
+                    Ok(Ok(result)) => obj(vec![("ok", result)]),
+                    Ok(Err((code, message))) => Self::err_payload(code, &message),
+                    Err(panic) => {
+                        let text = panic
+                            .downcast_ref::<String>()
+                            .map(|t| t.as_str())
+                            .or_else(|| panic.downcast_ref::<&str>().copied())
+                            .unwrap_or("optimizer panicked");
+                        Self::err_payload(ErrorCode::Internal, text)
+                    }
+                };
+                slot.fill(payload.clone());
+                if payload.get("ok").is_none() {
+                    self.counters.errors.fetch_add(1, Ordering::Relaxed);
+                }
+                Self::respond_from_payload(&payload, false)
+            }
+        }
+    }
+
+    fn err_payload(code: ErrorCode, message: &str) -> Json {
+        obj(vec![(
+            "err",
+            obj(vec![("code", s(code.as_str())), ("message", s(message))]),
+        )])
+    }
+
+    fn respond_from_payload(payload: &Json, hit: bool) -> ServeResponse {
+        if let Some(result) = payload.get("ok") {
+            let mut resp = ServeResponse::ok("plan", result.clone());
+            resp.cache_hit = Some(hit);
+            return resp;
+        }
+        let e = payload.get("err");
+        let code = e
+            .and_then(|v| v.get("code"))
+            .and_then(|v| v.as_str())
+            .and_then(ErrorCode::parse_code)
+            .unwrap_or(ErrorCode::Internal);
+        let message = e
+            .and_then(|v| v.get("message"))
+            .and_then(|v| v.as_str())
+            .unwrap_or("corrupt cached payload");
+        let mut resp = ServeResponse::error("plan", code, message);
+        resp.cache_hit = Some(hit);
+        resp
+    }
+
+    /// Admission: lock-free permit under `max_inflight`.
+    fn admit(&self) -> bool {
+        let mut cur = self.inflight.load(Ordering::SeqCst);
+        loop {
+            if cur >= self.opts.max_inflight {
+                return false;
+            }
+            match self.inflight.compare_exchange(
+                cur,
+                cur + 1,
+                Ordering::SeqCst,
+                Ordering::SeqCst,
+            ) {
+                Ok(_) => return true,
+                Err(now) => cur = now,
+            }
+        }
+    }
+
+    /// The miss path: the same pipeline a direct `kareus optimize` /
+    /// `cluster` invocation runs, so served plans are byte-identical to a
+    /// direct engine call by construction.
+    fn compute(
+        &self,
+        job: &str,
+        target: &str,
+        seed: u64,
+        strategy: Option<StrategyKind>,
+    ) -> Result<Json, (ErrorCode, String)> {
+        let parsed = parse_job_spec(
+            job,
+            self.opts.microbatch,
+            self.opts.seq_len,
+            self.opts.n_microbatches,
+            seed,
+        )
+        .map_err(|e| (ErrorCode::BadRequest, format!("bad job spec '{job}': {e}")))?;
+        let t = parse_target(target).map_err(|m| (ErrorCode::BadRequest, m))?;
+        let sc = parsed.scenario;
+        let engine = match strategy {
+            Some(k) => self.engine.clone().with_strategy(k),
+            None => self.engine.clone(),
+        };
+        let result = run_system_with(&sc.gpu, &sc.cfg, sc.system, sc.seed, &engine);
+        let coord = Coordinator::new(sc.gpu.clone(), sc.cfg).with_engine(engine.clone());
+        let dep = coord.select(&result, t).ok_or_else(|| {
+            (
+                ErrorCode::Infeasible,
+                format!("no frontier point satisfies target '{target}' for job '{job}'"),
+            )
+        })?;
+        Ok(obj(vec![
+            ("job", s(job)),
+            ("target", s(target)),
+            ("seed", num(seed as f64)),
+            ("system", s(result.system.name())),
+            ("workload", s(&coord.cfg.label())),
+            (
+                "frontier",
+                arr(result
+                    .frontier
+                    .points()
+                    .iter()
+                    .map(|p| arr(vec![num(p.time), num(p.energy)]))
+                    .collect()),
+            ),
+            ("deployment", dep.to_json()),
+            ("mbo_profiling_s", num(result.mbo_profiling_s)),
+            ("backend", s(engine.backend.name())),
+            ("strategy", s(engine.strategy.name())),
+        ]))
+    }
+
+    /// The `stats` result payload. Wall-clock and scheduling-sensitive
+    /// values (uptime, engine cache tallies that depend on worker
+    /// interleaving) are nulled in deterministic mode, exactly like
+    /// `sweep_json`.
+    pub fn stats_json(&self, deterministic: bool) -> Json {
+        let unstable = |v: f64| if deterministic { Json::Null } else { num(v) };
+        obj(vec![
+            ("uptime_s", unstable(self.started.elapsed().as_secs_f64())),
+            ("requests", num(self.requests() as f64)),
+            ("plans", num(self.counters.plans.load(Ordering::Relaxed) as f64)),
+            ("hits", num(self.hits() as f64)),
+            ("misses", num(self.misses() as f64)),
+            ("busy", num(self.counters.busy.load(Ordering::Relaxed) as f64)),
+            ("errors", num(self.counters.errors.load(Ordering::Relaxed) as f64)),
+            ("plan_cache_entries", num(self.plans.lock().unwrap().len() as f64)),
+            (
+                "engine",
+                obj(vec![
+                    ("backend", s(self.engine.backend.name())),
+                    ("strategy", s(self.engine.strategy.name())),
+                    ("threads", num(self.engine.worker_threads() as f64)),
+                    ("mbo_entries", num(self.engine.mbo_cache.len() as f64)),
+                    ("mbo_hits", unstable(self.engine.mbo_cache.hits() as f64)),
+                    ("mbo_misses", unstable(self.engine.mbo_cache.misses() as f64)),
+                    ("exec_entries", num(self.engine.measure_cache.len() as f64)),
+                    ("exec_hits", unstable(self.engine.measure_cache.hits() as f64)),
+                    ("exec_misses", unstable(self.engine.measure_cache.misses() as f64)),
+                ]),
+            ),
+            ("max_inflight", num(self.opts.max_inflight as f64)),
+            ("shutting_down", Json::Bool(self.is_shutting_down())),
+        ])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The TCP server
+// ---------------------------------------------------------------------------
+
+/// Server configuration (`kareus serve` flags).
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Bind address, e.g. `127.0.0.1:4500` (`:0` picks an ephemeral port;
+    /// the bound address is logged and available via
+    /// [`Server::local_addr`]).
+    pub addr: String,
+    /// Connection worker threads; 0 ⇒ `util::pool::default_threads()`.
+    pub threads: usize,
+    pub opts: ServeOptions,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { addr: "127.0.0.1:4500".to_string(), threads: 0, opts: ServeOptions::default() }
+    }
+}
+
+/// Read-half registry: one entry per live connection, so graceful shutdown
+/// can unblock readers (`Shutdown::Read` — responses still flush) without
+/// aborting in-flight work.
+#[derive(Default)]
+struct ConnRegistry {
+    conns: Mutex<std::collections::BTreeMap<u64, TcpStream>>,
+    next: AtomicU64,
+}
+
+impl ConnRegistry {
+    fn insert(&self, stream: TcpStream) -> u64 {
+        let id = self.next.fetch_add(1, Ordering::SeqCst);
+        self.conns.lock().unwrap().insert(id, stream);
+        id
+    }
+
+    fn remove(&self, id: u64) {
+        self.conns.lock().unwrap().remove(&id);
+    }
+
+    fn trip(&self) {
+        for stream in self.conns.lock().unwrap().values() {
+            let _ = stream.shutdown(Shutdown::Read);
+        }
+    }
+}
+
+type LogFn = Arc<dyn Fn(&str) + Send + Sync>;
+
+/// The accept loop + worker pool around one [`PlanService`].
+pub struct Server {
+    service: Arc<PlanService>,
+    listener: TcpListener,
+    threads: usize,
+    log: LogFn,
+}
+
+impl Server {
+    /// Bind the listener. `log` receives human-readable progress lines
+    /// (`main` routes them to stderr; artifacts own stdout).
+    pub fn bind(
+        engine: EngineConfig,
+        cfg: &ServeConfig,
+        log: impl Fn(&str) + Send + Sync + 'static,
+    ) -> std::io::Result<Server> {
+        let listener = TcpListener::bind(&cfg.addr)?;
+        let threads =
+            if cfg.threads == 0 { crate::util::pool::default_threads() } else { cfg.threads };
+        Ok(Server {
+            service: Arc::new(PlanService::new(engine, cfg.opts)),
+            listener,
+            threads,
+            log: Arc::new(log),
+        })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.listener.local_addr().expect("listener has a local address")
+    }
+
+    /// The underlying service (tests and benches introspect counters).
+    pub fn service(&self) -> Arc<PlanService> {
+        Arc::clone(&self.service)
+    }
+
+    /// Accept connections until a `shutdown` request arrives, then drain:
+    /// stop accepting, unblock every parked reader, and join the pool
+    /// (queued and in-flight requests all complete first).
+    pub fn run(self) -> std::io::Result<()> {
+        let addr = self.local_addr();
+        (self.log)(&format!(
+            "kareus serve: listening on {addr} ({} workers, max {} in-flight optimizations)",
+            self.threads, self.service.opts.max_inflight
+        ));
+        let registry = Arc::new(ConnRegistry::default());
+        let pool = WorkerPool::new(self.threads);
+        for conn in self.listener.incoming() {
+            if self.service.is_shutting_down() {
+                break;
+            }
+            match conn {
+                Ok(stream) => {
+                    let service = Arc::clone(&self.service);
+                    let registry = Arc::clone(&registry);
+                    let log = Arc::clone(&self.log);
+                    pool.execute(move || handle_conn(service, registry, stream, addr, log));
+                }
+                Err(e) => (self.log)(&format!("kareus serve: accept error: {e}")),
+            }
+        }
+        drop(pool); // join workers: drains queued + in-flight requests
+        (self.log)(&format!(
+            "kareus serve: drained ({} requests, {} hits, {} misses)",
+            self.service.requests(),
+            self.service.hits(),
+            self.service.misses()
+        ));
+        Ok(())
+    }
+}
+
+/// One connection's lifetime on a pool worker. Panic containment lives in
+/// [`PlanService::plan`]; everything here is I/O.
+fn handle_conn(
+    service: Arc<PlanService>,
+    registry: Arc<ConnRegistry>,
+    stream: TcpStream,
+    listen_addr: SocketAddr,
+    log: LogFn,
+) {
+    let (read_half, reader_src) = match (stream.try_clone(), stream.try_clone()) {
+        (Ok(a), Ok(b)) => (a, b),
+        _ => {
+            log("kareus serve: failed to clone connection handles");
+            return;
+        }
+    };
+    // Register *before* the shutdown check: a connection registered before
+    // the registry trip gets unblocked by it; one registered after sees
+    // the flag here. Either way no reader parks forever.
+    let id = registry.insert(read_half);
+    let mut writer = stream;
+    if service.is_shutting_down() {
+        let resp = ServeResponse::error(
+            "error",
+            ErrorCode::ShuttingDown,
+            "server is draining; no new requests",
+        );
+        let _ = write_response(&mut writer, &resp);
+        registry.remove(id);
+        return;
+    }
+    let mut reader = BufReader::new(reader_src);
+    loop {
+        match read_line_capped(&mut reader, MAX_REQUEST_LINE) {
+            Ok(None) => break,
+            Ok(Some(line)) => {
+                let (resp, control) = service.process_line(&line);
+                if write_response(&mut writer, &resp).is_err() {
+                    break;
+                }
+                if control == Control::Shutdown {
+                    // Drain sequence: the flag is already set (inside
+                    // process_line). Unblock parked readers — their write
+                    // halves stay open so in-flight responses still land —
+                    // then poke the listener so the accept loop observes
+                    // the flag.
+                    registry.trip();
+                    let _ = TcpStream::connect(listen_addr);
+                    break;
+                }
+            }
+            Err(LineError::Oversized(n)) => {
+                service.note_oversized();
+                let resp = ServeResponse::error(
+                    "error",
+                    ErrorCode::Parse,
+                    &format!("request line of {n}+ bytes exceeds the {MAX_REQUEST_LINE}-byte cap"),
+                );
+                let _ = write_response(&mut writer, &resp);
+                break; // the rest of the oversized line is unread: no resync
+            }
+            Err(LineError::Io) => break,
+        }
+    }
+    registry.remove(id);
+}
+
+fn write_response(w: &mut TcpStream, resp: &ServeResponse) -> std::io::Result<()> {
+    // Plan payloads are finite by construction; if one ever is not, send a
+    // typed internal error instead of a corrupt line.
+    let mut line = match resp.to_json().try_dump() {
+        Ok(l) => l,
+        Err(e) => {
+            ServeResponse::error(&resp.rtype, ErrorCode::Internal, &e.to_string())
+                .to_json()
+                .dump()
+        }
+    };
+    line.push('\n');
+    w.write_all(line.as_bytes())?;
+    w.flush()
+}
+
+// ---------------------------------------------------------------------------
+// Loadgen client
+// ---------------------------------------------------------------------------
+
+/// `kareus loadgen` configuration.
+#[derive(Clone, Debug)]
+pub struct LoadgenConfig {
+    pub addr: String,
+    pub requests: usize,
+    pub concurrency: usize,
+    /// Round-robin job mix: request *i* asks for `jobs[i % jobs.len()]`.
+    pub jobs: Vec<String>,
+    pub target: String,
+    pub seed: u64,
+    /// Null every wall-clock field in the report (byte-identical double
+    /// runs against a deterministic backend).
+    pub deterministic: bool,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        LoadgenConfig {
+            addr: "127.0.0.1:4500".to_string(),
+            requests: 16,
+            concurrency: 4,
+            jobs: vec!["a100:qwen1.7b:tp8pp2:megatron".to_string()],
+            target: "max".to_string(),
+            seed: 2026,
+            deterministic: false,
+        }
+    }
+}
+
+#[derive(Default)]
+struct WorkerTally {
+    ok: u64,
+    errors: u64,
+    busy: u64,
+    hits: u64,
+    misses: u64,
+    latencies_ms: Vec<f64>,
+}
+
+/// Drive a server and emit the `kareus_loadgen` v1 report.
+///
+/// Requests are assigned deterministically: worker *w* of *C* opens one
+/// connection and sends requests `w, w+C, w+2C, …` in order, request *i*
+/// targeting `jobs[i % jobs.len()]`. Counters are therefore a pure function
+/// of the request multiset (the server coalesces identical in-flight
+/// requests), which is what makes the deterministic-mode report
+/// byte-reproducible.
+pub fn run_loadgen(cfg: &LoadgenConfig) -> Result<Json, String> {
+    if cfg.requests == 0 {
+        return Err("--requests must be >= 1".to_string());
+    }
+    if cfg.jobs.is_empty() {
+        return Err("--jobs must name at least one job spec".to_string());
+    }
+    for job in &cfg.jobs {
+        parse_job_spec(job, 8, 4096, 8, cfg.seed)
+            .map_err(|e| format!("bad job spec '{job}': {e}"))?;
+    }
+    let target = target_spec(&parse_target(&cfg.target)?);
+    let concurrency = cfg.concurrency.clamp(1, cfg.requests);
+
+    // Pre-serialize every request line, then split by worker.
+    let lines: Vec<String> = (0..cfg.requests)
+        .map(|i| {
+            let req = ServeRequest::Plan {
+                job: cfg.jobs[i % cfg.jobs.len()].clone(),
+                target: target.clone(),
+                seed: cfg.seed,
+                strategy: None,
+            };
+            req.to_json().dump()
+        })
+        .collect();
+    let batches: Vec<(String, Vec<String>)> = (0..concurrency)
+        .map(|w| {
+            let mine = lines.iter().skip(w).step_by(concurrency).cloned().collect();
+            (cfg.addr.clone(), mine)
+        })
+        .collect();
+
+    let started = Instant::now();
+    let pool = WorkerPool::new(concurrency);
+    let outcomes: Vec<Result<WorkerTally, String>> =
+        pool.map(batches, |(addr, mine)| run_worker(&addr, &mine));
+    let wall_s = started.elapsed().as_secs_f64();
+
+    let mut tally = WorkerTally::default();
+    for out in outcomes {
+        let w = out?;
+        tally.ok += w.ok;
+        tally.errors += w.errors;
+        tally.busy += w.busy;
+        tally.hits += w.hits;
+        tally.misses += w.misses;
+        tally.latencies_ms.extend(w.latencies_ms);
+    }
+
+    let wall = |v: f64| if cfg.deterministic { Json::Null } else { num(v) };
+    let cache_answered = tally.hits + tally.misses;
+    Ok(obj(vec![
+        ("report", s("kareus_loadgen")),
+        ("version", num(1.0)),
+        // The address usually carries an ephemeral port; it is wall-ish
+        // provenance, nulled in deterministic mode like the timings.
+        ("addr", if cfg.deterministic { Json::Null } else { s(&cfg.addr) }),
+        ("requests", num(cfg.requests as f64)),
+        ("concurrency", num(concurrency as f64)),
+        ("jobs", arr(cfg.jobs.iter().map(|j| s(j)).collect())),
+        ("target", s(&target)),
+        ("seed", num(cfg.seed as f64)),
+        ("ok", num(tally.ok as f64)),
+        ("errors", num(tally.errors as f64)),
+        ("busy", num(tally.busy as f64)),
+        ("hits", num(tally.hits as f64)),
+        ("misses", num(tally.misses as f64)),
+        (
+            "hit_rate",
+            if cache_answered > 0 {
+                num(tally.hits as f64 / cache_answered as f64)
+            } else {
+                Json::Null
+            },
+        ),
+        (
+            "latency",
+            obj(vec![
+                ("p50_ms", wall(percentile(&tally.latencies_ms, 50.0))),
+                ("p99_ms", wall(percentile(&tally.latencies_ms, 99.0))),
+                ("mean_ms", wall(mean(&tally.latencies_ms))),
+                ("min_ms", wall(min(&tally.latencies_ms))),
+                ("max_ms", wall(max(&tally.latencies_ms))),
+            ]),
+        ),
+        ("requests_per_s", wall(cfg.requests as f64 / wall_s.max(1e-9))),
+        ("wall_s", wall(wall_s)),
+    ]))
+}
+
+fn run_worker(addr: &str, lines: &[String]) -> Result<WorkerTally, String> {
+    let stream =
+        TcpStream::connect(addr).map_err(|e| format!("loadgen: connect {addr}: {e}"))?;
+    let mut writer = stream.try_clone().map_err(|e| format!("loadgen: clone: {e}"))?;
+    let mut reader = BufReader::new(stream);
+    let mut tally = WorkerTally::default();
+    for line in lines {
+        let t0 = Instant::now();
+        writer
+            .write_all(format!("{line}\n").as_bytes())
+            .and_then(|_| writer.flush())
+            .map_err(|e| format!("loadgen: send: {e}"))?;
+        let reply = match read_line_capped(&mut reader, MAX_RESPONSE_LINE) {
+            Ok(Some(l)) => l,
+            Ok(None) => return Err("loadgen: server closed the connection mid-run".to_string()),
+            Err(LineError::Oversized(n)) => {
+                return Err(format!("loadgen: response of {n}+ bytes exceeds the client cap"))
+            }
+            Err(LineError::Io) => return Err("loadgen: read error".to_string()),
+        };
+        tally.latencies_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+        let resp = Json::parse(&reply)
+            .map_err(|e| format!("loadgen: bad response line: {e}"))
+            .and_then(|j| ServeResponse::from_json(&j).map_err(|m| format!("loadgen: {m}")))?;
+        match resp.status.as_str() {
+            "ok" => {
+                tally.ok += 1;
+                match resp.cache_hit {
+                    Some(true) => tally.hits += 1,
+                    Some(false) => tally.misses += 1,
+                    // An ok plan response always carries cache_hit; a
+                    // missing flag is a malformed server and counts as an
+                    // error so the report can never overstate the hit rate.
+                    None => {
+                        tally.ok -= 1;
+                        tally.errors += 1;
+                    }
+                }
+            }
+            "busy" => tally.busy += 1,
+            _ => tally.errors += 1,
+        }
+    }
+    Ok(tally)
+}
+
+/// Send one `shutdown` control request (used by `kareus loadgen
+/// --shutdown` so CI can stop a background server deterministically).
+pub fn send_shutdown(addr: &str) -> Result<(), String> {
+    let stream = TcpStream::connect(addr).map_err(|e| format!("shutdown: connect {addr}: {e}"))?;
+    let mut writer = stream.try_clone().map_err(|e| format!("shutdown: clone: {e}"))?;
+    let line = ServeRequest::Shutdown.to_json().dump();
+    writer
+        .write_all(format!("{line}\n").as_bytes())
+        .and_then(|_| writer.flush())
+        .map_err(|e| format!("shutdown: send: {e}"))?;
+    let mut reader = BufReader::new(stream);
+    match read_line_capped(&mut reader, MAX_RESPONSE_LINE) {
+        Ok(Some(reply)) => {
+            let j = Json::parse(&reply).map_err(|e| format!("shutdown: bad response: {e}"))?;
+            let resp = ServeResponse::from_json(&j).map_err(|m| format!("shutdown: {m}"))?;
+            if resp.is_ok() {
+                Ok(())
+            } else {
+                Err(format!(
+                    "shutdown refused: {}",
+                    resp.message.unwrap_or_else(|| "unknown error".to_string())
+                ))
+            }
+        }
+        Ok(None) => Err("shutdown: server closed without responding".to_string()),
+        Err(_) => Err("shutdown: read error".to_string()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn target_specs_roundtrip_canonically() {
+        for spec in ["max", "deadline:1.5", "budget:3000", "power-cap:280"] {
+            let t = parse_target(spec).unwrap();
+            assert_eq!(target_spec(&t), spec);
+        }
+        // Aliases and float spellings canonicalize.
+        assert_eq!(target_spec(&parse_target("max-throughput").unwrap()), "max");
+        assert_eq!(target_spec(&parse_target("cap:280").unwrap()), "power-cap:280");
+        assert_eq!(target_spec(&parse_target("deadline:1.50").unwrap()), "deadline:1.5");
+        for bad in ["", "deadline", "deadline:", "deadline:-1", "deadline:inf", "cap:0", "x:1"] {
+            assert!(parse_target(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn requests_roundtrip_byte_deterministically() {
+        let reqs = vec![
+            ServeRequest::Plan {
+                job: "a100:qwen1.7b:tp8pp2:kareus".to_string(),
+                target: "deadline:1.5".to_string(),
+                seed: 7,
+                strategy: Some(StrategyKind::Random),
+            },
+            ServeRequest::Plan {
+                job: "v100:llama3b:tp8pp2:megatron".to_string(),
+                target: "max".to_string(),
+                seed: 2026,
+                strategy: None,
+            },
+            ServeRequest::Stats { deterministic: true },
+            ServeRequest::Shutdown,
+        ];
+        for req in reqs {
+            let dump = req.to_json().dump();
+            let back = ServeRequest::from_json(&Json::parse(&dump).unwrap()).unwrap();
+            assert_eq!(back, req);
+            assert_eq!(back.to_json().dump(), dump, "wire form must be byte-stable");
+        }
+    }
+
+    #[test]
+    fn request_decoding_rejects_bad_fields() {
+        let cases = [
+            (r#"{"type":"plan","job":"a"}"#, "schema tag"),
+            (r#"{"serve":"kareus_serve","version":2,"type":"plan"}"#, "version"),
+            (r#"{"serve":"kareus_serve","version":1}"#, "type"),
+            (r#"{"serve":"kareus_serve","version":1,"type":"nope"}"#, "unknown request type"),
+            (r#"{"serve":"kareus_serve","version":1,"type":"plan"}"#, "job"),
+            (
+                r#"{"serve":"kareus_serve","version":1,"type":"plan","job":"a:b:c:d","target":"x"}"#,
+                "bad target",
+            ),
+            (
+                r#"{"serve":"kareus_serve","version":1,"type":"plan","job":"a:b:c:d","seed":-1}"#,
+                "seed",
+            ),
+            (
+                r#"{"serve":"kareus_serve","version":1,"type":"plan","job":"a:b:c:d","seed":1.5}"#,
+                "seed",
+            ),
+            (
+                r#"{"serve":"kareus_serve","version":1,"type":"plan","job":"a:b:c:d","strategy":"bogus"}"#,
+                "strategy",
+            ),
+        ];
+        for (line, needle) in cases {
+            let err = ServeRequest::from_json(&Json::parse(line).unwrap()).unwrap_err();
+            assert!(err.contains(needle), "{line}: {err:?} missing {needle:?}");
+        }
+    }
+
+    #[test]
+    fn responses_roundtrip() {
+        let mut ok = ServeResponse::ok("plan", obj(vec![("x", num(1.0))]));
+        ok.cache_hit = Some(true);
+        let cases = vec![
+            ok,
+            ServeResponse::busy("full"),
+            ServeResponse::error("error", ErrorCode::Parse, "json error at byte 0: bad"),
+        ];
+        for resp in cases {
+            let dump = resp.to_json().dump();
+            let back = ServeResponse::from_json(&Json::parse(&dump).unwrap()).unwrap();
+            assert_eq!(back, resp);
+            assert_eq!(back.to_json().dump(), dump);
+        }
+    }
+
+    #[test]
+    fn service_answers_repeat_plans_from_cache() {
+        let svc = PlanService::new(EngineConfig::sequential(), ServeOptions::default());
+        let line = ServeRequest::Plan {
+            job: "a100:qwen1.7b:tp8pp2:megatron".to_string(),
+            target: "max".to_string(),
+            seed: 11,
+            strategy: None,
+        }
+        .to_json()
+        .dump();
+        let (first, _) = svc.process_line(&line);
+        assert!(first.is_ok(), "{first:?}");
+        assert_eq!(first.cache_hit, Some(false));
+        let exec_misses = svc.engine.measure_cache.misses();
+        let (second, _) = svc.process_line(&line);
+        assert!(second.is_ok());
+        assert_eq!(second.cache_hit, Some(true));
+        // The fast path never touched the engine: no new measurements.
+        assert_eq!(svc.engine.measure_cache.misses(), exec_misses);
+        assert_eq!((svc.hits(), svc.misses()), (1, 1));
+        // Identical plan bytes from both paths.
+        assert_eq!(first.result.unwrap().dump(), second.result.unwrap().dump());
+    }
+
+    #[test]
+    fn service_maps_wire_garbage_to_typed_errors() {
+        let svc = PlanService::new(EngineConfig::sequential(), ServeOptions::default());
+        for line in ["", "not json", "{\"serve\":", "[1,2,3]", "{\"serve\":\"x\",\"version\":1}"] {
+            let (resp, control) = svc.process_line(line);
+            assert_eq!(control, Control::Continue);
+            assert_eq!(resp.status, "error", "{line:?}");
+            assert!(
+                matches!(resp.code, Some(ErrorCode::Parse) | Some(ErrorCode::BadRequest)),
+                "{line:?} → {:?}",
+                resp.code
+            );
+            assert!(resp.message.is_some());
+        }
+        assert_eq!(svc.requests(), 5);
+        // Unparseable lines never enter the plan path.
+        assert_eq!((svc.hits(), svc.misses()), (0, 0));
+    }
+
+    #[test]
+    fn zero_admission_yields_typed_busy() {
+        let opts = ServeOptions { max_inflight: 0, ..ServeOptions::default() };
+        let svc = PlanService::new(EngineConfig::sequential(), opts);
+        let line = ServeRequest::Plan {
+            job: "a100:qwen1.7b:tp8pp2:megatron".to_string(),
+            target: "max".to_string(),
+            seed: 1,
+            strategy: None,
+        }
+        .to_json()
+        .dump();
+        let (resp, _) = svc.process_line(&line);
+        assert_eq!(resp.status, "busy");
+        assert_eq!(resp.code, Some(ErrorCode::Busy));
+        assert!(resp.message.unwrap().contains("in-flight"));
+    }
+
+    #[test]
+    fn infeasible_targets_are_typed_and_negatively_cached() {
+        let svc = PlanService::new(EngineConfig::sequential(), ServeOptions::default());
+        let line = ServeRequest::Plan {
+            job: "a100:qwen1.7b:tp8pp2:megatron".to_string(),
+            // No schedule finishes an iteration in a nanosecond.
+            target: "deadline:1e-9".to_string(),
+            seed: 3,
+            strategy: None,
+        }
+        .to_json()
+        .dump();
+        let (first, _) = svc.process_line(&line);
+        assert_eq!(first.status, "error");
+        assert_eq!(first.code, Some(ErrorCode::Infeasible));
+        assert_eq!(first.cache_hit, Some(false));
+        let (second, _) = svc.process_line(&line);
+        assert_eq!(second.code, Some(ErrorCode::Infeasible));
+        assert_eq!(second.cache_hit, Some(true), "deterministic failures are cached too");
+        assert_eq!((svc.hits(), svc.misses()), (1, 1));
+    }
+
+    #[test]
+    fn stats_deterministic_mode_nulls_wall_fields() {
+        let svc = PlanService::new(EngineConfig::sequential(), ServeOptions::default());
+        let stats = svc.stats_json(true);
+        assert_eq!(stats.get("uptime_s"), Some(&Json::Null));
+        assert_eq!(stats.get("engine").unwrap().get("exec_hits"), Some(&Json::Null));
+        assert!(stats.get("requests").unwrap().as_f64().is_some());
+        let live = svc.stats_json(false);
+        assert!(live.get("uptime_s").unwrap().as_f64().unwrap() >= 0.0);
+    }
+
+    #[test]
+    fn shutdown_request_flips_the_flag_and_control() {
+        let svc = PlanService::new(EngineConfig::sequential(), ServeOptions::default());
+        let line = ServeRequest::Shutdown.to_json().dump();
+        let (resp, control) = svc.process_line(&line);
+        assert!(resp.is_ok());
+        assert_eq!(control, Control::Shutdown);
+        assert!(svc.is_shutting_down());
+        // Later requests get the typed shutting_down error.
+        let (resp, control) = svc.process_line(&ServeRequest::Shutdown.to_json().dump());
+        assert_eq!(control, Control::Continue);
+        assert_eq!(resp.code, Some(ErrorCode::ShuttingDown));
+    }
+
+    #[test]
+    fn read_line_capped_handles_truncation_and_caps() {
+        use std::io::Cursor;
+        // Normal lines, CRLF, and a truncated trailing line all surface.
+        let mut r = Cursor::new(b"{\"a\":1}\r\n{\"b\":2}\ntail-no-newline".to_vec());
+        assert_eq!(read_line_capped(&mut r, 1024).ok().flatten().unwrap(), "{\"a\":1}");
+        assert_eq!(read_line_capped(&mut r, 1024).ok().flatten().unwrap(), "{\"b\":2}");
+        assert_eq!(read_line_capped(&mut r, 1024).ok().flatten().unwrap(), "tail-no-newline");
+        assert!(read_line_capped(&mut r, 1024).ok().flatten().is_none(), "then clean EOF");
+        // The cap fires even when the line never ends.
+        let mut r = Cursor::new(vec![b'x'; 4096]);
+        assert!(matches!(read_line_capped(&mut r, 128), Err(LineError::Oversized(_))));
+    }
+}

@@ -50,9 +50,16 @@ impl fmt::Display for EmitError {
 
 impl std::error::Error for EmitError {}
 
+/// Maximum container nesting the parser accepts. The parser is recursive
+/// descent, so unbounded nesting is a stack overflow — an abort, not a
+/// typed error — and a ~64 KiB wire request of `[[[[…` would reach tens of
+/// thousands of levels. 512 is far beyond any artifact this crate emits
+/// while keeping worst-case stack use trivially small.
+pub const MAX_PARSE_DEPTH: usize = 512;
+
 impl Json {
     pub fn parse(input: &str) -> Result<Json, JsonError> {
-        let mut p = Parser { b: input.as_bytes(), i: 0 };
+        let mut p = Parser { b: input.as_bytes(), i: 0, depth: 0 };
         p.skip_ws();
         let v = p.value()?;
         p.skip_ws();
@@ -210,11 +217,25 @@ pub fn arr(v: Vec<Json>) -> Json {
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
     fn err(&self, msg: &str) -> JsonError {
         JsonError { msg: msg.to_string(), pos: self.i }
+    }
+
+    /// Guard one level of container nesting; pairs with `descend_end`.
+    fn descend(&mut self) -> Result<(), JsonError> {
+        if self.depth >= MAX_PARSE_DEPTH {
+            return Err(self.err("nesting too deep"));
+        }
+        self.depth += 1;
+        Ok(())
+    }
+
+    fn descend_end(&mut self) {
+        self.depth -= 1;
     }
 
     fn skip_ws(&mut self) {
@@ -259,11 +280,13 @@ impl<'a> Parser<'a> {
     }
 
     fn object(&mut self) -> Result<Json, JsonError> {
+        self.descend()?;
         self.expect(b'{')?;
         let mut m = BTreeMap::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
             self.i += 1;
+            self.descend_end();
             return Ok(Json::Obj(m));
         }
         loop {
@@ -279,6 +302,7 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.i += 1,
                 Some(b'}') => {
                     self.i += 1;
+                    self.descend_end();
                     return Ok(Json::Obj(m));
                 }
                 _ => return Err(self.err("expected ',' or '}'")),
@@ -287,11 +311,13 @@ impl<'a> Parser<'a> {
     }
 
     fn array(&mut self) -> Result<Json, JsonError> {
+        self.descend()?;
         self.expect(b'[')?;
         let mut a = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
             self.i += 1;
+            self.descend_end();
             return Ok(Json::Arr(a));
         }
         loop {
@@ -302,6 +328,7 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.i += 1,
                 Some(b']') => {
                     self.i += 1;
+                    self.descend_end();
                     return Ok(Json::Arr(a));
                 }
                 _ => return Err(self.err("expected ',' or ']'")),
@@ -464,13 +491,18 @@ mod tests {
         assert_eq!(Json::parse(r#""\ud800""#).unwrap().as_str(), Some("\u{FFFD}"));
     }
 
-    #[test]
-    fn deep_nesting_roundtrips() {
-        let depth = 1000;
+    fn nested_arrays(depth: usize) -> String {
         let mut src = String::new();
         src.push_str(&"[".repeat(depth));
         src.push('1');
         src.push_str(&"]".repeat(depth));
+        src
+    }
+
+    #[test]
+    fn deep_nesting_roundtrips() {
+        let depth = MAX_PARSE_DEPTH;
+        let src = nested_arrays(depth);
         let v = Json::parse(&src).unwrap();
         assert_eq!(v.dump(), src);
         let mut inner = &v;
@@ -478,6 +510,35 @@ mod tests {
             inner = &inner.as_arr().unwrap()[0];
         }
         assert_eq!(inner.as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn excessive_nesting_is_a_typed_error_not_an_overflow() {
+        // One past the cap errors; a wire-sized bomb (64 KiB of '[') must
+        // come back as a typed JsonError, not blow the worker stack.
+        let err = Json::parse(&nested_arrays(MAX_PARSE_DEPTH + 1)).unwrap_err();
+        assert!(err.msg.contains("nesting too deep"), "{err}");
+        let bomb = "[".repeat(1 << 16);
+        let err = Json::parse(&bomb).unwrap_err();
+        assert!(err.msg.contains("nesting too deep"), "{err}");
+        // Mixed object/array nesting counts against the same cap.
+        let mut src = String::new();
+        for _ in 0..MAX_PARSE_DEPTH {
+            src.push_str("{\"a\":[");
+        }
+        let err = Json::parse(&src).unwrap_err();
+        assert!(err.msg.contains("nesting too deep"), "{err}");
+    }
+
+    #[test]
+    fn truncated_documents_are_typed_errors() {
+        // Every prefix of a valid document must fail cleanly — the serve
+        // wire can hand the parser a request line cut anywhere.
+        let full = r#"{"serve":"kareus_serve","version":1,"job":["a",1.5,null]}"#;
+        for cut in 1..full.len() {
+            let prefix = &full[..cut]; // all-ASCII, every cut is a char boundary
+            assert!(Json::parse(prefix).is_err(), "prefix {prefix:?} parsed");
+        }
     }
 
     #[test]

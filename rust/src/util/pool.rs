@@ -1,54 +1,153 @@
-//! Tiny scoped parallel-map over OS threads (no rayon offline).
+//! Worker threads: a persistent [`WorkerPool`] plus a one-shot
+//! [`parallel_map`] wrapper (no rayon offline).
 //!
 //! MBO runs per-partition optimizations in parallel (the paper runs them in
-//! parallel across GPUs, Section 6.6); emulation sweeps use it too.
+//! parallel across GPUs, Section 6.6); emulation sweeps use it too. The
+//! plan-serving daemon ([`crate::serve`]) keeps one pool alive for its whole
+//! lifetime and feeds it connection handlers, so the pool outlives any
+//! single batch of work — jobs are `'static` and travel through a channel.
+
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A fixed-size pool of persistent worker threads.
+///
+/// Jobs are closures sent over a shared queue; workers pop in FIFO order.
+/// Dropping the pool (or calling [`WorkerPool::shutdown`]) closes the queue,
+/// lets every already-queued job run to completion, and joins the workers —
+/// the drain semantics the daemon's graceful shutdown relies on.
+///
+/// A job that panics kills its worker thread (the panic is not forwarded to
+/// other queued jobs); long-lived callers that must survive bad jobs should
+/// catch panics inside the job itself, as the serve connection handler does.
+pub struct WorkerPool {
+    tx: Option<Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `n_threads.max(1)` persistent workers.
+    pub fn new(n_threads: usize) -> WorkerPool {
+        let n = n_threads.max(1);
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..n)
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                std::thread::spawn(move || loop {
+                    // The receiver lock is held while blocked on recv(),
+                    // which is fine: exactly one idle worker waits at a
+                    // time, takes the next job, and releases the lock
+                    // before running it.
+                    let job = rx.lock().unwrap().recv();
+                    match job {
+                        Ok(job) => job(),
+                        // Queue closed and drained: the pool is shutting down.
+                        Err(_) => break,
+                    }
+                })
+            })
+            .collect();
+        WorkerPool { tx: Some(tx), workers }
+    }
+
+    /// Number of worker threads.
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Queue one fire-and-forget job.
+    ///
+    /// Panics if called after [`WorkerPool::shutdown`], or if every worker
+    /// has died to a panicking job.
+    pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
+        self.tx
+            .as_ref()
+            .expect("pool already shut down")
+            .send(Box::new(job))
+            .expect("all workers exited");
+    }
+
+    /// Run `f` over `items` on this pool, preserving input order.
+    ///
+    /// Blocks until every item is done. Each result travels back tagged
+    /// with its index, so worker scheduling never leaks into the output
+    /// order. Panics if a worker dies mid-batch (its result can then never
+    /// arrive).
+    pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(T) -> R + Send + Sync + 'static,
+    {
+        let n = items.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let f = Arc::new(f);
+        let (done_tx, done_rx) = channel::<(usize, R)>();
+        for (i, item) in items.into_iter().enumerate() {
+            let f = Arc::clone(&f);
+            let done = done_tx.clone();
+            self.execute(move || {
+                // A send error means the collector gave up (caller
+                // panicked); drop the result on the floor.
+                let _ = done.send((i, f(item)));
+            });
+        }
+        drop(done_tx);
+        let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            let (i, r) = done_rx.recv().expect("worker panicked");
+            debug_assert!(slots[i].is_none(), "index {i} produced twice");
+            slots[i] = Some(r);
+        }
+        slots.into_iter().map(|s| s.expect("missing result")).collect()
+    }
+
+    /// Close the queue and join every worker. Already-queued jobs run to
+    /// completion first; new [`WorkerPool::execute`] calls panic. Called
+    /// automatically on drop.
+    pub fn shutdown(&mut self) {
+        // Dropping the sender makes each worker's recv() fail once the
+        // queue drains, so this is a drain-then-join, not an abort.
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            // A worker that died to a panicking job already reported it;
+            // don't double-panic while unwinding.
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
 
 /// Run `f` over `items` on up to `n_threads` threads, preserving order.
 ///
-/// Work is handed out through a shared iterator in ascending index order;
-/// each worker accumulates `(index, result)` pairs privately and the
-/// results are merged after all workers join, so the result path takes no
-/// locks and workers never contend on a shared output buffer.
+/// Thin wrapper over [`WorkerPool`]: stands up a pool for the call and
+/// drops it (join + drain) on return. One-shot batch work (per-partition
+/// MBO fan-out, sweeps) goes through here; anything long-lived should hold
+/// its own `WorkerPool`. With one thread or at most one item the work runs
+/// inline on the caller with no pool at all, which keeps
+/// `EngineConfig::sequential()` literally single-threaded.
 pub fn parallel_map<T, R, F>(items: Vec<T>, n_threads: usize, f: F) -> Vec<R>
 where
-    T: Send,
-    R: Send,
-    F: Fn(T) -> R + Sync,
+    T: Send + 'static,
+    R: Send + 'static,
+    F: Fn(T) -> R + Send + Sync + 'static,
 {
     let n_threads = n_threads.max(1);
     if n_threads == 1 || items.len() <= 1 {
         return items.into_iter().map(f).collect();
     }
-    let n = items.len();
-    let queue = std::sync::Mutex::new(items.into_iter().enumerate());
-
-    let per_worker: Vec<Vec<(usize, R)>> = std::thread::scope(|scope| {
-        let handles: Vec<_> = (0..n_threads.min(n))
-            .map(|_| {
-                scope.spawn(|| {
-                    let mut local: Vec<(usize, R)> = Vec::new();
-                    loop {
-                        // Hold the queue lock only for the pop, never while
-                        // running `f`.
-                        let job = queue.lock().unwrap().next();
-                        match job {
-                            Some((i, item)) => local.push((i, f(item))),
-                            None => break,
-                        }
-                    }
-                    local
-                })
-            })
-            .collect();
-        handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
-    });
-
-    let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
-    for (i, r) in per_worker.into_iter().flatten() {
-        debug_assert!(slots[i].is_none(), "index {i} produced twice");
-        slots[i] = Some(r);
-    }
-    slots.into_iter().map(|s| s.expect("missing result")).collect()
+    WorkerPool::new(n_threads.min(items.len())).map(items, f)
 }
 
 /// Default parallelism: available cores, capped.
@@ -59,6 +158,7 @@ pub fn default_threads() -> usize {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
 
     #[test]
     fn preserves_order() {
@@ -95,5 +195,66 @@ mod tests {
             x * x
         });
         assert_eq!(out, (0..32).map(|x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn pool_is_reusable_across_batches() {
+        // The daemon's shape: one pool, many independent waves of work.
+        let pool = WorkerPool::new(4);
+        assert_eq!(pool.size(), 4);
+        for round in 0..3 {
+            let out = pool.map((0..20).collect::<Vec<_>>(), move |x| x + round);
+            assert_eq!(out, (0..20).map(|x| x + round).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn pool_map_preserves_order_under_skew() {
+        let pool = WorkerPool::new(8);
+        let out = pool.map((0..32).collect::<Vec<_>>(), |x| {
+            if x < 8 {
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+            x * x
+        });
+        assert_eq!(out, (0..32).map(|x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn shutdown_drains_queued_jobs() {
+        // Queue far more jobs than workers, then shut down immediately:
+        // every queued job must still run (drain, not abort).
+        let ran = Arc::new(AtomicUsize::new(0));
+        let mut pool = WorkerPool::new(2);
+        for _ in 0..64 {
+            let ran = Arc::clone(&ran);
+            pool.execute(move || {
+                ran.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.shutdown();
+        assert_eq!(ran.load(Ordering::SeqCst), 64);
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let ran = Arc::new(AtomicUsize::new(0));
+        {
+            let pool = WorkerPool::new(3);
+            for _ in 0..9 {
+                let ran = Arc::clone(&ran);
+                pool.execute(move || {
+                    ran.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+        } // drop ⇒ drain + join
+        assert_eq!(ran.load(Ordering::SeqCst), 9);
+    }
+
+    #[test]
+    fn pool_floor_is_one_worker() {
+        let pool = WorkerPool::new(0);
+        assert_eq!(pool.size(), 1);
+        assert_eq!(pool.map(vec![1, 2, 3], |x| x * 10), vec![10, 20, 30]);
     }
 }

@@ -46,6 +46,10 @@ const SEEDED: &[(&str, Code)] = &[
     ("sweep_k042_not_pareto.json", Code::K042),
     ("summary_k050_missing_field.json", Code::K050),
     ("summary_k051_replan_count.json", Code::K051),
+    ("loadgen_k060_missing_field.json", Code::K060),
+    ("loadgen_k061_counter_mismatch.json", Code::K061),
+    ("loadgen_k062_percentile_order.json", Code::K062),
+    ("loadgen_k063_mixed_nulling.json", Code::K063),
     ("unknown_k000.json", Code::K000),
 ];
 
@@ -56,6 +60,7 @@ const CLEAN: &[&str] = &[
     "trace_ok.json",
     "sweep_ok.json",
     "summary_ok.json",
+    "loadgen_ok.json",
 ];
 
 fn gpu_for(name: &str) -> Option<GpuSpec> {

@@ -111,6 +111,49 @@ fn parallel_coordinator_frontier_byte_identical_to_sequential() {
 }
 
 #[test]
+fn hammered_shared_caches_stay_byte_identical_to_sequential() {
+    // The serve daemon's steady state: many threads hammer one engine
+    // whose MboCache/MeasureCache keys overlap (same partitions, two
+    // interleaved seeds). Whatever the interleaving, every thread must
+    // get results byte-identical to a cold sequential run of its seed.
+    let gpu = GpuSpec::a100();
+    let cfg = qwen_cfg();
+    let parts = all_partitions(&gpu, &cfg);
+    let comm_group = cfg.par.tp * cfg.par.cp;
+
+    let expected: Vec<MboBits> = [51u64, 52]
+        .iter()
+        .map(|&seed| {
+            let engine = EngineConfig::sequential();
+            mbo_bits(&optimize_all_partitions_with(seed, &gpu, &parts, comm_group, &engine))
+        })
+        .collect();
+
+    let shared = EngineConfig::new().with_threads(2);
+    let hammers: Vec<_> = (0..6)
+        .map(|i| {
+            let seed = [51u64, 52][i % 2];
+            let gpu = gpu.clone();
+            let parts = parts.clone();
+            let engine = shared.clone(); // shares caches with every thread
+            std::thread::spawn(move || {
+                (i, mbo_bits(&optimize_all_partitions_with(seed, &gpu, &parts, comm_group, &engine)))
+            })
+        })
+        .collect();
+    for h in hammers {
+        let (i, bits) = h.join().expect("hammer thread");
+        assert_eq!(
+            bits,
+            expected[i % 2],
+            "thread {i} diverged from the sequential result under cache contention"
+        );
+    }
+    assert!(!shared.mbo_cache.is_empty(), "hammer never populated the shared cache");
+    assert!(shared.mbo_cache.hits() > 0, "overlapping keys never hit the shared cache");
+}
+
+#[test]
 fn sweep_covers_gpu_model_matrix_and_emits_json() {
     // Three GPU×model scenarios through the pipeline; cheap systems keep
     // the test fast (the kareus path is covered by the coordinator test).

@@ -1,0 +1,288 @@
+//! Integration tests for the plan-serving daemon (`kareus::serve`): the
+//! acceptance properties from the serve PR — wire plans byte-identical to
+//! direct engine calls, cache hits that never re-enter the optimizer,
+//! typed errors for malformed requests, graceful shutdown that drains
+//! in-flight work, and deterministic loadgen reports.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{Shutdown, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use kareus::baselines::run_system_with;
+use kareus::cluster::parse_job_spec;
+use kareus::coordinator::{Coordinator, Target};
+use kareus::engine::EngineConfig;
+use kareus::serve::{
+    run_loadgen, send_shutdown, ErrorCode, LoadgenConfig, PlanService, ServeConfig, ServeOptions,
+    ServeRequest, ServeResponse, Server, MAX_REQUEST_LINE,
+};
+use kareus::util::json::Json;
+
+/// Cheapest real job in the matrix: Megatron baseline, one frequency
+/// sweep, no nanobatch search.
+const JOB: &str = "a100:qwen1.7b:tp8pp2:megatron";
+
+fn start(
+    max_inflight: usize,
+    threads: usize,
+) -> (String, Arc<PlanService>, std::thread::JoinHandle<()>) {
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        threads,
+        opts: ServeOptions { max_inflight, ..ServeOptions::default() },
+    };
+    let server = Server::bind(EngineConfig::sequential(), &cfg, |_| {}).expect("bind");
+    let addr = server.local_addr().to_string();
+    let service = server.service();
+    let handle = std::thread::spawn(move || server.run().expect("serve run"));
+    (addr, service, handle)
+}
+
+fn plan_line(job: &str, seed: u64) -> String {
+    ServeRequest::Plan { job: job.to_string(), target: "max".to_string(), seed, strategy: None }
+        .to_json()
+        .dump()
+}
+
+/// One request over a fresh connection; returns the decoded response.
+fn roundtrip(addr: &str, line: &str) -> ServeResponse {
+    let stream = TcpStream::connect(addr).expect("connect");
+    let mut writer = stream.try_clone().expect("clone");
+    writer.write_all(format!("{line}\n").as_bytes()).expect("send");
+    writer.flush().expect("flush");
+    let mut reply = String::new();
+    BufReader::new(stream).read_line(&mut reply).expect("read");
+    ServeResponse::from_json(&Json::parse(reply.trim_end()).expect("response is JSON"))
+        .expect("response decodes")
+}
+
+/// The same pipeline the server's miss path runs, executed directly.
+fn direct_deployment_bytes(job: &str, seed: u64) -> String {
+    let parsed = parse_job_spec(job, 8, 4096, 8, seed).expect("job spec");
+    let sc = parsed.scenario;
+    let engine = EngineConfig::sequential();
+    let result = run_system_with(&sc.gpu, &sc.cfg, sc.system, sc.seed, &engine);
+    let coord = Coordinator::new(sc.gpu.clone(), sc.cfg).with_engine(engine);
+    let dep = coord.select(&result, Target::MaxThroughput).expect("feasible");
+    dep.to_json().dump()
+}
+
+#[test]
+fn concurrent_clients_get_byte_identical_plans_to_a_direct_engine_call() {
+    let (addr, service, handle) = start(2, 4);
+    let line = plan_line(JOB, 41);
+
+    // Four clients race the same request; the server must coalesce them
+    // onto one optimization.
+    let clients: Vec<_> = (0..4)
+        .map(|_| {
+            let addr = addr.clone();
+            let line = line.clone();
+            std::thread::spawn(move || roundtrip(&addr, &line))
+        })
+        .collect();
+    let responses: Vec<ServeResponse> =
+        clients.into_iter().map(|c| c.join().expect("client")).collect();
+
+    let expected = direct_deployment_bytes(JOB, 41);
+    for resp in &responses {
+        assert!(resp.is_ok(), "{resp:?}");
+        let result = resp.result.as_ref().expect("ok responses carry a result");
+        assert_eq!(
+            result.get("deployment").expect("plan payload has a deployment").dump(),
+            expected,
+            "served plan differs from the direct engine call"
+        );
+        assert_eq!(result.get("job").and_then(Json::as_str), Some(JOB));
+    }
+    // Coalescing makes the split deterministic: one owner, three waiters.
+    assert_eq!((service.misses(), service.hits()), (1, 3));
+
+    send_shutdown(&addr).expect("shutdown");
+    handle.join().expect("server thread");
+}
+
+#[test]
+fn repeated_request_is_answered_from_the_cache() {
+    let (addr, service, handle) = start(2, 2);
+    let line = plan_line(JOB, 42);
+
+    // One persistent connection, same request twice.
+    let stream = TcpStream::connect(&addr).expect("connect");
+    let mut writer = stream.try_clone().expect("clone");
+    let mut reader = BufReader::new(stream);
+    let mut ask = || {
+        writer.write_all(format!("{line}\n").as_bytes()).expect("send");
+        writer.flush().expect("flush");
+        let mut reply = String::new();
+        reader.read_line(&mut reply).expect("read");
+        ServeResponse::from_json(&Json::parse(reply.trim_end()).unwrap()).unwrap()
+    };
+    let first = ask();
+    assert!(first.is_ok());
+    assert_eq!(first.cache_hit, Some(false));
+    assert_eq!((service.misses(), service.hits()), (1, 0));
+
+    let second = ask();
+    assert!(second.is_ok());
+    assert_eq!(second.cache_hit, Some(true), "repeat must be served from the plan cache");
+    assert_eq!((service.misses(), service.hits()), (1, 1), "hit counter must increment");
+    assert_eq!(
+        first.result.unwrap().dump(),
+        second.result.unwrap().dump(),
+        "hit and miss paths must serve identical bytes"
+    );
+
+    send_shutdown(&addr).expect("shutdown");
+    handle.join().expect("server thread");
+}
+
+#[test]
+fn malformed_requests_get_typed_error_responses() {
+    let (addr, _service, handle) = start(2, 2);
+
+    // Garbage, wrong schema, unknown type, bad job spec: typed, no hang.
+    let cases = [
+        ("this is not json", ErrorCode::Parse),
+        ("{\"serve\":\"nope\",\"version\":1,\"type\":\"plan\"}", ErrorCode::BadRequest),
+        ("{\"serve\":\"kareus_serve\",\"version\":1,\"type\":\"frobnicate\"}", ErrorCode::BadRequest),
+        (
+            "{\"serve\":\"kareus_serve\",\"version\":1,\"type\":\"plan\",\"job\":\"not-a-job\"}",
+            ErrorCode::BadRequest,
+        ),
+    ];
+    for (line, want) in cases {
+        let resp = roundtrip(&addr, line);
+        assert_eq!(resp.status, "error", "{line}");
+        assert_eq!(resp.code, Some(want), "{line}");
+        assert!(resp.message.is_some(), "{line}");
+    }
+
+    // An oversized line gets a typed parse error, then the connection
+    // closes (no way to resynchronize the stream).
+    let stream = TcpStream::connect(&addr).expect("connect");
+    let mut writer = stream.try_clone().expect("clone");
+    let huge = "x".repeat(MAX_REQUEST_LINE + 1024);
+    writer.write_all(huge.as_bytes()).expect("send");
+    writer.write_all(b"\n").expect("send");
+    writer.flush().expect("flush");
+    let mut reader = BufReader::new(stream);
+    let mut reply = String::new();
+    reader.read_line(&mut reply).expect("read");
+    let resp = ServeResponse::from_json(&Json::parse(reply.trim_end()).unwrap()).unwrap();
+    assert_eq!(resp.code, Some(ErrorCode::Parse));
+    assert!(resp.message.unwrap().contains("cap"));
+    let mut rest = String::new();
+    assert_eq!(reader.read_line(&mut rest).expect("eof"), 0, "connection must close");
+
+    // A truncated request (EOF before the newline) is surfaced as a
+    // typed parse error rather than silently dropped.
+    let stream = TcpStream::connect(&addr).expect("connect");
+    let mut writer = stream.try_clone().expect("clone");
+    writer.write_all(b"{\"serve\":\"kareus_serve\",\"ver").expect("send");
+    writer.flush().expect("flush");
+    stream.shutdown(Shutdown::Write).expect("half-close");
+    let mut reply = String::new();
+    BufReader::new(stream).read_line(&mut reply).expect("read");
+    let resp = ServeResponse::from_json(&Json::parse(reply.trim_end()).unwrap()).unwrap();
+    assert_eq!(resp.status, "error");
+    assert_eq!(resp.code, Some(ErrorCode::Parse));
+
+    send_shutdown(&addr).expect("shutdown");
+    handle.join().expect("server thread");
+}
+
+#[test]
+fn graceful_shutdown_drains_in_flight_requests() {
+    let (addr, service, handle) = start(2, 4);
+
+    // Client A starts an expensive miss...
+    let stream = TcpStream::connect(&addr).expect("connect");
+    let mut writer = stream.try_clone().expect("clone");
+    writer.write_all(format!("{}\n", plan_line(JOB, 43)).as_bytes()).expect("send");
+    writer.flush().expect("flush");
+
+    // ...wait until the optimizer actually owns it (miss counted)...
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while service.misses() == 0 {
+        assert!(Instant::now() < deadline, "optimization never started");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    // ...then client B asks the server to shut down.
+    send_shutdown(&addr).expect("shutdown");
+    handle.join().expect("server drains before exiting");
+
+    // A's in-flight request completed with a full response even though
+    // the server exited: drain, not abort.
+    let mut reply = String::new();
+    BufReader::new(stream).read_line(&mut reply).expect("read");
+    let resp = ServeResponse::from_json(&Json::parse(reply.trim_end()).unwrap()).unwrap();
+    assert!(resp.is_ok(), "in-flight request must complete: {resp:?}");
+    assert_eq!(resp.cache_hit, Some(false));
+}
+
+#[test]
+fn zero_admission_returns_typed_busy_over_the_wire() {
+    let (addr, service, handle) = start(0, 2);
+    let resp = roundtrip(&addr, &plan_line(JOB, 44));
+    assert_eq!(resp.status, "busy");
+    assert_eq!(resp.code, Some(ErrorCode::Busy));
+    assert_eq!((service.misses(), service.hits()), (0, 0), "busy path must not touch caches");
+    send_shutdown(&addr).expect("shutdown");
+    handle.join().expect("server thread");
+}
+
+#[test]
+fn loadgen_deterministic_reports_are_byte_identical_and_check_clean() {
+    let mut cold_reports = Vec::new();
+    for _ in 0..2 {
+        // Fresh server per run: same cold caches, same request mix.
+        let (addr, _service, handle) = start(2, 4);
+        let cfg = LoadgenConfig {
+            addr: addr.clone(),
+            requests: 4,
+            concurrency: 2,
+            jobs: vec![JOB.to_string()],
+            target: "max".to_string(),
+            seed: 45,
+            deterministic: true,
+        };
+        let report = run_loadgen(&cfg).expect("loadgen");
+        cold_reports.push((report.try_dump().expect("report dumps"), addr, handle, cfg));
+    }
+    let a = cold_reports[0].0.clone();
+    let b = cold_reports[1].0.clone();
+    assert_eq!(a, b, "deterministic loadgen reports must be byte-identical across runs");
+
+    // Cold split: 1 distinct key → 1 miss, everything else coalesced/cached.
+    let cold = Json::parse(&a).unwrap();
+    assert_eq!(cold.get("ok").and_then(Json::as_f64), Some(4.0));
+    assert_eq!(cold.get("misses").and_then(Json::as_f64), Some(1.0));
+    assert_eq!(cold.get("hits").and_then(Json::as_f64), Some(3.0));
+    assert_eq!(cold.get("hit_rate").and_then(Json::as_f64), Some(0.75));
+    assert_eq!(cold.get("wall_s"), Some(&Json::Null), "deterministic mode nulls wall fields");
+    assert_eq!(cold.get("addr"), Some(&Json::Null));
+
+    // A second wave against a warm server hits on every request.
+    let (_, addr, handle, cfg) = cold_reports.pop().unwrap();
+    let warm = run_loadgen(&cfg).expect("warm loadgen");
+    assert_eq!(warm.get("hits").and_then(Json::as_f64), Some(4.0));
+    assert_eq!(warm.get("misses").and_then(Json::as_f64), Some(0.0));
+    assert_eq!(warm.get("hit_rate").and_then(Json::as_f64), Some(1.0));
+
+    // Both reports pass the static verifier with zero diagnostics.
+    for report in [a.as_str(), warm.try_dump().unwrap().as_str()] {
+        let checked = kareus::check::check_text(report, "loadgen", None);
+        assert_eq!(checked.kind, "loadgen_report");
+        assert!(checked.diagnostics.is_empty(), "{}", checked.to_text());
+    }
+
+    send_shutdown(&addr).expect("shutdown");
+    handle.join().expect("server thread");
+    // The first run's server is still listening; stop it too.
+    let (_, addr, handle, _) = cold_reports.pop().unwrap();
+    send_shutdown(&addr).expect("shutdown first server");
+    handle.join().expect("first server thread");
+}
