@@ -35,7 +35,7 @@ fn test_partition() -> (GpuSpec, Partition) {
 fn main() {
     println!("== kareus hot-path benchmarks ==");
     let (gpu, part) = test_partition();
-    let sched = Schedule { comm_sms: 12, launch: LaunchAt::WithComp(1), freq_mhz: 1200 };
+    let sched = Schedule::uniform(12, LaunchAt::WithComp(1), 1200);
 
     // 1. The schedule executor — called ~10^5–10^6 times per MBO sweep.
     bench("sim::execute_partition (overlap)", 0.5, || {

@@ -50,10 +50,16 @@
 //! ```
 //!
 //! `launch` is `seq` (sequential execution model) or `c<i>` (launched
-//! with computation kernel `i`); floats are written with Rust's shortest
-//! round-trip formatting, so a decoded [`ExecResult`] is bit-identical to
-//! the recorded one. Entries live in a `BTreeMap`, so a saved trace is
-//! byte-deterministic for a given set of measurements.
+//! with computation kernel `i`); schedules carrying a per-kernel-class
+//! frequency split extend the frequency field to
+//! `<freq_mhz>m<memory_mhz>` (uniform schedules keep the bare
+//! `<freq_mhz>`, so legacy traces replay unchanged). Entries whose
+//! execution charged frequency transitions carry an extra
+//! `freq_transitions` count; zero-transition entries omit it. Floats are
+//! written with Rust's shortest round-trip formatting, so a decoded
+//! [`ExecResult`] is bit-identical to the recorded one. Entries live in a
+//! `BTreeMap`, so a saved trace is byte-deterministic for a given set of
+//! measurements.
 //!
 //! [`fingerprint`]: ExecutionBackend::fingerprint
 
@@ -65,7 +71,7 @@ use std::sync::Mutex;
 
 use crate::partition::Partition;
 use crate::profiler::MeasureCache;
-use crate::sim::exec::{execute_partition, ExecResult, LaunchAt, Schedule};
+use crate::sim::exec::{execute_partition, ExecResult, KernelFreqs, LaunchAt, Schedule};
 use crate::sim::gpu::GpuSpec;
 use crate::sim::kernel::Kernel;
 use crate::util::hash::Fnv64;
@@ -246,12 +252,18 @@ pub fn trace_key(fp: u64, sched: &Schedule, temp_c: f64, power_limit: Option<f64
         LaunchAt::Sequential => "seq".to_string(),
         LaunchAt::WithComp(i) => format!("c{i}"),
     };
+    let freq = match sched.kernel_freqs {
+        KernelFreqs::Uniform => format!("{}", sched.freq_mhz),
+        KernelFreqs::PerClass { memory_mhz, .. } => {
+            format!("{}m{}", sched.freq_mhz, memory_mhz)
+        }
+    };
     format!(
         "{:016x}|{}:{}:{}|{:016x}|{:016x}",
         fp,
         sched.comm_sms,
         launch,
-        sched.freq_mhz,
+        freq,
         temp_c.to_bits(),
         power_limit.map_or(u64::MAX, f64::to_bits)
     )
@@ -260,7 +272,7 @@ pub fn trace_key(fp: u64, sched: &Schedule, temp_c: f64, power_limit: Option<f64
 /// Serialize one [`ExecResult`] (floats keep Rust's shortest round-trip
 /// formatting, so decoding restores the exact bits).
 pub fn exec_result_to_json(r: &ExecResult) -> Json {
-    obj(vec![
+    let mut fields = vec![
         ("time_s", num(r.time_s)),
         ("dyn_j", num(r.dyn_j)),
         ("static_j", num(r.static_j)),
@@ -268,7 +280,13 @@ pub fn exec_result_to_json(r: &ExecResult) -> Json {
         ("avg_freq_mhz", num(r.avg_freq_mhz)),
         ("throttled", Json::Bool(r.throttled)),
         ("peak_power_w", num(r.peak_power_w)),
-    ])
+    ];
+    // Only executions that actually switched frequency mid-partition
+    // carry the count; everything else keeps the legacy byte layout.
+    if r.freq_transitions > 0 {
+        fields.push(("freq_transitions", num(r.freq_transitions as f64)));
+    }
+    obj(fields)
 }
 
 /// Decode one [`ExecResult`]; errors name the missing/ill-typed field.
@@ -287,6 +305,10 @@ pub fn exec_result_from_json(j: &Json) -> Result<ExecResult, String> {
             .and_then(|v| v.as_bool())
             .ok_or("trace entry missing 'throttled'")?,
         peak_power_w: f("peak_power_w")?,
+        freq_transitions: j
+            .get("freq_transitions")
+            .and_then(|v| v.as_f64())
+            .unwrap_or(0.0) as u32,
     })
 }
 
@@ -567,7 +589,7 @@ mod tests {
     }
 
     fn sched() -> Schedule {
-        Schedule { comm_sms: 12, launch: LaunchAt::WithComp(1), freq_mhz: 1410 }
+        Schedule::uniform(12, LaunchAt::WithComp(1), 1410)
     }
 
     fn tmp_path(tag: &str) -> PathBuf {
@@ -651,7 +673,7 @@ mod tests {
 
     #[test]
     fn exec_result_json_roundtrip_is_exact() {
-        let r = ExecResult {
+        let mut r = ExecResult {
             time_s: 0.12345678901234567,
             dyn_j: 3.1e2,
             static_j: 0.1 + 0.2, // deliberately non-representable sum
@@ -659,13 +681,34 @@ mod tests {
             avg_freq_mhz: 1403.7218374,
             throttled: true,
             peak_power_w: 401.25,
+            freq_transitions: 0,
         };
         let dumped = exec_result_to_json(&r).dump();
+        // Zero transitions keep the legacy byte layout.
+        assert!(!dumped.contains("freq_transitions"), "{dumped}");
         let back = exec_result_from_json(&Json::parse(&dumped).unwrap()).unwrap();
         assert_eq!(r.time_s.to_bits(), back.time_s.to_bits());
         assert_eq!(r.static_j.to_bits(), back.static_j.to_bits());
         assert_eq!(r.avg_freq_mhz.to_bits(), back.avg_freq_mhz.to_bits());
         assert_eq!(r.throttled, back.throttled);
+        assert_eq!(back.freq_transitions, 0);
+
+        r.freq_transitions = 3;
+        let dumped = exec_result_to_json(&r).dump();
+        assert!(dumped.contains("freq_transitions"), "{dumped}");
+        let back = exec_result_from_json(&Json::parse(&dumped).unwrap()).unwrap();
+        assert_eq!(back.freq_transitions, 3);
+    }
+
+    #[test]
+    fn trace_key_encodes_kernel_frequency_split() {
+        let uni = trace_key(7, &sched(), 30.0, None);
+        assert!(uni.contains("|12:c1:1410|"), "{uni}");
+        let mut split = sched();
+        split.kernel_freqs = KernelFreqs::PerClass { compute_mhz: 1410, memory_mhz: 900 };
+        let per = trace_key(7, &split, 30.0, None);
+        assert!(per.contains("|12:c1:1410m900|"), "{per}");
+        assert_ne!(uni, per, "per-class split must never alias the uniform key");
     }
 
     #[test]

@@ -295,7 +295,7 @@ fn default_configs(parts: &[Partition], f: u32) -> BTreeMap<String, Schedule> {
         .map(|p| {
             (
                 p.ptype.clone(),
-                Schedule { comm_sms: NANO_DEFAULT_SMS, launch: NANO_DEFAULT_LAUNCH, freq_mhz: f },
+                Schedule::uniform(NANO_DEFAULT_SMS, NANO_DEFAULT_LAUNCH, f),
             )
         })
         .collect()

@@ -25,7 +25,7 @@ use std::collections::BTreeSet;
 use crate::backend::{TRACE_SCHEMA, TRACE_VERSION};
 use crate::compose::MicrobatchPlan;
 use crate::plan::{FrequencyPlan, ReplanTrigger, RevisionLog, REVISION_SCHEMA, REVISION_VERSION};
-use crate::sim::exec::LaunchAt;
+use crate::sim::exec::{KernelFreqs, LaunchAt};
 use crate::sim::gpu::GpuSpec;
 use crate::util::json::{arr, num, obj, s, Json};
 
@@ -95,10 +95,13 @@ pub enum Code {
     K061,
     K062,
     K063,
+    K070,
+    K071,
+    K072,
 }
 
 impl Code {
-    pub const ALL: [Code; 34] = [
+    pub const ALL: [Code; 37] = [
         Code::K000,
         Code::K001,
         Code::K002,
@@ -133,6 +136,9 @@ impl Code {
         Code::K061,
         Code::K062,
         Code::K063,
+        Code::K070,
+        Code::K071,
+        Code::K072,
     ];
 
     pub fn as_str(self) -> &'static str {
@@ -171,6 +177,9 @@ impl Code {
             Code::K061 => "K061",
             Code::K062 => "K062",
             Code::K063 => "K063",
+            Code::K070 => "K070",
+            Code::K071 => "K071",
+            Code::K072 => "K072",
         }
     }
 
@@ -183,7 +192,8 @@ impl Code {
             | Code::K024
             | Code::K033
             | Code::K042
-            | Code::K063 => Severity::Warn,
+            | Code::K063
+            | Code::K072 => Severity::Warn,
             _ => Severity::Error,
         }
     }
@@ -225,6 +235,9 @@ impl Code {
             Code::K061 => "loadgen report counters inconsistent",
             Code::K062 => "loadgen report p50 latency exceeds p99",
             Code::K063 => "loadgen report mixes null and non-null wall-clock fields",
+            Code::K070 => "per-kernel class frequency outside the GPU's range or step grid",
+            Code::K071 => "frequency-transition count inconsistent with the schedule key",
+            Code::K072 => "per-kernel memory frequency above its slot's core frequency",
         }
     }
 }
@@ -603,6 +616,41 @@ fn mb_plan_pass(mp: &MicrobatchPlan, gpu: Option<&GpuSpec>, path: &str, out: &mu
                 ),
             )),
             _ => {}
+        }
+        if let KernelFreqs::PerClass { memory_mhz, .. } = sc.kernel_freqs {
+            let mpath = format!("{cpath}.memory_mhz");
+            // Unlike core frequencies (K003 range error / K004 grid warn),
+            // memory-class assignments only ever come off the enumerated
+            // hardware grid, so any off-grid value means corruption: one
+            // error code covers range and grid.
+            if let Some(g) = gpu {
+                if memory_mhz < g.f_min_mhz
+                    || memory_mhz > g.f_max_mhz
+                    || (memory_mhz - g.f_min_mhz) % g.f_stride_mhz != 0
+                {
+                    out.push(d(
+                        Code::K070,
+                        &mpath,
+                        format!(
+                            "memory-class frequency {memory_mhz} MHz is outside {}'s \
+                             [{}, {}] MHz range or off its {}-MHz step grid",
+                            g.name, g.f_min_mhz, g.f_max_mhz, g.f_stride_mhz
+                        ),
+                    ));
+                }
+            }
+            if memory_mhz > sc.freq_mhz {
+                out.push(d(
+                    Code::K072,
+                    &mpath,
+                    format!(
+                        "memory-class frequency {memory_mhz} MHz exceeds the slot's core \
+                         frequency {} MHz (raising the memory class past the core only \
+                         wastes energy; likely a corrupted or hand-edited plan)",
+                        sc.freq_mhz
+                    ),
+                ));
+            }
         }
     }
 }
@@ -1102,8 +1150,8 @@ pub fn check_trace_json(j: &Json) -> Vec<Diagnostic> {
     };
     for (key, val) in entries {
         let path = format!("entries[{key}]");
-        let req_freq = match parse_trace_key(key) {
-            Ok(f) => Some(f),
+        let key_info = match parse_trace_key(key) {
+            Ok(info) => Some(info),
             Err(why) => {
                 out.push(d(Code::K031, &path, why));
                 None
@@ -1134,14 +1182,44 @@ pub fn check_trace_json(j: &Json) -> Vec<Diagnostic> {
         let avg = field("avg_freq_mhz", true);
         let _ = field("peak_power_w", false);
         drop(field);
-        if let (Some(f), Some(a)) = (req_freq, avg) {
-            if a > f * (1.0 + REL_TOL) {
+        // `freq_transitions` is optional (zero-transition entries omit it),
+        // but when present it must be a count and consistent with the key:
+        // a uniform-frequency schedule can never switch mid-partition.
+        let transitions = match val.get("freq_transitions") {
+            None => None,
+            Some(v) => match v.as_f64() {
+                Some(x) if x.is_finite() && x >= 0.0 && x.fract() == 0.0 => Some(x),
+                _ => {
+                    out.push(d(
+                        Code::K032,
+                        format!("{path}.freq_transitions"),
+                        "must be a finite non-negative integer",
+                    ));
+                    None
+                }
+            },
+        };
+        if let (Some((f, mem)), Some(a)) = (key_info, avg) {
+            let bound = mem.map_or(f, |m| f.max(m));
+            if a > bound * (1.0 + REL_TOL) {
                 out.push(d(
                     Code::K034,
                     format!("{path}.avg_freq_mhz"),
                     format!(
-                        "average frequency {a} MHz exceeds the requested {f} MHz (throttling \
-                         can only lower it)"
+                        "average frequency {a} MHz exceeds the requested {bound} MHz \
+                         (throttling can only lower it)"
+                    ),
+                ));
+            }
+        }
+        if let (Some((_, mem)), Some(n)) = (key_info, transitions) {
+            if mem.is_none() && n > 0.0 {
+                out.push(d(
+                    Code::K071,
+                    format!("{path}.freq_transitions"),
+                    format!(
+                        "{n} frequency transition(s) recorded for a uniform-frequency key \
+                         (uniform schedules never switch mid-partition)"
                     ),
                 ));
             }
@@ -1150,9 +1228,11 @@ pub fn check_trace_json(j: &Json) -> Vec<Diagnostic> {
     out
 }
 
-/// Validate one trace key (`fp|sms:launch:freq|temp_bits|limit_bits`) and
-/// return the requested frequency in MHz.
-fn parse_trace_key(key: &str) -> Result<f64, String> {
+/// Validate one trace key (`fp|sms:launch:freq|temp_bits|limit_bits`,
+/// where `freq` is `<mhz>` for uniform schedules or `<mhz>m<mem_mhz>` for
+/// per-kernel-class splits) and return the requested core frequency plus
+/// the memory-class frequency when the key carries a split.
+fn parse_trace_key(key: &str) -> Result<(f64, Option<f64>), String> {
     let parts: Vec<&str> = key.split('|').collect();
     if parts.len() != 4 {
         return Err(format!(
@@ -1191,12 +1271,18 @@ fn parse_trace_key(key: &str) -> Result<f64, String> {
             .ok_or_else(|| format!("launch '{}' must be 'seq' or 'c<i>'", mid[1]))?;
         idx.parse::<u32>().map_err(|_| format!("launch '{}' must be 'seq' or 'c<i>'", mid[1]))?;
     }
-    let freq: u32 =
-        mid[2].parse().map_err(|_| format!("frequency '{}' is not an integer", mid[2]))?;
-    if freq == 0 {
-        return Err("frequency must be > 0".to_string());
+    let parse_freq = |text: &str| -> Result<f64, String> {
+        let f: u32 =
+            text.parse().map_err(|_| format!("frequency '{text}' is not an integer"))?;
+        if f == 0 {
+            return Err("frequency must be > 0".to_string());
+        }
+        Ok(f as f64)
+    };
+    match mid[2].split_once('m') {
+        None => Ok((parse_freq(mid[2])?, None)),
+        Some((core, mem)) => Ok((parse_freq(core)?, Some(parse_freq(mem)?))),
     }
-    Ok(freq as f64)
 }
 
 // ---------------------------------------------------------------------------
@@ -1600,7 +1686,7 @@ mod tests {
         let mut configs = BTreeMap::new();
         configs.insert(
             "fwd/attn".to_string(),
-            Schedule { comm_sms: sms, launch: LaunchAt::WithComp(1), freq_mhz: freq },
+            Schedule::uniform(sms, LaunchAt::WithComp(1), freq),
         );
         FrequencyPlan {
             n_stages: 1,
@@ -1695,13 +1781,18 @@ mod tests {
     fn trace_key_roundtrip_ok() {
         let key = crate::backend::trace_key(
             0xdeadbeef,
-            &Schedule { comm_sms: 12, launch: LaunchAt::WithComp(1), freq_mhz: 1410 },
+            &Schedule::uniform(12, LaunchAt::WithComp(1), 1410),
             30.0,
             None,
         );
-        assert_eq!(parse_trace_key(&key), Ok(1410.0));
+        assert_eq!(parse_trace_key(&key), Ok((1410.0, None)));
         let capped = crate::backend::trace_key(1, &Schedule::sequential(990), 45.5, Some(250.0));
-        assert_eq!(parse_trace_key(&capped), Ok(990.0));
+        assert_eq!(parse_trace_key(&capped), Ok((990.0, None)));
+        // Per-kernel splits extend the frequency field.
+        let mut split = Schedule::uniform(12, LaunchAt::WithComp(1), 1410);
+        split.kernel_freqs = KernelFreqs::PerClass { compute_mhz: 1410, memory_mhz: 900 };
+        let skey = crate::backend::trace_key(1, &split, 30.0, None);
+        assert_eq!(parse_trace_key(&skey), Ok((1410.0, Some(900.0))));
     }
 
     #[test]
@@ -1712,6 +1803,9 @@ mod tests {
         assert!(parse_trace_key("xyz|12:c1:1410|0000000000000000|ffffffffffffffff").is_err());
         // NaN temperature bits
         assert!(parse_trace_key("0000000000000000|12:c1:1410|7ff8000000000000|ffffffffffffffff").is_err());
+        // Malformed per-kernel frequency splits
+        assert!(parse_trace_key("0000000000000000|12:c1:1410m0|0000000000000000|ffffffffffffffff").is_err());
+        assert!(parse_trace_key("0000000000000000|12:c1:1410mx|0000000000000000|ffffffffffffffff").is_err());
     }
 
     #[test]
@@ -1764,11 +1858,75 @@ mod tests {
             Code::ALL.iter().copied().filter(|c| c.severity() == Severity::Warn).collect();
         assert_eq!(
             warns,
-            vec![Code::K004, Code::K008, Code::K015, Code::K016, Code::K024, Code::K033, Code::K042]
+            vec![
+                Code::K004,
+                Code::K008,
+                Code::K015,
+                Code::K016,
+                Code::K024,
+                Code::K033,
+                Code::K042,
+                Code::K063,
+                Code::K072,
+            ]
         );
         for c in Code::ALL {
             assert!(c.as_str().starts_with('K'));
             assert!(!c.summary().is_empty());
         }
+    }
+
+    fn per_class_plan(freq: u32, memory: u32) -> FrequencyPlan {
+        let mut p = tiny_plan(freq, 12);
+        let sc = p.slots[0].plan.configs.get_mut("fwd/attn").expect("config present");
+        sc.kernel_freqs = KernelFreqs::PerClass { compute_mhz: freq, memory_mhz: memory };
+        p
+    }
+
+    #[test]
+    fn per_kernel_memory_freq_clean_on_grid() {
+        let g = GpuSpec::a100();
+        let diags = check_frequency_plan(&per_class_plan(1410, 900), Some(&g));
+        assert!(diags.is_empty(), "{diags:?}");
+    }
+
+    #[test]
+    fn per_kernel_memory_freq_off_grid_is_k070() {
+        let g = GpuSpec::a100();
+        let diags = check_frequency_plan(&per_class_plan(1410, 907), Some(&g));
+        assert_eq!(codes(&diags), vec![Code::K070]);
+        assert!(has_errors(&diags));
+        // Below the supported range trips the same code.
+        let low = check_frequency_plan(&per_class_plan(1410, 60), Some(&g));
+        assert!(codes(&low).contains(&Code::K070), "{low:?}");
+    }
+
+    #[test]
+    fn memory_above_core_is_k072_warn() {
+        let g = GpuSpec::a100();
+        let diags = check_frequency_plan(&per_class_plan(900, 1410), Some(&g));
+        assert_eq!(codes(&diags), vec![Code::K072]);
+        assert!(!has_errors(&diags));
+    }
+
+    #[test]
+    fn uniform_key_with_transitions_is_k071() {
+        let entry = r#"{"time_s":0.01,"dyn_j":1.0,"static_j":0.5,"exposed_comm_s":0.0,"avg_freq_mhz":1400.0,"throttled":false,"peak_power_w":300.0,"freq_transitions":2}"#;
+        let sched = Schedule::uniform(12, LaunchAt::WithComp(1), 1410);
+        let uni = crate::backend::trace_key(1, &sched, 30.0, None);
+        let raw = format!(
+            "{{\"trace\":\"kareus_exec_trace\",\"version\":1,\"entries\":{{\"{uni}\":{entry}}}}}"
+        );
+        let r = check_text(&raw, "mem", None);
+        assert!(codes(&r.diagnostics).contains(&Code::K071), "{:?}", r.diagnostics);
+        // The same entry under a per-kernel key is legitimate.
+        let mut split = Schedule::uniform(12, LaunchAt::WithComp(1), 1410);
+        split.kernel_freqs = KernelFreqs::PerClass { compute_mhz: 1410, memory_mhz: 900 };
+        let skey = crate::backend::trace_key(1, &split, 30.0, None);
+        let raw2 = format!(
+            "{{\"trace\":\"kareus_exec_trace\",\"version\":1,\"entries\":{{\"{skey}\":{entry}}}}}"
+        );
+        let r2 = check_text(&raw2, "mem", None);
+        assert!(r2.diagnostics.is_empty(), "{:?}", r2.diagnostics);
     }
 }

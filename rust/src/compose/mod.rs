@@ -23,7 +23,7 @@ use crate::frontier::{Frontier, Point};
 use crate::mbo::MboResult;
 use crate::partition::Partition;
 use crate::profiler::Profiler;
-use crate::sim::exec::{LaunchAt, Schedule};
+use crate::sim::exec::{KernelFreqs, LaunchAt, Schedule};
 use crate::sim::gpu::GpuSpec;
 use crate::sim::kernel::Kernel;
 use crate::workload::MicrobatchWork;
@@ -144,8 +144,11 @@ pub fn eval_overlapped_microbatch_fp(
     for (i, part) in partitions.iter().enumerate() {
         let mut sched = *configs
             .get(&part.ptype)
-            .unwrap_or(&Schedule { comm_sms: 12, launch: LaunchAt::WithComp(0), freq_mhz });
+            .unwrap_or(&Schedule::uniform(12, LaunchAt::WithComp(0), freq_mhz));
         sched.freq_mhz = freq_mhz;
+        // Per-class assignments keep their memory frequency but re-pin the
+        // compute class to the sweep frequency (no-op for Uniform).
+        sched.kernel_freqs = sched.kernel_freqs.rebased(freq_mhz);
         // A partition's execution depends only on its own schedule, so the
         // Cartesian product over other types re-measures identical
         // (partition, schedule) pairs constantly — the shared cache
@@ -306,30 +309,36 @@ pub fn microbatch_frontier(
     seq_work: Option<&MicrobatchWork>,
     m: Measurer<'_>,
 ) -> MbFrontier {
-    // Distinct (sms, launch) configs that appear on each type's partition
-    // frontier — the schedule vocabulary the Cartesian product ranges over.
-    let mut type_configs: Vec<(String, Vec<(u32, LaunchAt)>)> = Vec::new();
+    // Distinct (sms, launch, kernel freqs) configs that appear on each
+    // type's partition frontier — the schedule vocabulary the Cartesian
+    // product ranges over. The kernel-frequency component is `Uniform`
+    // throughout at partition granularity, so the vocabulary (and the
+    // resulting frontier) is unchanged from the pre-kernel-DVFS layout.
+    let mut type_configs: Vec<(String, Vec<(u32, LaunchAt, KernelFreqs)>)> = Vec::new();
     for part in partitions {
         if part.comm.is_none() {
             continue;
         }
         let Some(res) = mbo.get(&part.ptype) else { continue };
-        let mut cfgs: Vec<(u32, LaunchAt)> = Vec::new();
+        let mut cfgs: Vec<(u32, LaunchAt, KernelFreqs)> = Vec::new();
         for p in res.frontier.points() {
             let s = res.evaluated[p.tag].sched;
-            if !cfgs.contains(&(s.comm_sms, s.launch)) {
-                cfgs.push((s.comm_sms, s.launch));
+            if !cfgs.contains(&(s.comm_sms, s.launch, s.kernel_freqs)) {
+                cfgs.push((s.comm_sms, s.launch, s.kernel_freqs));
             }
         }
         if cfgs.is_empty() {
-            cfgs.push((12, LaunchAt::WithComp(0)));
+            cfgs.push((12, LaunchAt::WithComp(0), KernelFreqs::Uniform));
         }
         cfgs.truncate(8); // keep enumeration tractable
         // Always include nanobatching's default configuration so Kareus's
         // frontier dominates Nanobatching+Perseus by construction (the MBO
         // may not have kept it if it never landed on a partition frontier).
-        let default_cfg =
-            (crate::baselines::NANO_DEFAULT_SMS, crate::baselines::NANO_DEFAULT_LAUNCH);
+        let default_cfg = (
+            crate::baselines::NANO_DEFAULT_SMS,
+            crate::baselines::NANO_DEFAULT_LAUNCH,
+            KernelFreqs::Uniform,
+        );
         if !cfgs.contains(&default_cfg) {
             cfgs.push(default_cfg);
         }
@@ -346,9 +355,17 @@ pub fn microbatch_frontier(
         for (ptype, cfgs) in &type_configs {
             let mut next = Vec::with_capacity(combos.len() * cfgs.len());
             for base in &combos {
-                for &(sms, launch) in cfgs {
+                for &(sms, launch, kf) in cfgs {
                     let mut map = base.clone();
-                    map.insert(ptype.clone(), Schedule { comm_sms: sms, launch, freq_mhz: f });
+                    map.insert(
+                        ptype.clone(),
+                        Schedule {
+                            comm_sms: sms,
+                            launch,
+                            freq_mhz: f,
+                            kernel_freqs: kf.rebased(f),
+                        },
+                    );
                     next.push(map);
                 }
             }
@@ -407,7 +424,7 @@ pub fn optimize_all_partitions_with(
     comm_group: u32,
     engine: &EngineConfig,
 ) -> BTreeMap<String, MboResult> {
-    use crate::mbo::{optimize_partition_with, MboParams};
+    use crate::mbo::{optimize_partition_with_granularity, MboParams};
     use crate::profiler::ProfilerConfig;
     let backend_fp = engine.backend.fingerprint();
     let strategy_fp = engine.strategy.fingerprint();
@@ -441,6 +458,7 @@ pub fn optimize_all_partitions_with(
                 comm_group,
                 &params,
                 &prof_cfg,
+                engine.freq_granularity,
             );
             if let Some(r) = engine.mbo_cache.get(key) {
                 return (part.ptype.clone(), r);
@@ -455,7 +473,13 @@ pub fn optimize_all_partitions_with(
             let mut prof = Profiler::new(gpu.clone(), prof_cfg, seed)
                 .with_cache(engine.measure_cache.clone())
                 .with_backend(engine.backend.clone());
-            let r = optimize_partition_with(strategy.as_ref(), &mut prof, &part, comm_group);
+            let r = optimize_partition_with_granularity(
+                strategy.as_ref(),
+                &mut prof,
+                &part,
+                comm_group,
+                engine.freq_granularity,
+            );
             engine.mbo_cache.put(key, r.clone());
             (part.ptype.clone(), r)
         },
@@ -506,7 +530,7 @@ mod tests {
         for p in &parts {
             configs.insert(
                 p.ptype.clone(),
-                Schedule { comm_sms: 12, launch: LaunchAt::WithComp(1), freq_mhz: 1410 },
+                Schedule::uniform(12, LaunchAt::WithComp(1), 1410),
             );
         }
         let ovl =
@@ -567,7 +591,7 @@ mod tests {
         for p in &parts {
             configs.insert(
                 p.ptype.clone(),
-                Schedule { comm_sms: 12, launch: LaunchAt::WithComp(1), freq_mhz: 1410 },
+                Schedule::uniform(12, LaunchAt::WithComp(1), 1410),
             );
         }
         let cache = MeasureCache::new();

@@ -40,6 +40,7 @@ use std::sync::{Arc, Mutex};
 
 use crate::backend::{ExecutionBackend, Measurer, SimBackend};
 use crate::baselines::{run_system_with, System, SystemResult};
+use crate::mbo::space::FreqGranularity;
 use crate::mbo::{MboParams, MboResult, StrategyKind};
 use crate::partition::Partition;
 use crate::profiler::{MeasureCache, ProfilerConfig};
@@ -109,6 +110,13 @@ pub struct EngineConfig {
     /// Its fingerprint is folded into every [`MboCache`] key, so results
     /// from different strategies never alias.
     pub strategy: StrategyKind,
+    /// Frequency granularity of the candidate space the optimization
+    /// layer searches (CLI: `--freq-granularity`). `Partition` is the
+    /// paper's uniform-frequency model and the default; `KernelClass`
+    /// multiplies in the per-kernel-class memory-frequency axis. Folded
+    /// into [`MboCache`] keys (only when non-default, so partition-level
+    /// keys stay byte-identical to pre-kernel-DVFS builds).
+    pub freq_granularity: FreqGranularity,
     /// Drift-monitor knobs for the online replanning runtime
     /// ([`runtime::TrainingLoop`](crate::runtime::TrainingLoop)). Not part
     /// of any cache key: replanning consumes optimization results, it
@@ -124,6 +132,7 @@ impl Default for EngineConfig {
             mbo_cache: MboCache::default(),
             backend: Arc::new(SimBackend),
             strategy: StrategyKind::MultiPass,
+            freq_granularity: FreqGranularity::Partition,
             replan: ReplanConfig::default(),
         }
     }
@@ -163,6 +172,12 @@ impl EngineConfig {
     /// Swap the replanning knobs (builder style).
     pub fn with_replan(mut self, replan: ReplanConfig) -> Self {
         self.replan = replan;
+        self
+    }
+
+    /// Swap the frequency granularity of the search space (builder style).
+    pub fn with_freq_granularity(mut self, granularity: FreqGranularity) -> Self {
+        self.freq_granularity = granularity;
         self
     }
 
@@ -212,6 +227,11 @@ impl MboCache {
     /// ever aliasing. Exhaustive destructuring (no `..`) turns a future
     /// field on either params struct into a compile error here instead of
     /// a silent stale-cache-hit.
+    ///
+    /// The frequency granularity is folded in only when it differs from
+    /// the default [`FreqGranularity::Partition`]: partition-level keys
+    /// hash byte-identically to builds that predate the kernel-DVFS axis
+    /// (the differential parity suite pins this).
     #[allow(clippy::too_many_arguments)]
     pub fn key(
         backend_fp: u64,
@@ -221,6 +241,7 @@ impl MboCache {
         comm_group: u32,
         params: &MboParams,
         prof: &ProfilerConfig,
+        granularity: FreqGranularity,
     ) -> u64 {
         let ProfilerConfig { window_s, cooldown_s, warmup_s, setup_s } = prof;
         let MboParams {
@@ -255,6 +276,9 @@ impl MboCache {
             .write_f64(*cooldown_s)
             .write_f64(*warmup_s)
             .write_f64(*setup_s);
+        if granularity != FreqGranularity::Partition {
+            h.write_str(granularity.as_str());
+        }
         h.finish()
     }
 
@@ -442,24 +466,30 @@ pub fn sweep_json(
             ])
         })
         .collect();
-    obj(vec![
+    let mut top = vec![
         ("bench", s("kareus_sweep")),
         ("version", num(1.0)),
         ("backend", s(engine.backend.name())),
         ("threads", num(engine.worker_threads() as f64)),
-        ("scenarios", arr(scenarios)),
-        (
-            "cache",
-            obj(vec![
-                // Entry count is also scheduling-dependent once the cache
-                // bound evicts, so deterministic mode nulls it too.
-                ("exec_entries", timing(engine.measure_cache.len() as f64)),
-                ("exec_hits", timing(engine.measure_cache.hits() as f64)),
-                ("exec_misses", timing(engine.measure_cache.misses() as f64)),
-                ("mbo_entries", num(engine.mbo_cache.len() as f64)),
-            ]),
-        ),
-    ])
+    ];
+    if engine.freq_granularity != FreqGranularity::Partition {
+        // Emitted only for the non-default axis so partition-level sweep
+        // dumps stay byte-identical to pre-kernel-DVFS builds.
+        top.push(("freq_granularity", s(engine.freq_granularity.as_str())));
+    }
+    top.push(("scenarios", arr(scenarios)));
+    top.push((
+        "cache",
+        obj(vec![
+            // Entry count is also scheduling-dependent once the cache
+            // bound evicts, so deterministic mode nulls it too.
+            ("exec_entries", timing(engine.measure_cache.len() as f64)),
+            ("exec_hits", timing(engine.measure_cache.hits() as f64)),
+            ("exec_misses", timing(engine.measure_cache.misses() as f64)),
+            ("mbo_entries", num(engine.mbo_cache.len() as f64)),
+        ]),
+    ));
+    obj(top)
 }
 
 /// Parse a parallelism spec like `tp8pp2`, `tp4cp2pp2`, or `cp2tp4`

@@ -4,6 +4,7 @@
 //!   paper     --exp <id> | --all          regenerate paper tables/figures
 //!   optimize  --model <m> --tp --cp --pp --microbatch --seq [--system <s>]
 //!             [--strategy mbo|exhaustive|random|halving]
+//!             [--freq-granularity partition|kernel]
 //!             [--deadline S | --budget J | --power-cap W]
 //!   sweep     --gpus a100,h100 --models qwen1.7b,llama3b --pars tp8pp2 …
 //!             [--backend sim|trace:<path>]
@@ -36,6 +37,7 @@ use kareus::engine::{
     parse_model, parse_parallelism, parse_system, run_sweep, scenario_matrix, sweep_json,
     EngineConfig,
 };
+use kareus::mbo::space::FreqGranularity;
 use kareus::mbo::StrategyKind;
 use kareus::paper;
 use kareus::runtime::{DriftSchedule, LoopConfig, ReplanPolicy, Runtime, TrainingLoop};
@@ -83,7 +85,7 @@ fn main() {
                 "kareus — joint dynamic+static energy optimization for large model training\n\
                  usage:\n  kareus paper --exp <id>|--all\n  kareus optimize --model qwen1.7b|llama3b|llama70b \
                  [--tp 8 --cp 1 --pp 2 --microbatch 8 --seq 4096 --nmb 8] [--system kareus] \
-                 [--strategy mbo|exhaustive|random|halving] \
+                 [--strategy mbo|exhaustive|random|halving] [--freq-granularity partition|kernel] \
                  [--deadline S|--budget J|--power-cap W]\n  kareus sweep [--gpus a100,h100,v100] [--models qwen1.7b,llama3b] \
                  [--pars tp8pp2,cp2tp4pp2] [--systems kareus,n+p] [--microbatch 8 --seq 4096 --nmb 8] \
                  [--seed N] [--threads N] [--strategy S] [--backend sim|trace:FILE] [--out FILE.json]\n  \
@@ -106,6 +108,8 @@ fn main() {
                  \n\
                  --strategy picks the per-partition search (default mbo: the paper's multi-pass MBO;\n\
                  halving: successive-halving racing; exhaustive: measure everything; random: baseline).\n\
+                 --freq-granularity kernel adds the per-kernel-class DVFS axis (memory-class\n\
+                 frequency searched independently of the compute class; default: partition).\n\
                  --backend trace:FILE records measurements on the first run (FILE absent) and\n\
                  replays them byte-identically, simulator disabled, on later runs (FILE present)."
             );
@@ -326,9 +330,20 @@ fn parse_strategy(args: &Args) -> Result<StrategyKind, String> {
         .ok_or_else(|| format!("unknown strategy '{spec}' (mbo | exhaustive | random | halving)"))
 }
 
-/// Resolve `--backend` + `--threads` + `--strategy` into an engine, plus
-/// the trace handle when a trace backend is active (record mode must be
-/// saved afterwards).
+/// Resolve `--freq-granularity` into the per-partition frequency axis
+/// (default partition: the paper's model; kernel adds the per-class axis).
+fn parse_freq_granularity(args: &Args) -> Result<FreqGranularity, String> {
+    if args.has_flag("freq-granularity") {
+        return Err("--freq-granularity requires a value (partition | kernel)".into());
+    }
+    let spec = args.get("freq-granularity").unwrap_or("partition");
+    FreqGranularity::parse(spec)
+        .ok_or_else(|| format!("unknown --freq-granularity '{spec}' (partition | kernel)"))
+}
+
+/// Resolve `--backend` + `--threads` + `--strategy` + `--freq-granularity`
+/// into an engine, plus the trace handle when a trace backend is active
+/// (record mode must be saved afterwards).
 fn build_engine(args: &Args) -> Result<(EngineConfig, Option<Arc<TraceBackend>>), String> {
     // A bare `--backend` followed by another option parses as a flag;
     // don't silently fall back to the simulator.
@@ -337,7 +352,8 @@ fn build_engine(args: &Args) -> Result<(EngineConfig, Option<Arc<TraceBackend>>)
     }
     let engine = EngineConfig::new()
         .with_threads(args.get_u32("threads", 0) as usize)
-        .with_strategy(parse_strategy(args)?);
+        .with_strategy(parse_strategy(args)?)
+        .with_freq_granularity(parse_freq_granularity(args)?);
     match parse_backend_spec(args.get("backend").unwrap_or("sim"))? {
         BackendSpec::Sim => Ok((engine, None)),
         BackendSpec::Trace(path) => {
@@ -415,8 +431,16 @@ fn cmd_optimize(args: &Args) -> i32 {
             return 2;
         }
     };
-    let coord = Coordinator::new(GpuSpec::a100(), cfg)
-        .with_engine(EngineConfig::new().with_strategy(strategy));
+    let granularity = match parse_freq_granularity(args) {
+        Ok(g) => g,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let coord = Coordinator::new(GpuSpec::a100(), cfg).with_engine(
+        EngineConfig::new().with_strategy(strategy).with_freq_granularity(granularity),
+    );
     eprintln!(
         "optimizing {} with {} ({} search) ...",
         cfg.label(),

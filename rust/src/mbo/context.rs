@@ -165,7 +165,21 @@ impl<'a> EvalContext<'a> {
     /// enumerates the candidate space and hoists the partition fingerprint
     /// so strategies never rehash kernels per probe.
     pub fn new(profiler: &'a mut Profiler, part: &'a Partition, comm_group: u32) -> Self {
-        let space = space::candidate_space(&profiler.gpu, part, comm_group);
+        Self::new_with(profiler, part, comm_group, space::FreqGranularity::Partition)
+    }
+
+    /// [`new`](Self::new) over the candidate space of an explicit
+    /// frequency granularity. Strategies are granularity-agnostic: the
+    /// space is just larger and [`space::features`] wider for
+    /// `KernelClass`, so the incremental planes, dedup bitmap, and budget
+    /// machinery are reused unchanged.
+    pub fn new_with(
+        profiler: &'a mut Profiler,
+        part: &'a Partition,
+        comm_group: u32,
+        granularity: space::FreqGranularity,
+    ) -> Self {
+        let space = space::candidate_space_with(&profiler.gpu, part, comm_group, granularity);
         let n = space.len();
         let planes = Planes::new(profiler.gpu.static_w);
         let part_fp = part.fingerprint();

@@ -16,7 +16,19 @@ use super::{space, MboResult};
 /// Evaluate every candidate with the noise-free oracle; return the true
 /// frontier on the (time, total energy) plane.
 pub fn exhaustive_frontier(gpu: &GpuSpec, part: &Partition, comm_group: u32) -> Frontier {
-    let cands = space::candidate_space(gpu, part, comm_group);
+    exhaustive_frontier_with(gpu, part, comm_group, space::FreqGranularity::Partition)
+}
+
+/// [`exhaustive_frontier`] over the candidate space of an explicit
+/// frequency granularity — the ground truth the kernel-dvfs ablation
+/// compares per-class against partition-level frontiers with.
+pub fn exhaustive_frontier_with(
+    gpu: &GpuSpec,
+    part: &Partition,
+    comm_group: u32,
+    granularity: space::FreqGranularity,
+) -> Frontier {
+    let cands = space::candidate_space_with(gpu, part, comm_group, granularity);
     let pts: Vec<Point> = cands
         .iter()
         .enumerate()
@@ -118,7 +130,7 @@ pub fn launch_timing_frontier(
     let mut pts: Vec<Point> = Vec::new();
     // Overlapped starts.
     for i in 0..n {
-        let s = Schedule { comm_sms, launch: LaunchAt::WithComp(i), freq_mhz };
+        let s = Schedule::uniform(comm_sms, LaunchAt::WithComp(i), freq_mhz);
         let r = execute_partition(gpu, &part.comps, part.comm.as_ref(), &s, temp, limit);
         pts.push(Point::new(r.time_s, r.total_j(), i));
     }
@@ -126,7 +138,7 @@ pub fn launch_timing_frontier(
     // rate) + suffix solo. Position is irrelevant to totals in our model
     // (no inter-kernel state), but enumerate for fidelity to the DP.
     for p in 0..=n {
-        let s = Schedule { comm_sms, launch: LaunchAt::WithComp(0), freq_mhz };
+        let s = Schedule::uniform(comm_sms, LaunchAt::WithComp(0), freq_mhz);
         let prefix = execute_partition(gpu, &part.comps[..p], None, &s, temp, limit);
         let comm = execute_partition(gpu, &[], part.comm.as_ref(), &s, temp, limit);
         let suffix = execute_partition(gpu, &part.comps[p..], None, &s, temp, limit);

@@ -37,8 +37,8 @@ pub use context::{EvalBudget, EvalContext, Planes};
 pub use multipass::MultiPassMbo;
 pub use racing::{HalvingParams, RandomSearch, SuccessiveHalving};
 pub use strategy::{
-    optimize_partition_warm, optimize_partition_with, ExhaustiveStrategy, SearchStrategy,
-    StrategyKind,
+    optimize_partition_warm, optimize_partition_with, optimize_partition_with_granularity,
+    ExhaustiveStrategy, SearchStrategy, StrategyKind,
 };
 
 use crate::frontier::Frontier;

@@ -2,8 +2,40 @@
 //! Appendix C ranges).
 
 use crate::partition::Partition;
-use crate::sim::exec::{LaunchAt, Schedule};
+use crate::sim::exec::{KernelFreqs, LaunchAt, Schedule};
 use crate::sim::gpu::GpuSpec;
+
+/// Frequency-assignment granularity of the candidate space (the
+/// kernel-level DVFS axis).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum FreqGranularity {
+    /// One uniform frequency per partition schedule (the paper's model;
+    /// every emitted schedule is [`KernelFreqs::Uniform`]).
+    #[default]
+    Partition,
+    /// Per-kernel-class frequencies: the compute class sweeps the search
+    /// range as before while the memory class independently sweeps
+    /// [`GpuSpec::memory_class_freqs`]; every emitted schedule is
+    /// [`KernelFreqs::PerClass`].
+    KernelClass,
+}
+
+impl FreqGranularity {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FreqGranularity::Partition => "partition",
+            FreqGranularity::KernelClass => "kernel",
+        }
+    }
+
+    pub fn parse(spec: &str) -> Option<FreqGranularity> {
+        match spec {
+            "partition" => Some(FreqGranularity::Partition),
+            "kernel" | "kernel-class" => Some(FreqGranularity::KernelClass),
+            _ => None,
+        }
+    }
+}
 
 /// Enumerate the candidate schedules for a partition.
 ///
@@ -15,19 +47,59 @@ use crate::sim::gpu::GpuSpec;
 ///   communication (e.g. launching with the last Linear2, Figure 3a) are
 ///   excluded (App. C).
 pub fn candidate_space(gpu: &GpuSpec, part: &Partition, comm_group: u32) -> Vec<Schedule> {
+    candidate_space_with(gpu, part, comm_group, FreqGranularity::Partition)
+}
+
+/// [`candidate_space`] with an explicit frequency granularity.
+/// `Partition` reproduces the legacy space exactly (same schedules, same
+/// order); `KernelClass` multiplies in a memory-class frequency axis, so
+/// the census arithmetic becomes |freqs| × |mem freqs| × |SMs| × |timings|.
+pub fn candidate_space_with(
+    gpu: &GpuSpec,
+    part: &Partition,
+    comm_group: u32,
+    granularity: FreqGranularity,
+) -> Vec<Schedule> {
     let freqs = gpu.search_freqs();
     let sms = sm_allocations(comm_group);
     let timings = launch_timings(gpu, part);
-    let mut out = Vec::with_capacity(freqs.len() * sms.len() * timings.len());
-    for &f in &freqs {
-        if part.comm.is_none() {
-            // No communication: only frequency matters.
-            out.push(Schedule { comm_sms: 0, launch: LaunchAt::WithComp(0), freq_mhz: f });
-            continue;
+    let mem_freqs: Vec<u32> = match granularity {
+        FreqGranularity::Partition => Vec::new(),
+        FreqGranularity::KernelClass => gpu.memory_class_freqs(),
+    };
+    let kf_options = |f: u32| -> Vec<KernelFreqs> {
+        if mem_freqs.is_empty() {
+            vec![KernelFreqs::Uniform]
+        } else {
+            mem_freqs
+                .iter()
+                .map(|&m| KernelFreqs::PerClass { compute_mhz: f, memory_mhz: m })
+                .collect()
         }
-        for &s in &sms {
-            for &t in &timings {
-                out.push(Schedule { comm_sms: s, launch: LaunchAt::WithComp(t), freq_mhz: f });
+    };
+    let per_freq = mem_freqs.len().max(1);
+    let mut out = Vec::with_capacity(freqs.len() * per_freq * sms.len() * timings.len());
+    for &f in &freqs {
+        for kf in kf_options(f) {
+            if part.comm.is_none() {
+                // No communication: only the frequency axes matter.
+                out.push(Schedule {
+                    comm_sms: 0,
+                    launch: LaunchAt::WithComp(0),
+                    freq_mhz: f,
+                    kernel_freqs: kf,
+                });
+                continue;
+            }
+            for &s in &sms {
+                for &t in &timings {
+                    out.push(Schedule {
+                        comm_sms: s,
+                        launch: LaunchAt::WithComp(t),
+                        freq_mhz: f,
+                        kernel_freqs: kf,
+                    });
+                }
             }
         }
     }
@@ -66,13 +138,21 @@ pub fn launch_timings(gpu: &GpuSpec, part: &Partition) -> Vec<usize> {
     out
 }
 
-/// Feature vector for the surrogate models: [freq, sms, launch index].
+/// Feature vector for the surrogate models: [freq, sms, launch index] for
+/// uniform-frequency schedules, plus the memory-class frequency as a 4th
+/// feature for per-class schedules. Any one candidate space is homogeneous
+/// in [`KernelFreqs`] variant, so feature width is uniform per space.
 pub fn features(s: &Schedule) -> Vec<f64> {
     let launch = match s.launch {
         LaunchAt::Sequential => -1.0,
         LaunchAt::WithComp(i) => i as f64,
     };
-    vec![s.freq_mhz as f64, s.comm_sms as f64, launch]
+    match s.kernel_freqs {
+        KernelFreqs::Uniform => vec![s.freq_mhz as f64, s.comm_sms as f64, launch],
+        KernelFreqs::PerClass { memory_mhz, .. } => {
+            vec![s.freq_mhz as f64, s.comm_sms as f64, launch, memory_mhz as f64]
+        }
+    }
 }
 
 #[cfg(test)]
@@ -131,8 +211,14 @@ mod tests {
 
     #[test]
     fn features_roundtrip() {
-        let s = Schedule { comm_sms: 12, launch: LaunchAt::WithComp(2), freq_mhz: 1200 };
+        let s = Schedule::uniform(12, LaunchAt::WithComp(2), 1200);
         assert_eq!(features(&s), vec![1200.0, 12.0, 2.0]);
+        // Per-class schedules expose the memory frequency as a 4th feature.
+        let k = Schedule {
+            kernel_freqs: KernelFreqs::PerClass { compute_mhz: 1200, memory_mhz: 690 },
+            ..s
+        };
+        assert_eq!(features(&k), vec![1200.0, 12.0, 2.0, 690.0]);
     }
 
     #[test]
@@ -186,5 +272,71 @@ mod tests {
         // And the census's own product identity holds for its shape.
         let c = crate::mbo::exhaustive::census(9, 13.0, 16);
         assert_eq!(c.total, c.n_freqs * c.n_sms * c.n_groupings);
+    }
+
+    #[test]
+    fn partition_granularity_is_the_legacy_space() {
+        let g = GpuSpec::a100();
+        let p = part(4e8);
+        let legacy = candidate_space(&g, &p, 8);
+        let explicit = candidate_space_with(&g, &p, 8, FreqGranularity::Partition);
+        assert_eq!(legacy, explicit);
+        assert!(legacy.iter().all(|s| s.kernel_freqs == KernelFreqs::Uniform));
+    }
+
+    #[test]
+    fn kernel_class_space_is_the_full_product() {
+        let g = GpuSpec::a100();
+        let p = part(4e8);
+        let space = candidate_space_with(&g, &p, 8, FreqGranularity::KernelClass);
+        let expected = g.search_freqs().len()
+            * g.memory_class_freqs().len()
+            * sm_allocations(8).len()
+            * launch_timings(&g, &p).len();
+        assert_eq!(space.len(), expected);
+        // Homogeneously per-class, base frequency == compute frequency, and
+        // every frequency on the hardware grid.
+        for s in &space {
+            match s.kernel_freqs {
+                KernelFreqs::PerClass { compute_mhz, memory_mhz } => {
+                    assert_eq!(compute_mhz, s.freq_mhz);
+                    assert_eq!((memory_mhz - g.f_min_mhz) % g.f_stride_mhz, 0);
+                    assert!(memory_mhz >= g.f_min_mhz && memory_mhz <= g.f_max_mhz);
+                }
+                KernelFreqs::Uniform => panic!("kernel-class space emitted a Uniform schedule"),
+            }
+        }
+        // No-comm partitions keep one candidate per frequency *pair*.
+        let mut nc = part(1e8);
+        nc.comm = None;
+        let nc_space = candidate_space_with(&g, &nc, 8, FreqGranularity::KernelClass);
+        assert_eq!(nc_space.len(), g.search_freqs().len() * g.memory_class_freqs().len());
+    }
+
+    #[test]
+    fn kernel_class_space_contains_every_uniform_point() {
+        // For each search frequency f the pair (compute=f, memory=f) is in
+        // the space; it executes bit-identically to Uniform{f}, so the
+        // kernel-level frontier can never be worse than partition-level.
+        let g = GpuSpec::a100();
+        let p = part(4e8);
+        let space = candidate_space_with(&g, &p, 8, FreqGranularity::KernelClass);
+        for &f in &g.search_freqs() {
+            let diag = KernelFreqs::PerClass { compute_mhz: f, memory_mhz: f };
+            assert!(
+                space.iter().any(|s| s.kernel_freqs == diag),
+                "missing diagonal pair at {f} MHz"
+            );
+        }
+    }
+
+    #[test]
+    fn granularity_names_roundtrip() {
+        for gr in [FreqGranularity::Partition, FreqGranularity::KernelClass] {
+            assert_eq!(FreqGranularity::parse(gr.as_str()), Some(gr));
+        }
+        assert_eq!(FreqGranularity::parse("kernel-class"), Some(FreqGranularity::KernelClass));
+        assert_eq!(FreqGranularity::parse("per-kernel"), None);
+        assert_eq!(FreqGranularity::default(), FreqGranularity::Partition);
     }
 }

@@ -55,6 +55,20 @@ pub fn optimize_partition_with(
     strategy.optimize(&mut ctx)
 }
 
+/// [`optimize_partition_with`] over an explicit frequency granularity:
+/// the context enumerates the (possibly per-kernel-class) candidate space
+/// and the strategy runs unchanged over it.
+pub fn optimize_partition_with_granularity(
+    strategy: &dyn SearchStrategy,
+    profiler: &mut Profiler,
+    part: &Partition,
+    comm_group: u32,
+    granularity: crate::mbo::space::FreqGranularity,
+) -> MboResult {
+    let mut ctx = EvalContext::new_with(profiler, part, comm_group, granularity);
+    strategy.optimize(&mut ctx)
+}
+
 /// Warm-start entry point: run `strategy` on a context pre-seeded from a
 /// `prior` result over the same (partition, comm group) — previously
 /// measured candidates are replayed into the planes and the dedup bitmap

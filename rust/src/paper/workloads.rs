@@ -99,6 +99,27 @@ pub fn strategy_ablation_partition() -> crate::partition::Partition {
     }
 }
 
+/// The pinned memory-heavy partition of the kernel-DVFS ablation
+/// (`paper --exp kernel-dvfs`) and the `tests/kernel_dvfs.rs` domination
+/// bound. Its fused Grouped kernel sits at ~100 FLOP/B — below the A100
+/// roofline ridge at every search frequency, so its time is HBM-limited
+/// while its compute power still scales ~f²: per-kernel-class DVFS can
+/// downclock it at near-zero time cost. Change it only together with
+/// those bounds.
+pub fn kernel_dvfs_membound_partition() -> crate::partition::Partition {
+    use crate::sim::kernel::{Kernel, KernelKind};
+    crate::partition::Partition {
+        ptype: "fwd/fused".into(),
+        comps: vec![
+            Kernel::comp("Linear1", KernelKind::Linear, 9e11, 2.5e9),
+            Kernel::comp("FusedGate", KernelKind::Grouped, 1.2e12, 1.2e10),
+            Kernel::comp("Linear2", KernelKind::Linear, 9e11, 2.5e9),
+        ],
+        comm: Some(Kernel::comm("AR", KernelKind::AllReduce, 6e8)),
+        count: 28,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

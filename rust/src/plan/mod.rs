@@ -17,7 +17,7 @@ use std::collections::BTreeMap;
 
 use crate::compose::MicrobatchPlan;
 use crate::pipeline::{IterationPlan, StageMenu};
-use crate::sim::exec::{LaunchAt, Schedule};
+use crate::sim::exec::{KernelFreqs, LaunchAt, Schedule};
 use crate::util::json::{arr, num, obj, s, Json};
 
 /// One deployed slot: the microbatch plan chosen for (stage, mb, dir).
@@ -94,16 +94,51 @@ impl FrequencyPlan {
         span
     }
 
+    /// (min, max) deployed frequency across all slots *including*
+    /// per-kernel-class assignments: wherever a schedule carries a
+    /// [`KernelFreqs::PerClass`] split, both its compute and memory
+    /// frequencies widen the span. Equals [`freq_span_mhz`]
+    /// (`Self::freq_span_mhz`) for plans with uniform kernel frequencies.
+    pub fn kernel_freq_span_mhz(&self) -> Option<(u32, u32)> {
+        fn fold(span: Option<(u32, u32)>, f: u32) -> Option<(u32, u32)> {
+            Some(match span {
+                None => (f, f),
+                Some((lo, hi)) => (lo.min(f), hi.max(f)),
+            })
+        }
+        let mut span: Option<(u32, u32)> = None;
+        for sl in &self.slots {
+            span = fold(span, sl.plan.freq_mhz);
+            for sc in sl.plan.configs.values() {
+                if let KernelFreqs::PerClass { compute_mhz, memory_mhz } = sc.kernel_freqs {
+                    span = fold(span, compute_mhz);
+                    span = fold(span, memory_mhz);
+                }
+            }
+        }
+        span
+    }
+
     /// Human-readable digest (display only — the typed plan is the source
     /// of truth).
     pub fn summary(&self) -> String {
         match self.freq_span_mhz() {
-            Some((lo, hi)) => format!(
-                "{} stages, {} task slots, {lo}-{hi} MHz, bubble {:.3}s",
-                self.n_stages,
-                self.n_slots(),
-                self.bubble_s
-            ),
+            Some((lo, hi)) => {
+                let mut out = format!(
+                    "{} stages, {} task slots, {lo}-{hi} MHz, bubble {:.3}s",
+                    self.n_stages,
+                    self.n_slots(),
+                    self.bubble_s
+                );
+                // Per-kernel assignments widen the span beyond the core
+                // sweep range; surface that (uniform plans print as before).
+                if let Some((klo, khi)) = self.kernel_freq_span_mhz() {
+                    if (klo, khi) != (lo, hi) {
+                        out.push_str(&format!(", kernel {klo}-{khi} MHz"));
+                    }
+                }
+                out
+            }
             None => "empty plan".to_string(),
         }
     }
@@ -203,17 +238,24 @@ pub fn microbatch_plan_from_json(j: &Json) -> Result<MicrobatchPlan, String> {
 
 /// Serialize one partition schedule. `launch` is the string `"seq"` for
 /// the sequential execution model or the index of the computation kernel
-/// the comm launches with.
+/// the comm launches with. Per-kernel-class frequency splits add a
+/// `memory_mhz` key (the compute class always runs at `freq_mhz`);
+/// uniform schedules omit it, keeping their JSON byte-identical to the
+/// pre-kernel-DVFS schema.
 pub fn schedule_to_json(sc: &Schedule) -> Json {
     let launch = match sc.launch {
         LaunchAt::Sequential => s("seq"),
         LaunchAt::WithComp(i) => num(i as f64),
     };
-    obj(vec![
+    let mut fields = vec![
         ("sms", num(sc.comm_sms as f64)),
         ("launch", launch),
         ("freq_mhz", num(sc.freq_mhz as f64)),
-    ])
+    ];
+    if let KernelFreqs::PerClass { memory_mhz, .. } = sc.kernel_freqs {
+        fields.push(("memory_mhz", num(memory_mhz as f64)));
+    }
+    obj(fields)
 }
 
 pub fn schedule_from_json(j: &Json) -> Result<Schedule, String> {
@@ -228,7 +270,15 @@ pub fn schedule_from_json(j: &Json) -> Result<Schedule, String> {
         Some(Json::Num(n)) => LaunchAt::WithComp(*n as usize),
         _ => return Err("schedule 'launch' must be \"seq\" or a kernel index".to_string()),
     };
-    Ok(Schedule { comm_sms: get_u32("sms")?, launch, freq_mhz: get_u32("freq_mhz")? })
+    let freq_mhz = get_u32("freq_mhz")?;
+    let kernel_freqs = match j.get("memory_mhz") {
+        None => KernelFreqs::Uniform,
+        Some(v) => KernelFreqs::PerClass {
+            compute_mhz: freq_mhz,
+            memory_mhz: v.as_f64().ok_or("schedule 'memory_mhz' must be a number")? as u32,
+        },
+    };
+    Ok(Schedule { comm_sms: get_u32("sms")?, launch, freq_mhz, kernel_freqs })
 }
 
 // ---------------------------------------------------------------------------
@@ -394,7 +444,7 @@ mod tests {
         if !seq {
             configs.insert(
                 "fwd/attn".to_string(),
-                Schedule { comm_sms: 12, launch: LaunchAt::WithComp(1), freq_mhz: freq },
+                Schedule::uniform(12, LaunchAt::WithComp(1), freq),
             );
         }
         MbPoint {
@@ -421,14 +471,44 @@ mod tests {
     #[test]
     fn schedule_json_roundtrip() {
         for sc in [
-            Schedule { comm_sms: 12, launch: LaunchAt::WithComp(2), freq_mhz: 1410 },
+            Schedule::uniform(12, LaunchAt::WithComp(2), 1410),
             Schedule::sequential(990),
+            Schedule {
+                comm_sms: 12,
+                launch: LaunchAt::WithComp(2),
+                freq_mhz: 1410,
+                kernel_freqs: KernelFreqs::PerClass { compute_mhz: 1410, memory_mhz: 900 },
+            },
         ] {
             let j = schedule_to_json(&sc);
             let back = schedule_from_json(&Json::parse(&j.dump()).unwrap()).unwrap();
             assert_eq!(sc, back);
+            // `memory_mhz` appears exactly for per-class splits, so uniform
+            // schedules keep the legacy byte layout.
+            let split = matches!(sc.kernel_freqs, KernelFreqs::PerClass { .. });
+            assert_eq!(j.dump().contains("memory_mhz"), split, "{}", j.dump());
         }
         assert!(schedule_from_json(&Json::parse("{\"sms\":1}").unwrap()).is_err());
+    }
+
+    #[test]
+    fn kernel_freq_span_widens_with_memory_assignments() {
+        let m = menus(2);
+        let it = greedy_fill(&m, 2, 90.0, 0.0);
+        let mut plan = FrequencyPlan::from_iteration(&m, &it);
+        // Uniform plan: the kernel span equals the core span.
+        assert_eq!(plan.kernel_freq_span_mhz(), plan.freq_span_mhz());
+        let base_summary = plan.summary();
+        assert!(!base_summary.contains("kernel"), "{base_summary}");
+        // Split one slot's schedule: memory class parked at 450 MHz.
+        let sl = plan.slots.first_mut().expect("non-empty plan");
+        if let Some(sc) = sl.plan.configs.values_mut().next() {
+            sc.kernel_freqs =
+                KernelFreqs::PerClass { compute_mhz: sc.freq_mhz, memory_mhz: 450 };
+        }
+        let (lo, _) = plan.kernel_freq_span_mhz().unwrap();
+        assert_eq!(lo, 450);
+        assert!(plan.summary().contains("kernel 450-"), "{}", plan.summary());
     }
 
     #[test]

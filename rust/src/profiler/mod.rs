@@ -380,7 +380,7 @@ mod tests {
     }
 
     fn sched() -> Schedule {
-        Schedule { comm_sms: 12, launch: LaunchAt::WithComp(1), freq_mhz: 1410 }
+        Schedule::uniform(12, LaunchAt::WithComp(1), 1410)
     }
 
     #[test]

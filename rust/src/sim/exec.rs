@@ -20,7 +20,7 @@
 //! than its average (Appendix A).
 
 use super::gpu::GpuSpec;
-use super::kernel::Kernel;
+use super::kernel::{Kernel, KernelClass};
 
 /// Fixed kernel-launch latency (CUDA launch + stream bookkeeping).
 pub const LAUNCH_OVERHEAD_S: f64 = 3e-6;
@@ -37,6 +37,40 @@ pub enum LaunchAt {
     WithComp(usize),
 }
 
+/// Per-kernel-class frequency assignment layered on a schedule's base
+/// frequency (kernel-level DVFS). `Uniform` reproduces the partition-level
+/// model bit-for-bit; `PerClass` gives the compute and memory kernel
+/// classes ([`KernelClass`]) their own frequencies, and the executor
+/// charges an explicit transition cost whenever the active frequency
+/// changes between adjacent kernels. Comm kernels have no frequency of
+/// their own — core frequency affects neither link nor HBM throughput —
+/// so comm-only segments hold whatever frequency is already active and
+/// never force a transition.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum KernelFreqs {
+    /// One frequency (`Schedule::freq_mhz`) for the whole partition.
+    Uniform,
+    /// Per-class frequencies. Invariant: `compute_mhz` equals the
+    /// schedule's base `freq_mhz` (the base frequency *is* the
+    /// compute-class frequency, so every layer keyed on `freq_mhz`
+    /// remains meaningful for per-class schedules).
+    PerClass { compute_mhz: u32, memory_mhz: u32 },
+}
+
+impl KernelFreqs {
+    /// Re-base on a new compute/base frequency (the microbatch frequency
+    /// sweep re-pins schedules per sweep frequency). The memory-class
+    /// frequency, chosen for the kernels' energy profile, is kept.
+    pub fn rebased(self, freq_mhz: u32) -> KernelFreqs {
+        match self {
+            KernelFreqs::Uniform => KernelFreqs::Uniform,
+            KernelFreqs::PerClass { memory_mhz, .. } => {
+                KernelFreqs::PerClass { compute_mhz: freq_mhz, memory_mhz }
+            }
+        }
+    }
+}
+
 /// A complete execution schedule for one partition (the MBO decision
 /// variables, §4.1). `Eq + Hash` so schedules can key the shared
 /// measurement cache (all fields are integral).
@@ -45,11 +79,37 @@ pub struct Schedule {
     pub comm_sms: u32,
     pub launch: LaunchAt,
     pub freq_mhz: u32,
+    /// Kernel-level frequency assignment; `Uniform` is the partition-level
+    /// model (one frequency everywhere, zero transitions).
+    pub kernel_freqs: KernelFreqs,
 }
 
 impl Schedule {
     pub fn sequential(freq_mhz: u32) -> Self {
-        Schedule { comm_sms: 0, launch: LaunchAt::Sequential, freq_mhz }
+        Schedule {
+            comm_sms: 0,
+            launch: LaunchAt::Sequential,
+            freq_mhz,
+            kernel_freqs: KernelFreqs::Uniform,
+        }
+    }
+
+    /// Uniform-frequency overlapped schedule (the partition-level shape).
+    pub fn uniform(comm_sms: u32, launch: LaunchAt, freq_mhz: u32) -> Self {
+        Schedule { comm_sms, launch, freq_mhz, kernel_freqs: KernelFreqs::Uniform }
+    }
+
+    /// The frequency driving a kernel of `class` under this schedule. Comm
+    /// kernels are frequency-invariant; they report the compute-class/base
+    /// frequency so callers always receive a valid grid point.
+    pub fn freq_for(&self, class: KernelClass) -> u32 {
+        match self.kernel_freqs {
+            KernelFreqs::Uniform => self.freq_mhz,
+            KernelFreqs::PerClass { compute_mhz, memory_mhz } => match class {
+                KernelClass::Compute | KernelClass::Comm => compute_mhz,
+                KernelClass::Memory => memory_mhz,
+            },
+        }
     }
 }
 
@@ -66,6 +126,9 @@ pub struct ExecResult {
     pub avg_freq_mhz: f64,
     pub throttled: bool,
     pub peak_power_w: f64,
+    /// Core-frequency transitions charged during this execution (always 0
+    /// for [`KernelFreqs::Uniform`] schedules).
+    pub freq_transitions: u32,
 }
 
 impl ExecResult {
@@ -101,10 +164,23 @@ pub fn execute_partition(
         gpu.name,
         gpu.n_sms
     );
+    if let KernelFreqs::PerClass { compute_mhz, memory_mhz } = sched.kernel_freqs {
+        debug_assert!(
+            compute_mhz == sched.freq_mhz,
+            "per-class compute frequency {compute_mhz} MHz must equal the base {} MHz",
+            sched.freq_mhz
+        );
+        debug_assert!(
+            memory_mhz >= gpu.f_min_mhz && memory_mhz <= gpu.f_max_mhz,
+            "memory-class frequency {} MHz outside {}'s [{}, {}] MHz range",
+            memory_mhz,
+            gpu.name,
+            gpu.f_min_mhz,
+            gpu.f_max_mhz
+        );
+    }
     match sched.launch {
-        LaunchAt::Sequential => {
-            execute_sequential(gpu, comps, comm, sched.freq_mhz, temp_c, power_limit)
-        }
+        LaunchAt::Sequential => execute_sequential(gpu, comps, comm, sched, temp_c, power_limit),
         LaunchAt::WithComp(launch_idx) => {
             execute_overlapped(gpu, comps, comm, sched, launch_idx, temp_c, power_limit)
         }
@@ -115,20 +191,27 @@ fn execute_sequential(
     gpu: &GpuSpec,
     comps: &[Kernel],
     comm: Option<&Kernel>,
-    freq_mhz: u32,
+    sched: &Schedule,
     temp_c: f64,
     power_limit: Option<f64>,
 ) -> ExecResult {
-    let mut res = ExecResult { avg_freq_mhz: freq_mhz as f64, ..Default::default() };
+    let mut res = ExecResult { avg_freq_mhz: sched.freq_mhz as f64, ..Default::default() };
     let p_static = gpu.static_power(temp_c);
     let mut freq_time_weighted = 0.0;
+    let mut cur_freq = sched.freq_mhz;
 
     for k in comps {
+        let f_k = sched.freq_for(k.kind.class());
+        if f_k != cur_freq {
+            charge_transition(gpu, p_static, f_k, &mut res, &mut freq_time_weighted);
+            cur_freq = f_k;
+        }
         let fw = &mut freq_time_weighted;
-        run_solo_comp(gpu, k, gpu.n_sms, freq_mhz, p_static, power_limit, &mut res, fw);
+        run_solo_comp(gpu, k, gpu.n_sms, f_k, p_static, power_limit, &mut res, fw);
     }
     if let Some(c) = comm {
         // NCCL-style default kernel: saturates the link when run alone.
+        // Frequency-invariant, so it holds `cur_freq` (no transition).
         let link = gpu.link_bw.min(gpu.mem_bw / 2.0);
         let t = c.comm_bytes / link + LAUNCH_OVERHEAD_S;
         let p_dyn = gpu.comm_power(link) + gpu.mem_power(2.0 * link);
@@ -137,12 +220,29 @@ fn execute_sequential(
         res.static_j += p_static * t;
         res.exposed_comm_s += t;
         res.peak_power_w = res.peak_power_w.max(p_static + p_dyn);
-        freq_time_weighted += freq_mhz as f64 * t;
+        freq_time_weighted += cur_freq as f64 * t;
     }
     if res.time_s > 0.0 {
         res.avg_freq_mhz = freq_time_weighted / res.time_s;
     }
     res
+}
+
+/// Charge one core-frequency transition: both streams stall for the
+/// switch latency (static power keeps burning) and the PLL/voltage-
+/// regulator overhead lands on the dynamic bill.
+fn charge_transition(
+    gpu: &GpuSpec,
+    p_static: f64,
+    new_freq_mhz: u32,
+    res: &mut ExecResult,
+    freq_time_weighted: &mut f64,
+) {
+    res.time_s += gpu.freq_switch_s;
+    res.static_j += p_static * gpu.freq_switch_s;
+    res.dyn_j += gpu.freq_switch_j;
+    res.freq_transitions += 1;
+    *freq_time_weighted += new_freq_mhz as f64 * gpu.freq_switch_s;
 }
 
 /// Run one computation kernel alone (no comm contention).
@@ -186,6 +286,10 @@ fn execute_overlapped(
     let mut comp_left = 1.0f64; // fraction of current comp kernel remaining
     let mut comm_left: f64 = if comm.is_some() { 1.0 } else { 0.0 };
     let mut comm_launched = comm.is_none();
+    // Active core frequency; per-class schedules re-clock it as the
+    // compute stream moves between kernel classes (comm-only segments are
+    // frequency-invariant and hold it).
+    let mut cur_freq = sched.freq_mhz;
     // Launch overheads are serial on each stream; fold them in up front.
     let overhead = comps.len() as f64 * LAUNCH_OVERHEAD_S;
     res.time_s += overhead;
@@ -202,6 +306,13 @@ fn execute_overlapped(
         let comm_active = comm_launched && comm_left > 1e-12;
         let comp_active = comp_idx < comps.len();
 
+        if comp_active {
+            let f_k = sched.freq_for(comps[comp_idx].kind.class());
+            if f_k != cur_freq {
+                charge_transition(gpu, p_static, f_k, &mut res, &mut freq_time_weighted);
+                cur_freq = f_k;
+            }
+        }
         let comp_sms =
             if comm_active { gpu.n_sms.saturating_sub(sched.comm_sms) } else { gpu.n_sms };
         let comp_arg =
@@ -211,7 +322,7 @@ fn execute_overlapped(
         } else {
             None
         };
-        let seg = segment_rates(gpu, comp_arg, comm_arg, sched.freq_mhz, p_static, power_limit);
+        let seg = segment_rates(gpu, comp_arg, comm_arg, cur_freq, p_static, power_limit);
 
         // Time until the earliest completion among active kernels.
         let mut dt = f64::INFINITY;
@@ -418,7 +529,7 @@ mod tests {
             &g,
             &comps,
             Some(&comm),
-            &Schedule { comm_sms: 8, launch: LaunchAt::WithComp(0), freq_mhz: 1410 },
+            &Schedule::uniform(8, LaunchAt::WithComp(0), 1410),
             30.0,
             None,
         );
@@ -439,7 +550,7 @@ mod tests {
                 &g,
                 &comps,
                 Some(&comm),
-                &Schedule { comm_sms: sms, launch: LaunchAt::WithComp(0), freq_mhz: 1410 },
+                &Schedule::uniform(sms, LaunchAt::WithComp(0), 1410),
                 30.0,
                 None,
             )
@@ -460,7 +571,7 @@ mod tests {
         // costs almost nothing.
         let g = gpu();
         let comm = allreduce(3e8);
-        let sched = Schedule { comm_sms: 12, launch: LaunchAt::WithComp(0), freq_mhz: 1410 };
+        let sched = Schedule::uniform(12, LaunchAt::WithComp(0), 1410);
 
         // Norm + comm: both memory-bound -> contention prolongs the pair
         // beyond the longer of the two run solo.
@@ -511,7 +622,7 @@ mod tests {
                 &g,
                 &comps,
                 Some(&comm),
-                &Schedule { comm_sms: sms, launch: LaunchAt::WithComp(at), freq_mhz: 1410 },
+                &Schedule::uniform(sms, LaunchAt::WithComp(at), 1410),
                 30.0,
                 None,
             )
@@ -535,7 +646,7 @@ mod tests {
             &g,
             &comps,
             Some(&comm),
-            &Schedule { comm_sms: 24, launch: LaunchAt::WithComp(0), freq_mhz: 1410 },
+            &Schedule::uniform(24, LaunchAt::WithComp(0), 1410),
             60.0,
             Some(g.tdp_w),
         );
@@ -546,7 +657,7 @@ mod tests {
             &g,
             &comps,
             Some(&comm),
-            &Schedule { comm_sms: 24, launch: LaunchAt::WithComp(0), freq_mhz: steady_freq },
+            &Schedule::uniform(24, LaunchAt::WithComp(0), steady_freq),
             60.0,
             Some(g.tdp_w),
         );
@@ -563,7 +674,7 @@ mod tests {
             &g,
             &comps,
             Some(&comm),
-            &Schedule { comm_sms: 30, launch: LaunchAt::WithComp(0), freq_mhz: 1410 },
+            &Schedule::uniform(30, LaunchAt::WithComp(0), 1410),
             30.0,
             None,
         );
@@ -588,7 +699,7 @@ mod tests {
             &g,
             &comps,
             None,
-            &Schedule { comm_sms: 0, launch: LaunchAt::WithComp(0), freq_mhz: 1410 },
+            &Schedule::uniform(0, LaunchAt::WithComp(0), 1410),
             30.0,
             None,
         );
@@ -605,7 +716,7 @@ mod tests {
             &g,
             &comps,
             Some(&comm),
-            &Schedule { comm_sms: 12, launch: LaunchAt::WithComp(0), freq_mhz: 1410 },
+            &Schedule::uniform(12, LaunchAt::WithComp(0), 1410),
             30.0,
             None,
         );
@@ -613,10 +724,157 @@ mod tests {
             &g,
             &comps,
             Some(&comm),
-            &Schedule { comm_sms: 12, launch: LaunchAt::WithComp(1), freq_mhz: 1410 },
+            &Schedule::uniform(12, LaunchAt::WithComp(1), 1410),
             30.0,
             None,
         );
         assert!(late.exposed_comm_s >= early.exposed_comm_s);
+    }
+
+    /// Memory-bound kernel with intensity ~100 FLOP/B: below the A100
+    /// roofline ridge (~200 at 1410 MHz, ~128 at 900 MHz), so its time is
+    /// HBM-limited at both frequencies while its compute power is large
+    /// enough for per-class downclocking to matter.
+    fn fused_membound(bytes: f64) -> Kernel {
+        Kernel::comp("fused", KernelKind::Grouped, 100.0 * bytes, bytes)
+    }
+
+    fn per_class(comm_sms: u32, launch: LaunchAt, compute: u32, memory: u32) -> Schedule {
+        Schedule {
+            comm_sms,
+            launch,
+            freq_mhz: compute,
+            kernel_freqs: KernelFreqs::PerClass { compute_mhz: compute, memory_mhz: memory },
+        }
+    }
+
+    fn assert_bitwise_eq(a: &ExecResult, b: &ExecResult) {
+        assert_eq!(a.time_s.to_bits(), b.time_s.to_bits(), "time {} vs {}", a.time_s, b.time_s);
+        assert_eq!(a.dyn_j.to_bits(), b.dyn_j.to_bits(), "dyn {} vs {}", a.dyn_j, b.dyn_j);
+        assert_eq!(a.static_j.to_bits(), b.static_j.to_bits());
+        assert_eq!(a.exposed_comm_s.to_bits(), b.exposed_comm_s.to_bits());
+        assert_eq!(a.avg_freq_mhz.to_bits(), b.avg_freq_mhz.to_bits());
+        assert_eq!(a.peak_power_w.to_bits(), b.peak_power_w.to_bits());
+        assert_eq!(a.throttled, b.throttled);
+        assert_eq!(a.freq_transitions, b.freq_transitions);
+    }
+
+    #[test]
+    fn per_class_diagonal_matches_uniform_bitwise() {
+        // PerClass{f, f} never transitions, so even with nonzero switch
+        // costs it must reproduce the Uniform arithmetic bit-for-bit.
+        let g = gpu();
+        let comps = vec![linear(3e11), norm(2e9), linear(4e11)];
+        let comm = allreduce(5e8);
+        for (launch, sms) in
+            [(LaunchAt::Sequential, 0), (LaunchAt::WithComp(0), 12), (LaunchAt::WithComp(2), 24)]
+        {
+            for f in [900, 1110, 1410] {
+                let uni = Schedule::uniform(sms, launch, f);
+                let diag = per_class(sms, launch, f, f);
+                let a = execute_partition(&g, &comps, Some(&comm), &uni, 40.0, Some(g.tdp_w));
+                let b = execute_partition(&g, &comps, Some(&comm), &diag, 40.0, Some(g.tdp_w));
+                assert_bitwise_eq(&a, &b);
+                assert_eq!(a.freq_transitions, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn transitions_charged_iff_class_frequency_changes() {
+        let g = gpu();
+        // compute -> memory -> compute: two class boundaries where the
+        // active frequency changes (the stream starts at the base/compute
+        // frequency, so the first Linear is free).
+        let comps = vec![linear(3e11), fused_membound(2e9), linear(3e11)];
+        let split = per_class(0, LaunchAt::Sequential, 1410, 1110);
+        let r = execute_partition(&g, &comps, None, &split, 30.0, None);
+        assert_eq!(r.freq_transitions, 2);
+
+        // Memory kernels adjacent to each other share a frequency: still 2.
+        let comps2 = vec![linear(3e11), fused_membound(2e9), norm(1e9), linear(3e11)];
+        let r2 = execute_partition(&g, &comps2, None, &split, 30.0, None);
+        assert_eq!(r2.freq_transitions, 2);
+
+        // Same per-class assignment on an all-memory partition: one switch
+        // on entry, none after.
+        let comps3 = vec![fused_membound(2e9), norm(1e9)];
+        let r3 = execute_partition(&g, &comps3, None, &split, 30.0, None);
+        assert_eq!(r3.freq_transitions, 1);
+    }
+
+    #[test]
+    fn transition_cost_grows_energy_and_time() {
+        let g = gpu();
+        let comps = vec![linear(3e11), fused_membound(2e9), linear(3e11)];
+        let split = per_class(0, LaunchAt::Sequential, 1410, 1110);
+        let mut free = g.clone();
+        free.freq_switch_s = 0.0;
+        free.freq_switch_j = 0.0;
+        let paid = execute_partition(&g, &comps, None, &split, 30.0, None);
+        let free_r = execute_partition(&free, &comps, None, &split, 30.0, None);
+        assert_eq!(paid.freq_transitions, 2);
+        assert_eq!(free_r.freq_transitions, 2);
+        let dt = paid.time_s - free_r.time_s;
+        assert!((dt - 2.0 * g.freq_switch_s).abs() < 1e-12, "latency {dt}");
+        assert!(paid.total_j() > free_r.total_j());
+    }
+
+    #[test]
+    fn total_energy_linear_in_switch_energy_penalty() {
+        // dyn_j grows by exactly n_transitions * delta when only the
+        // per-transition energy penalty changes.
+        let comps = vec![linear(3e11), fused_membound(2e9), linear(3e11)];
+        let split = per_class(0, LaunchAt::Sequential, 1410, 1110);
+        let at = |j: f64| {
+            let mut g = gpu();
+            g.freq_switch_j = j;
+            execute_partition(&g, &comps, None, &split, 30.0, None)
+        };
+        let (a, b, c) = (at(0.0), at(5e-3), at(5e-2));
+        assert!(a.total_j() <= b.total_j() && b.total_j() <= c.total_j());
+        let n = a.freq_transitions as f64;
+        assert!(n > 0.0);
+        assert!((b.dyn_j - a.dyn_j - n * 5e-3).abs() < 1e-9);
+        assert!((c.dyn_j - a.dyn_j - n * 5e-2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn membound_downclock_saves_energy_at_near_equal_time() {
+        // The kernel-level DVFS win: a memory-bound kernel's time is
+        // HBM-limited (frequency-invariant) while its compute dynamic
+        // power scales ~f^2 — downclocking only the memory class trades a
+        // single transition for a large dynamic-energy cut.
+        let g = gpu();
+        let comps = vec![linear(9e11), fused_membound(1.2e10)];
+        let uni = Schedule::uniform(0, LaunchAt::Sequential, 1410);
+        let split = per_class(0, LaunchAt::Sequential, 1410, 900);
+        let base = execute_partition(&g, &comps, None, &uni, 30.0, None);
+        let kdvfs = execute_partition(&g, &comps, None, &split, 30.0, None);
+        assert_eq!(kdvfs.freq_transitions, 1);
+        // Time grows only by the single switch latency.
+        let dt = kdvfs.time_s - base.time_s;
+        assert!((dt - g.freq_switch_s).abs() < 1e-9, "dt {dt}");
+        // Energy drops by far more than the switch penalty costs.
+        assert!(
+            kdvfs.total_j() < base.total_j() - 0.3,
+            "kdvfs {} base {}",
+            kdvfs.total_j(),
+            base.total_j()
+        );
+    }
+
+    #[test]
+    fn comm_only_segments_hold_frequency() {
+        // A trailing comm kernel after a memory-class kernel must not
+        // charge a transition back to the base frequency: core frequency
+        // is irrelevant to link and HBM throughput.
+        let g = gpu();
+        let comps = vec![linear(3e11), fused_membound(4e9)];
+        let comm = allreduce(2e9);
+        let split = per_class(12, LaunchAt::WithComp(1), 1410, 900);
+        let r = execute_partition(&g, &comps, Some(&comm), &split, 30.0, None);
+        assert_eq!(r.freq_transitions, 1);
+        assert!(r.exposed_comm_s > 0.0);
     }
 }

@@ -49,6 +49,15 @@ pub struct GpuSpec {
     /// Board power limit; sustained draw above this triggers frequency
     /// throttling (§6.2.1 case study).
     pub tdp_w: f64,
+    /// Latency of one core-frequency transition, seconds. Kernel-level
+    /// DVFS re-clocks mid-partition; each switch stalls both streams for
+    /// this long (driver clock-lock reprogramming, tens of microseconds
+    /// on locked-clock NVIDIA parts).
+    pub freq_switch_s: f64,
+    /// Energy overhead of one core-frequency transition, joules (PLL
+    /// relock + voltage-regulator settling), on top of the static power
+    /// burned during `freq_switch_s`.
+    pub freq_switch_j: f64,
 }
 
 impl GpuSpec {
@@ -70,6 +79,8 @@ impl GpuSpec {
             mem_w_max: 90.0,
             comm_w_max: 15.0,
             tdp_w: 400.0,
+            freq_switch_s: 50e-6,
+            freq_switch_j: 5e-3,
         }
     }
 
@@ -96,6 +107,8 @@ impl GpuSpec {
             mem_w_max: 110.0,
             comm_w_max: 25.0,
             tdp_w: 700.0,
+            freq_switch_s: 40e-6,
+            freq_switch_j: 6e-3,
         }
     }
 
@@ -120,6 +133,8 @@ impl GpuSpec {
             mem_w_max: 60.0,
             comm_w_max: 12.0,
             tdp_w: 300.0,
+            freq_switch_s: 60e-6,
+            freq_switch_j: 4e-3,
         }
     }
 
@@ -155,6 +170,8 @@ impl GpuSpec {
             mem_w_max,
             comm_w_max,
             tdp_w,
+            freq_switch_s,
+            freq_switch_j,
         } = self;
         let mut h = crate::util::hash::Fnv64::new();
         h.write_str(name)
@@ -172,7 +189,9 @@ impl GpuSpec {
             .write_f64(*comp_w_max)
             .write_f64(*mem_w_max)
             .write_f64(*comm_w_max)
-            .write_f64(*tdp_w);
+            .write_f64(*tdp_w)
+            .write_f64(*freq_switch_s)
+            .write_f64(*freq_switch_j);
         h.finish()
     }
 
@@ -236,6 +255,22 @@ impl GpuSpec {
     pub fn search_freqs(&self) -> Vec<u32> {
         let lo = 900.max(self.f_min_mhz);
         (lo..=self.f_max_mhz).step_by(2 * self.f_stride_mhz as usize).collect()
+    }
+
+    /// Memory-class frequency axis for kernel-level DVFS: the Appendix C
+    /// search range plus deeper steps below its 900 MHz floor. The floor
+    /// exists because below it *runtime* stretches faster than per-flop
+    /// energy falls (footnote 11) — but memory-bound kernels' time is
+    /// HBM-limited and frequency-invariant, so for the memory class lower
+    /// frequencies keep cutting dynamic compute energy (∝ f²) at zero time
+    /// cost until transition overheads dominate. Every entry sits on the
+    /// hardware grid (`f_min + k·f_stride`).
+    pub fn memory_class_freqs(&self) -> Vec<u32> {
+        let floor = 900.max(self.f_min_mhz);
+        let mut out: Vec<u32> =
+            (self.f_min_mhz..floor).step_by(8 * self.f_stride_mhz as usize).collect();
+        out.extend(self.search_freqs());
+        out
     }
 
     /// Dynamic energy per FLOP at frequency f (∝ f², see Appendix A):
@@ -352,6 +387,21 @@ mod tests {
         let mut tweaked = GpuSpec::a100();
         tweaked.static_w += 1.0;
         assert_ne!(a, tweaked.fingerprint());
+        // The frequency-transition cost model is part of the identity.
+        let mut sw = GpuSpec::a100();
+        sw.freq_switch_s *= 2.0;
+        assert_ne!(a, sw.fingerprint());
+        let mut sj = GpuSpec::a100();
+        sj.freq_switch_j += 1e-3;
+        assert_ne!(a, sj.fingerprint());
+    }
+
+    #[test]
+    fn switch_costs_are_small_but_positive() {
+        for g in [GpuSpec::a100(), GpuSpec::h100(), GpuSpec::v100()] {
+            assert!(g.freq_switch_s > 0.0 && g.freq_switch_s < 1e-3, "{}", g.name);
+            assert!(g.freq_switch_j > 0.0 && g.freq_switch_j < 0.1, "{}", g.name);
+        }
     }
 
     #[test]
@@ -364,5 +414,22 @@ mod tests {
         let search = g.search_freqs();
         assert_eq!(search.first(), Some(&900));
         assert_eq!(search.len(), 18);
+    }
+
+    #[test]
+    fn memory_class_freqs_extend_search_range_downward() {
+        for g in [GpuSpec::a100(), GpuSpec::h100(), GpuSpec::v100()] {
+            let m = g.memory_class_freqs();
+            let s = g.search_freqs();
+            // Superset of the search range, sorted, on the hardware grid.
+            assert!(m.len() > s.len(), "{}", g.name);
+            assert!(m.windows(2).all(|w| w[0] < w[1]), "{}", g.name);
+            for f in &m {
+                assert!(*f >= g.f_min_mhz && *f <= g.f_max_mhz);
+                assert_eq!((f - g.f_min_mhz) % g.f_stride_mhz, 0, "{}: {f}", g.name);
+            }
+            assert!(m.ends_with(&s), "{}: search range must be the tail", g.name);
+            assert_eq!(m[0], g.f_min_mhz);
+        }
     }
 }

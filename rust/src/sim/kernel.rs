@@ -24,6 +24,20 @@ pub enum KernelKind {
     Grouped,
 }
 
+/// Coarse kernel classes for per-class frequency assignment (kernel-level
+/// DVFS). The class partitions [`KernelKind`] by which resource dominates
+/// the kernel's roofline at training shapes: `Compute` kernels ride the
+/// FLOP ceiling (frequency-sensitive in both time and energy), `Memory`
+/// kernels ride the HBM ceiling (frequency lowers only dynamic compute
+/// energy), and `Comm` kernels ride the interconnect (core frequency is
+/// irrelevant to both time and power).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum KernelClass {
+    Compute,
+    Memory,
+    Comm,
+}
+
 impl KernelKind {
     pub fn is_comm(self) -> bool {
         matches!(
@@ -33,6 +47,27 @@ impl KernelKind {
                 | KernelKind::ReduceScatter
                 | KernelKind::SendRecv
         )
+    }
+
+    /// The [`KernelClass`] a kernel of this kind belongs to. Static by
+    /// kind (not by shape): the per-class frequency axis needs a stable
+    /// partition of the kernel stream that deployment can reproduce
+    /// without re-deriving rooflines.
+    pub fn class(self) -> KernelClass {
+        match self {
+            KernelKind::Linear | KernelKind::FlashAttention => KernelClass::Compute,
+            KernelKind::Norm
+            | KernelKind::Rope
+            | KernelKind::Activation
+            | KernelKind::BiasDropoutAdd
+            | KernelKind::Embedding
+            | KernelKind::GradAccum
+            | KernelKind::Grouped => KernelClass::Memory,
+            KernelKind::AllReduce
+            | KernelKind::AllGather
+            | KernelKind::ReduceScatter
+            | KernelKind::SendRecv => KernelClass::Comm,
+        }
     }
 }
 
@@ -125,6 +160,33 @@ impl Kernel {
 mod tests {
     use super::*;
     use crate::sim::gpu::GpuSpec;
+
+    #[test]
+    fn class_partitions_every_kind() {
+        // comm kinds are exactly the Comm class; compute-heavy GEMM-like
+        // kinds are Compute; everything else is Memory.
+        for k in [
+            KernelKind::Norm,
+            KernelKind::Linear,
+            KernelKind::Rope,
+            KernelKind::FlashAttention,
+            KernelKind::Activation,
+            KernelKind::BiasDropoutAdd,
+            KernelKind::Embedding,
+            KernelKind::GradAccum,
+            KernelKind::AllReduce,
+            KernelKind::AllGather,
+            KernelKind::ReduceScatter,
+            KernelKind::SendRecv,
+            KernelKind::Grouped,
+        ] {
+            assert_eq!(k.class() == KernelClass::Comm, k.is_comm(), "{k:?}");
+        }
+        assert_eq!(KernelKind::Linear.class(), KernelClass::Compute);
+        assert_eq!(KernelKind::FlashAttention.class(), KernelClass::Compute);
+        assert_eq!(KernelKind::Norm.class(), KernelClass::Memory);
+        assert_eq!(KernelKind::Grouped.class(), KernelClass::Memory);
+    }
 
     #[test]
     fn comm_has_hbm_traffic() {

@@ -50,14 +50,19 @@ const SEEDED: &[(&str, Code)] = &[
     ("loadgen_k061_counter_mismatch.json", Code::K061),
     ("loadgen_k062_percentile_order.json", Code::K062),
     ("loadgen_k063_mixed_nulling.json", Code::K063),
+    ("plan_k070_mem_off_grid.json", Code::K070),
+    ("trace_k071_uniform_transitions.json", Code::K071),
+    ("plan_k072_mem_above_core.json", Code::K072),
     ("unknown_k000.json", Code::K000),
 ];
 
 const CLEAN: &[&str] = &[
     "plan_ok.json",
+    "plan_kernel_ok.json",
     "cluster_ok.json",
     "revisions_ok.json",
     "trace_ok.json",
+    "trace_kernel_ok.json",
     "sweep_ok.json",
     "summary_ok.json",
     "loadgen_ok.json",

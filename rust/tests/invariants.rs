@@ -37,11 +37,11 @@ fn random_partition(rng: &mut Rng) -> Partition {
 }
 
 fn random_schedule(rng: &mut Rng, n_comps: usize) -> Schedule {
-    Schedule {
-        comm_sms: 1 + rng.below(30) as u32,
-        launch: LaunchAt::WithComp(rng.below(n_comps)),
-        freq_mhz: 900 + 30 * rng.below(18) as u32,
-    }
+    Schedule::uniform(
+        1 + rng.below(30) as u32,
+        LaunchAt::WithComp(rng.below(n_comps)),
+        900 + 30 * rng.below(18) as u32,
+    )
 }
 
 // ---------------------------------------------------------------------
@@ -123,7 +123,7 @@ fn prop_dynamic_energy_monotone_in_frequency() {
                 &gpu,
                 &part.comps,
                 part.comm.as_ref(),
-                &Schedule { comm_sms: 12, launch: LaunchAt::WithComp(0), freq_mhz: f },
+                &Schedule::uniform(12, LaunchAt::WithComp(0), f),
                 30.0,
                 None,
             )
@@ -139,7 +139,7 @@ fn prop_dynamic_energy_monotone_in_frequency() {
             &gpu,
             &part.comps,
             None,
-            &Schedule { comm_sms: 0, launch: LaunchAt::WithComp(0), freq_mhz: 900 },
+            &Schedule::uniform(0, LaunchAt::WithComp(0), 900),
             30.0,
             None,
         );
@@ -147,7 +147,7 @@ fn prop_dynamic_energy_monotone_in_frequency() {
             &gpu,
             &part.comps,
             None,
-            &Schedule { comm_sms: 0, launch: LaunchAt::WithComp(0), freq_mhz: 1410 },
+            &Schedule::uniform(0, LaunchAt::WithComp(0), 1410),
             30.0,
             None,
         );

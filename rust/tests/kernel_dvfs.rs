@@ -1,0 +1,398 @@
+//! Differential + property test layer for kernel-level DVFS.
+//!
+//! The kernel-DVFS axis is opt-in: with `FreqGranularity::Partition`
+//! every layer — candidate census, MBO cache keys, optimizer output,
+//! sweep JSON — must be byte-identical to the pre-kernel-DVFS build, and
+//! a uniform per-kernel assignment with zero transition cost must match
+//! partition-level results exactly. The property section drives random
+//! partitions/schedules through the in-house PRNG (proptest is
+//! unavailable offline) and pins the structural invariants of the new
+//! axis: census product arithmetic, grid membership, transition-count
+//! accounting, and monotonicity in the transition-energy penalty.
+
+use kareus::baselines::System;
+use kareus::engine::{run_sweep, scenario_matrix, sweep_json, EngineConfig, MboCache};
+use kareus::frontier::Frontier;
+use kareus::mbo::space::{self, FreqGranularity};
+use kareus::mbo::{
+    exhaustive, optimize_partition, optimize_partition_with_granularity, MboParams, MboResult,
+    MultiPassMbo,
+};
+use kareus::partition::Partition;
+use kareus::profiler::{Profiler, ProfilerConfig};
+use kareus::sim::exec::{execute_partition, KernelFreqs, LaunchAt, Schedule};
+use kareus::sim::gpu::GpuSpec;
+use kareus::sim::kernel::{Kernel, KernelKind};
+use kareus::util::hash::Fnv64;
+use kareus::util::rng::Rng;
+use kareus::workload::{ModelSpec, Parallelism};
+
+fn attn_partition() -> Partition {
+    Partition {
+        ptype: "fwd/attn".into(),
+        comps: vec![
+            Kernel::comp("Norm", KernelKind::Norm, 1e8, 8e8),
+            Kernel::comp("Linear1", KernelKind::Linear, 5e11, 2.5e9),
+            Kernel::comp("Flash", KernelKind::FlashAttention, 3e11, 1e9),
+            Kernel::comp("Linear2", KernelKind::Linear, 5e11, 2.5e9),
+        ],
+        comm: Some(Kernel::comm("AR", KernelKind::AllReduce, 5e8)),
+        count: 28,
+    }
+}
+
+fn random_partition(rng: &mut Rng) -> Partition {
+    let n = 1 + rng.below(5);
+    let comps = (0..n)
+        .map(|i| {
+            if rng.f64() < 0.4 {
+                Kernel::comp(format!("mem{i}"), KernelKind::Norm, 1e8, 5e8 + rng.f64() * 4e9)
+            } else {
+                Kernel::comp(
+                    format!("comp{i}"),
+                    KernelKind::Linear,
+                    5e10 + rng.f64() * 8e11,
+                    1e9 + rng.f64() * 2e9,
+                )
+            }
+        })
+        .collect();
+    let comm = if rng.f64() < 0.85 {
+        Some(Kernel::comm("ar", KernelKind::AllReduce, 5e7 + rng.f64() * 3e9))
+    } else {
+        None
+    };
+    Partition { ptype: "prop".into(), comps, comm, count: 1 }
+}
+
+/// A random per-kernel-class schedule whose frequencies come from the
+/// same grids the candidate space enumerates.
+fn random_per_class_schedule(gpu: &GpuSpec, rng: &mut Rng, n_comps: usize) -> Schedule {
+    let compute = 900 + 30 * rng.below(18) as u32;
+    let mem_grid = gpu.memory_class_freqs();
+    let memory = mem_grid[rng.below(mem_grid.len())];
+    Schedule {
+        comm_sms: 1 + rng.below(30) as u32,
+        launch: LaunchAt::WithComp(rng.below(n_comps)),
+        freq_mhz: compute,
+        kernel_freqs: KernelFreqs::PerClass { compute_mhz: compute, memory_mhz: memory },
+    }
+}
+
+// ---------------------------------------------------------------------
+// Differential parity: Partition granularity is byte-identical to the
+// pre-kernel-DVFS build at every layer.
+// ---------------------------------------------------------------------
+
+#[test]
+fn partition_candidate_space_matches_legacy_enumeration() {
+    let gpu = GpuSpec::a100();
+    for part in [attn_partition(), {
+        let mut p = attn_partition();
+        p.comm = None;
+        p
+    }] {
+        let legacy = space::candidate_space(&gpu, &part, 8);
+        let explicit = space::candidate_space_with(&gpu, &part, 8, FreqGranularity::Partition);
+        assert_eq!(legacy, explicit, "{}: same schedules in the same order", part.ptype);
+        for s in &legacy {
+            assert_eq!(s.kernel_freqs, KernelFreqs::Uniform);
+        }
+    }
+}
+
+#[test]
+fn kernel_space_is_partition_space_times_memory_grid() {
+    let gpu = GpuSpec::a100();
+    let part = attn_partition();
+    let p = space::candidate_space_with(&gpu, &part, 8, FreqGranularity::Partition);
+    let k = space::candidate_space_with(&gpu, &part, 8, FreqGranularity::KernelClass);
+    assert_eq!(k.len(), p.len() * gpu.memory_class_freqs().len());
+    // Projecting away the memory axis recovers exactly the legacy space.
+    let sort_key = |s: &Schedule| (s.freq_mhz, s.comm_sms, format!("{:?}", s.launch));
+    let mut projected: Vec<Schedule> = k
+        .iter()
+        .map(|s| Schedule::uniform(s.comm_sms, s.launch, s.freq_mhz))
+        .collect();
+    projected.sort_by_key(sort_key);
+    projected.dedup();
+    let mut legacy = p.clone();
+    legacy.sort_by_key(sort_key);
+    legacy.dedup();
+    assert_eq!(projected, legacy);
+}
+
+#[test]
+fn partition_mbo_cache_key_matches_pre_kernel_dvfs_hash() {
+    // The cache key folds the granularity in only when it differs from
+    // Partition, so partition-level keys hash byte-identically to builds
+    // that predate the axis. Recompute the legacy hash by hand.
+    let gpu = GpuSpec::a100();
+    let part = attn_partition();
+    let params = MboParams::for_class(part.size_class());
+    let prof = ProfilerConfig::default();
+    let (backend_fp, strategy_fp) = (0x1234_5678_9abc_def0u64, 0x0fed_cba9_8765_4321u64);
+    let legacy = {
+        let mut h = Fnv64::new();
+        h.write_u64(backend_fp)
+            .write_u64(strategy_fp)
+            .write_u64(gpu.fingerprint())
+            .write_u64(part.fingerprint())
+            .write_u64(8)
+            .write_u64(params.n_init as u64)
+            .write_u64(params.b_max as u64)
+            .write_u64(params.batch_k as u64)
+            .write_f64(params.pass_fracs[0])
+            .write_f64(params.pass_fracs[1])
+            .write_f64(params.pass_fracs[2])
+            .write_u64(params.ensemble_size as u64)
+            .write_f64(params.bootstrap_fraction)
+            .write_u64(params.r_window as u64)
+            .write_f64(params.eps)
+            .write_u64(params.seed)
+            .write_f64(prof.window_s)
+            .write_f64(prof.cooldown_s)
+            .write_f64(prof.warmup_s)
+            .write_f64(prof.setup_s);
+        h.finish()
+    };
+    let key = |g: FreqGranularity| {
+        MboCache::key(backend_fp, strategy_fp, &gpu, &part, 8, &params, &prof, g)
+    };
+    assert_eq!(key(FreqGranularity::Partition), legacy);
+    assert_ne!(key(FreqGranularity::KernelClass), legacy, "kernel keys must not alias");
+}
+
+fn result_bits(r: &MboResult) -> (Vec<(u64, u64, usize)>, Vec<Schedule>, u64) {
+    (
+        r.frontier
+            .points()
+            .iter()
+            .map(|p| (p.time.to_bits(), p.energy.to_bits(), p.tag))
+            .collect(),
+        r.evaluated.iter().map(|e| e.sched).collect(),
+        r.profiling_cost_s.to_bits(),
+    )
+}
+
+#[test]
+fn partition_granularity_optimizer_output_is_byte_identical() {
+    let gpu = GpuSpec::a100();
+    let part = attn_partition();
+    let mut params = MboParams::for_class(part.size_class());
+    params.seed = 11;
+    let mut prof_a = Profiler::new(gpu.clone(), ProfilerConfig::default(), 11);
+    let legacy = optimize_partition(&mut prof_a, &part, 8, &params);
+    let strategy = MultiPassMbo::new(params).expect("valid params");
+    let mut prof_b = Profiler::new(gpu, ProfilerConfig::default(), 11);
+    let explicit = optimize_partition_with_granularity(
+        &strategy,
+        &mut prof_b,
+        &part,
+        8,
+        FreqGranularity::Partition,
+    );
+    assert_eq!(result_bits(&legacy), result_bits(&explicit));
+}
+
+#[test]
+fn sweep_json_carries_granularity_key_only_when_kernel_level() {
+    let scenarios = || {
+        scenario_matrix(
+            &[GpuSpec::a100()],
+            &[ModelSpec::qwen3_1_7b()],
+            &[Parallelism::new(8, 1, 2)],
+            &[System::MegatronPerseus],
+            8,
+            4096,
+            8,
+            5,
+        )
+    };
+    // `deterministic = true` nulls the wall-clock timing fields — anything
+    // else would never be byte-identical across two separate sweeps.
+    let dump_with = |engine: &EngineConfig| {
+        let outcomes = run_sweep(scenarios(), engine, |_| {});
+        sweep_json(&outcomes, engine, true).dump()
+    };
+    let default_engine = dump_with(&EngineConfig::new());
+    let explicit_partition =
+        dump_with(&EngineConfig::new().with_freq_granularity(FreqGranularity::Partition));
+    assert_eq!(
+        default_engine, explicit_partition,
+        "partition-level sweep JSON must be byte-identical to the legacy dump"
+    );
+    assert!(!default_engine.contains("freq_granularity"));
+    let kernel =
+        dump_with(&EngineConfig::new().with_freq_granularity(FreqGranularity::KernelClass));
+    assert!(kernel.contains("\"freq_granularity\":\"kernel\""), "{kernel}");
+}
+
+#[test]
+fn zero_cost_kernel_frontier_contains_partition_frontier() {
+    // With the transition cost zeroed, every partition-level operating
+    // point is a diagonal per-class candidate that executes bit-identically
+    // — so the kernel-level frontier must weakly dominate every
+    // partition-level frontier point, exactly.
+    let mut gpu = GpuSpec::a100();
+    gpu.freq_switch_s = 0.0;
+    gpu.freq_switch_j = 0.0;
+    let part = attn_partition();
+    let pf = exhaustive::exhaustive_frontier_with(&gpu, &part, 8, FreqGranularity::Partition);
+    let kf = exhaustive::exhaustive_frontier_with(&gpu, &part, 8, FreqGranularity::KernelClass);
+    assert!(!pf.is_empty() && !kf.is_empty());
+    for pp in pf.points() {
+        assert!(
+            kf.points().iter().any(|kp| kp.time <= pp.time && kp.energy <= pp.energy),
+            "partition point ({}, {}) not weakly dominated",
+            pp.time,
+            pp.energy
+        );
+    }
+    let rref = Frontier::reference_of(
+        &pf.points().iter().chain(kf.points()).copied().collect::<Vec<_>>(),
+    );
+    assert!(kf.hypervolume(rref) >= pf.hypervolume(rref) - 1e-12);
+}
+
+#[test]
+fn kernel_level_strictly_dominates_on_the_pinned_membound_scenario() {
+    // The acceptance scenario: the paper ablation's memory-heavy fused
+    // partition, where per-class downclocking must beat every uniform
+    // assignment despite paying real transition costs.
+    let out = kareus::paper::run_experiment("kernel-dvfs").expect("registered experiment");
+    assert!(
+        out.contains("fwd/fused (memory-heavy): strictly-dominates=yes"),
+        "kernel-level DVFS must strictly improve the membound frontier:\n{out}"
+    );
+    assert!(out.contains("fwd/mlp (compute-heavy): strictly-dominates="), "{out}");
+}
+
+// ---------------------------------------------------------------------
+// Property tests (seeded in-house PRNG; no external proptest dep).
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_candidate_counts_follow_census_product() {
+    let gpu = GpuSpec::a100();
+    let n_mem = gpu.memory_class_freqs().len();
+    let mut rng = Rng::new(0xDF5);
+    for _ in 0..60 {
+        let part = random_partition(&mut rng);
+        let p = space::candidate_space_with(&gpu, &part, 8, FreqGranularity::Partition);
+        let k = space::candidate_space_with(&gpu, &part, 8, FreqGranularity::KernelClass);
+        assert_eq!(p, space::candidate_space(&gpu, &part, 8));
+        assert_eq!(k.len(), p.len() * n_mem, "census product violated for {part:?}");
+    }
+}
+
+#[test]
+fn prop_kernel_space_frequencies_stay_on_the_gpu_grid() {
+    let mut rng = Rng::new(0xDF6);
+    for gpu in [GpuSpec::a100(), GpuSpec::h100(), GpuSpec::v100()] {
+        for _ in 0..20 {
+            let part = random_partition(&mut rng);
+            for s in space::candidate_space_with(&gpu, &part, 8, FreqGranularity::KernelClass) {
+                let KernelFreqs::PerClass { compute_mhz, memory_mhz } = s.kernel_freqs else {
+                    panic!("kernel-class space emitted a uniform schedule");
+                };
+                assert_eq!(compute_mhz, s.freq_mhz, "compute class is pinned to the base");
+                for f in [compute_mhz, memory_mhz] {
+                    assert!(f >= gpu.f_min_mhz && f <= gpu.f_max_mhz, "{}: {f}", gpu.name);
+                    assert_eq!((f - gpu.f_min_mhz) % gpu.f_stride_mhz, 0, "{}: {f}", gpu.name);
+                }
+            }
+        }
+    }
+}
+
+/// The transition count the executor must charge for a sequential
+/// schedule: the stream enters at the base (= compute) frequency and
+/// switches whenever the next computation kernel's class frequency
+/// differs from the current one. Comm kernels never switch.
+fn expected_transitions(part: &Partition, sched: &Schedule) -> u32 {
+    let mut cur = sched.freq_mhz;
+    let mut n = 0;
+    for k in &part.comps {
+        let f = sched.freq_for(k.kind.class());
+        if f != cur {
+            n += 1;
+            cur = f;
+        }
+    }
+    n
+}
+
+#[test]
+fn prop_transition_count_zero_iff_adjacent_kernels_share_frequency() {
+    let gpu = GpuSpec::a100();
+    let mut rng = Rng::new(0xDF7);
+    let mut saw_transitions = false;
+    for _ in 0..200 {
+        let part = random_partition(&mut rng);
+        let mut sched = random_per_class_schedule(&gpu, &mut rng, part.comps.len());
+        sched.comm_sms = 0;
+        sched.launch = LaunchAt::Sequential;
+        let r = execute_partition(&gpu, &part.comps, None, &sched, 30.0, None);
+        let expected = expected_transitions(&part, &sched);
+        assert_eq!(r.freq_transitions, expected, "{part:?} under {sched:?}");
+        let all_shared =
+            part.comps.iter().all(|k| sched.freq_for(k.kind.class()) == sched.freq_mhz);
+        assert_eq!(expected == 0, all_shared);
+        saw_transitions |= expected > 0;
+    }
+    assert!(saw_transitions, "sampler never produced a frequency split");
+}
+
+#[test]
+fn prop_total_energy_monotone_in_transition_energy_penalty() {
+    let mut rng = Rng::new(0xDF8);
+    for _ in 0..100 {
+        let part = random_partition(&mut rng);
+        let sched = {
+            let mut s = random_per_class_schedule(&GpuSpec::a100(), &mut rng, part.comps.len());
+            s.comm_sms = 0;
+            s.launch = LaunchAt::Sequential;
+            s
+        };
+        let mut prev = f64::NEG_INFINITY;
+        for switch_j in [0.0, 1e-3, 5e-3, 5e-2, 0.5] {
+            let mut gpu = GpuSpec::a100();
+            gpu.freq_switch_j = switch_j;
+            let r = execute_partition(&gpu, &part.comps, None, &sched, 30.0, None);
+            assert!(
+                r.total_j() >= prev - 1e-12,
+                "energy decreased when the switch penalty grew to {switch_j}"
+            );
+            prev = r.total_j();
+        }
+    }
+}
+
+#[test]
+fn prop_diagonal_per_class_schedules_match_uniform_bitwise() {
+    let gpu = GpuSpec::a100();
+    let mut rng = Rng::new(0xDF9);
+    for _ in 0..100 {
+        let part = random_partition(&mut rng);
+        let f = 900 + 30 * rng.below(18) as u32;
+        let sms = 1 + rng.below(30) as u32;
+        let launch = LaunchAt::WithComp(rng.below(part.comps.len()));
+        let uni = Schedule::uniform(sms, launch, f);
+        let diag = Schedule {
+            comm_sms: sms,
+            launch,
+            freq_mhz: f,
+            kernel_freqs: KernelFreqs::PerClass { compute_mhz: f, memory_mhz: f },
+        };
+        let a =
+            execute_partition(&gpu, &part.comps, part.comm.as_ref(), &uni, 30.0, Some(gpu.tdp_w));
+        let b =
+            execute_partition(&gpu, &part.comps, part.comm.as_ref(), &diag, 30.0, Some(gpu.tdp_w));
+        assert_eq!(a.time_s.to_bits(), b.time_s.to_bits());
+        assert_eq!(a.dyn_j.to_bits(), b.dyn_j.to_bits());
+        assert_eq!(a.static_j.to_bits(), b.static_j.to_bits());
+        assert_eq!(a.freq_transitions, 0);
+        assert_eq!(b.freq_transitions, 0);
+    }
+}
