@@ -1,0 +1,408 @@
+//! The `kareus bench` suite: one [`BenchEntry`] per optimizer-stack hot
+//! path, over fixed synthetic inputs so every counter is derivable by
+//! hand. Counters describe the *work shape* (rows, kernels, slots, cache
+//! hits) and are identical on every run; wall-clock stats come from
+//! [`bench_quiet`] and are nulled in deterministic mode, where each
+//! workload runs exactly once untimed. CI diffs two deterministic runs
+//! byte-for-byte and validates the artifact with `kareus check`
+//! (K080–K082).
+
+use std::collections::BTreeMap;
+use std::hint::black_box;
+
+use crate::backend::SimBackend;
+use crate::compose::{MbFrontier, MbPoint, MicrobatchPlan};
+use crate::mbo::space;
+use crate::partition::Partition;
+use crate::pipeline::{greedy_fill, simulate_1f1b, StageMenu};
+use crate::profiler::{combine_fp, MeasureCache};
+use crate::sim::exec::{execute_partition, KernelFreqs, LaunchAt, Schedule};
+use crate::sim::gpu::GpuSpec;
+use crate::sim::kernel::{Kernel, KernelKind};
+use crate::surrogate::{Ensemble, EnsembleParams, Gbdt, GbdtParams};
+use crate::util::bench::{bench_quiet, wall_time, BenchEntry, BenchReport};
+use crate::util::pool::WorkerPool;
+use crate::util::rng::Rng;
+
+/// Synthetic attention-like partition: three computation kernels plus an
+/// AllReduce (the standard fixture shape used across the test suite).
+fn bench_partition() -> Partition {
+    Partition {
+        ptype: "bench/attn".into(),
+        comps: vec![
+            Kernel::comp("norm", KernelKind::Norm, 1e8, 8e8),
+            Kernel::comp("linear1", KernelKind::Linear, 4e11, 2e9),
+            Kernel::comp("linear2", KernelKind::Linear, 4e11, 2e9),
+        ],
+        comm: Some(Kernel::comm("ar", KernelKind::AllReduce, 4e8)),
+        count: 28,
+    }
+}
+
+/// Compute → memory → compute kernel sequence: under a per-class
+/// schedule the executor must charge exactly two frequency transitions.
+fn per_class_partition() -> Partition {
+    Partition {
+        ptype: "bench/kdvfs".into(),
+        comps: vec![
+            Kernel::comp("linear1", KernelKind::Linear, 3e11, 1e9),
+            Kernel::comp("fused", KernelKind::Grouped, 2e11, 2e9),
+            Kernel::comp("linear2", KernelKind::Linear, 3e11, 1e9),
+        ],
+        comm: None,
+        count: 28,
+    }
+}
+
+/// Same schedule-like synthetic regression set the surrogate tests use:
+/// 150 rows × 3 features, fixed seed.
+fn synth_dataset() -> (Vec<Vec<f64>>, Vec<f64>) {
+    let mut rng = Rng::new(1);
+    let mut x = Vec::new();
+    let mut y = Vec::new();
+    for _ in 0..150 {
+        let f = rng.range_f64(900.0, 1410.0);
+        let s = (rng.below(10) * 3 + 3) as f64;
+        let t = rng.below(9) as f64;
+        let time = 1000.0 / f + 0.3 * (s - 12.0).abs() + 0.5 * (t - 4.0).powi(2) / (f / 1000.0);
+        x.push(vec![f, s, t]);
+        y.push(time);
+    }
+    (x, y)
+}
+
+/// An 18-point stage menu (both directions identical) for the 1F1B
+/// entries — same shape as the `hot_paths` bench target.
+fn bench_menus(n_stages: usize) -> Vec<StageMenu> {
+    let mk = || {
+        let f = MbFrontier::from_points(
+            (0..18)
+                .map(|i| MbPoint {
+                    time_s: 0.1 + 0.004 * i as f64,
+                    total_j: 60.0 - 1.2 * i as f64,
+                    dyn_j: 40.0 - i as f64,
+                    plan: MicrobatchPlan {
+                        freq_mhz: 1410,
+                        configs: Default::default(),
+                        sequential: true,
+                    },
+                })
+                .collect(),
+        );
+        StageMenu::from_frontiers(&f, &f)
+    };
+    (0..n_stages).map(|_| mk()).collect()
+}
+
+fn counters(pairs: &[(&str, u64)]) -> BTreeMap<String, u64> {
+    pairs.iter().map(|&(k, v)| (k.to_string(), v)).collect()
+}
+
+fn push_entry<F: FnMut()>(
+    entries: &mut BTreeMap<String, BenchEntry>,
+    deterministic: bool,
+    name: &str,
+    budget_s: f64,
+    c: BTreeMap<String, u64>,
+    f: F,
+) {
+    let e = if deterministic {
+        // The workload already ran exactly once while deriving counters.
+        BenchEntry::deterministic(c)
+    } else {
+        BenchEntry::timed(&bench_quiet(name, budget_s, f), c)
+    };
+    entries.insert(name.to_string(), e);
+}
+
+/// Run the whole suite. `budget_scale` multiplies every entry's timing
+/// budget (ignored in deterministic mode, where nothing is timed).
+pub fn run(deterministic: bool, budget_scale: f64) -> BenchReport {
+    let (report, wall) = wall_time(|| run_entries(deterministic, budget_scale));
+    BenchReport {
+        deterministic,
+        entries: report,
+        wall_s: if deterministic { None } else { Some(wall) },
+    }
+}
+
+fn run_entries(deterministic: bool, budget_scale: f64) -> BTreeMap<String, BenchEntry> {
+    let mut entries = BTreeMap::new();
+    let scale = |s: f64| s * budget_scale;
+    let gpu = GpuSpec::a100();
+    let part = bench_partition();
+
+    // 1. The schedule executor — 10^5–10^6 calls per MBO sweep.
+    let ovl = Schedule::uniform(12, LaunchAt::WithComp(1), 1200);
+    let r = execute_partition(&gpu, &part.comps, part.comm.as_ref(), &ovl, 30.0, Some(gpu.tdp_w));
+    push_entry(
+        &mut entries,
+        deterministic,
+        "exec_overlapped",
+        scale(0.2),
+        counters(&[
+            ("kernels", part.comps.len() as u64),
+            ("freq_transitions", r.freq_transitions as u64),
+        ]),
+        || {
+            black_box(execute_partition(
+                &gpu,
+                &part.comps,
+                part.comm.as_ref(),
+                &ovl,
+                30.0,
+                Some(gpu.tdp_w),
+            ));
+        },
+    );
+
+    let seq = Schedule::sequential(1200);
+    let r = execute_partition(&gpu, &part.comps, part.comm.as_ref(), &seq, 30.0, Some(gpu.tdp_w));
+    push_entry(
+        &mut entries,
+        deterministic,
+        "exec_sequential",
+        scale(0.2),
+        counters(&[
+            ("kernels", part.comps.len() as u64),
+            ("freq_transitions", r.freq_transitions as u64),
+        ]),
+        || {
+            black_box(execute_partition(
+                &gpu,
+                &part.comps,
+                part.comm.as_ref(),
+                &seq,
+                30.0,
+                Some(gpu.tdp_w),
+            ));
+        },
+    );
+
+    let kd = per_class_partition();
+    let split = Schedule {
+        comm_sms: 0,
+        launch: LaunchAt::Sequential,
+        freq_mhz: 1410,
+        kernel_freqs: KernelFreqs::PerClass { compute_mhz: 1410, memory_mhz: 1110 },
+    };
+    let r = execute_partition(&gpu, &kd.comps, None, &split, 30.0, Some(gpu.tdp_w));
+    push_entry(
+        &mut entries,
+        deterministic,
+        "exec_per_class",
+        scale(0.2),
+        counters(&[
+            ("kernels", kd.comps.len() as u64),
+            ("freq_transitions", r.freq_transitions as u64),
+        ]),
+        || {
+            black_box(execute_partition(&gpu, &kd.comps, None, &split, 30.0, Some(gpu.tdp_w)));
+        },
+    );
+
+    // 2. Candidate-space enumeration (no-comm partition: one candidate
+    //    per search frequency).
+    let space_len = space::candidate_space(&gpu, &kd, 8).len();
+    push_entry(
+        &mut entries,
+        deterministic,
+        "candidate_space",
+        scale(0.1),
+        counters(&[("candidates", space_len as u64)]),
+        || {
+            black_box(space::candidate_space(&gpu, &kd, 8));
+        },
+    );
+
+    // 3. Surrogate: SoA training and batched prediction.
+    let (x, y) = synth_dataset();
+    let params = GbdtParams::default();
+    let model = Gbdt::fit(&x, &y, &params);
+    push_entry(
+        &mut entries,
+        deterministic,
+        "surrogate_fit",
+        scale(0.5),
+        counters(&[
+            ("rows", x.len() as u64),
+            ("features", x[0].len() as u64),
+            ("rounds", params.n_rounds as u64),
+            ("trees", model.n_trees() as u64),
+        ]),
+        || {
+            black_box(Gbdt::fit(&x, &y, &params));
+        },
+    );
+
+    let mut batch = Vec::new();
+    model.predict_batch(&x, &mut batch);
+    push_entry(
+        &mut entries,
+        deterministic,
+        "surrogate_predict_batch",
+        scale(0.2),
+        counters(&[("rows", x.len() as u64), ("trees", model.n_trees() as u64)]),
+        || {
+            model.predict_batch(&x, &mut batch);
+            black_box(&batch);
+        },
+    );
+
+    let ep = EnsembleParams::default();
+    let ens = Ensemble::fit(&x, &y, &ep);
+    let mut ens_batch = Vec::new();
+    ens.predict_batch(&x, &mut ens_batch);
+    push_entry(
+        &mut entries,
+        deterministic,
+        "ensemble_predict_batch",
+        scale(0.2),
+        counters(&[("rows", x.len() as u64), ("members", ens.members.len() as u64)]),
+        || {
+            ens.predict_batch(&x, &mut ens_batch);
+            black_box(&ens_batch);
+        },
+    );
+
+    // 4. 1F1B simulation + Perseus greedy fill.
+    let (n_stages, n_mb) = (2usize, 8usize);
+    let menus = bench_menus(n_stages);
+    let choice = vec![vec![0usize; 2 * n_mb]; n_stages];
+    black_box(simulate_1f1b(&menus, &choice, n_mb));
+    push_entry(
+        &mut entries,
+        deterministic,
+        "simulate_1f1b",
+        scale(0.2),
+        counters(&[
+            ("stages", n_stages as u64),
+            ("microbatches", n_mb as u64),
+            ("tasks", (n_stages * 2 * n_mb) as u64),
+        ]),
+        || {
+            black_box(simulate_1f1b(&menus, &choice, n_mb));
+        },
+    );
+
+    black_box(greedy_fill(&menus, n_mb, 90.0, 2.0));
+    push_entry(
+        &mut entries,
+        deterministic,
+        "greedy_fill",
+        scale(0.5),
+        counters(&[
+            ("stages", n_stages as u64),
+            ("microbatches", n_mb as u64),
+            ("slots", (n_stages * 2 * n_mb) as u64),
+        ]),
+        || {
+            black_box(greedy_fill(&menus, n_mb, 90.0, 2.0));
+        },
+    );
+
+    // 5. Measurement cache: same canonical execution probed twice —
+    //    exactly one miss then one hit per fresh cache.
+    let backend = SimBackend;
+    let fp = combine_fp(gpu.fingerprint(), part.fingerprint());
+    let probe_twice = || {
+        let cache = MeasureCache::new();
+        for _ in 0..2 {
+            black_box(cache.exec(
+                &backend,
+                fp,
+                &gpu,
+                &part.comps,
+                part.comm.as_ref(),
+                &ovl,
+                30.0,
+                Some(gpu.tdp_w),
+            ));
+        }
+        cache
+    };
+    let cache = probe_twice();
+    push_entry(
+        &mut entries,
+        deterministic,
+        "measure_cache",
+        scale(0.2),
+        counters(&[("hits", cache.hits()), ("misses", cache.misses())]),
+        || {
+            black_box(probe_twice());
+        },
+    );
+
+    // 6. Chunked pool dispatch: 64 items in chunks of 8 on 2 workers.
+    let pool = WorkerPool::new(2);
+    let items: Vec<u64> = (0..64).collect();
+    let out = pool.map_chunked(items.clone(), 8, |v| v * v);
+    push_entry(
+        &mut entries,
+        deterministic,
+        "pool_map_chunked",
+        scale(0.2),
+        counters(&[
+            ("items", out.len() as u64),
+            ("chunks", out.len().div_ceil(8) as u64),
+            ("threads", pool.size() as u64),
+        ]),
+        move || {
+            black_box(pool.map_chunked(items.clone(), 8, |v| v * v));
+        },
+    );
+
+    entries
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_run_is_byte_identical() {
+        let a = run(true, 0.0);
+        let b = run(true, 0.0);
+        assert_eq!(a.to_json().try_dump().unwrap(), b.to_json().try_dump().unwrap());
+        assert!(a.deterministic && a.wall_s.is_none());
+        for (name, e) in &a.entries {
+            assert!(e.iters.is_none(), "{name} timed in deterministic mode");
+            assert!(e.min_ns.is_none() && e.median_ns.is_none() && e.mean_ns.is_none());
+            assert!(!e.counters.is_empty(), "{name} has no counters");
+        }
+    }
+
+    #[test]
+    fn counters_match_structure() {
+        let rep = run(true, 0.0);
+        let c = |name: &str, key: &str| rep.entries[name].counters[key];
+        assert_eq!(c("exec_overlapped", "kernels"), 3);
+        assert_eq!(c("exec_overlapped", "freq_transitions"), 0);
+        assert_eq!(c("exec_sequential", "freq_transitions"), 0);
+        assert_eq!(c("exec_per_class", "freq_transitions"), 2);
+        assert_eq!(
+            c("candidate_space", "candidates"),
+            GpuSpec::a100().search_freqs().len() as u64
+        );
+        assert_eq!(c("surrogate_fit", "rows"), 150);
+        assert_eq!(c("surrogate_fit", "trees"), 100);
+        assert_eq!(c("ensemble_predict_batch", "members"), 5);
+        assert_eq!(c("simulate_1f1b", "tasks"), 32);
+        assert_eq!(c("greedy_fill", "slots"), 32);
+        assert_eq!(c("measure_cache", "hits"), 1);
+        assert_eq!(c("measure_cache", "misses"), 1);
+        assert_eq!(c("pool_map_chunked", "items"), 64);
+        assert_eq!(c("pool_map_chunked", "chunks"), 8);
+    }
+
+    #[test]
+    fn timed_run_populates_wall_fields() {
+        let rep = run(false, 0.01);
+        assert!(!rep.deterministic);
+        assert!(rep.wall_s.unwrap() > 0.0);
+        for (name, e) in &rep.entries {
+            assert!(e.iters.unwrap() >= 3, "{name}");
+            assert!(e.min_ns.unwrap() > 0.0, "{name}");
+        }
+    }
+}

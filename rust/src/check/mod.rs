@@ -98,10 +98,13 @@ pub enum Code {
     K070,
     K071,
     K072,
+    K080,
+    K081,
+    K082,
 }
 
 impl Code {
-    pub const ALL: [Code; 37] = [
+    pub const ALL: [Code; 40] = [
         Code::K000,
         Code::K001,
         Code::K002,
@@ -139,6 +142,9 @@ impl Code {
         Code::K070,
         Code::K071,
         Code::K072,
+        Code::K080,
+        Code::K081,
+        Code::K082,
     ];
 
     pub fn as_str(self) -> &'static str {
@@ -180,6 +186,9 @@ impl Code {
             Code::K070 => "K070",
             Code::K071 => "K071",
             Code::K072 => "K072",
+            Code::K080 => "K080",
+            Code::K081 => "K081",
+            Code::K082 => "K082",
         }
     }
 
@@ -193,7 +202,8 @@ impl Code {
             | Code::K033
             | Code::K042
             | Code::K063
-            | Code::K072 => Severity::Warn,
+            | Code::K072
+            | Code::K082 => Severity::Warn,
             _ => Severity::Error,
         }
     }
@@ -238,6 +248,9 @@ impl Code {
             Code::K070 => "per-kernel class frequency outside the GPU's range or step grid",
             Code::K071 => "frequency-transition count inconsistent with the schedule key",
             Code::K072 => "per-kernel memory frequency above its slot's core frequency",
+            Code::K080 => "bench report missing or invalid required field",
+            Code::K081 => "bench report wall-field nulling inconsistent with its mode",
+            Code::K082 => "bench report median latency below its minimum",
         }
     }
 }
@@ -286,6 +299,7 @@ pub enum ArtifactKind {
     Sweep,
     ReplanSummary,
     LoadgenReport,
+    BenchReport,
 }
 
 impl ArtifactKind {
@@ -298,6 +312,7 @@ impl ArtifactKind {
             ArtifactKind::Sweep => "sweep",
             ArtifactKind::ReplanSummary => "replan_summary",
             ArtifactKind::LoadgenReport => "loadgen_report",
+            ArtifactKind::BenchReport => "bench_report",
         }
     }
 }
@@ -317,6 +332,9 @@ pub fn infer_kind(j: &Json) -> Option<ArtifactKind> {
     }
     if tag("bench") == Some("kareus_sweep") {
         return Some(ArtifactKind::Sweep);
+    }
+    if tag("bench") == Some("kareus_bench") {
+        return Some(ArtifactKind::BenchReport);
     }
     if tag("summary") == Some("kareus_replan_run") {
         return Some(ArtifactKind::ReplanSummary);
@@ -412,7 +430,7 @@ pub fn check_text(raw: &str, source: &str, gpu: Option<&GpuSpec>) -> Report {
             Code::K000,
             "",
             "no recognizable schema tag (expected a kareus plan, cluster plan, revision log, \
-             trace, sweep, replan summary, or loadgen report)",
+             trace, sweep, replan summary, loadgen report, or bench report)",
         ));
         return report;
     };
@@ -452,6 +470,7 @@ pub fn check_text(raw: &str, source: &str, gpu: Option<&GpuSpec>) -> Report {
         ArtifactKind::Sweep => check_sweep_json(&j),
         ArtifactKind::ReplanSummary => check_summary_json(&j),
         ArtifactKind::LoadgenReport => check_loadgen_json(&j),
+        ArtifactKind::BenchReport => check_bench_json(&j),
     };
     report.diagnostics.append(&mut diags);
     report
@@ -1605,6 +1624,147 @@ pub fn check_loadgen_json(j: &Json) -> Vec<Diagnostic> {
 }
 
 // ---------------------------------------------------------------------------
+// Bench reports (K080-K082)
+// ---------------------------------------------------------------------------
+
+/// Verify a `kareus_bench` report (`kareus bench` output): required-field
+/// shape (K080), the deterministic-mode contract that the `deterministic`
+/// flag and the wall fields — per-entry `iters`/`min_ns`/`median_ns`/
+/// `mean_ns` and top-level `wall_s` — agree, all null or all populated
+/// (K081), and per-entry `median_ns >= min_ns` (K082, warn).
+pub fn check_bench_json(j: &Json) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    if j.get("version").and_then(Json::as_f64) != Some(1.0) {
+        out.push(d(
+            Code::K030,
+            "version",
+            format!(
+                "bench report version {} unsupported (expected 1)",
+                fmt_opt(j.get("version").and_then(Json::as_f64))
+            ),
+        ));
+        return out;
+    }
+    let Some(deterministic) = j.get("deterministic").and_then(Json::as_bool) else {
+        out.push(d(Code::K080, "deterministic", "missing or not a boolean"));
+        return out;
+    };
+    let Some(entries) = j.get("entries").and_then(Json::as_obj) else {
+        out.push(d(Code::K080, "entries", "missing or not an object"));
+        return out;
+    };
+    if entries.is_empty() {
+        out.push(d(Code::K080, "entries", "bench report covers zero entries"));
+    }
+    // Wall fields are null in deterministic mode and populated otherwise;
+    // mixing within one report breaks the byte-for-byte CI diff contract.
+    let mut nulled = 0usize;
+    let mut live = 0usize;
+    for (name, e) in entries {
+        let path = format!("entries.{name}");
+        match e.get("counters").and_then(Json::as_obj) {
+            Some(counters) => {
+                for (k, v) in counters {
+                    match v.as_f64() {
+                        Some(x) if x.is_finite() && x >= 0.0 && x.fract() == 0.0 => {}
+                        _ => out.push(d(
+                            Code::K080,
+                            format!("{path}.counters.{k}"),
+                            "counter must be a non-negative integer",
+                        )),
+                    }
+                }
+            }
+            None => out.push(d(Code::K080, format!("{path}.counters"), "missing or not an object")),
+        }
+        let mut wall = |key: &str| -> Option<f64> {
+            match e.get(key) {
+                None => {
+                    out.push(d(
+                        Code::K080,
+                        format!("{path}.{key}"),
+                        "missing wall-clock field (use null, not absence)",
+                    ));
+                    None
+                }
+                Some(Json::Null) => {
+                    nulled += 1;
+                    None
+                }
+                Some(x) => match x.as_f64() {
+                    Some(f) if f.is_finite() && f >= 0.0 => {
+                        live += 1;
+                        Some(f)
+                    }
+                    _ => {
+                        out.push(d(
+                            Code::K080,
+                            format!("{path}.{key}"),
+                            "must be null or a finite non-negative number",
+                        ));
+                        None
+                    }
+                },
+            }
+        };
+        let iters = wall("iters");
+        let min = wall("min_ns");
+        let median = wall("median_ns");
+        wall("mean_ns");
+        if let Some(i) = iters {
+            if i.fract() != 0.0 {
+                out.push(d(Code::K080, format!("{path}.iters"), "must be an integer"));
+            }
+        }
+        if let (Some(min), Some(median)) = (min, median) {
+            if median < min {
+                out.push(d(
+                    Code::K082,
+                    format!("{path}.median_ns"),
+                    format!("median {median} ns is below min {min} ns"),
+                ));
+            }
+        }
+    }
+    match j.get("wall_s") {
+        None => {
+            out.push(d(Code::K080, "wall_s", "missing wall-clock field (use null, not absence)"))
+        }
+        Some(Json::Null) => nulled += 1,
+        Some(x) => match x.as_f64() {
+            Some(f) if f.is_finite() && f >= 0.0 => live += 1,
+            _ => out.push(d(Code::K080, "wall_s", "must be null or a finite non-negative number")),
+        },
+    }
+    if deterministic && live > 0 {
+        out.push(d(
+            Code::K081,
+            "deterministic",
+            format!(
+                "{live} wall-clock field(s) populated in a deterministic report — \
+                 deterministic mode must null all of them"
+            ),
+        ));
+    } else if !deterministic && nulled > 0 && live > 0 {
+        out.push(d(
+            Code::K081,
+            "",
+            format!(
+                "{nulled} wall-clock field(s) are null but {live} are not — a timed report \
+                 must populate all of them"
+            ),
+        ));
+    } else if !deterministic && live == 0 && nulled > 0 {
+        out.push(d(
+            Code::K081,
+            "deterministic",
+            "every wall-clock field is null but the report claims deterministic = false",
+        ));
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
 // Duplicate-key scan (K033)
 // ---------------------------------------------------------------------------
 
@@ -1825,6 +1985,7 @@ mod tests {
             (r#"{"bench":"kareus_sweep"}"#, ArtifactKind::Sweep),
             (r#"{"summary":"kareus_replan_run"}"#, ArtifactKind::ReplanSummary),
             (r#"{"report":"kareus_loadgen"}"#, ArtifactKind::LoadgenReport),
+            (r#"{"bench":"kareus_bench"}"#, ArtifactKind::BenchReport),
             (r#"{"slots":[],"n_stages":1}"#, ArtifactKind::FrequencyPlan),
         ];
         for (src, want) in cases {
@@ -1868,6 +2029,7 @@ mod tests {
                 Code::K042,
                 Code::K063,
                 Code::K072,
+                Code::K082,
             ]
         );
         for c in Code::ALL {
@@ -1928,5 +2090,74 @@ mod tests {
         );
         let r2 = check_text(&raw2, "mem", None);
         assert!(r2.diagnostics.is_empty(), "{:?}", r2.diagnostics);
+    }
+
+    fn bench_raw(deterministic: bool, entry: &str, wall_s: &str) -> String {
+        format!(
+            "{{\"bench\":\"kareus_bench\",\"version\":1,\"deterministic\":{deterministic},\
+             \"entries\":{{\"exec_overlapped\":{entry}}},\"wall_s\":{wall_s}}}"
+        )
+    }
+
+    #[test]
+    fn bench_deterministic_report_is_clean() {
+        let raw = bench_raw(
+            true,
+            r#"{"counters":{"kernels":3},"iters":null,"min_ns":null,"median_ns":null,"mean_ns":null}"#,
+            "null",
+        );
+        let r = check_text(&raw, "mem", None);
+        assert_eq!(r.kind, "bench_report");
+        assert!(r.diagnostics.is_empty(), "{:?}", r.diagnostics);
+        // The real suite's deterministic report passes its own checker.
+        let rep = crate::bench_suite::run(true, 0.0);
+        let r2 = check_text(&rep.to_json().dump(), "mem", None);
+        assert!(r2.diagnostics.is_empty(), "{:?}", r2.diagnostics);
+    }
+
+    #[test]
+    fn bench_missing_field_is_k080() {
+        // Absent min_ns (wall fields must be explicit nulls) and a
+        // fractional counter each trip K080.
+        let raw = bench_raw(
+            true,
+            r#"{"counters":{"kernels":3.5},"iters":null,"median_ns":null,"mean_ns":null}"#,
+            "null",
+        );
+        let r = check_text(&raw, "mem", None);
+        assert_eq!(codes(&r.diagnostics), vec![Code::K080, Code::K080]);
+        assert!(r.has_errors());
+    }
+
+    #[test]
+    fn bench_mixed_nulling_is_k081() {
+        // Deterministic report with a populated wall field.
+        let raw = bench_raw(
+            true,
+            r#"{"counters":{},"iters":null,"min_ns":12.0,"median_ns":null,"mean_ns":null}"#,
+            "null",
+        );
+        let r = check_text(&raw, "mem", None);
+        assert_eq!(codes(&r.diagnostics), vec![Code::K081]);
+        // Timed report with everything nulled claims the wrong mode.
+        let raw2 = bench_raw(
+            false,
+            r#"{"counters":{},"iters":null,"min_ns":null,"median_ns":null,"mean_ns":null}"#,
+            "null",
+        );
+        let r2 = check_text(&raw2, "mem", None);
+        assert_eq!(codes(&r2.diagnostics), vec![Code::K081]);
+    }
+
+    #[test]
+    fn bench_median_below_min_is_k082_warn() {
+        let raw = bench_raw(
+            false,
+            r#"{"counters":{"kernels":3},"iters":5,"min_ns":100.0,"median_ns":50.0,"mean_ns":80.0}"#,
+            "0.5",
+        );
+        let r = check_text(&raw, "mem", None);
+        assert_eq!(codes(&r.diagnostics), vec![Code::K082]);
+        assert!(!r.has_errors());
     }
 }

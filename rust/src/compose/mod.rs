@@ -349,38 +349,131 @@ pub fn microbatch_frontier(
     // Fingerprints are invariant across the whole product — hash once.
     let fps = microbatch_fps(gpu, partitions, extra);
     let seq_fps = seq_work.map(|w| sequential_fps(gpu, w));
+
+    // A partition's execution depends only on its own schedule, so its
+    // (time, total, dyn) contribution is a function of (partition, config,
+    // frequency) alone. Instead of materializing every combination as a
+    // cloned schedule map and re-walking all partitions per combination,
+    // measure each partition once per config per frequency and enumerate
+    // the product with an index odometer (last type varies fastest — the
+    // original nesting order), summing the memoized contributions in
+    // partition order so every float lands in the same addition sequence
+    // as the direct per-combo evaluation.
+    //
+    // `slot[i]`: this partition's entry in the type vocabulary. rposition
+    // mirrors the map-overwrite semantics the combo maps had (a later
+    // duplicate ptype entry wins).
+    let slot: Vec<Option<usize>> = partitions
+        .iter()
+        .map(|p| type_configs.iter().rposition(|(t, _)| *t == p.ptype))
+        .collect();
+    let drain_part = partitions.iter().rposition(|p| p.comm.is_some());
     for &f in &gpu.search_freqs() {
-        // Cartesian product across partition types.
-        let mut combos: Vec<BTreeMap<String, Schedule>> = vec![BTreeMap::new()];
-        for (ptype, cfgs) in &type_configs {
-            let mut next = Vec::with_capacity(combos.len() * cfgs.len());
-            for base in &combos {
-                for &(sms, launch, kf) in cfgs {
-                    let mut map = base.clone();
-                    map.insert(
-                        ptype.clone(),
-                        Schedule {
-                            comm_sms: sms,
-                            launch,
-                            freq_mhz: f,
-                            kernel_freqs: kf.rebased(f),
-                        },
-                    );
-                    next.push(map);
-                }
-            }
-            combos = next;
-        }
-        for configs in combos {
-            points.push(eval_overlapped_microbatch_fp(
+        // Per-(type, config) schedules at this frequency.
+        let scheds: Vec<Vec<Schedule>> = type_configs
+            .iter()
+            .map(|(_, cfgs)| {
+                cfgs.iter()
+                    .map(|&(sms, launch, kf)| Schedule {
+                        comm_sms: sms,
+                        launch,
+                        freq_mhz: f,
+                        kernel_freqs: kf.rebased(f),
+                    })
+                    .collect()
+            })
+            .collect();
+        let default_sched = Schedule::uniform(12, LaunchAt::WithComp(0), f);
+        let exec_part = |i: usize, sched: &Schedule| -> (f64, f64, f64) {
+            let part = &partitions[i];
+            let r = m.exec(
+                fps.parts[i],
                 gpu,
-                partitions,
-                Some(&fps),
-                &configs,
-                f,
-                extra,
-                m,
-            ));
+                &part.comps,
+                part.comm.as_ref(),
+                sched,
+                gpu.ref_temp_c,
+                Some(gpu.tdp_w),
+            );
+            (
+                part.count as f64 * r.time_s,
+                part.count as f64 * r.total_j(),
+                part.count as f64 * r.dyn_j,
+            )
+        };
+        // contrib[i]: one entry per config of partition i's type; a single
+        // default-schedule entry for partitions outside the vocabulary.
+        let contrib: Vec<Vec<(f64, f64, f64)>> = (0..partitions.len())
+            .map(|i| match slot[i] {
+                Some(j) => scheds[j].iter().map(|s| exec_part(i, s)).collect(),
+                None => vec![exec_part(i, &default_sched)],
+            })
+            .collect();
+        // Drain of the last comm partition, per applicable config (it
+        // depends only on the comm kernel and that config's SM count).
+        let drain_for = |c: &Kernel, sms: u32| -> (f64, f64, f64) {
+            let bw = gpu.comm_bw(sms.max(1));
+            let t = c.comm_bytes / bw;
+            let p_dyn = gpu.comm_power(bw) + gpu.mem_power(2.0 * bw);
+            (t, (gpu.static_power(gpu.ref_temp_c) + p_dyn) * t, p_dyn * t)
+        };
+        let drains: Option<(Option<usize>, Vec<(f64, f64, f64)>)> = drain_part.map(|i| {
+            let c = partitions[i].comm.as_ref().unwrap();
+            match slot[i] {
+                Some(j) => (Some(j), scheds[j].iter().map(|s| drain_for(c, s.comm_sms)).collect()),
+                None => (None, vec![drain_for(c, default_sched.comm_sms)]),
+            }
+        });
+        // Non-partition extras: identical for every combination.
+        let (te, je, de) = eval_extra(gpu, fps.extra, extra, f, m);
+
+        let n_types = type_configs.len();
+        let mut idx = vec![0usize; n_types];
+        let mut done = false;
+        while !done {
+            let mut time = 0.0;
+            let mut total = 0.0;
+            let mut dynamic = 0.0;
+            for (i, c) in contrib.iter().enumerate() {
+                let (t, tot, dy) = match slot[i] {
+                    Some(j) => c[idx[j]],
+                    None => c[0],
+                };
+                time += t;
+                total += tot;
+                dynamic += dy;
+            }
+            if let Some((dslot, dvals)) = &drains {
+                let (t, tot, dy) = match dslot {
+                    Some(j) => dvals[idx[*j]],
+                    None => dvals[0],
+                };
+                time += t;
+                total += tot;
+                dynamic += dy;
+            }
+            time += te;
+            total += je;
+            dynamic += de;
+            let mut configs = BTreeMap::new();
+            for (j, (ptype, _)) in type_configs.iter().enumerate() {
+                configs.insert(ptype.clone(), scheds[j][idx[j]]);
+            }
+            points.push(MbPoint {
+                time_s: time,
+                total_j: total,
+                dyn_j: dynamic,
+                plan: MicrobatchPlan { freq_mhz: f, configs, sequential: false },
+            });
+            done = true;
+            for k in (0..n_types).rev() {
+                idx[k] += 1;
+                if idx[k] < type_configs[k].1.len() {
+                    done = false;
+                    break;
+                }
+                idx[k] = 0;
+            }
         }
         if let Some(w) = seq_work {
             points.push(eval_sequential_microbatch_fp(gpu, w, seq_fps.as_ref(), f, m));
@@ -553,6 +646,39 @@ mod tests {
         let freqs: std::collections::BTreeSet<u32> =
             mbf.pareto().iter().map(|p| p.plan.freq_mhz).collect();
         assert!(freqs.len() >= 3, "only freqs {freqs:?} on frontier");
+    }
+
+    #[test]
+    fn frontier_points_match_direct_eval_bitwise() {
+        // The memoized odometer product must reproduce the direct
+        // per-combination evaluation bit-for-bit for every emitted plan.
+        let g = GpuSpec::a100();
+        let c = cfg();
+        let nano_w = build_nanobatch_pass(&c, Dir::Fwd, false, false);
+        let parts = detect_partitions(&g, &nano_w, true);
+        let mbo = optimize_all_partitions(7, &g, &parts, c.par.tp * c.par.cp);
+        let seq_w = build_pass(&c, c.tokens_per_gpu(), Dir::Fwd, false, false);
+        let mbf =
+            microbatch_frontier(&g, &parts, &mbo, &nano_w.extra, Some(&seq_w), Measurer::sim());
+        let overlapped: Vec<&MbPoint> = mbf.points.iter().filter(|p| !p.plan.sequential).collect();
+        assert!(!overlapped.is_empty());
+        // Sampled across the product (full re-evaluation would double the
+        // test's simulator work for no extra coverage).
+        let step = (overlapped.len() / 25).max(1);
+        for p in overlapped.iter().step_by(step) {
+            let direct = eval_overlapped_microbatch_fp(
+                &g,
+                &parts,
+                None,
+                &p.plan.configs,
+                p.plan.freq_mhz,
+                &nano_w.extra,
+                Measurer::sim(),
+            );
+            assert_eq!(p.time_s.to_bits(), direct.time_s.to_bits());
+            assert_eq!(p.total_j.to_bits(), direct.total_j.to_bits());
+            assert_eq!(p.dyn_j.to_bits(), direct.dyn_j.to_bits());
+        }
     }
 
     #[test]

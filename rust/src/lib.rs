@@ -48,6 +48,7 @@
 
 pub mod backend;
 pub mod baselines;
+pub mod bench_suite;
 pub mod check;
 pub mod cli;
 pub mod cluster;

@@ -23,6 +23,8 @@
 //!             [--shutdown] [--out FILE]    drive a server, emit a report
 //!   check     <file.json> [--gpu a100] [--format text|json]
 //!                                          statically verify an artifact
+//!   bench     [--deterministic] [--budget-scale X] [--out FILE]
+//!                                          hot-path suite, BENCH JSON
 //!   census                                 Appendix B space census
 //!   list                                   list experiments
 
@@ -63,6 +65,7 @@ fn main() {
         "serve" => cmd_serve(&args),
         "loadgen" => cmd_loadgen(&args),
         "check" => cmd_check(&args),
+        "bench" => cmd_bench(&args),
         "census" => match paper::run_experiment("appB") {
             // Propagate through the CLI error path instead of unwrapping:
             // a missing built-in experiment is an internal error, not a
@@ -104,6 +107,7 @@ fn main() {
                  [--jobs gpu:model:par:system,…] [--target max|deadline:S|budget:J|power-cap:W] \
                  [--seed N] [--deterministic] [--shutdown] [--out FILE.json]\n  \
                  kareus check FILE.json [--gpu a100|h100|v100] [--format text|json]\n  \
+                 kareus bench [--deterministic] [--budget-scale X] [--out FILE.json]\n  \
                  kareus census | kareus list\n\
                  \n\
                  --strategy picks the per-partition search (default mbo: the paper's multi-pass MBO;\n\
@@ -288,6 +292,45 @@ fn cmd_check(args: &Args) -> i32 {
     } else {
         0
     }
+}
+
+/// `kareus bench`: run the hot-path suite and emit the `kareus_bench`
+/// JSON artifact (stdout or `--out`). With `--deterministic` each
+/// workload runs exactly once, every wall-clock field is null, and two
+/// runs dump byte-identical documents (the CI smoke `cmp`s them);
+/// without it, entries carry min/median/mean nanoseconds from the bench
+/// harness, scaled by `--budget-scale`.
+fn cmd_bench(args: &Args) -> i32 {
+    if args.has_flag("budget-scale") {
+        eprintln!("--budget-scale requires a value");
+        return 2;
+    }
+    let deterministic = args.has_flag("deterministic");
+    let scale = args.get_f64("budget-scale", 1.0);
+    if !(scale.is_finite() && scale > 0.0) {
+        eprintln!("bad --budget-scale (positive multiplier)");
+        return 2;
+    }
+    eprintln!(
+        "benching hot paths ({})",
+        if deterministic { "deterministic: counters only" } else { "timed" }
+    );
+    let report = kareus::bench_suite::run(deterministic, scale);
+    let json = match emit(&report.to_json(), "emit bench report") {
+        Ok(j) => j,
+        Err(code) => return code,
+    };
+    match args.get("out") {
+        Some(path) => {
+            if let Err(e) = std::fs::write(path, &json) {
+                eprintln!("write {path}: {e}");
+                return 1;
+            }
+            eprintln!("wrote {path}");
+        }
+        None => println!("{json}"),
+    }
+    0
 }
 
 fn cmd_paper(args: &Args) -> i32 {

@@ -108,6 +108,36 @@ impl StageMenu {
     }
 }
 
+/// Reusable state for [`simulate_1f1b_with`]: the per-stage 1F1B task
+/// orders — invariant across the thousands of candidate moves
+/// [`greedy_fill`] evaluates, yet previously recomputed per call — plus
+/// the event-scheduling vectors, so repeated simulation allocates
+/// nothing.
+pub struct SimScratch {
+    orders: Vec<Vec<Task>>,
+    end: Vec<Vec<f64>>,
+    ptr: Vec<usize>,
+    clock: Vec<f64>,
+    busy: Vec<f64>,
+}
+
+impl SimScratch {
+    pub fn new(n_stages: usize, n_microbatches: usize) -> SimScratch {
+        SimScratch {
+            orders: (0..n_stages).map(|s| stage_order(s, n_stages, n_microbatches)).collect(),
+            end: vec![vec![f64::NAN; 2 * n_microbatches]; n_stages],
+            ptr: vec![0; n_stages],
+            clock: vec![0.0; n_stages],
+            busy: vec![0.0; n_stages],
+        }
+    }
+
+    /// Per-stage busy time from the most recent simulation.
+    pub fn busy(&self) -> &[f64] {
+        &self.busy
+    }
+}
+
 /// Simulate the 1F1B schedule given per-task durations; returns
 /// (iteration time, per-stage busy time).
 pub fn simulate_1f1b(
@@ -115,19 +145,39 @@ pub fn simulate_1f1b(
     choice: &[Vec<usize>],
     n_microbatches: usize,
 ) -> (f64, Vec<f64>) {
+    let mut scratch = SimScratch::new(menus.len(), n_microbatches);
+    let t = simulate_1f1b_with(menus, choice, n_microbatches, &mut scratch);
+    (t, scratch.busy)
+}
+
+/// [`simulate_1f1b`] with caller-owned scratch (results independent of
+/// its prior contents); per-stage busy time lands in
+/// [`SimScratch::busy`]. Returns the iteration makespan.
+pub fn simulate_1f1b_with(
+    menus: &[StageMenu],
+    choice: &[Vec<usize>],
+    n_microbatches: usize,
+    scratch: &mut SimScratch,
+) -> f64 {
     let n_stages = menus.len();
+    debug_assert_eq!(scratch.orders.len(), n_stages);
+    debug_assert!(scratch.end.iter().all(|row| row.len() == 2 * n_microbatches));
     let dur = |t: &Task| {
         let m = menus[t.stage].menu(t.is_bwd);
         m[choice[t.stage][2 * t.mb + t.is_bwd as usize].min(m.len() - 1)].0
     };
     // end[stage][2*mb + dir]; NaN = not yet scheduled.
-    let mut end = vec![vec![f64::NAN; 2 * n_microbatches]; n_stages];
-    let orders: Vec<Vec<Task>> =
-        (0..n_stages).map(|s| stage_order(s, n_stages, n_microbatches)).collect();
+    let end = &mut scratch.end;
+    for row in end.iter_mut() {
+        row.fill(f64::NAN);
+    }
+    let orders = &scratch.orders;
     // Event-driven list scheduling in topological order: each stage
     // consumes its 1F1B order as soon as cross-stage dependencies resolve.
-    let mut ptr = vec![0usize; n_stages];
-    let mut clock = vec![0.0f64; n_stages];
+    let ptr = &mut scratch.ptr;
+    ptr.fill(0);
+    let clock = &mut scratch.clock;
+    clock.fill(0.0);
     let total = n_stages * 2 * n_microbatches;
     let mut scheduled = 0usize;
     while scheduled < total {
@@ -174,24 +224,28 @@ pub fn simulate_1f1b(
         assert!(progress, "1F1B schedule deadlocked (inconsistent orders)");
     }
     let mut makespan = 0.0f64;
-    let mut busy = vec![0.0f64; n_stages];
+    scratch.busy.fill(0.0);
     for s in 0..n_stages {
         for t in &orders[s] {
-            busy[s] += dur(t);
+            scratch.busy[s] += dur(t);
         }
         makespan = makespan.max(clock[s]);
     }
-    (makespan, busy)
+    makespan
 }
 
-/// Energy of a frozen plan: task energies + static power during bubbles.
-fn plan_energy(
+/// Energy of a frozen plan given its already-simulated (makespan, busy):
+/// task energies + static power during bubbles. [`greedy_fill`] simulates
+/// once per candidate move and feeds the result straight here — the old
+/// path re-ran the identical simulation inside its energy helper.
+fn plan_energy_from_sim(
     menus: &[StageMenu],
     choice: &[Vec<usize>],
     n_microbatches: usize,
     p_static: f64,
+    time: f64,
+    busy: &[f64],
 ) -> (f64, f64, f64, f64) {
-    let (time, busy) = simulate_1f1b(menus, choice, n_microbatches);
     let mut total = 0.0;
     let mut dynamic = 0.0;
     for (s, menu) in menus.iter().enumerate() {
@@ -373,7 +427,14 @@ pub fn greedy_fill(
         }
     }
 
-    let (_, mut total_cur, _, _) = plan_energy(menus, &choice, n_microbatches, p_static);
+    // One scratch for the whole fill: the stage orders are computed once,
+    // and each candidate move costs exactly one (allocation-free)
+    // simulation instead of the two back-to-back identical runs the old
+    // simulate-then-plan_energy pair paid.
+    let mut scratch = SimScratch::new(n_stages, n_microbatches);
+    let t0 = simulate_1f1b_with(menus, &choice, n_microbatches, &mut scratch);
+    let (_, mut total_cur, _, _) =
+        plan_energy_from_sim(menus, &choice, n_microbatches, p_static, t0, &scratch.busy);
     while let Some(mv) = heap.pop() {
         let members = &groups[mv.group];
         // Advance every member that still has a slower point; remember
@@ -389,8 +450,9 @@ pub fn greedy_fill(
         if moved.is_empty() {
             continue;
         }
-        let (t, _) = simulate_1f1b(menus, &choice, n_microbatches);
-        let (_, total_after, _, _) = plan_energy(menus, &choice, n_microbatches, p_static);
+        let t = simulate_1f1b_with(menus, &choice, n_microbatches, &mut scratch);
+        let (_, total_after, _, _) =
+            plan_energy_from_sim(menus, &choice, n_microbatches, p_static, t, &scratch.busy);
         // A move must respect the deadline AND reduce true total energy
         // (task savings can be outweighed by static power burned in the
         // bubbles the slowdown creates on other stages).
@@ -406,7 +468,9 @@ pub fn greedy_fill(
         }
     }
 
-    let (time, total, dynamic, bubble) = plan_energy(menus, &choice, n_microbatches, p_static);
+    let t_final = simulate_1f1b_with(menus, &choice, n_microbatches, &mut scratch);
+    let (time, total, dynamic, bubble) =
+        plan_energy_from_sim(menus, &choice, n_microbatches, p_static, t_final, &scratch.busy);
     IterationPlan { choice, time_s: time, total_j: total, dyn_j: dynamic, bubble_s: bubble }
 }
 
@@ -504,6 +568,22 @@ mod tests {
         assert!(!plans.is_empty());
         for w in f.points().windows(2) {
             assert!(w[1].time > w[0].time && w[1].energy < w[0].energy);
+        }
+    }
+
+    #[test]
+    fn sim_scratch_reuse_matches_fresh_bitwise() {
+        let m = menus(3);
+        let mut scratch = SimScratch::new(3, 4);
+        for c in [0usize, 2, 1, 0] {
+            let choice = vec![vec![c; 8]; 3];
+            let t_reused = simulate_1f1b_with(&m, &choice, 4, &mut scratch);
+            let (t_fresh, busy_fresh) = simulate_1f1b(&m, &choice, 4);
+            assert_eq!(t_reused.to_bits(), t_fresh.to_bits());
+            assert_eq!(scratch.busy().len(), busy_fresh.len());
+            for (a, b) in scratch.busy().iter().zip(&busy_fresh) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
         }
     }
 

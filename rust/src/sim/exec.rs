@@ -137,10 +137,22 @@ impl ExecResult {
     }
 }
 
+/// Reusable per-call state for the executor. Holds each computation
+/// kernel's resolved frequency so the event loop indexes a flat array
+/// instead of re-dispatching `Schedule::freq_for` (class match + freq
+/// match) every segment — and so the resolution buffer is allocated once
+/// per scratch, not once per the 10⁵–10⁶ `execute_partition` calls a
+/// sweep makes.
+#[derive(Default)]
+pub struct ExecScratch {
+    freqs: Vec<u32>,
+}
+
 /// Execute one partition under `sched` at die temperature `temp_c`.
 ///
 /// `power_limit` of `None` disables throttling (used by unit tests);
-/// normally pass `Some(gpu.tdp_w)`.
+/// normally pass `Some(gpu.tdp_w)`. Convenience wrapper over
+/// [`execute_partition_with`] using a thread-local [`ExecScratch`].
 pub fn execute_partition(
     gpu: &GpuSpec,
     comps: &[Kernel],
@@ -148,6 +160,28 @@ pub fn execute_partition(
     sched: &Schedule,
     temp_c: f64,
     power_limit: Option<f64>,
+) -> ExecResult {
+    thread_local! {
+        static SCRATCH: std::cell::RefCell<ExecScratch> =
+            std::cell::RefCell::new(ExecScratch::default());
+    }
+    SCRATCH.with(|s| {
+        execute_partition_with(gpu, comps, comm, sched, temp_c, power_limit, &mut s.borrow_mut())
+    })
+}
+
+/// [`execute_partition`] with a caller-owned scratch. Results are
+/// independent of the scratch's prior contents (pinned bitwise by the
+/// differential suite).
+#[allow(clippy::too_many_arguments)]
+pub fn execute_partition_with(
+    gpu: &GpuSpec,
+    comps: &[Kernel],
+    comm: Option<&Kernel>,
+    sched: &Schedule,
+    temp_c: f64,
+    power_limit: Option<f64>,
+    scratch: &mut ExecScratch,
 ) -> ExecResult {
     debug_assert!(
         sched.freq_mhz >= gpu.f_min_mhz && sched.freq_mhz <= gpu.f_max_mhz,
@@ -179,19 +213,34 @@ pub fn execute_partition(
             gpu.f_max_mhz
         );
     }
+    // Resolve every computation kernel's frequency once; both executors
+    // then read `freqs[i]` instead of dispatching per segment.
+    scratch.freqs.clear();
+    scratch.freqs.extend(comps.iter().map(|k| sched.freq_for(k.kind.class())));
     match sched.launch {
-        LaunchAt::Sequential => execute_sequential(gpu, comps, comm, sched, temp_c, power_limit),
-        LaunchAt::WithComp(launch_idx) => {
-            execute_overlapped(gpu, comps, comm, sched, launch_idx, temp_c, power_limit)
+        LaunchAt::Sequential => {
+            execute_sequential(gpu, comps, comm, sched, &scratch.freqs, temp_c, power_limit)
         }
+        LaunchAt::WithComp(launch_idx) => execute_overlapped(
+            gpu,
+            comps,
+            comm,
+            sched,
+            &scratch.freqs,
+            launch_idx,
+            temp_c,
+            power_limit,
+        ),
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn execute_sequential(
     gpu: &GpuSpec,
     comps: &[Kernel],
     comm: Option<&Kernel>,
     sched: &Schedule,
+    freqs: &[u32],
     temp_c: f64,
     power_limit: Option<f64>,
 ) -> ExecResult {
@@ -200,8 +249,8 @@ fn execute_sequential(
     let mut freq_time_weighted = 0.0;
     let mut cur_freq = sched.freq_mhz;
 
-    for k in comps {
-        let f_k = sched.freq_for(k.kind.class());
+    for (i, k) in comps.iter().enumerate() {
+        let f_k = freqs[i];
         if f_k != cur_freq {
             charge_transition(gpu, p_static, f_k, &mut res, &mut freq_time_weighted);
             cur_freq = f_k;
@@ -273,6 +322,7 @@ fn execute_overlapped(
     comps: &[Kernel],
     comm: Option<&Kernel>,
     sched: &Schedule,
+    freqs: &[u32],
     launch_idx: usize,
     temp_c: f64,
     power_limit: Option<f64>,
@@ -307,7 +357,7 @@ fn execute_overlapped(
         let comp_active = comp_idx < comps.len();
 
         if comp_active {
-            let f_k = sched.freq_for(comps[comp_idx].kind.class());
+            let f_k = freqs[comp_idx];
             if f_k != cur_freq {
                 charge_transition(gpu, p_static, f_k, &mut res, &mut freq_time_weighted);
                 cur_freq = f_k;
@@ -876,5 +926,50 @@ mod tests {
         let r = execute_partition(&g, &comps, Some(&comm), &split, 30.0, None);
         assert_eq!(r.freq_transitions, 1);
         assert!(r.exposed_comm_s > 0.0);
+    }
+
+    #[test]
+    fn scratch_reuse_matches_fresh_bitwise() {
+        // One dirty scratch carried across schedules of every shape
+        // (sequential / overlapped / per-class / throttled) must produce
+        // the same bits as a fresh scratch per call.
+        let g = gpu();
+        let comps = vec![linear(3e11), fused_membound(2e9), norm(1e9), linear(8e11)];
+        let comm = allreduce(2e9);
+        let scheds = [
+            Schedule::sequential(1410),
+            Schedule::uniform(12, LaunchAt::WithComp(0), 1410),
+            Schedule::uniform(24, LaunchAt::WithComp(3), 1110),
+            per_class(0, LaunchAt::Sequential, 1410, 900),
+            per_class(12, LaunchAt::WithComp(1), 1410, 1110),
+        ];
+        let mut reused = ExecScratch::default();
+        for sched in &scheds {
+            for (comm_arg, limit) in
+                [(Some(&comm), None), (Some(&comm), Some(g.tdp_w)), (None, None)]
+            {
+                let a = execute_partition_with(
+                    &g,
+                    &comps,
+                    comm_arg,
+                    sched,
+                    40.0,
+                    limit,
+                    &mut reused,
+                );
+                let b = execute_partition_with(
+                    &g,
+                    &comps,
+                    comm_arg,
+                    sched,
+                    40.0,
+                    limit,
+                    &mut ExecScratch::default(),
+                );
+                let c = execute_partition(&g, &comps, comm_arg, sched, 40.0, limit);
+                assert_bitwise_eq(&a, &b);
+                assert_bitwise_eq(&a, &c);
+            }
+        }
     }
 }

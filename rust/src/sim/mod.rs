@@ -7,6 +7,8 @@ pub mod kernel;
 pub mod meter;
 pub mod thermal;
 
-pub use exec::{execute_partition, ExecResult, LaunchAt, Schedule};
+pub use exec::{
+    execute_partition, execute_partition_with, ExecResult, ExecScratch, LaunchAt, Schedule,
+};
 pub use gpu::GpuSpec;
 pub use kernel::{Kernel, KernelKind};

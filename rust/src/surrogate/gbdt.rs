@@ -4,9 +4,20 @@
 //!
 //! Squared loss ⇒ each round fits a tree to the residuals. Hyperparameters
 //! follow Appendix C: max_depth 6, η = 0.3, 100 rounds, subsample 0.8.
+//!
+//! Training runs on the column-major SoA path ([`Gbdt::fit`] transposes
+//! once, then every round reuses the same [`SplitIndex`] and scratch
+//! buffers); [`Gbdt::fit_reference`] keeps the original row-major
+//! implementation alive for the differential suite, which pins the two
+//! bitwise-equal.
 
-use super::tree::{Tree, TreeParams};
+use super::matrix::Matrix;
+use super::tree::{FitScratch, SplitIndex, Tree, TreeParams};
 use crate::util::rng::Rng;
+
+/// Ensemble sizes up to this use a stack accumulator in
+/// [`Ensemble::predict`]; larger ensembles fall back to a heap buffer.
+const STACK_MEMBERS: usize = 16;
 
 #[derive(Clone, Debug)]
 pub struct GbdtParams {
@@ -46,6 +57,56 @@ impl Gbdt {
     pub fn fit(x: &[Vec<f64>], y: &[f64], p: &GbdtParams) -> Gbdt {
         assert_eq!(x.len(), y.len());
         assert!(!x.is_empty());
+        Self::fit_matrix(&Matrix::from_rows(x), y, p)
+    }
+
+    /// SoA boosting loop: the training-set sort index is built once and
+    /// shared by all rounds; index/sort/count buffers are reused; the
+    /// full-index vector is built once instead of per round when
+    /// `subsample == 1.0`.
+    pub fn fit_matrix(m: &Matrix, y: &[f64], p: &GbdtParams) -> Gbdt {
+        assert_eq!(m.n_rows(), y.len());
+        let n = m.n_rows();
+        let base = y.iter().sum::<f64>() / n as f64;
+        let mut pred: Vec<f64> = vec![base; n];
+        let mut trees = Vec::with_capacity(p.n_rounds);
+        let tp = TreeParams {
+            max_depth: p.max_depth,
+            min_samples_leaf: p.min_samples_leaf,
+            lambda: p.lambda,
+        };
+        let gi = SplitIndex::build(m);
+        let mut scratch = FitScratch::default();
+        let mut rng = Rng::new(p.seed);
+        let mut residual = vec![0.0f64; n];
+        let full: Vec<u32> = (0..n as u32).collect();
+        let mut sampled: Vec<u32> = Vec::new();
+        for _ in 0..p.n_rounds {
+            for i in 0..n {
+                residual[i] = y[i] - pred[i];
+            }
+            let idx: &[u32] = if p.subsample < 1.0 {
+                let k = ((n as f64 * p.subsample).round() as usize).clamp(1, n);
+                sampled.clear();
+                sampled.extend(rng.sample_indices(n, k).into_iter().map(|i| i as u32));
+                &sampled
+            } else {
+                &full
+            };
+            let tree = Tree::fit_soa(m, &residual, idx, &tp, &gi, &mut scratch);
+            for i in 0..n {
+                pred[i] += p.learning_rate * tree.predict_row(m, i);
+            }
+            trees.push(tree);
+        }
+        Gbdt { base, trees, learning_rate: p.learning_rate }
+    }
+
+    /// Original row-major boosting loop, kept solely so the differential
+    /// suite can pin `fit` ≡ `fit_reference` bitwise. Not a hot path.
+    pub fn fit_reference(x: &[Vec<f64>], y: &[f64], p: &GbdtParams) -> Gbdt {
+        assert_eq!(x.len(), y.len());
+        assert!(!x.is_empty());
         let n = x.len();
         let base = y.iter().sum::<f64>() / n as f64;
         let mut pred: Vec<f64> = vec![base; n];
@@ -82,6 +143,31 @@ impl Gbdt {
             v += self.learning_rate * t.predict(row);
         }
         v
+    }
+
+    /// Batched [`predict`](Self::predict) into a caller-owned slice.
+    /// Tree-outer accumulation (every output gets tree t's contribution
+    /// before any output gets tree t+1's) keeps each element's addition
+    /// sequence identical to `predict`, so results are bitwise-equal —
+    /// while each tree's nodes stay hot in cache across all rows.
+    pub fn predict_into(&self, rows: &[Vec<f64>], out: &mut [f64]) {
+        assert_eq!(rows.len(), out.len());
+        for v in out.iter_mut() {
+            *v = self.base;
+        }
+        for t in &self.trees {
+            for (row, v) in rows.iter().zip(out.iter_mut()) {
+                *v += self.learning_rate * t.predict(row);
+            }
+        }
+    }
+
+    /// [`predict_into`](Self::predict_into) with the output vector
+    /// cleared and sized for the caller.
+    pub fn predict_batch(&self, rows: &[Vec<f64>], out: &mut Vec<f64>) {
+        out.clear();
+        out.resize(rows.len(), 0.0);
+        self.predict_into(rows, out);
     }
 
     pub fn n_trees(&self) -> usize {
@@ -133,10 +219,47 @@ impl Ensemble {
         Ensemble { members }
     }
 
-    /// (mean, std) across ensemble members.
+    /// (mean, std) across ensemble members. Member predictions accumulate
+    /// in a stack buffer (heap fallback only past [`STACK_MEMBERS`]).
     pub fn predict(&self, row: &[f64]) -> (f64, f64) {
-        let preds: Vec<f64> = self.members.iter().map(|m| m.predict(row)).collect();
-        (crate::util::stats::mean(&preds), crate::util::stats::std_dev(&preds))
+        let k = self.members.len();
+        let mut stack = [0.0f64; STACK_MEMBERS];
+        let mut heap: Vec<f64>;
+        let preds: &mut [f64] = if k <= STACK_MEMBERS {
+            &mut stack[..k]
+        } else {
+            heap = vec![0.0; k];
+            &mut heap
+        };
+        for (slot, m) in preds.iter_mut().zip(&self.members) {
+            *slot = m.predict(row);
+        }
+        (crate::util::stats::mean(preds), crate::util::stats::std_dev(preds))
+    }
+
+    /// Batched [`predict`](Self::predict): one pass per member over all
+    /// rows (member-major, so each member's trees stay cache-hot), then a
+    /// per-row gather in member order — the same value sequence
+    /// `predict` feeds to mean/std_dev, hence bitwise-equal.
+    pub fn predict_batch(&self, rows: &[Vec<f64>], out: &mut Vec<(f64, f64)>) {
+        let n = rows.len();
+        let k = self.members.len();
+        let mut preds = vec![0.0f64; k * n];
+        for (m, model) in self.members.iter().enumerate() {
+            model.predict_into(rows, &mut preds[m * n..(m + 1) * n]);
+        }
+        out.clear();
+        out.reserve(n);
+        let mut stack = [0.0f64; STACK_MEMBERS];
+        let mut heap = vec![0.0f64; if k > STACK_MEMBERS { k } else { 0 }];
+        for r in 0..n {
+            let buf: &mut [f64] =
+                if k <= STACK_MEMBERS { &mut stack[..k] } else { &mut heap };
+            for m in 0..k {
+                buf[m] = preds[m * n + r];
+            }
+            out.push((crate::util::stats::mean(buf), crate::util::stats::std_dev(buf)));
+        }
     }
 }
 
@@ -200,6 +323,52 @@ mod tests {
         let b = Gbdt::fit(&x, &y, &GbdtParams { subsample: 0.8, seed: 42, ..Default::default() });
         for xi in x.iter().take(20) {
             assert_eq!(a.predict(xi), b.predict(xi));
+        }
+    }
+
+    #[test]
+    fn soa_fit_matches_reference_bitwise() {
+        let (x, y) = synth(150, 9);
+        for p in [
+            GbdtParams::default(),
+            GbdtParams { subsample: 0.8, seed: 42, ..Default::default() },
+        ] {
+            let soa = Gbdt::fit(&x, &y, &p);
+            let r = Gbdt::fit_reference(&x, &y, &p);
+            assert_eq!(soa.base.to_bits(), r.base.to_bits());
+            assert_eq!(soa.trees.len(), r.trees.len());
+            for (ta, tb) in soa.trees.iter().zip(&r.trees) {
+                assert_eq!(ta.nodes, tb.nodes);
+            }
+            for xi in &x {
+                assert_eq!(soa.predict(xi).to_bits(), r.predict(xi).to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn predict_batch_matches_per_row_bitwise() {
+        let (x, y) = synth(150, 10);
+        let model = Gbdt::fit(&x, &y, &GbdtParams::default());
+        let mut batch = Vec::new();
+        model.predict_batch(&x, &mut batch);
+        assert_eq!(batch.len(), x.len());
+        for (xi, b) in x.iter().zip(&batch) {
+            assert_eq!(model.predict(xi).to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn ensemble_predict_batch_matches_per_row_bitwise() {
+        let (x, y) = synth(120, 11);
+        let ens = Ensemble::fit(&x, &y, &EnsembleParams::default());
+        let mut batch = Vec::new();
+        ens.predict_batch(&x, &mut batch);
+        assert_eq!(batch.len(), x.len());
+        for (xi, &(bm, bs)) in x.iter().zip(&batch) {
+            let (m, s) = ens.predict(xi);
+            assert_eq!(m.to_bits(), bm.to_bits());
+            assert_eq!(s.to_bits(), bs.to_bits());
         }
     }
 

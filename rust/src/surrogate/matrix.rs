@@ -1,0 +1,78 @@
+//! Column-major (SoA) feature storage for the GBDT surrogate.
+//!
+//! Split search walks one feature across many rows; row-of-rows storage
+//! (`&[Vec<f64>]`) turns every such walk into a pointer chase through
+//! scattered heap allocations. A [`Matrix`] holds the same values
+//! column-contiguous, so each feature streams linearly through cache.
+//! Training-set index structures (value groups, scratch) live with the
+//! tree builder, not here.
+
+/// Dense column-major feature matrix: the value at (row `r`, column `c`)
+/// lives at `cols[c * n_rows + r]`.
+#[derive(Clone, Debug)]
+pub struct Matrix {
+    n_rows: usize,
+    n_cols: usize,
+    cols: Vec<f64>,
+}
+
+impl Matrix {
+    /// Transpose row-major samples (all rows the same non-zero width).
+    pub fn from_rows(x: &[Vec<f64>]) -> Matrix {
+        assert!(!x.is_empty());
+        let n_rows = x.len();
+        let n_cols = x[0].len();
+        assert!(n_cols > 0);
+        let mut cols = vec![0.0; n_rows * n_cols];
+        for (r, row) in x.iter().enumerate() {
+            assert_eq!(row.len(), n_cols, "ragged row {r}");
+            for (c, &v) in row.iter().enumerate() {
+                cols[c * n_rows + r] = v;
+            }
+        }
+        Matrix { n_rows, n_cols, cols }
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    pub fn n_cols(&self) -> usize {
+        self.n_cols
+    }
+
+    /// One feature, contiguous across all rows.
+    pub fn col(&self, c: usize) -> &[f64] {
+        &self.cols[c * self.n_rows..(c + 1) * self.n_rows]
+    }
+
+    /// Value at (row, column).
+    pub fn at(&self, r: usize, c: usize) -> f64 {
+        self.cols[c * self.n_rows + r]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transpose_roundtrip() {
+        let rows = vec![vec![1.0, 2.0, 3.0], vec![4.0, 5.0, 6.0]];
+        let m = Matrix::from_rows(&rows);
+        assert_eq!((m.n_rows(), m.n_cols()), (2, 3));
+        assert_eq!(m.col(0), &[1.0, 4.0]);
+        assert_eq!(m.col(2), &[3.0, 6.0]);
+        for (r, row) in rows.iter().enumerate() {
+            for (c, &v) in row.iter().enumerate() {
+                assert_eq!(m.at(r, c), v);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn ragged_rows_panic() {
+        Matrix::from_rows(&[vec![1.0, 2.0], vec![3.0]]);
+    }
+}

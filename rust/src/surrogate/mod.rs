@@ -1,8 +1,11 @@
 //! Surrogate models for MBO (§4.3.2): gradient-boosted regression trees
 //! (XGBoost-like) built from scratch, plus bootstrap ensembles for the
-//! uncertainty acquisition pass.
+//! uncertainty acquisition pass. Training and batched prediction run over
+//! column-major [`matrix::Matrix`] storage.
 
 pub mod gbdt;
+pub mod matrix;
 pub mod tree;
 
 pub use gbdt::{r_squared, Ensemble, EnsembleParams, Gbdt, GbdtParams};
+pub use matrix::Matrix;

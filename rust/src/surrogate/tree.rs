@@ -1,19 +1,57 @@
 //! Regression tree (CART, squared loss) — the weak learner for the GBDT
 //! surrogate models. Exact greedy splits: the MBO feature space is tiny
-//! (3 dimensions: frequency, SM allocation, launch timing; Appendix C),
-//! so sorting-based exact search is both simplest and fastest.
+//! (3–4 dimensions: frequency, SM allocation, launch timing, optionally
+//! memory frequency; Appendix C), so sorting-based exact search is both
+//! simplest and fastest.
+//!
+//! Two build paths share one packed [`FlatNode`] layout:
+//!
+//! * [`Tree::fit`] — the row-major reference implementation, kept
+//!   verbatim for the differential parity suite;
+//! * [`Tree::fit_soa`] — the hot path over a column-major
+//!   [`Matrix`] with a precomputed [`SplitIndex`]. Per (node, feature)
+//!   it runs one stable counting sort by value group — O(m + k) — in
+//!   place of the reference's O(m log m) comparison sort, with all
+//!   buffers reused through a [`FitScratch`].
+//!
+//! Parity is load-bearing and holds *by construction*: rows with equal
+//! feature values share a dense group id and ids increase with the value,
+//! so a stable counting sort by group id yields exactly the permutation a
+//! stable comparison sort by value would — including tie order, which the
+//! in-place Lomuto partition scrambles on the right child and the prefix
+//! sums (non-associative f64 adds) depend on. `tests/surrogate_parity.rs`
+//! and the in-module tests pin the two paths bitwise-equal.
 
-/// Flattened tree: internal nodes hold (feature, threshold, left, right);
-/// leaves hold a prediction value.
-#[derive(Clone, Debug)]
-pub enum Node {
-    Split { feature: usize, threshold: f64, left: usize, right: usize },
-    Leaf { value: f64 },
+use super::matrix::Matrix;
+
+/// Sentinel feature id marking a leaf node.
+const LEAF: u32 = u32::MAX;
+
+/// Packed flat tree node, walked by index (no enum dispatch, no per-node
+/// pointer chasing): internal nodes hold (feature, threshold, left,
+/// right); a leaf stores its prediction in `threshold` with
+/// `feature == LEAF`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FlatNode {
+    pub feature: u32,
+    pub threshold: f64,
+    pub left: u32,
+    pub right: u32,
+}
+
+impl FlatNode {
+    fn leaf(value: f64) -> FlatNode {
+        FlatNode { feature: LEAF, threshold: value, left: 0, right: 0 }
+    }
+
+    pub fn is_leaf(&self) -> bool {
+        self.feature == LEAF
+    }
 }
 
 #[derive(Clone, Debug)]
 pub struct Tree {
-    pub nodes: Vec<Node>,
+    pub nodes: Vec<FlatNode>,
 }
 
 pub struct TreeParams {
@@ -29,8 +67,57 @@ impl Default for TreeParams {
     }
 }
 
+/// Per-feature dense value-group ids, computed once per training set and
+/// shared by every node, tree, and boosting round of one fit. Rows with
+/// equal feature values share a group id and ids increase with the value,
+/// which is exactly what lets [`Tree::fit_soa`]'s stable counting sort
+/// reproduce a stable comparison sort by value bit-for-bit.
+pub struct SplitIndex {
+    /// `groups[f][row]` = dense rank of the row's value in column `f`.
+    groups: Vec<Vec<u32>>,
+    /// Distinct values per feature (the counting-sort key range).
+    n_groups: Vec<u32>,
+}
+
+impl SplitIndex {
+    pub fn build(m: &Matrix) -> SplitIndex {
+        let n = m.n_rows();
+        let mut groups = Vec::with_capacity(m.n_cols());
+        let mut n_groups = Vec::with_capacity(m.n_cols());
+        let mut order: Vec<u32> = (0..n as u32).collect();
+        for f in 0..m.n_cols() {
+            let col = m.col(f);
+            order.sort_by(|&a, &b| col[a as usize].partial_cmp(&col[b as usize]).unwrap());
+            let mut g = vec![0u32; n];
+            let mut gid = 0u32;
+            for (w, &i) in order.iter().enumerate() {
+                if w > 0 && col[i as usize] != col[order[w - 1] as usize] {
+                    gid += 1;
+                }
+                g[i as usize] = gid;
+            }
+            groups.push(g);
+            n_groups.push(gid + 1);
+        }
+        SplitIndex { groups, n_groups }
+    }
+}
+
+/// Reusable buffers for [`Tree::fit_soa`], shared across nodes, trees,
+/// and boosting rounds of one `Gbdt::fit` (the reference path allocates
+/// an index copy per tree and a sort buffer per node).
+#[derive(Default)]
+pub struct FitScratch {
+    idx: Vec<u32>,
+    order: Vec<u32>,
+    order2: Vec<u32>,
+    counts: Vec<u32>,
+}
+
 impl Tree {
     /// Fit on rows `idx` of `(x, y)`. `x` is row-major: x[i] is sample i.
+    /// Reference implementation — [`Tree::fit_soa`] is the hot path and
+    /// must reproduce this byte-for-byte.
     pub fn fit(x: &[Vec<f64>], y: &[f64], idx: &[usize], p: &TreeParams) -> Tree {
         assert!(!idx.is_empty());
         let mut nodes = Vec::new();
@@ -39,23 +126,65 @@ impl Tree {
         Tree { nodes }
     }
 
+    /// SoA fast path: the same tree, built from the column-major matrix
+    /// with the precomputed group index and reusable scratch.
+    pub fn fit_soa(
+        m: &Matrix,
+        y: &[f64],
+        idx: &[u32],
+        p: &TreeParams,
+        gi: &SplitIndex,
+        scratch: &mut FitScratch,
+    ) -> Tree {
+        assert!(!idx.is_empty());
+        let mut nodes = Vec::new();
+        scratch.idx.clear();
+        scratch.idx.extend_from_slice(idx);
+        let mut idx = std::mem::take(&mut scratch.idx);
+        build_soa(m, y, &mut idx, 0, p, gi, scratch, &mut nodes);
+        scratch.idx = idx;
+        Tree { nodes }
+    }
+
     pub fn predict(&self, row: &[f64]) -> f64 {
         let mut i = 0usize;
         loop {
-            match &self.nodes[i] {
-                Node::Leaf { value } => return *value,
-                Node::Split { feature, threshold, left, right } => {
-                    i = if row[*feature] <= *threshold { *left } else { *right };
-                }
+            let n = self.nodes[i];
+            if n.feature == LEAF {
+                return n.threshold;
             }
+            i = if row[n.feature as usize] <= n.threshold {
+                n.left as usize
+            } else {
+                n.right as usize
+            };
+        }
+    }
+
+    /// [`predict`](Self::predict) over row `r` of a column-major matrix
+    /// (no row gather, no allocation).
+    pub fn predict_row(&self, m: &Matrix, r: usize) -> f64 {
+        let mut i = 0usize;
+        loop {
+            let n = self.nodes[i];
+            if n.feature == LEAF {
+                return n.threshold;
+            }
+            i = if m.at(r, n.feature as usize) <= n.threshold {
+                n.left as usize
+            } else {
+                n.right as usize
+            };
         }
     }
 
     pub fn depth(&self) -> usize {
-        fn d(nodes: &[Node], i: usize) -> usize {
-            match &nodes[i] {
-                Node::Leaf { .. } => 1,
-                Node::Split { left, right, .. } => 1 + d(nodes, *left).max(d(nodes, *right)),
+        fn d(nodes: &[FlatNode], i: usize) -> usize {
+            let n = nodes[i];
+            if n.feature == LEAF {
+                1
+            } else {
+                1 + d(nodes, n.left as usize).max(d(nodes, n.right as usize))
             }
         }
         d(&self.nodes, 0)
@@ -69,7 +198,7 @@ fn build(
     idx: &mut [usize],
     depth: usize,
     p: &TreeParams,
-    nodes: &mut Vec<Node>,
+    nodes: &mut Vec<FlatNode>,
 ) -> usize {
     let sum: f64 = idx.iter().map(|&i| y[i]).sum();
     let n = idx.len() as f64;
@@ -77,13 +206,13 @@ fn build(
     let leaf_value = sum / (n + p.lambda);
 
     if depth >= p.max_depth || idx.len() < 2 * p.min_samples_leaf {
-        nodes.push(Node::Leaf { value: leaf_value });
+        nodes.push(FlatNode::leaf(leaf_value));
         return nodes.len() - 1;
     }
 
     match best_split(x, y, idx, p) {
         None => {
-            nodes.push(Node::Leaf { value: leaf_value });
+            nodes.push(FlatNode::leaf(leaf_value));
             nodes.len() - 1
         }
         Some((feature, threshold)) => {
@@ -97,11 +226,11 @@ fn build(
             }
             debug_assert!(lo > 0 && lo < idx.len());
             let me = nodes.len();
-            nodes.push(Node::Leaf { value: 0.0 }); // placeholder
+            nodes.push(FlatNode::leaf(0.0)); // placeholder
             let (l_idx, r_idx) = idx.split_at_mut(lo);
-            let left = build(x, y, l_idx, depth + 1, p, nodes);
-            let right = build(x, y, r_idx, depth + 1, p, nodes);
-            nodes[me] = Node::Split { feature, threshold, left, right };
+            let left = build(x, y, l_idx, depth + 1, p, nodes) as u32;
+            let right = build(x, y, r_idx, depth + 1, p, nodes) as u32;
+            nodes[me] = FlatNode { feature: feature as u32, threshold, left, right };
             me
         }
     }
@@ -145,6 +274,125 @@ fn best_split(x: &[Vec<f64>], y: &[f64], idx: &[usize], p: &TreeParams) -> Optio
     best.map(|(_, f, t)| (f, t))
 }
 
+/// SoA twin of [`build`]; identical recursion, partition, and leaf sums.
+#[allow(clippy::too_many_arguments)]
+fn build_soa(
+    m: &Matrix,
+    y: &[f64],
+    idx: &mut [u32],
+    depth: usize,
+    p: &TreeParams,
+    gi: &SplitIndex,
+    scratch: &mut FitScratch,
+    nodes: &mut Vec<FlatNode>,
+) -> usize {
+    let sum: f64 = idx.iter().map(|&i| y[i as usize]).sum();
+    let n = idx.len() as f64;
+    let leaf_value = sum / (n + p.lambda);
+
+    if depth >= p.max_depth || idx.len() < 2 * p.min_samples_leaf {
+        nodes.push(FlatNode::leaf(leaf_value));
+        return nodes.len() - 1;
+    }
+
+    match best_split_soa(m, y, idx, p, gi, scratch) {
+        None => {
+            nodes.push(FlatNode::leaf(leaf_value));
+            nodes.len() - 1
+        }
+        Some((feature, threshold)) => {
+            let col = m.col(feature);
+            let mut lo = 0usize;
+            for i in 0..idx.len() {
+                if col[idx[i] as usize] <= threshold {
+                    idx.swap(i, lo);
+                    lo += 1;
+                }
+            }
+            debug_assert!(lo > 0 && lo < idx.len());
+            let me = nodes.len();
+            nodes.push(FlatNode::leaf(0.0)); // placeholder
+            let (l_idx, r_idx) = idx.split_at_mut(lo);
+            let left = build_soa(m, y, l_idx, depth + 1, p, gi, scratch, nodes) as u32;
+            let right = build_soa(m, y, r_idx, depth + 1, p, gi, scratch, nodes) as u32;
+            nodes[me] = FlatNode { feature: feature as u32, threshold, left, right };
+            me
+        }
+    }
+}
+
+/// SoA twin of [`best_split`]: one stable counting sort by value group
+/// per feature instead of a comparison sort. The reference re-sorts ONE
+/// buffer feature after feature, so tie order under feature `f` follows
+/// the feature `f-1` ordering — the counting sorts here read and replace
+/// the same carried buffer to replicate that exactly.
+fn best_split_soa(
+    m: &Matrix,
+    y: &[f64],
+    idx: &[u32],
+    p: &TreeParams,
+    gi: &SplitIndex,
+    scratch: &mut FitScratch,
+) -> Option<(usize, f64)> {
+    let total_sum: f64 = idx.iter().map(|&i| y[i as usize]).sum();
+    let n = idx.len() as f64;
+    let parent_score = total_sum * total_sum / (n + p.lambda);
+
+    let mut best: Option<(f64, usize, f64)> = None; // (gain, feat, thr)
+    scratch.order.clear();
+    scratch.order.extend_from_slice(idx);
+    for f in 0..m.n_cols() {
+        let col = m.col(f);
+        let grp = &gi.groups[f];
+        let k = gi.n_groups[f] as usize;
+        // Stable counting sort of `order` by value group into `order2`.
+        scratch.counts.clear();
+        scratch.counts.resize(k, 0);
+        for &i in &scratch.order {
+            scratch.counts[grp[i as usize] as usize] += 1;
+        }
+        let mut acc = 0u32;
+        for c in scratch.counts.iter_mut() {
+            let here = *c;
+            *c = acc;
+            acc += here;
+        }
+        scratch.order2.resize(scratch.order.len(), 0);
+        for &i in &scratch.order {
+            let slot = &mut scratch.counts[grp[i as usize] as usize];
+            scratch.order2[*slot as usize] = i;
+            *slot += 1;
+        }
+        std::mem::swap(&mut scratch.order, &mut scratch.order2);
+
+        let order = &scratch.order;
+        let mut left_sum = 0.0;
+        let mut left_n = 0.0;
+        for w in 0..order.len() - 1 {
+            let i = order[w] as usize;
+            left_sum += y[i];
+            left_n += 1.0;
+            // Can't split between equal feature values.
+            if col[i] == col[order[w + 1] as usize] {
+                continue;
+            }
+            let right_sum = total_sum - left_sum;
+            let right_n = n - left_n;
+            if (left_n as usize) < p.min_samples_leaf || (right_n as usize) < p.min_samples_leaf {
+                continue;
+            }
+            let score = left_sum * left_sum / (left_n + p.lambda)
+                + right_sum * right_sum / (right_n + p.lambda);
+            let gain = score - parent_score;
+            if gain > 1e-12 && best.map(|(g, _, _)| gain > g).unwrap_or(true) {
+                let thr = 0.5 * (col[i] + col[order[w + 1] as usize]);
+                best = Some((gain, f, thr));
+            }
+        }
+    }
+    best.map(|(_, f, t)| (f, t))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -159,6 +407,14 @@ mod tests {
             }
         }
         (x, y)
+    }
+
+    fn fit_soa_of(x: &[Vec<f64>], y: &[f64], idx: &[usize], p: &TreeParams) -> Tree {
+        let m = Matrix::from_rows(x);
+        let gi = SplitIndex::build(&m);
+        let mut scratch = FitScratch::default();
+        let idx32: Vec<u32> = idx.iter().map(|&i| i as u32).collect();
+        Tree::fit_soa(&m, y, &idx32, p, &gi, &mut scratch)
     }
 
     #[test]
@@ -202,5 +458,53 @@ mod tests {
         let t = Tree::fit(&x, &y, &[0, 1, 2, 3], &TreeParams { lambda: 0.0, ..Default::default() });
         assert_eq!(t.nodes.len(), 1); // cannot split identical features
         assert!((t.predict(&[1.0]) - 1.5).abs() < 1e-9);
+    }
+
+    /// The load-bearing contract: the SoA path reproduces the reference
+    /// node-for-node, bit-for-bit — on a grid dense with duplicate
+    /// feature values (every tie-handling branch exercised) and from a
+    /// scrambled index set (non-trivial tie order).
+    #[test]
+    fn soa_matches_reference_bitwise() {
+        let (x, y) = grid_2d();
+        let mut idx: Vec<usize> = (0..x.len()).collect();
+        // Deterministic scramble so idx order ≠ row order.
+        idx.reverse();
+        idx.swap(3, 177);
+        idx.swap(40, 202);
+        for p in [
+            TreeParams::default(),
+            TreeParams { max_depth: 3, ..Default::default() },
+            TreeParams { lambda: 0.0, min_samples_leaf: 1, ..Default::default() },
+        ] {
+            let a = Tree::fit(&x, &y, &idx, &p);
+            let b = fit_soa_of(&x, &y, &idx, &p);
+            assert_eq!(a.nodes.len(), b.nodes.len());
+            for (na, nb) in a.nodes.iter().zip(&b.nodes) {
+                assert_eq!(na.feature, nb.feature);
+                assert_eq!(na.left, nb.left);
+                assert_eq!(na.right, nb.right);
+                assert_eq!(na.threshold.to_bits(), nb.threshold.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn soa_predict_row_matches_predict() {
+        let (x, y) = grid_2d();
+        let idx: Vec<usize> = (0..x.len()).collect();
+        let m = Matrix::from_rows(&x);
+        let t = fit_soa_of(&x, &y, &idx, &TreeParams::default());
+        for (r, xi) in x.iter().enumerate() {
+            assert_eq!(t.predict(xi).to_bits(), t.predict_row(&m, r).to_bits());
+        }
+    }
+
+    #[test]
+    fn split_index_groups_are_dense_and_ordered() {
+        let m = Matrix::from_rows(&[vec![3.0], vec![1.0], vec![3.0], vec![2.0]]);
+        let gi = SplitIndex::build(&m);
+        assert_eq!(gi.n_groups, vec![3]);
+        assert_eq!(gi.groups[0], vec![2, 0, 2, 1]);
     }
 }

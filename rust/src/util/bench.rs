@@ -1,8 +1,13 @@
 //! Minimal bench harness (criterion is unavailable offline): warmup +
 //! timed iterations, reporting min/median/mean. Used by the `[[bench]]`
-//! targets (harness = false).
+//! targets (harness = false) and by `kareus bench`, whose
+//! [`BenchReport`] JSON artifact separates deterministic work counters
+//! from wall-clock fields so CI can diff reports byte-for-byte.
 
+use std::collections::BTreeMap;
 use std::time::Instant;
+
+use crate::util::json::{num, obj, s, Json};
 
 pub struct BenchResult {
     pub name: String,
@@ -40,7 +45,15 @@ pub fn fmt_ns(ns: f64) -> String {
 /// Run `f` repeatedly for ~`budget_s` seconds (after 10% warmup); prevent
 /// the compiler from optimizing the result away via `std::hint::black_box`
 /// inside the closure.
-pub fn bench<F: FnMut()>(name: &str, budget_s: f64, mut f: F) -> BenchResult {
+pub fn bench<F: FnMut()>(name: &str, budget_s: f64, f: F) -> BenchResult {
+    let res = bench_quiet(name, budget_s, f);
+    println!("{}", res.report());
+    res
+}
+
+/// [`bench`] without the stdout report line — for callers ( `kareus
+/// bench`) that own the output channel.
+pub fn bench_quiet<F: FnMut()>(name: &str, budget_s: f64, mut f: F) -> BenchResult {
     // Warmup + calibration.
     let t0 = Instant::now();
     f();
@@ -53,15 +66,94 @@ pub fn bench<F: FnMut()>(name: &str, budget_s: f64, mut f: F) -> BenchResult {
         samples.push(t.elapsed().as_nanos() as f64);
     }
     samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let res = BenchResult {
+    BenchResult {
         name: name.to_string(),
         iters,
         min_ns: samples[0],
         median_ns: samples[samples.len() / 2],
         mean_ns: samples.iter().sum::<f64>() / samples.len() as f64,
-    };
-    println!("{}", res.report());
-    res
+    }
+}
+
+/// Wall-clock a closure: `(result, elapsed_s)`. The suite and `kareus
+/// bench` time through this so wall-clock access stays confined to this
+/// module (the determinism source lint pins the allowlist).
+pub fn wall_time<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// One `kareus bench` suite entry: deterministic work counters (always
+/// populated — evaluations run, cache hits, kernels walked) plus
+/// wall-clock stats that are `None` in `--deterministic` mode, where the
+/// workload runs exactly once untimed.
+#[derive(Clone, Debug)]
+pub struct BenchEntry {
+    pub counters: BTreeMap<String, u64>,
+    pub iters: Option<usize>,
+    pub min_ns: Option<f64>,
+    pub median_ns: Option<f64>,
+    pub mean_ns: Option<f64>,
+}
+
+impl BenchEntry {
+    /// Counter-only entry (deterministic mode: every wall field null).
+    pub fn deterministic(counters: BTreeMap<String, u64>) -> BenchEntry {
+        BenchEntry { counters, iters: None, min_ns: None, median_ns: None, mean_ns: None }
+    }
+
+    /// Timed entry from a harness result.
+    pub fn timed(r: &BenchResult, counters: BTreeMap<String, u64>) -> BenchEntry {
+        BenchEntry {
+            counters,
+            iters: Some(r.iters),
+            min_ns: Some(r.min_ns),
+            median_ns: Some(r.median_ns),
+            mean_ns: Some(r.mean_ns),
+        }
+    }
+}
+
+/// The `kareus bench` artifact (tag `"bench": "kareus_bench"`, validated
+/// by `kareus check` as K080–K082). In deterministic mode all wall
+/// fields — per-entry stats and `wall_s` — are null and the document is
+/// byte-identical across runs.
+#[derive(Clone, Debug)]
+pub struct BenchReport {
+    pub deterministic: bool,
+    pub entries: BTreeMap<String, BenchEntry>,
+    pub wall_s: Option<f64>,
+}
+
+impl BenchReport {
+    pub fn to_json(&self) -> Json {
+        let wall = |v: Option<f64>| v.map(num).unwrap_or(Json::Null);
+        let mut entries = BTreeMap::new();
+        for (name, e) in &self.entries {
+            let mut counters = BTreeMap::new();
+            for (k, v) in &e.counters {
+                counters.insert(k.clone(), num(*v as f64));
+            }
+            entries.insert(
+                name.clone(),
+                obj(vec![
+                    ("counters", Json::Obj(counters)),
+                    ("iters", e.iters.map(|i| num(i as f64)).unwrap_or(Json::Null)),
+                    ("min_ns", wall(e.min_ns)),
+                    ("median_ns", wall(e.median_ns)),
+                    ("mean_ns", wall(e.mean_ns)),
+                ]),
+            );
+        }
+        obj(vec![
+            ("bench", s("kareus_bench")),
+            ("version", num(1.0)),
+            ("deterministic", Json::Bool(self.deterministic)),
+            ("entries", Json::Obj(entries)),
+            ("wall_s", wall(self.wall_s)),
+        ])
+    }
 }
 
 #[cfg(test)]
@@ -76,6 +168,46 @@ mod tests {
         });
         assert!(r.iters >= 3);
         assert!(r.min_ns <= r.median_ns && r.median_ns <= r.mean_ns * 2.0);
+    }
+
+    #[test]
+    fn deterministic_report_nulls_every_wall_field() {
+        let mut counters = BTreeMap::new();
+        counters.insert("evals".to_string(), 7u64);
+        let mut entries = BTreeMap::new();
+        entries.insert("x".to_string(), BenchEntry::deterministic(counters));
+        let rep = BenchReport { deterministic: true, entries, wall_s: None };
+        let j = rep.to_json();
+        assert_eq!(j.get("bench").and_then(|b| b.as_str()), Some("kareus_bench"));
+        assert_eq!(j.get("deterministic").and_then(|b| b.as_bool()), Some(true));
+        assert!(matches!(j.get("wall_s"), Some(Json::Null)));
+        let e = j.get("entries").unwrap().get("x").unwrap();
+        for field in ["iters", "min_ns", "median_ns", "mean_ns"] {
+            assert!(matches!(e.get(field), Some(Json::Null)), "{field}");
+        }
+        assert_eq!(
+            e.get("counters").unwrap().get("evals").unwrap().as_f64(),
+            Some(7.0)
+        );
+        // Deterministic reports must round-trip dump → parse.
+        let text = rep.to_json().try_dump().unwrap();
+        assert_eq!(Json::parse(&text).unwrap().dump(), text);
+    }
+
+    #[test]
+    fn timed_report_populates_wall_fields() {
+        let mut x = 0u64;
+        let r = bench_quiet("q", 0.005, || {
+            x = std::hint::black_box(x.wrapping_add(1));
+        });
+        let mut entries = BTreeMap::new();
+        entries.insert("q".to_string(), BenchEntry::timed(&r, BTreeMap::new()));
+        let rep = BenchReport { deterministic: false, entries, wall_s: Some(0.25) };
+        let j = rep.to_json();
+        let e = j.get("entries").unwrap().get("q").unwrap();
+        assert!(e.get("min_ns").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(e.get("iters").unwrap().as_usize(), Some(r.iters));
+        assert_eq!(j.get("wall_s").and_then(|w| w.as_f64()), Some(0.25));
     }
 
     #[test]

@@ -83,29 +83,56 @@ impl WorkerPool {
         R: Send + 'static,
         F: Fn(T) -> R + Send + Sync + 'static,
     {
+        self.map_chunked(items, 1, f)
+    }
+
+    /// [`map`](Self::map) with one queued job per contiguous chunk of up
+    /// to `chunk` items instead of one per item, so large batches of
+    /// cheap work pay channel-send and boxing costs per chunk, not per
+    /// item. Chunks are reassembled in input order; `chunk == 1` is
+    /// exactly `map`.
+    pub fn map_chunked<T, R, F>(&self, items: Vec<T>, chunk: usize, f: F) -> Vec<R>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(T) -> R + Send + Sync + 'static,
+    {
         let n = items.len();
         if n == 0 {
             return Vec::new();
         }
+        let chunk = chunk.max(1);
         let f = Arc::new(f);
-        let (done_tx, done_rx) = channel::<(usize, R)>();
-        for (i, item) in items.into_iter().enumerate() {
+        let (done_tx, done_rx) = channel::<(usize, Vec<R>)>();
+        let mut iter = items.into_iter();
+        let mut n_chunks = 0usize;
+        loop {
+            let batch: Vec<T> = iter.by_ref().take(chunk).collect();
+            if batch.is_empty() {
+                break;
+            }
             let f = Arc::clone(&f);
             let done = done_tx.clone();
+            let ci = n_chunks;
             self.execute(move || {
                 // A send error means the collector gave up (caller
-                // panicked); drop the result on the floor.
-                let _ = done.send((i, f(item)));
+                // panicked); drop the results on the floor.
+                let _ = done.send((ci, batch.into_iter().map(|t| f(t)).collect()));
             });
+            n_chunks += 1;
         }
         drop(done_tx);
-        let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
-        for _ in 0..n {
+        let mut slots: Vec<Option<Vec<R>>> = (0..n_chunks).map(|_| None).collect();
+        for _ in 0..n_chunks {
             let (i, r) = done_rx.recv().expect("worker panicked");
-            debug_assert!(slots[i].is_none(), "index {i} produced twice");
+            debug_assert!(slots[i].is_none(), "chunk {i} produced twice");
             slots[i] = Some(r);
         }
-        slots.into_iter().map(|s| s.expect("missing result")).collect()
+        let mut out = Vec::with_capacity(n);
+        for s in slots {
+            out.extend(s.expect("missing chunk"));
+        }
+        out
     }
 
     /// Close the queue and join every worker. Already-queued jobs run to
@@ -147,7 +174,11 @@ where
     if n_threads == 1 || items.len() <= 1 {
         return items.into_iter().map(f).collect();
     }
-    WorkerPool::new(n_threads.min(items.len())).map(items, f)
+    let threads = n_threads.min(items.len());
+    // 4× job oversubscription balances skewed per-item cost; heavy
+    // small-batch work (per-partition MBO) still gets one item per job.
+    let chunk = (items.len() / (threads * 4)).max(1);
+    WorkerPool::new(threads).map_chunked(items, chunk, f)
 }
 
 /// Default parallelism: available cores, capped.
@@ -218,6 +249,28 @@ mod tests {
             x * x
         });
         assert_eq!(out, (0..32).map(|x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn map_chunked_matches_sequential_for_any_chunk() {
+        let expect: Vec<i32> = (0..100).map(|x| x * 3 + 1).collect();
+        let pool = WorkerPool::new(4);
+        for chunk in [1, 2, 7, 33, 100, 1000] {
+            let out = pool.map_chunked((0..100).collect::<Vec<_>>(), chunk, |x| x * 3 + 1);
+            assert_eq!(out, expect, "chunk {chunk}");
+        }
+    }
+
+    #[test]
+    fn map_chunked_order_preserved_under_skew() {
+        let pool = WorkerPool::new(8);
+        let out = pool.map_chunked((0..64).collect::<Vec<_>>(), 5, |x| {
+            if x < 10 {
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+            x * x
+        });
+        assert_eq!(out, (0..64).map(|x| x * x).collect::<Vec<_>>());
     }
 
     #[test]

@@ -53,6 +53,9 @@ const SEEDED: &[(&str, Code)] = &[
     ("plan_k070_mem_off_grid.json", Code::K070),
     ("trace_k071_uniform_transitions.json", Code::K071),
     ("plan_k072_mem_above_core.json", Code::K072),
+    ("bench_k080_missing_field.json", Code::K080),
+    ("bench_k081_mixed_nulling.json", Code::K081),
+    ("bench_k082_median_lt_min.json", Code::K082),
     ("unknown_k000.json", Code::K000),
 ];
 
@@ -66,6 +69,7 @@ const CLEAN: &[&str] = &[
     "sweep_ok.json",
     "summary_ok.json",
     "loadgen_ok.json",
+    "bench_ok.json",
 ];
 
 fn gpu_for(name: &str) -> Option<GpuSpec> {
