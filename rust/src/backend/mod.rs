@@ -66,8 +66,7 @@
 use std::collections::BTreeMap;
 use std::io;
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use crate::util::sync::{SyncAtomicU64, SyncMutex};
 
 use crate::partition::Partition;
 use crate::profiler::MeasureCache;
@@ -234,9 +233,9 @@ pub struct TraceBackend {
     /// is hot; don't rehash the path string per probe). Mode-independent,
     /// so a record run and its replay share one identity.
     fp: u64,
-    entries: Mutex<BTreeMap<String, ExecResult>>,
-    recorded: AtomicU64,
-    replayed: AtomicU64,
+    entries: SyncMutex<BTreeMap<String, ExecResult>>,
+    recorded: SyncAtomicU64,
+    replayed: SyncAtomicU64,
 }
 
 fn trace_fp(path: &Path) -> u64 {
@@ -321,9 +320,9 @@ impl TraceBackend {
             path,
             replay: false,
             fp,
-            entries: Mutex::new(BTreeMap::new()),
-            recorded: AtomicU64::new(0),
-            replayed: AtomicU64::new(0),
+            entries: SyncMutex::new(BTreeMap::new()),
+            recorded: SyncAtomicU64::new(0),
+            replayed: SyncAtomicU64::new(0),
         }
     }
 
@@ -367,9 +366,9 @@ impl TraceBackend {
             path,
             replay: true,
             fp,
-            entries: Mutex::new(entries),
-            recorded: AtomicU64::new(0),
-            replayed: AtomicU64::new(0),
+            entries: SyncMutex::new(entries),
+            recorded: SyncAtomicU64::new(0),
+            replayed: SyncAtomicU64::new(0),
         })
     }
 
@@ -395,7 +394,7 @@ impl TraceBackend {
 
     /// Distinct measurements currently in the trace.
     pub fn len(&self) -> usize {
-        self.entries.lock().unwrap().len()
+        self.entries.lock().len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -405,12 +404,12 @@ impl TraceBackend {
     /// Measurements served while recording (≥ [`len`](Self::len): repeated
     /// keys overwrite in place).
     pub fn recorded(&self) -> u64 {
-        self.recorded.load(Ordering::Relaxed)
+        self.recorded.load()
     }
 
     /// Measurements answered from the trace in replay mode.
     pub fn replayed(&self) -> u64 {
-        self.replayed.load(Ordering::Relaxed)
+        self.replayed.load()
     }
 
     /// The whole trace as JSON (record or replay mode alike).
@@ -454,10 +453,10 @@ impl ExecutionBackend for TraceBackend {
     ) -> ExecResult {
         let key = trace_key(fp, sched, temp_c, power_limit);
         if self.replay {
-            let hit = self.entries.lock().unwrap().get(&key).copied();
+            let hit = self.entries.lock().get(&key).copied();
             match hit {
                 Some(r) => {
-                    self.replayed.fetch_add(1, Ordering::Relaxed);
+                    self.replayed.fetch_add(1);
                     r
                 }
                 None => panic!(
@@ -468,8 +467,8 @@ impl ExecutionBackend for TraceBackend {
             }
         } else {
             let r = execute_partition(gpu, comps, comm, sched, temp_c, power_limit);
-            self.recorded.fetch_add(1, Ordering::Relaxed);
-            self.entries.lock().unwrap().insert(key, r);
+            self.recorded.fetch_add(1);
+            self.entries.lock().insert(key, r);
             r
         }
     }

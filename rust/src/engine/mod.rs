@@ -35,8 +35,7 @@
 //! machine-readable JSON output for benchmark tracking.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering as AtomicOrdering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use crate::backend::{ExecutionBackend, Measurer, SimBackend};
 use crate::baselines::{run_system_with, System, SystemResult};
@@ -48,6 +47,7 @@ use crate::sim::gpu::GpuSpec;
 use crate::util::hash::Fnv64;
 use crate::util::json::{arr, num, obj, s, Json};
 use crate::util::pool;
+use crate::util::sync::{SyncAtomicU64, SyncMutex};
 use crate::workload::{ModelSpec, Parallelism, TrainConfig};
 
 /// Online-replanning knobs carried by the engine and consumed by the
@@ -204,11 +204,21 @@ impl EngineConfig {
 /// observability for long-lived owners (the serve daemon's `stats`
 /// request), never inputs to any plan, so they stay out of every artifact
 /// that must be byte-deterministic.
-#[derive(Clone, Default)]
+#[derive(Clone)]
 pub struct MboCache {
-    inner: Arc<Mutex<HashMap<u64, MboResult>>>,
-    hits: Arc<AtomicU64>,
-    misses: Arc<AtomicU64>,
+    inner: Arc<SyncMutex<HashMap<u64, MboResult>>>,
+    hits: Arc<SyncAtomicU64>,
+    misses: Arc<SyncAtomicU64>,
+}
+
+impl Default for MboCache {
+    fn default() -> Self {
+        MboCache {
+            inner: Arc::new(SyncMutex::new(HashMap::new())),
+            hits: Arc::new(SyncAtomicU64::new(0)),
+            misses: Arc::new(SyncAtomicU64::new(0)),
+        }
+    }
 }
 
 impl MboCache {
@@ -283,25 +293,25 @@ impl MboCache {
     }
 
     pub fn get(&self, key: u64) -> Option<MboResult> {
-        let hit = self.inner.lock().unwrap().get(&key).cloned();
+        let hit = self.inner.lock().get(&key).cloned();
         match hit {
             Some(r) => {
-                self.hits.fetch_add(1, AtomicOrdering::Relaxed);
+                self.hits.fetch_add(1);
                 Some(r)
             }
             None => {
-                self.misses.fetch_add(1, AtomicOrdering::Relaxed);
+                self.misses.fetch_add(1);
                 None
             }
         }
     }
 
     pub fn put(&self, key: u64, result: MboResult) {
-        self.inner.lock().unwrap().insert(key, result);
+        self.inner.lock().insert(key, result);
     }
 
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().len()
+        self.inner.lock().len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -310,12 +320,12 @@ impl MboCache {
 
     /// Lookups answered from the cache since construction.
     pub fn hits(&self) -> u64 {
-        self.hits.load(AtomicOrdering::Relaxed)
+        self.hits.load()
     }
 
     /// Lookups that fell through to a fresh optimization.
     pub fn misses(&self) -> u64 {
-        self.misses.load(AtomicOrdering::Relaxed)
+        self.misses.load()
     }
 }
 

@@ -40,11 +40,17 @@
 //!    over newline-delimited JSON, answered from the process-wide warm
 //!    caches when possible; `kareus loadgen` load-tests it
 //!    deterministically.
+//! 9. **model-check the concurrency** — every concurrency-bearing module
+//!    builds on the [`util::sync`] shims (plain `std::sync` in normal
+//!    builds); under `--features modelcheck` the `modelcheck` explorer
+//!    drives them through every bounded interleaving, detecting
+//!    deadlock, lost wakeups, and double locks, and emits failing
+//!    schedules as replayable JSON fixtures.
 //!
 //! [`paper`] regenerates the evaluation tables/figures, [`sim`] is the
 //! default measurement source (GPU power model + two-stream executor),
 //! and [`util`] holds the offline substrates (JSON, RNG, stats, hashing,
-//! thread pool).
+//! thread pool, sync shims).
 
 pub mod backend;
 pub mod baselines;
@@ -57,6 +63,8 @@ pub mod coordinator;
 pub mod engine;
 pub mod frontier;
 pub mod mbo;
+#[cfg(feature = "modelcheck")]
+pub mod modelcheck;
 pub mod paper;
 pub mod partition;
 pub mod pipeline;

@@ -1,0 +1,81 @@
+//! Deliberately broken (and one correct) concurrency models used to
+//! validate the checker itself.
+//!
+//! Each function is a complete model closure body: construct shared
+//! state inside, spawn controlled threads through
+//! [`crate::util::sync::spawn`], and join. The broken ones each seed
+//! one classic bug the explorer must detect; their minimal failing
+//! schedules are committed as fixtures under
+//! `tests/fixtures/modelcheck/` and re-checked by replay tests.
+
+use std::sync::Arc;
+
+use crate::util::sync::{spawn, SyncAtomicBool, SyncCondvar, SyncMutex};
+
+/// Seeded bug: a thread locks the same mutex twice.
+///
+/// Thread layout: t0 spawns t1; t1 takes `m` and, still holding it,
+/// takes it again. Detected at the second acquire's post — no schedule
+/// can ever grant it. Minimal failing schedule: `[0, 0, 1, 1]`
+/// (t0 begin, t0 spawn, t1 begin, t1 first lock).
+pub fn double_lock() {
+    let m = Arc::new(SyncMutex::new(0u32));
+    let m2 = Arc::clone(&m);
+    let t = spawn(move || {
+        let _a = m2.lock();
+        let _b = m2.lock(); // bug: self-deadlock in a plain mutex
+    });
+    let _ = t.join();
+}
+
+/// Seeded bug: the classic two-thread lost wakeup.
+///
+/// The waiter checks a flag and then waits; the signaler sets the flag
+/// and notifies *without holding the mutex that guards the check*. On
+/// schedules where the signaler runs entirely inside the waiter's
+/// check-then-wait window, the notify finds nobody parked and the
+/// waiter sleeps forever. Minimal failing schedule:
+/// `[0, 0, 0, 1, 1, 1, 2, 2, 2, 1]`.
+pub fn lost_wakeup() {
+    let flag = Arc::new(SyncAtomicBool::new(false));
+    let pair = Arc::new((SyncMutex::new(()), SyncCondvar::new()));
+    let (f1, p1) = (Arc::clone(&flag), Arc::clone(&pair));
+    let waiter = spawn(move || {
+        let (m, cv) = &*p1;
+        let g = m.lock();
+        if !f1.load() {
+            // bug: by the time we park, the notify may already be gone
+            let _g = cv.wait(g);
+        }
+    });
+    let (f2, p2) = (Arc::clone(&flag), Arc::clone(&pair));
+    let signaler = spawn(move || {
+        f2.store(true);
+        p2.1.notify_one(); // bug: not ordered against the waiter's check
+    });
+    let _ = waiter.join();
+    let _ = signaler.join();
+}
+
+/// Correct version of [`lost_wakeup`]: the predicate lives under the
+/// mutex and the signaler holds it across set-and-notify, so every
+/// interleaving wakes the waiter. The explorer must find no failure.
+pub fn wakeup_correct() {
+    let pair = Arc::new((SyncMutex::new(false), SyncCondvar::new()));
+    let p1 = Arc::clone(&pair);
+    let waiter = spawn(move || {
+        let (m, cv) = &*p1;
+        let mut g = m.lock();
+        while !*g {
+            g = cv.wait(g);
+        }
+    });
+    let p2 = Arc::clone(&pair);
+    let signaler = spawn(move || {
+        let (m, cv) = &*p2;
+        *m.lock() = true;
+        cv.notify_one();
+    });
+    waiter.join().expect("waiter");
+    signaler.join().expect("signaler");
+}

@@ -1,0 +1,1058 @@
+//! Deterministic concurrency model checking (data-flow step ⑩).
+//!
+//! A no-deps, loom-style interleaving explorer for the crate's
+//! concurrency layer. Code under test uses the [`crate::util::sync`]
+//! shims; when a model closure runs inside an [`Explorer`], every
+//! visible operation (lock, unlock, condvar wait/notify, atomic
+//! load/store/rmw, spawn, join) is routed through a cooperative
+//! scheduler that runs exactly one thread at a time and chooses, at
+//! every scheduling point, which thread to run next. The [`Explorer`]
+//! then enumerates those choices exhaustively:
+//!
+//! - **DFS over schedule prefixes**: each execution records, at every
+//!   grant, the set of runnable threads and the choice taken; the
+//!   explorer backtracks over untried alternatives, re-executing the
+//!   (deterministic) model under the new forced prefix.
+//! - **Bounded preemption** ([`Config::max_preemptions`]): switching
+//!   away from a thread that is still runnable costs one unit of
+//!   budget; most real concurrency bugs need very few preemptions
+//!   (CHESS's observation), which keeps the search tractable.
+//! - **State-hash pruning** ([`Config::prune`]): a state is the FNV-64
+//!   of every thread's observation history plus every sync object's
+//!   shadow state; once a state has been fully explored with at least
+//!   as much remaining budget, re-reaching it cuts the execution short.
+//!   Insertion is post-order (only after every alternative under the
+//!   state has been explored), which keeps the pruning sound.
+//!
+//! Detected failures: **deadlock** (no runnable thread, none parked),
+//! **lost wakeup** (no runnable thread, at least one parked on a
+//! condvar), **double lock** (re-acquiring a held [`crate::util::sync::SyncMutex`]),
+//! and **panic** (any model thread panicking, e.g. a failed assertion
+//! inside the model). A failure report carries the exact schedule — the
+//! sequence of thread ids granted, one per scheduling point — which
+//! [`Explorer::replay`] re-executes deterministically; failing
+//! schedules are committed as JSON fixtures under
+//! `tests/fixtures/modelcheck/`.
+//!
+//! Everything here is deterministic: thread ids are assigned in spawn
+//! order, object ids in construction order, runnable sets are sorted,
+//! and exploration order is a pure function of the model. Running the
+//! same exploration twice yields byte-identical reports.
+//!
+//! This module only exists under `--features modelcheck`; see
+//! `tests/modelcheck.rs` for the harnesses that model-check the serve
+//! coalescing protocol, the worker pool's drain-then-join shutdown, and
+//! the daemon's shutdown accept-race.
+
+use std::collections::BTreeMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::util::hash::Fnv64;
+use crate::util::json::{arr, num, obj, s, Json};
+use crate::util::sync::AtomicOp;
+
+pub mod demos;
+
+/// Exploration limits and switches.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    /// Preemption budget per execution: switching to another thread
+    /// while the current one is still runnable costs one unit.
+    pub max_preemptions: u32,
+    /// Hard cap on executions; [`Report::capped`] is set if reached.
+    pub max_schedules: u64,
+    /// Enable state-hash pruning of already-explored suffixes.
+    pub prune: bool,
+}
+
+impl Default for Config {
+    fn default() -> Config {
+        Config { max_preemptions: 2, max_schedules: 20_000, prune: true }
+    }
+}
+
+/// What went wrong in a failing execution.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FailureKind {
+    /// No thread can make progress and none is in a condvar wait.
+    Deadlock,
+    /// No thread can make progress and at least one is parked on a
+    /// condvar — a notify was lost (or never sent).
+    LostWakeup,
+    /// A thread re-locked a mutex it already holds.
+    DoubleLock,
+    /// A model thread panicked (failed assertion, explicit panic).
+    Panic,
+    /// A replayed schedule named a thread that was not runnable at that
+    /// point — the fixture does not match the model.
+    ReplayDivergence,
+}
+
+impl FailureKind {
+    /// Stable string form used in reports and fixtures.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FailureKind::Deadlock => "deadlock",
+            FailureKind::LostWakeup => "lost-wakeup",
+            FailureKind::DoubleLock => "double-lock",
+            FailureKind::Panic => "panic",
+            FailureKind::ReplayDivergence => "replay-divergence",
+        }
+    }
+
+    /// Inverse of [`FailureKind::as_str`], for reading fixtures.
+    pub fn parse(text: &str) -> Option<FailureKind> {
+        Some(match text {
+            "deadlock" => FailureKind::Deadlock,
+            "lost-wakeup" => FailureKind::LostWakeup,
+            "double-lock" => FailureKind::DoubleLock,
+            "panic" => FailureKind::Panic,
+            "replay-divergence" => FailureKind::ReplayDivergence,
+            _ => return None,
+        })
+    }
+}
+
+/// A failing execution: kind, human-readable message, and the exact
+/// schedule (granted thread id per scheduling point) that reproduces it
+/// via [`Explorer::replay`].
+#[derive(Clone, Debug)]
+pub struct Failure {
+    /// Classification of the failure.
+    pub kind: FailureKind,
+    /// Human-readable description (thread/object ids included).
+    pub message: String,
+    /// Thread id granted at each scheduling point, in order.
+    pub schedule: Vec<usize>,
+    /// Per-grant labels ("t1 lock m0", ...) for the same points.
+    pub trace: Vec<String>,
+}
+
+impl Failure {
+    /// Serialize for reports and replay fixtures.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("kind", s(self.kind.as_str())),
+            ("message", s(&self.message)),
+            ("schedule", arr(self.schedule.iter().map(|&t| num(t as f64)).collect())),
+            ("trace", arr(self.trace.iter().map(|t| s(t)).collect())),
+        ])
+    }
+}
+
+/// Outcome of an exploration or replay.
+#[derive(Clone, Debug)]
+pub struct Report {
+    /// Executions run (1 for a replay).
+    pub schedules: u64,
+    /// Total scheduling points granted across executions.
+    pub decisions: u64,
+    /// Executions cut short by state-hash pruning.
+    pub pruned: u64,
+    /// True if [`Config::max_schedules`] stopped the search early.
+    pub capped: bool,
+    /// First failure found, if any (exploration stops at the first).
+    pub failure: Option<Failure>,
+}
+
+impl Report {
+    /// Serialize; byte-identical across runs of the same exploration.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("schedules", num(self.schedules as f64)),
+            ("decisions", num(self.decisions as f64)),
+            ("pruned", num(self.pruned as f64)),
+            ("capped", Json::Bool(self.capped)),
+            ("failure", match &self.failure {
+                Some(f) => f.to_json(),
+                None => Json::Null,
+            }),
+        ])
+    }
+
+    /// `to_json().dump()` convenience.
+    pub fn dump(&self) -> String {
+        self.to_json().dump()
+    }
+}
+
+/// Read a `{"schedule": [...]}` replay fixture (as emitted inside
+/// [`Failure::to_json`] or committed under `tests/fixtures/modelcheck/`).
+pub fn schedule_from_json(j: &Json) -> Option<Vec<usize>> {
+    j.get("schedule")?.as_arr()?.iter().map(|v| v.as_usize()).collect()
+}
+
+// ---------------------------------------------------------------------------
+// Scheduler state
+// ---------------------------------------------------------------------------
+
+/// Panic payload used to unwind controlled threads when an execution
+/// aborts (failure found, or suffix pruned). Never escapes the checker.
+struct AbortExecution;
+
+/// A visible operation posted by a controlled thread, pending grant.
+enum Op {
+    /// First scheduling point of every thread, before any user code.
+    Begin,
+    Lock(u64),
+    /// Post-notify mutex re-acquisition (second half of a condvar wait).
+    Reacquire(u64),
+    Wait { cv: u64, mutex: u64 },
+    Notify { cv: u64, all: bool },
+    Atomic { obj: u64, op: AtomicOp },
+    Spawn(Box<dyn FnOnce() + Send>),
+    Join(usize),
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum TState {
+    /// Granted and executing user code (at most one thread at a time).
+    Running,
+    /// Posted an op, waiting for it to be granted.
+    Posted,
+    /// In a condvar wait, waiting for a notify.
+    Parked,
+    Finished,
+}
+
+struct TRec {
+    state: TState,
+    op: Option<Op>,
+    parked_cv: u64,
+    parked_mutex: u64,
+    granted: bool,
+    op_result: u64,
+    /// Rolling FNV-64 over (tag, operand, observed value) of every
+    /// granted op — the thread's deterministic observation history.
+    history: u64,
+}
+
+impl TRec {
+    /// A thread that exists but has not yet been allowed to start.
+    fn posted_begin() -> TRec {
+        TRec {
+            state: TState::Posted,
+            op: Some(Op::Begin),
+            parked_cv: 0,
+            parked_mutex: 0,
+            granted: false,
+            op_result: 0,
+            history: 0,
+        }
+    }
+}
+
+/// Shadow state of one sync object (ids are construction order).
+enum ObjRec {
+    Mutex { owner: Option<usize> },
+    Condvar,
+    Atomic { value: u64 },
+}
+
+struct State {
+    threads: Vec<TRec>,
+    objs: Vec<ObjRec>,
+    aborting: bool,
+    failure: Option<Failure>,
+    schedule: Vec<usize>,
+    trace: Vec<String>,
+}
+
+struct Shared {
+    mu: Mutex<State>,
+    cv: Condvar,
+}
+
+impl Shared {
+    fn fresh() -> Shared {
+        Shared {
+            mu: Mutex::new(State {
+                threads: vec![TRec::posted_begin()],
+                objs: Vec::new(),
+                aborting: false,
+                failure: None,
+                schedule: Vec::new(),
+                trace: Vec::new(),
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn record_failure(st: &mut State, kind: FailureKind, message: String) {
+        if st.failure.is_none() {
+            st.failure = Some(Failure {
+                kind,
+                message,
+                schedule: st.schedule.clone(),
+                trace: st.trace.clone(),
+            });
+        }
+        st.aborting = true;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// rt: the hooks util::sync routes through on controlled threads
+// ---------------------------------------------------------------------------
+
+/// Runtime face of the scheduler, called by the [`crate::util::sync`]
+/// shims. Every function is a no-op (or identity) unless the calling
+/// thread is controlled by an active [`Explorer`] execution.
+pub(crate) mod rt {
+    use super::*;
+    use std::cell::RefCell;
+
+    struct Ctx {
+        shared: Arc<Shared>,
+        tid: usize,
+    }
+
+    thread_local! {
+        static CTX: RefCell<Option<Ctx>> = RefCell::new(None);
+    }
+
+    /// True iff this thread is controlled by an active execution.
+    pub(crate) fn active() -> bool {
+        CTX.with(|c| c.borrow().is_some())
+    }
+
+    fn with_ctx<R>(f: impl FnOnce(&Arc<Shared>, usize) -> R) -> Option<R> {
+        CTX.with(|c| {
+            let b = c.borrow();
+            b.as_ref().map(|ctx| f(&ctx.shared, ctx.tid))
+        })
+    }
+
+    fn register(o: ObjRec) -> Option<u64> {
+        with_ctx(|sh, _tid| {
+            let mut st = sh.mu.lock().unwrap_or_else(|e| e.into_inner());
+            st.objs.push(o);
+            (st.objs.len() - 1) as u64
+        })
+    }
+
+    pub(crate) fn register_mutex() -> Option<u64> {
+        register(ObjRec::Mutex { owner: None })
+    }
+
+    pub(crate) fn register_condvar() -> Option<u64> {
+        register(ObjRec::Condvar)
+    }
+
+    pub(crate) fn register_atomic(init: u64) -> Option<u64> {
+        register(ObjRec::Atomic { value: init })
+    }
+
+    /// Post `op` and block until the scheduler grants it. Returns the
+    /// op's observed value (previous atomic value, spawned tid, 0).
+    fn gate(sh: &Arc<Shared>, tid: usize, op: Op) -> u64 {
+        // A thread that is already unwinding (user panic, or an
+        // AbortExecution teardown) can reach here from drop glue — e.g.
+        // a poison-on-drop fill guard taking its slot lock to notify
+        // waiters. Never start a second panic inside a destructor:
+        // skip the scheduling point and let the shim fall through to
+        // its real `std` primitive, whose state is being torn down
+        // anyway.
+        if std::thread::panicking() {
+            return 0;
+        }
+        let mut st = sh.mu.lock().unwrap_or_else(|e| e.into_inner());
+        if st.aborting {
+            drop(st);
+            std::panic::panic_any(AbortExecution);
+        }
+        // Double-lock is detectable the moment it is posted: the poster
+        // already owns the mutex, so no extension of any schedule could
+        // ever grant it.
+        if let Op::Lock(m) = &op {
+            if let ObjRec::Mutex { owner: Some(o) } = &st.objs[*m as usize] {
+                if *o == tid {
+                    Shared::record_failure(
+                        &mut st,
+                        FailureKind::DoubleLock,
+                        format!("thread {tid} re-locked mutex m{m} it already holds"),
+                    );
+                    sh.cv.notify_all();
+                    drop(st);
+                    std::panic::panic_any(AbortExecution);
+                }
+            }
+        }
+        st.threads[tid].op = Some(op);
+        st.threads[tid].state = TState::Posted;
+        sh.cv.notify_all();
+        loop {
+            if st.threads[tid].granted {
+                break;
+            }
+            if st.aborting {
+                drop(st);
+                std::panic::panic_any(AbortExecution);
+            }
+            st = sh.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+        st.threads[tid].granted = false;
+        st.threads[tid].op_result
+    }
+
+    /// Wait for this thread's `Begin` grant (the op was posted by the
+    /// spawner), without posting anything.
+    fn await_begin(sh: &Arc<Shared>, tid: usize) {
+        let mut st = sh.mu.lock().unwrap_or_else(|e| e.into_inner());
+        loop {
+            if st.threads[tid].granted {
+                break;
+            }
+            if st.aborting {
+                drop(st);
+                std::panic::panic_any(AbortExecution);
+            }
+            st = sh.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+        st.threads[tid].granted = false;
+    }
+
+    pub(crate) fn mutex_lock(id: u64) {
+        with_ctx(|sh, tid| {
+            gate(sh, tid, Op::Lock(id));
+        });
+    }
+
+    /// Immediate effect (no scheduling point): releasing a mutex only
+    /// enables other threads; any switch it could cause is equivalent
+    /// to one at the releasing thread's next posted op. Must never
+    /// panic — it runs on guard-drop paths during unwinding.
+    pub(crate) fn mutex_unlock(id: u64) {
+        with_ctx(|sh, tid| {
+            let mut st = sh.mu.lock().unwrap_or_else(|e| e.into_inner());
+            if let ObjRec::Mutex { owner } = &mut st.objs[id as usize] {
+                if *owner == Some(tid) {
+                    *owner = None;
+                }
+            }
+            sh.cv.notify_all();
+        });
+    }
+
+    /// Two-stage condvar wait: the grant of the `Wait` op releases the
+    /// mutex and parks; a later `Notify` re-posts the thread as a
+    /// `Reacquire`, whose grant finally returns control here.
+    pub(crate) fn condvar_wait(cv: u64, mutex: u64) {
+        with_ctx(|sh, tid| {
+            gate(sh, tid, Op::Wait { cv, mutex });
+        });
+    }
+
+    pub(crate) fn condvar_notify(cv: u64, all: bool) {
+        with_ctx(|sh, tid| {
+            gate(sh, tid, Op::Notify { cv, all });
+        });
+    }
+
+    /// Apply `op` to the shadow cell at its scheduling point; returns
+    /// the previous value.
+    pub(crate) fn atomic(id: u64, op: AtomicOp) -> u64 {
+        with_ctx(|sh, tid| gate(sh, tid, Op::Atomic { obj: id, op })).unwrap_or(0)
+    }
+
+    /// Register and start a controlled thread; returns its model tid.
+    pub(crate) fn spawn(f: Box<dyn FnOnce() + Send>) -> u64 {
+        with_ctx(|sh, tid| gate(sh, tid, Op::Spawn(f))).unwrap_or(0)
+    }
+
+    /// Block until thread `target` finishes (a scheduling point).
+    pub(crate) fn join(target: u64) {
+        with_ctx(|sh, tid| {
+            gate(sh, tid, Op::Join(target as usize));
+        });
+    }
+
+    /// Body of every controlled OS thread: install the TLS handle, wait
+    /// for `Begin`, run the user closure, record panics (aborting the
+    /// execution), and mark the thread finished.
+    pub(super) fn run_controlled(sh: Arc<Shared>, tid: usize, f: Box<dyn FnOnce() + Send>) {
+        CTX.with(|c| {
+            *c.borrow_mut() = Some(Ctx { shared: Arc::clone(&sh), tid });
+        });
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            await_begin(&sh, tid);
+            f();
+        }));
+        CTX.with(|c| {
+            *c.borrow_mut() = None;
+        });
+        let mut st = sh.mu.lock().unwrap_or_else(|e| e.into_inner());
+        if let Err(payload) = result {
+            if !payload.is::<AbortExecution>() {
+                let msg = if let Some(m) = payload.downcast_ref::<&str>() {
+                    (*m).to_string()
+                } else if let Some(m) = payload.downcast_ref::<String>() {
+                    m.clone()
+                } else {
+                    "non-string panic payload".to_string()
+                };
+                Shared::record_failure(
+                    &mut st,
+                    FailureKind::Panic,
+                    format!("thread {tid} panicked: {msg}"),
+                );
+            }
+        }
+        st.threads[tid].state = TState::Finished;
+        st.threads[tid].op = None;
+        sh.cv.notify_all();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Grant application
+// ---------------------------------------------------------------------------
+
+fn grant_run(t: &mut TRec, result: u64) {
+    t.granted = true;
+    t.state = TState::Running;
+    t.op_result = result;
+}
+
+fn update_history(st: &mut State, tid: usize, tag: u64, operand: u64, value: u64) {
+    let mut h = Fnv64::new();
+    h.write_u64(st.threads[tid].history)
+        .write_u64(tag)
+        .write_u64(operand)
+        .write_u64(value);
+    st.threads[tid].history = h.finish();
+}
+
+/// Apply the granted op's effect under the state lock. Returns the
+/// closure of a newly spawned thread (to be started outside the lock).
+fn apply_grant(st: &mut State, tid: usize) -> Option<(usize, Box<dyn FnOnce() + Send>)> {
+    let op = st.threads[tid].op.take().expect("granted thread has no posted op");
+    let mut spawned = None;
+    let label = match op {
+        Op::Begin => {
+            grant_run(&mut st.threads[tid], 0);
+            update_history(st, tid, 1, 0, 0);
+            format!("t{tid} begin")
+        }
+        Op::Lock(m) => {
+            if let ObjRec::Mutex { owner } = &mut st.objs[m as usize] {
+                *owner = Some(tid);
+            }
+            grant_run(&mut st.threads[tid], 0);
+            update_history(st, tid, 2, m, 0);
+            format!("t{tid} lock m{m}")
+        }
+        Op::Reacquire(m) => {
+            if let ObjRec::Mutex { owner } = &mut st.objs[m as usize] {
+                *owner = Some(tid);
+            }
+            grant_run(&mut st.threads[tid], 0);
+            update_history(st, tid, 3, m, 0);
+            format!("t{tid} reacquire m{m}")
+        }
+        Op::Wait { cv, mutex } => {
+            // Atomically release the mutex and park; the thread stays
+            // blocked in its gate until a notify re-posts it as a
+            // Reacquire and that gets granted.
+            if let ObjRec::Mutex { owner } = &mut st.objs[mutex as usize] {
+                if *owner == Some(tid) {
+                    *owner = None;
+                }
+            }
+            let t = &mut st.threads[tid];
+            t.state = TState::Parked;
+            t.parked_cv = cv;
+            t.parked_mutex = mutex;
+            update_history(st, tid, 4, cv, mutex);
+            format!("t{tid} wait cv{cv}")
+        }
+        Op::Notify { cv, all } => {
+            let mut woken: Vec<usize> = Vec::new();
+            for w in 0..st.threads.len() {
+                if st.threads[w].state == TState::Parked && st.threads[w].parked_cv == cv {
+                    woken.push(w);
+                    if !all {
+                        break;
+                    }
+                }
+            }
+            for &w in &woken {
+                let mutex = st.threads[w].parked_mutex;
+                st.threads[w].state = TState::Posted;
+                st.threads[w].op = Some(Op::Reacquire(mutex));
+            }
+            grant_run(&mut st.threads[tid], woken.len() as u64);
+            update_history(st, tid, 5, cv, woken.len() as u64);
+            let verb = if all { "notify_all" } else { "notify" };
+            if woken.is_empty() {
+                format!("t{tid} {verb} cv{cv} (woke none)")
+            } else {
+                let ids: Vec<String> = woken.iter().map(|w| format!("t{w}")).collect();
+                format!("t{tid} {verb} cv{cv} (woke {})", ids.join(","))
+            }
+        }
+        Op::Atomic { obj, op } => {
+            let (prev, desc) = match &mut st.objs[obj as usize] {
+                ObjRec::Atomic { value } => {
+                    let prev = *value;
+                    let desc = match op {
+                        AtomicOp::Load => format!("load={prev}"),
+                        AtomicOp::Store(v) => {
+                            *value = v;
+                            format!("store {v}")
+                        }
+                        AtomicOp::FetchAdd(v) => {
+                            *value = value.wrapping_add(v);
+                            format!("fetch_add {v} (was {prev})")
+                        }
+                        AtomicOp::FetchSub(v) => {
+                            *value = value.wrapping_sub(v);
+                            format!("fetch_sub {v} (was {prev})")
+                        }
+                        AtomicOp::CompareExchange { expect, new } => {
+                            if prev == expect {
+                                *value = new;
+                                format!("cas {expect}->{new} ok")
+                            } else {
+                                format!("cas {expect}->{new} failed (was {prev})")
+                            }
+                        }
+                    };
+                    (prev, desc)
+                }
+                _ => (0, "atomic on non-atomic object".to_string()),
+            };
+            grant_run(&mut st.threads[tid], prev);
+            update_history(st, tid, 6, obj, prev);
+            format!("t{tid} atomic a{obj} {desc}")
+        }
+        Op::Spawn(f) => {
+            let new_tid = st.threads.len();
+            st.threads.push(TRec::posted_begin());
+            spawned = Some((new_tid, f));
+            grant_run(&mut st.threads[tid], new_tid as u64);
+            update_history(st, tid, 7, new_tid as u64, 0);
+            format!("t{tid} spawn t{new_tid}")
+        }
+        Op::Join(target) => {
+            grant_run(&mut st.threads[tid], 0);
+            update_history(st, tid, 8, target as u64, 0);
+            format!("t{tid} join t{target}")
+        }
+    };
+    st.schedule.push(tid);
+    st.trace.push(label);
+    spawned
+}
+
+/// Threads whose posted op can be granted right now, ascending by tid.
+fn runnable(st: &State) -> Vec<usize> {
+    let mut out = Vec::new();
+    for (i, t) in st.threads.iter().enumerate() {
+        if t.state != TState::Posted {
+            continue;
+        }
+        let ok = match &t.op {
+            Some(Op::Lock(m)) | Some(Op::Reacquire(m)) => {
+                matches!(&st.objs[*m as usize], ObjRec::Mutex { owner: None })
+            }
+            Some(Op::Join(target)) => st.threads[*target].state == TState::Finished,
+            Some(_) => true,
+            None => false,
+        };
+        if ok {
+            out.push(i);
+        }
+    }
+    out
+}
+
+/// FNV-64 of the whole quiescent state: per-thread histories (which
+/// determine each deterministic thread's continuation) plus every
+/// object's shadow state.
+fn state_key(st: &State) -> u64 {
+    let mut h = Fnv64::new();
+    for (i, t) in st.threads.iter().enumerate() {
+        let tag = match t.state {
+            TState::Posted => 1u64,
+            TState::Parked => 2,
+            TState::Finished => 3,
+            TState::Running => 4,
+        };
+        h.write_u64(i as u64).write_u64(tag).write_u64(t.history);
+        if t.state == TState::Parked {
+            h.write_u64(t.parked_cv).write_u64(t.parked_mutex);
+        }
+    }
+    for (i, o) in st.objs.iter().enumerate() {
+        h.write_u64(i as u64);
+        match o {
+            ObjRec::Mutex { owner } => {
+                h.write_u64(10).write_u64(owner.map_or(u64::MAX, |t| t as u64));
+            }
+            ObjRec::Condvar => {
+                h.write_u64(11);
+            }
+            ObjRec::Atomic { value } => {
+                h.write_u64(12).write_u64(*value);
+            }
+        }
+    }
+    h.finish()
+}
+
+// ---------------------------------------------------------------------------
+// Explorer
+// ---------------------------------------------------------------------------
+
+/// One scheduling point of one execution, as seen by the DFS.
+struct Decision {
+    runnable: Vec<usize>,
+    chosen: usize,
+    preempt_before: u32,
+    key: u64,
+}
+
+struct ExecRun {
+    decisions: Vec<Decision>,
+    failure: Option<Failure>,
+    truncated: bool,
+}
+
+#[derive(Default)]
+struct Stats {
+    schedules: u64,
+    decisions: u64,
+    pruned: u64,
+    capped: bool,
+}
+
+type Model = Arc<dyn Fn() + Send + Sync + 'static>;
+
+/// Exhaustive bounded interleaving explorer over a model closure.
+///
+/// The model must be a *pure function of its observed sync history*:
+/// it is re-executed once per explored schedule, so it must not carry
+/// state across invocations (construct everything it shares inside the
+/// closure) and must not consult anything nondeterministic. Assertions
+/// inside the model surface as [`FailureKind::Panic`].
+pub struct Explorer {
+    cfg: Config,
+}
+
+impl Explorer {
+    /// Explorer with the given limits.
+    pub fn new(cfg: Config) -> Explorer {
+        Explorer { cfg }
+    }
+
+    /// Explore every schedule of `model` within the preemption bound;
+    /// stops at the first failure. Deterministic: the same model and
+    /// config always return a byte-identical report.
+    pub fn explore<F>(&self, model: F) -> Report
+    where
+        F: Fn() + Send + Sync + 'static,
+    {
+        let model: Model = Arc::new(model);
+        let mut memo: BTreeMap<u64, u32> = BTreeMap::new();
+        let mut stats = Stats::default();
+        let failure = self.explore_rec(&model, Vec::new(), &mut memo, &mut stats);
+        Report {
+            schedules: stats.schedules,
+            decisions: stats.decisions,
+            pruned: stats.pruned,
+            capped: stats.capped,
+            failure,
+        }
+    }
+
+    /// Re-execute `model` under an exact schedule (from a failure
+    /// report or fixture). The forced prefix is followed verbatim —
+    /// divergence is reported as [`FailureKind::ReplayDivergence`] —
+    /// and any remaining suffix runs under the default policy.
+    pub fn replay<F>(&self, schedule: &[usize], model: F) -> Report
+    where
+        F: Fn() + Send + Sync + 'static,
+    {
+        let model: Model = Arc::new(model);
+        let run = self.run_one(&model, schedule, true, None);
+        Report {
+            schedules: 1,
+            decisions: run.decisions.len() as u64,
+            pruned: 0,
+            capped: false,
+            failure: run.failure,
+        }
+    }
+
+    fn explore_rec(
+        &self,
+        model: &Model,
+        prefix: Vec<usize>,
+        memo: &mut BTreeMap<u64, u32>,
+        stats: &mut Stats,
+    ) -> Option<Failure> {
+        if stats.schedules >= self.cfg.max_schedules {
+            stats.capped = true;
+            return None;
+        }
+        let run = {
+            let memo_ref = if self.cfg.prune { Some(&*memo) } else { None };
+            self.run_one(model, &prefix, false, memo_ref)
+        };
+        stats.schedules += 1;
+        stats.decisions += run.decisions.len() as u64;
+        if run.truncated {
+            stats.pruned += 1;
+        }
+        if run.failure.is_some() {
+            return run.failure;
+        }
+        // Backtrack: try every untried, budget-feasible alternative at
+        // every free (non-forced) scheduling point, deepest first. The
+        // memo entry for a point is inserted only after all its
+        // alternatives are explored (post-order), so pruning on it is
+        // sound.
+        for i in (prefix.len()..run.decisions.len()).rev() {
+            let prev = if i == 0 { None } else { Some(run.decisions[i - 1].chosen) };
+            let runnable = run.decisions[i].runnable.clone();
+            let chosen = run.decisions[i].chosen;
+            let pb = run.decisions[i].preempt_before;
+            let key = run.decisions[i].key;
+            for &alt in &runnable {
+                if alt == chosen {
+                    continue;
+                }
+                let cost = u32::from(prev.is_some_and(|p| p != alt && runnable.contains(&p)));
+                if pb + cost > self.cfg.max_preemptions {
+                    continue;
+                }
+                let mut p2: Vec<usize> =
+                    run.decisions[..i].iter().map(|d| d.chosen).collect();
+                p2.push(alt);
+                if let Some(f) = self.explore_rec(model, p2, memo, stats) {
+                    return Some(f);
+                }
+                if stats.capped {
+                    return None;
+                }
+            }
+            if self.cfg.prune {
+                let remaining = self.cfg.max_preemptions - pb;
+                memo.entry(key).and_modify(|b| *b = (*b).max(remaining)).or_insert(remaining);
+            }
+        }
+        None
+    }
+
+    /// Run one execution: start the model as controlled thread 0, then
+    /// grant ops one at a time — forced prefix first, then "keep the
+    /// current thread running if runnable, else lowest tid".
+    fn run_one(
+        &self,
+        model: &Model,
+        forced: &[usize],
+        replay: bool,
+        memo: Option<&BTreeMap<u64, u32>>,
+    ) -> ExecRun {
+        let sh = Arc::new(Shared::fresh());
+        let mut handles = Vec::new();
+        {
+            let sh2 = Arc::clone(&sh);
+            let m2 = Arc::clone(model);
+            handles.push(std::thread::spawn(move || {
+                rt::run_controlled(sh2, 0, Box::new(move || m2()))
+            }));
+        }
+        let mut decisions: Vec<Decision> = Vec::new();
+        let mut preemptions = 0u32;
+        let mut prev: Option<usize> = None;
+        let mut truncated = false;
+        let mut step = 0usize;
+        'sched: loop {
+            let mut pending: Option<(usize, Box<dyn FnOnce() + Send>)> = None;
+            {
+                let mut st = sh.mu.lock().unwrap_or_else(|e| e.into_inner());
+                loop {
+                    if st.aborting {
+                        break 'sched;
+                    }
+                    if st.threads.iter().all(|t| t.state == TState::Finished) {
+                        break 'sched;
+                    }
+                    let quiescent = st.threads.iter().all(|t| {
+                        matches!(t.state, TState::Posted | TState::Parked | TState::Finished)
+                    });
+                    if !quiescent {
+                        st = sh.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+                        continue;
+                    }
+                    let run = runnable(&st);
+                    if run.is_empty() {
+                        let parked =
+                            st.threads.iter().any(|t| t.state == TState::Parked);
+                        let kind = if parked {
+                            FailureKind::LostWakeup
+                        } else {
+                            FailureKind::Deadlock
+                        };
+                        let mut states: Vec<String> = Vec::new();
+                        for (i, t) in st.threads.iter().enumerate() {
+                            if t.state == TState::Parked {
+                                states.push(format!("t{i}=parked(cv{})", t.parked_cv));
+                            } else if t.state == TState::Posted {
+                                states.push(format!("t{i}=blocked"));
+                            }
+                        }
+                        Shared::record_failure(
+                            &mut st,
+                            kind,
+                            format!("no runnable thread: {}", states.join(", ")),
+                        );
+                        sh.cv.notify_all();
+                        break 'sched;
+                    }
+                    let pick = if step < forced.len() {
+                        let want = forced[step];
+                        if !run.contains(&want) {
+                            let what = if replay { "replayed schedule" } else { "prefix" };
+                            let ids: Vec<String> =
+                                run.iter().map(|t| format!("t{t}")).collect();
+                            Shared::record_failure(
+                                &mut st,
+                                FailureKind::ReplayDivergence,
+                                format!(
+                                    "{what} names t{want} at step {step} but runnable is [{}]",
+                                    ids.join(",")
+                                ),
+                            );
+                            sh.cv.notify_all();
+                            break 'sched;
+                        }
+                        want
+                    } else if prev.is_some_and(|p| run.contains(&p)) {
+                        prev.expect("checked above")
+                    } else {
+                        run[0]
+                    };
+                    let key = if replay { 0 } else { state_key(&st) };
+                    if !replay && step >= forced.len() {
+                        if let Some(m) = memo {
+                            if let Some(&b) = m.get(&key) {
+                                if b >= self.cfg.max_preemptions - preemptions {
+                                    truncated = true;
+                                    st.aborting = true;
+                                    sh.cv.notify_all();
+                                    break 'sched;
+                                }
+                            }
+                        }
+                    }
+                    decisions.push(Decision {
+                        runnable: run.clone(),
+                        chosen: pick,
+                        preempt_before: preemptions,
+                        key,
+                    });
+                    if prev.is_some_and(|p| p != pick && run.contains(&p)) {
+                        preemptions += 1;
+                    }
+                    pending = apply_grant(&mut st, pick);
+                    prev = Some(pick);
+                    step += 1;
+                    sh.cv.notify_all();
+                    break;
+                }
+            }
+            if let Some((tid, f)) = pending.take() {
+                let sh2 = Arc::clone(&sh);
+                handles.push(std::thread::spawn(move || rt::run_controlled(sh2, tid, f)));
+            }
+        }
+        // Drain: wake everything, let controlled threads unwind, join.
+        {
+            let mut st = sh.mu.lock().unwrap_or_else(|e| e.into_inner());
+            if !st.threads.iter().all(|t| t.state == TState::Finished) {
+                st.aborting = true;
+                sh.cv.notify_all();
+                while !st.threads.iter().all(|t| t.state == TState::Finished) {
+                    st = sh.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+                }
+            }
+        }
+        for h in handles {
+            let _ = h.join();
+        }
+        let failure = {
+            let st = sh.mu.lock().unwrap_or_else(|e| e.into_inner());
+            st.failure.clone()
+        };
+        ExecRun { decisions, failure, truncated }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn double_lock_detected_with_minimal_schedule() {
+        let report = Explorer::new(Config::default()).explore(demos::double_lock);
+        let f = report.failure.expect("double lock must be found");
+        assert_eq!(f.kind, FailureKind::DoubleLock);
+        // Every choice on the failing path is forced, so the first
+        // execution already hits it with the minimal schedule.
+        assert_eq!(f.schedule, vec![0, 0, 1, 1]);
+        assert_eq!(report.schedules, 1);
+        assert!(!report.capped);
+    }
+
+    #[test]
+    fn lost_wakeup_detected() {
+        let report = Explorer::new(Config::default()).explore(demos::lost_wakeup);
+        let f = report.failure.expect("lost wakeup must be found");
+        assert_eq!(f.kind, FailureKind::LostWakeup);
+        assert!(!report.capped);
+        // The reported schedule must replay to the same failure.
+        let again = Explorer::new(Config::default()).replay(&f.schedule, demos::lost_wakeup);
+        assert_eq!(again.failure.expect("replay refinds it").kind, FailureKind::LostWakeup);
+    }
+
+    #[test]
+    fn correct_model_passes() {
+        let report = Explorer::new(Config::default()).explore(demos::wakeup_correct);
+        assert!(report.failure.is_none(), "unexpected: {:#?}", report.failure);
+        assert!(!report.capped);
+        assert!(report.schedules >= 2, "branching model explores >1 schedule");
+    }
+
+    #[test]
+    fn replay_divergence_is_typed() {
+        let report = Explorer::new(Config::default()).replay(&[5], demos::wakeup_correct);
+        assert_eq!(report.failure.expect("diverges").kind, FailureKind::ReplayDivergence);
+    }
+
+    #[test]
+    fn reports_are_byte_deterministic() {
+        let a = Explorer::new(Config::default()).explore(demos::lost_wakeup).dump();
+        let b = Explorer::new(Config::default()).explore(demos::lost_wakeup).dump();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn schedule_fixture_roundtrip() {
+        let f = Failure {
+            kind: FailureKind::DoubleLock,
+            message: "m".to_string(),
+            schedule: vec![0, 0, 1, 1],
+            trace: vec!["t0 begin".to_string()],
+        };
+        let j = Json::parse(&f.to_json().dump()).expect("parse own dump");
+        assert_eq!(schedule_from_json(&j), Some(vec![0, 0, 1, 1]));
+        assert_eq!(
+            FailureKind::parse(j.get("kind").and_then(|k| k.as_str()).unwrap()),
+            Some(FailureKind::DoubleLock)
+        );
+    }
+}

@@ -9,8 +9,7 @@
 //! meter/thermal substrates.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use crate::backend::{ExecutionBackend, SimBackend};
 use crate::partition::Partition;
@@ -20,6 +19,7 @@ use crate::sim::kernel::Kernel;
 use crate::sim::meter::EnergyMeter;
 use crate::sim::thermal::{ThermalModel, ThermalState};
 use crate::util::rng::Rng;
+use crate::util::sync::{SyncAtomicU64, SyncMutex};
 
 /// Combined GPU + partition fingerprint: the invariant part of a
 /// [`MeasureCache`] key. Callers hoist this out of hot loops (the
@@ -62,11 +62,21 @@ struct ExecKey {
 /// depends only on its *own* configuration, not the combo it appears in),
 /// and across sweep scenarios sharing a workload. Cloning shares the
 /// underlying store; hit/miss counters are lock-free.
-#[derive(Clone, Default)]
+#[derive(Clone)]
 pub struct MeasureCache {
-    inner: Arc<Mutex<HashMap<ExecKey, ExecResult>>>,
-    hits: Arc<AtomicU64>,
-    misses: Arc<AtomicU64>,
+    inner: Arc<SyncMutex<HashMap<ExecKey, ExecResult>>>,
+    hits: Arc<SyncAtomicU64>,
+    misses: Arc<SyncAtomicU64>,
+}
+
+impl Default for MeasureCache {
+    fn default() -> Self {
+        MeasureCache {
+            inner: Arc::new(SyncMutex::new(HashMap::new())),
+            hits: Arc::new(SyncAtomicU64::new(0)),
+            misses: Arc::new(SyncAtomicU64::new(0)),
+        }
+    }
 }
 
 /// Entry bound for [`MeasureCache`]: profiler-path keys embed exact die
@@ -125,13 +135,13 @@ impl MeasureCache {
             temp_bits: temp_c.to_bits(),
             limit_bits: power_limit.map_or(u64::MAX, f64::to_bits),
         };
-        if let Some(r) = self.inner.lock().unwrap().get(&key) {
-            self.hits.fetch_add(1, Ordering::Relaxed);
+        if let Some(r) = self.inner.lock().get(&key) {
+            self.hits.fetch_add(1);
             return *r;
         }
         let r = backend.measure_kernels(gpu, fp, comps, comm, sched, temp_c, power_limit);
-        self.misses.fetch_add(1, Ordering::Relaxed);
-        let mut map = self.inner.lock().unwrap();
+        self.misses.fetch_add(1);
+        let mut map = self.inner.lock();
         if map.len() < MAX_CACHE_ENTRIES {
             map.insert(key, r);
         }
@@ -139,7 +149,7 @@ impl MeasureCache {
     }
 
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().len()
+        self.inner.lock().len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -147,11 +157,11 @@ impl MeasureCache {
     }
 
     pub fn hits(&self) -> u64 {
-        self.hits.load(Ordering::Relaxed)
+        self.hits.load()
     }
 
     pub fn misses(&self) -> u64 {
-        self.misses.load(Ordering::Relaxed)
+        self.misses.load()
     }
 }
 

@@ -1,0 +1,276 @@
+//! Request coalescing with typed poisoning: the cache behind
+//! [`PlanService`](super::PlanService).
+//!
+//! The serving invariant is *exactly one optimization per distinct key,
+//! ever*: the first requester for a key becomes the **owner** and computes;
+//! every concurrent or later requester becomes a **waiter** on the same
+//! slot and receives the owner's published value. Filled slots stay in the
+//! map, so the value doubles as the positive/negative cache (deterministic
+//! failures are publishable values like any other) and the hit/miss split
+//! is a pure function of the request multiset.
+//!
+//! Poisoning is typed, not panicking. The owner holds a [`FillGuard`];
+//! dropping it without [`FillGuard::fill`] (the owner unwound before
+//! publishing) marks the slot [`Fill::Poisoned`] so waiters get a typed
+//! answer instead of parking forever, and *removes* the key from the map —
+//! an owner death is not a deterministic outcome, so it must never be
+//! negatively cached. No path here propagates a `std` mutex poison: the
+//! [`SyncMutex`] shims recover poison at the lock, and abnormal-owner
+//! semantics live entirely in this module's slot state.
+//!
+//! Under `--features modelcheck` every mutex/condvar here is
+//! scheduler-visible, so `tests/modelcheck.rs` can enumerate all bounded
+//! interleavings of claim/fill/wait and prove the exactly-one-owner and
+//! no-lost-wakeup properties rather than stress-testing for them.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::util::sync::{SyncCondvar, SyncMutex};
+
+/// What a resolved slot holds, as observed by a waiter.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Fill<V> {
+    /// The owner published a value (which may itself encode a typed,
+    /// deterministic error — those are cacheable results, not poison).
+    Value(V),
+    /// The owner was destroyed before publishing; the message says why.
+    Poisoned(String),
+}
+
+enum SlotState<V> {
+    Empty,
+    Filled(V),
+    Poisoned(String),
+}
+
+/// One coalescing cell. Waiters park on `cv` until the state leaves
+/// `Empty`; the resolved state is immutable afterwards.
+pub struct Slot<V> {
+    state: SyncMutex<SlotState<V>>,
+    cv: SyncCondvar,
+}
+
+impl<V: Clone> Slot<V> {
+    fn new() -> Slot<V> {
+        Slot { state: SyncMutex::new(SlotState::Empty), cv: SyncCondvar::new() }
+    }
+
+    /// Block until the owner resolves the slot, then return the outcome.
+    pub fn wait(&self) -> Fill<V> {
+        let mut g = self.state.lock();
+        loop {
+            match &*g {
+                SlotState::Empty => g = self.cv.wait(g),
+                SlotState::Filled(v) => return Fill::Value(v.clone()),
+                SlotState::Poisoned(m) => return Fill::Poisoned(m.clone()),
+            }
+        }
+    }
+
+    /// Non-blocking read; `None` while unresolved.
+    fn peek(&self) -> Option<Fill<V>> {
+        match &*self.state.lock() {
+            SlotState::Empty => None,
+            SlotState::Filled(v) => Some(Fill::Value(v.clone())),
+            SlotState::Poisoned(m) => Some(Fill::Poisoned(m.clone())),
+        }
+    }
+
+    fn fill(&self, v: V) {
+        *self.state.lock() = SlotState::Filled(v);
+        self.cv.notify_all();
+    }
+
+    fn poison(&self, why: String) {
+        let mut g = self.state.lock();
+        // First resolution wins; a filled slot is never demoted.
+        if matches!(&*g, SlotState::Empty) {
+            *g = SlotState::Poisoned(why);
+            self.cv.notify_all();
+        }
+    }
+}
+
+/// The owner's obligation to resolve its slot, exactly once.
+///
+/// [`fill`](FillGuard::fill) publishes a value to every waiter and leaves
+/// the entry cached. Dropping the guard unfilled — only possible by
+/// unwinding past it — poisons the slot (waiters get a typed
+/// [`Fill::Poisoned`], which the service maps to `ErrorCode::Internal`)
+/// and evicts the key so the next requester retries from scratch.
+pub struct FillGuard<'a, V: Clone> {
+    cache: &'a CoalescingCache<V>,
+    key: String,
+    slot: Arc<Slot<V>>,
+    armed: bool,
+}
+
+impl<V: Clone> FillGuard<'_, V> {
+    /// Publish `v`: waiters wake with [`Fill::Value`] and the entry stays
+    /// cached for future requesters.
+    pub fn fill(mut self, v: V) {
+        self.armed = false;
+        self.slot.fill(v);
+    }
+}
+
+impl<V: Clone> Drop for FillGuard<'_, V> {
+    fn drop(&mut self) {
+        if !self.armed {
+            return;
+        }
+        // Evict before poisoning: once waiters can observe Poisoned, no
+        // new requester may coalesce onto this slot. Only evict the slot
+        // this guard owns — a successor for the same key must survive.
+        let mut map = self.cache.slots.lock();
+        if map.get(&self.key).is_some_and(|s| Arc::ptr_eq(s, &self.slot)) {
+            map.remove(&self.key);
+        }
+        drop(map);
+        self.slot.poison(format!("owner of '{}' died before publishing a result", self.key));
+    }
+}
+
+/// Outcome of [`CoalescingCache::claim`].
+pub enum Claim<'a, V: Clone> {
+    /// First requester for the key: compute, then [`FillGuard::fill`].
+    Owner(FillGuard<'a, V>),
+    /// Someone else owns (or owned) the key: [`Slot::wait`] for their
+    /// result. Resolves immediately when the slot is already filled.
+    Waiter(Arc<Slot<V>>),
+    /// The admission gate refused a new owner; nothing was inserted.
+    Refused,
+}
+
+/// Keyed map of coalescing slots. `BTreeMap` keeps any debugging dump
+/// deterministic (matching the crate-wide no-iteration-nondeterminism
+/// rule).
+pub struct CoalescingCache<V> {
+    slots: SyncMutex<BTreeMap<String, Arc<Slot<V>>>>,
+}
+
+impl<V: Clone> CoalescingCache<V> {
+    /// Empty cache.
+    pub fn new() -> CoalescingCache<V> {
+        CoalescingCache { slots: SyncMutex::new(BTreeMap::new()) }
+    }
+
+    /// Claim `key`. An existing slot (in-flight or resolved) yields
+    /// [`Claim::Waiter`]. Otherwise `admit` is consulted *while the map
+    /// lock is held* — so admission and insertion are one atomic
+    /// decision — and a `true` verdict installs the caller as
+    /// [`Claim::Owner`]; `false` yields [`Claim::Refused`] and the map
+    /// is unchanged.
+    pub fn claim(&self, key: &str, admit: impl FnOnce() -> bool) -> Claim<'_, V> {
+        let mut map = self.slots.lock();
+        if let Some(slot) = map.get(key) {
+            return Claim::Waiter(Arc::clone(slot));
+        }
+        if !admit() {
+            return Claim::Refused;
+        }
+        let slot = Arc::new(Slot::new());
+        map.insert(key.to_string(), Arc::clone(&slot));
+        Claim::Owner(FillGuard { cache: self, key: key.to_string(), slot, armed: true })
+    }
+
+    /// Resolved value for `key`, if the slot exists and has been filled.
+    /// Never blocks; in-flight slots read as `None`.
+    pub fn peek(&self, key: &str) -> Option<Fill<V>> {
+        let slot = { self.slots.lock().get(key).map(Arc::clone) };
+        slot.and_then(|s| s.peek())
+    }
+
+    /// Number of cached keys (in-flight slots included).
+    pub fn len(&self) -> usize {
+        self.slots.lock().len()
+    }
+
+    /// True when no key has ever been claimed (or all were evicted).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl<V: Clone> Default for CoalescingCache<V> {
+    fn default() -> Self {
+        CoalescingCache::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::sync::spawn;
+
+    fn own<'a>(c: &'a CoalescingCache<u32>, key: &str) -> FillGuard<'a, u32> {
+        match c.claim(key, || true) {
+            Claim::Owner(g) => g,
+            _ => panic!("expected to own '{key}'"),
+        }
+    }
+
+    #[test]
+    fn owner_fills_then_later_claims_wait_resolved() {
+        let c = CoalescingCache::new();
+        own(&c, "k").fill(7);
+        match c.claim("k", || panic!("resolved keys never consult admission")) {
+            Claim::Waiter(s) => assert_eq!(s.wait(), Fill::Value(7)),
+            _ => panic!("second claim must coalesce"),
+        }
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.peek("k"), Some(Fill::Value(7)));
+    }
+
+    #[test]
+    fn refused_admission_inserts_nothing() {
+        let c = CoalescingCache::<u32>::new();
+        assert!(matches!(c.claim("k", || false), Claim::Refused));
+        assert!(c.is_empty());
+        // The key is still claimable afterwards.
+        assert!(matches!(c.claim("k", || true), Claim::Owner(_)));
+    }
+
+    #[test]
+    fn concurrent_waiter_gets_owner_value() {
+        let c = Arc::new(CoalescingCache::new());
+        let g = own(&c, "k");
+        let c2 = Arc::clone(&c);
+        let t = spawn(move || match c2.claim("k", || false) {
+            Claim::Waiter(s) => s.wait(),
+            _ => panic!("must coalesce onto the in-flight owner"),
+        });
+        g.fill(11);
+        assert_eq!(t.join().unwrap(), Fill::Value(11));
+    }
+
+    #[test]
+    fn dropped_guard_poisons_waiters_and_evicts_key() {
+        let c = Arc::new(CoalescingCache::new());
+        let g = own(&c, "k");
+        let c2 = Arc::clone(&c);
+        let t = spawn(move || match c2.claim("k", || false) {
+            Claim::Waiter(s) => s.wait(),
+            _ => panic!("must coalesce onto the in-flight owner"),
+        });
+        drop(g); // owner dies without publishing
+        match t.join().unwrap() {
+            Fill::Poisoned(m) => assert!(m.contains("died before publishing")),
+            f => panic!("waiter must observe poison, got {f:?}"),
+        }
+        // Poison is not a cached outcome: the key is free again.
+        assert!(c.is_empty());
+        assert!(matches!(c.claim("k", || true), Claim::Owner(_)));
+    }
+
+    #[test]
+    fn peek_never_blocks_on_inflight_slot() {
+        let c = CoalescingCache::<u32>::new();
+        let g = own(&c, "k");
+        assert_eq!(c.peek("k"), None);
+        assert_eq!(c.len(), 1);
+        g.fill(3);
+        assert_eq!(c.peek("k"), Some(Fill::Value(3)));
+    }
+}

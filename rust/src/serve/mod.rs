@@ -17,8 +17,12 @@
 //!   answered without touching the optimizer; unknown pairs run per-partition
 //!   MBO inline under bounded admission — overflow gets a typed `busy`
 //!   response, never a hang. Identical in-flight requests coalesce onto one
-//!   optimization, so concurrent duplicates cost one miss total and the
-//!   hit/miss split is deterministic under any scheduling.
+//!   optimization (see [`coalesce`]), so concurrent duplicates cost one
+//!   miss total and the hit/miss split is deterministic under any
+//!   scheduling; an owner that dies before publishing poisons its slot
+//!   *typed* — waiters get `ErrorCode::Internal`, never a hang. All shared
+//!   state sits on the [`crate::util::sync`] shims, so `tests/modelcheck.rs`
+//!   verifies these properties over every bounded interleaving.
 //! * **Server** — [`Server`] is a fixed accept/worker thread model over a
 //!   persistent [`WorkerPool`] (spawn-per-call `parallel_map` is the wrong
 //!   shape for a daemon). Graceful shutdown is a control request: the
@@ -39,8 +43,7 @@
 use std::io::{BufRead, BufReader, Write as IoWrite};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::baselines::run_system_with;
@@ -51,6 +54,11 @@ use crate::mbo::StrategyKind;
 use crate::util::json::{arr, num, obj, s, Json};
 use crate::util::pool::WorkerPool;
 use crate::util::stats::{max, mean, min, percentile};
+use crate::util::sync::{SyncAtomicBool, SyncAtomicU64, SyncAtomicUsize, SyncMutex};
+
+use self::coalesce::{Claim, CoalescingCache, Fill};
+
+pub mod coalesce;
 
 /// Schema tag carried by every request and response.
 pub const SERVE_SCHEMA: &str = "kareus_serve";
@@ -469,36 +477,14 @@ impl Default for ServeOptions {
     }
 }
 
-/// A coalescing cell: the first requester computes, everyone else waits.
-#[derive(Default)]
-struct Slot {
-    ready: Mutex<Option<Json>>,
-    cv: Condvar,
-}
-
-impl Slot {
-    fn wait(&self) -> Json {
-        let mut g = self.ready.lock().unwrap();
-        while g.is_none() {
-            g = self.cv.wait(g).unwrap();
-        }
-        g.clone().unwrap()
-    }
-
-    fn fill(&self, payload: Json) {
-        *self.ready.lock().unwrap() = Some(payload);
-        self.cv.notify_all();
-    }
-}
-
 #[derive(Default)]
 struct Counters {
-    requests: AtomicU64,
-    plans: AtomicU64,
-    hits: AtomicU64,
-    misses: AtomicU64,
-    busy: AtomicU64,
-    errors: AtomicU64,
+    requests: SyncAtomicU64,
+    plans: SyncAtomicU64,
+    hits: SyncAtomicU64,
+    misses: SyncAtomicU64,
+    busy: SyncAtomicU64,
+    errors: SyncAtomicU64,
 }
 
 /// The transport-free request processor: caches, counters, admission, and
@@ -507,15 +493,16 @@ struct Counters {
 pub struct PlanService {
     engine: EngineConfig,
     opts: ServeOptions,
-    /// Plan cache + coalescing map, keyed `job|target|seed|strategy`.
-    /// BTreeMap keeps iteration (and therefore any debugging dump)
-    /// deterministic. Filled slots double as negative cache for
-    /// deterministic failures (infeasible targets), so the hit/miss split
-    /// is a pure function of the request multiset.
-    plans: Mutex<std::collections::BTreeMap<String, Arc<Slot>>>,
+    /// Plan cache + coalescing map ([`coalesce::CoalescingCache`]), keyed
+    /// `job|target|seed|strategy`. Filled slots double as negative cache
+    /// for deterministic failures (infeasible targets), so the hit/miss
+    /// split is a pure function of the request multiset. Abnormal owner
+    /// death instead poisons the slot — waiters get a typed internal
+    /// error, the key is evicted, and nothing false is cached.
+    plans: CoalescingCache<Json>,
     counters: Counters,
-    inflight: AtomicUsize,
-    shutting_down: AtomicBool,
+    inflight: SyncAtomicUsize,
+    shutting_down: SyncAtomicBool,
     started: Instant,
 }
 
@@ -524,49 +511,49 @@ impl PlanService {
         PlanService {
             engine,
             opts,
-            plans: Mutex::new(std::collections::BTreeMap::new()),
+            plans: CoalescingCache::new(),
             counters: Counters::default(),
-            inflight: AtomicUsize::new(0),
-            shutting_down: AtomicBool::new(false),
+            inflight: SyncAtomicUsize::new(0),
+            shutting_down: SyncAtomicBool::new(false),
             started: Instant::now(),
         }
     }
 
     pub fn is_shutting_down(&self) -> bool {
-        self.shutting_down.load(Ordering::SeqCst)
+        self.shutting_down.load()
     }
 
     /// Total request lines processed (including unparseable ones).
     pub fn requests(&self) -> u64 {
-        self.counters.requests.load(Ordering::Relaxed)
+        self.counters.requests.load()
     }
 
     /// Plan requests answered from the plan cache (including coalesced
     /// waiters — they never re-entered the optimizer).
     pub fn hits(&self) -> u64 {
-        self.counters.hits.load(Ordering::Relaxed)
+        self.counters.hits.load()
     }
 
     /// Plan requests that ran the optimizer.
     pub fn misses(&self) -> u64 {
-        self.counters.misses.load(Ordering::Relaxed)
+        self.counters.misses.load()
     }
 
     /// Count an oversized request line that never reached
     /// [`PlanService::process_line`].
     pub fn note_oversized(&self) {
-        self.counters.requests.fetch_add(1, Ordering::Relaxed);
-        self.counters.errors.fetch_add(1, Ordering::Relaxed);
+        self.counters.requests.fetch_add(1);
+        self.counters.errors.fetch_add(1);
     }
 
     /// Process one request line into one response. This is the entire
     /// per-request path; the TCP layer only moves bytes.
     pub fn process_line(&self, line: &str) -> (ServeResponse, Control) {
-        self.counters.requests.fetch_add(1, Ordering::Relaxed);
+        self.counters.requests.fetch_add(1);
         let parsed = match Json::parse(line) {
             Ok(j) => j,
             Err(e) => {
-                self.counters.errors.fetch_add(1, Ordering::Relaxed);
+                self.counters.errors.fetch_add(1);
                 return (
                     ServeResponse::error("error", ErrorCode::Parse, &e.to_string()),
                     Control::Continue,
@@ -576,7 +563,7 @@ impl PlanService {
         let req = match ServeRequest::from_json(&parsed) {
             Ok(r) => r,
             Err(m) => {
-                self.counters.errors.fetch_add(1, Ordering::Relaxed);
+                self.counters.errors.fetch_add(1);
                 return (
                     ServeResponse::error("error", ErrorCode::BadRequest, &m),
                     Control::Continue,
@@ -601,7 +588,7 @@ impl PlanService {
                 (ServeResponse::ok("stats", self.stats_json(deterministic)), Control::Continue)
             }
             ServeRequest::Shutdown => {
-                self.shutting_down.store(true, Ordering::SeqCst);
+                self.shutting_down.store(true);
                 (
                     ServeResponse::ok("shutdown", obj(vec![("draining", Json::Bool(true))])),
                     Control::Shutdown,
@@ -617,63 +604,66 @@ impl PlanService {
         seed: u64,
         strategy: Option<StrategyKind>,
     ) -> ServeResponse {
-        self.counters.plans.fetch_add(1, Ordering::Relaxed);
+        self.counters.plans.fetch_add(1);
         let strat_name = strategy.map(|k| k.name()).unwrap_or("");
         let key = format!("{job}|{target}|{seed}|{strat_name}");
-        enum Role {
-            Owner(Arc<Slot>),
-            Waiter(Arc<Slot>),
-        }
-        let role = {
-            let mut map = self.plans.lock().unwrap();
-            if let Some(slot) = map.get(&key) {
-                Role::Waiter(Arc::clone(slot))
-            } else {
-                if !self.admit() {
-                    drop(map);
-                    self.counters.busy.fetch_add(1, Ordering::Relaxed);
-                    return ServeResponse::busy(&format!(
-                        "server at max in-flight optimizations ({}); retry later",
-                        self.opts.max_inflight
-                    ));
-                }
-                let slot = Arc::new(Slot::default());
-                map.insert(key, Arc::clone(&slot));
-                Role::Owner(slot)
+        let guard = match self.plans.claim(&key, || self.admit()) {
+            Claim::Refused => {
+                self.counters.busy.fetch_add(1);
+                return ServeResponse::busy(&format!(
+                    "server at max in-flight optimizations ({}); retry later",
+                    self.opts.max_inflight
+                ));
+            }
+            Claim::Waiter(slot) => return self.waiter_response(slot.wait()),
+            Claim::Owner(guard) => guard,
+        };
+        self.counters.misses.fetch_add(1);
+        // The optimizer panicking (e.g. a trace replay miss) must not
+        // strand coalesced waiters or kill the worker: catch, convert to
+        // a typed internal error, and cache it — the panic is
+        // deterministic for the same request. If even this path unwinds,
+        // the dropped FillGuard poisons the slot and waiters still get a
+        // typed internal error.
+        let computed =
+            catch_unwind(AssertUnwindSafe(|| self.compute(job, target, seed, strategy)));
+        self.inflight.fetch_sub(1);
+        let payload = match computed {
+            Ok(Ok(result)) => obj(vec![("ok", result)]),
+            Ok(Err((code, message))) => Self::err_payload(code, &message),
+            Err(panic) => {
+                let text = panic
+                    .downcast_ref::<String>()
+                    .map(|t| t.as_str())
+                    .or_else(|| panic.downcast_ref::<&str>().copied())
+                    .unwrap_or("optimizer panicked");
+                Self::err_payload(ErrorCode::Internal, text)
             }
         };
-        match role {
-            Role::Waiter(slot) => {
-                let payload = slot.wait();
-                self.counters.hits.fetch_add(1, Ordering::Relaxed);
+        guard.fill(payload.clone());
+        if payload.get("ok").is_none() {
+            self.counters.errors.fetch_add(1);
+        }
+        Self::respond_from_payload(&payload, false)
+    }
+
+    /// What a coalesced waiter answers with once its slot resolves. A
+    /// published payload is a cache hit (ok or typed deterministic
+    /// error alike); a poisoned slot — the owner died before publishing —
+    /// becomes a typed internal error rather than a hang or a panic, and
+    /// is never presented as a cache hit (the key was evicted, so a
+    /// retry recomputes).
+    fn waiter_response(&self, fill: Fill<Json>) -> ServeResponse {
+        match fill {
+            Fill::Value(payload) => {
+                self.counters.hits.fetch_add(1);
                 Self::respond_from_payload(&payload, true)
             }
-            Role::Owner(slot) => {
-                self.counters.misses.fetch_add(1, Ordering::Relaxed);
-                // The optimizer panicking (e.g. a trace replay miss) must
-                // not strand coalesced waiters or kill the worker: catch,
-                // convert to a typed internal error, and cache it — the
-                // panic is deterministic for the same request.
-                let computed =
-                    catch_unwind(AssertUnwindSafe(|| self.compute(job, target, seed, strategy)));
-                self.inflight.fetch_sub(1, Ordering::SeqCst);
-                let payload = match computed {
-                    Ok(Ok(result)) => obj(vec![("ok", result)]),
-                    Ok(Err((code, message))) => Self::err_payload(code, &message),
-                    Err(panic) => {
-                        let text = panic
-                            .downcast_ref::<String>()
-                            .map(|t| t.as_str())
-                            .or_else(|| panic.downcast_ref::<&str>().copied())
-                            .unwrap_or("optimizer panicked");
-                        Self::err_payload(ErrorCode::Internal, text)
-                    }
-                };
-                slot.fill(payload.clone());
-                if payload.get("ok").is_none() {
-                    self.counters.errors.fetch_add(1, Ordering::Relaxed);
-                }
-                Self::respond_from_payload(&payload, false)
+            Fill::Poisoned(why) => {
+                self.counters.errors.fetch_add(1);
+                let mut resp = ServeResponse::error("plan", ErrorCode::Internal, &why);
+                resp.cache_hit = Some(false);
+                resp
             }
         }
     }
@@ -708,17 +698,12 @@ impl PlanService {
 
     /// Admission: lock-free permit under `max_inflight`.
     fn admit(&self) -> bool {
-        let mut cur = self.inflight.load(Ordering::SeqCst);
+        let mut cur = self.inflight.load();
         loop {
             if cur >= self.opts.max_inflight {
                 return false;
             }
-            match self.inflight.compare_exchange(
-                cur,
-                cur + 1,
-                Ordering::SeqCst,
-                Ordering::SeqCst,
-            ) {
+            match self.inflight.compare_exchange(cur, cur + 1) {
                 Ok(_) => return true,
                 Err(now) => cur = now,
             }
@@ -788,12 +773,12 @@ impl PlanService {
         obj(vec![
             ("uptime_s", unstable(self.started.elapsed().as_secs_f64())),
             ("requests", num(self.requests() as f64)),
-            ("plans", num(self.counters.plans.load(Ordering::Relaxed) as f64)),
+            ("plans", num(self.counters.plans.load() as f64)),
             ("hits", num(self.hits() as f64)),
             ("misses", num(self.misses() as f64)),
-            ("busy", num(self.counters.busy.load(Ordering::Relaxed) as f64)),
-            ("errors", num(self.counters.errors.load(Ordering::Relaxed) as f64)),
-            ("plan_cache_entries", num(self.plans.lock().unwrap().len() as f64)),
+            ("busy", num(self.counters.busy.load() as f64)),
+            ("errors", num(self.counters.errors.load() as f64)),
+            ("plan_cache_entries", num(self.plans.len() as f64)),
             (
                 "engine",
                 obj(vec![
@@ -841,23 +826,23 @@ impl Default for ServeConfig {
 /// aborting in-flight work.
 #[derive(Default)]
 struct ConnRegistry {
-    conns: Mutex<std::collections::BTreeMap<u64, TcpStream>>,
-    next: AtomicU64,
+    conns: SyncMutex<std::collections::BTreeMap<u64, TcpStream>>,
+    next: SyncAtomicU64,
 }
 
 impl ConnRegistry {
     fn insert(&self, stream: TcpStream) -> u64 {
-        let id = self.next.fetch_add(1, Ordering::SeqCst);
-        self.conns.lock().unwrap().insert(id, stream);
+        let id = self.next.fetch_add(1);
+        self.conns.lock().insert(id, stream);
         id
     }
 
     fn remove(&self, id: u64) {
-        self.conns.lock().unwrap().remove(&id);
+        self.conns.lock().remove(&id);
     }
 
     fn trip(&self) {
-        for stream in self.conns.lock().unwrap().values() {
+        for stream in self.conns.lock().values() {
             let _ = stream.shutdown(Shutdown::Read);
         }
     }
@@ -1412,6 +1397,35 @@ mod tests {
         assert_eq!(second.code, Some(ErrorCode::Infeasible));
         assert_eq!(second.cache_hit, Some(true), "deterministic failures are cached too");
         assert_eq!((svc.hits(), svc.misses()), (1, 1));
+    }
+
+    #[test]
+    fn poisoned_slot_answers_waiters_with_typed_internal_error() {
+        let svc = PlanService::new(EngineConfig::sequential(), ServeOptions::default());
+        // Become the owner for a key exactly as `plan()` would, then die
+        // without publishing (the only way: unwind past the FillGuard).
+        // A waiter that coalesced before the death must get a typed
+        // internal error — never a hang, a panic, or a false cache hit.
+        let key = "a100:qwen1.7b:tp8pp2:megatron|max|5|";
+        let guard = match svc.plans.claim(key, || true) {
+            Claim::Owner(g) => g,
+            _ => panic!("fresh key must be ownable"),
+        };
+        let slot = match svc.plans.claim(key, || false) {
+            Claim::Waiter(s) => s,
+            _ => panic!("second claim must coalesce onto the owner"),
+        };
+        drop(guard);
+        let errors_before = svc.counters.errors.load();
+        let resp = svc.waiter_response(slot.wait());
+        assert_eq!(resp.status, "error");
+        assert_eq!(resp.code, Some(ErrorCode::Internal));
+        assert_eq!(resp.cache_hit, Some(false));
+        assert!(resp.message.unwrap().contains("died before publishing"));
+        assert_eq!(svc.counters.errors.load(), errors_before + 1);
+        // Poison is not negatively cached: the key is free to retry.
+        assert!(matches!(svc.plans.claim(key, || true), Claim::Owner(_)));
+        assert_eq!((svc.hits(), svc.misses()), (0, 0));
     }
 
     #[test]

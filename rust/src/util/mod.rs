@@ -7,4 +7,5 @@ pub mod json;
 pub mod pool;
 pub mod rng;
 pub mod stats;
+pub mod sync;
 pub mod table;

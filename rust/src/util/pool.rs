@@ -7,9 +7,9 @@
 //! lifetime and feeds it connection handlers, so the pool outlives any
 //! single batch of work — jobs are `'static` and travel through a channel.
 
-use std::sync::mpsc::{channel, Sender};
-use std::sync::{Arc, Mutex};
-use std::thread::JoinHandle;
+use std::sync::Arc;
+
+use crate::util::sync::{channel, spawn, SyncJoinHandle, SyncMutex, SyncSender};
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
@@ -24,8 +24,8 @@ type Job = Box<dyn FnOnce() + Send + 'static>;
 /// other queued jobs); long-lived callers that must survive bad jobs should
 /// catch panics inside the job itself, as the serve connection handler does.
 pub struct WorkerPool {
-    tx: Option<Sender<Job>>,
-    workers: Vec<JoinHandle<()>>,
+    tx: Option<SyncSender<Job>>,
+    workers: Vec<SyncJoinHandle<()>>,
 }
 
 impl WorkerPool {
@@ -33,16 +33,16 @@ impl WorkerPool {
     pub fn new(n_threads: usize) -> WorkerPool {
         let n = n_threads.max(1);
         let (tx, rx) = channel::<Job>();
-        let rx = Arc::new(Mutex::new(rx));
+        let rx = Arc::new(SyncMutex::new(rx));
         let workers = (0..n)
             .map(|_| {
                 let rx = Arc::clone(&rx);
-                std::thread::spawn(move || loop {
+                spawn(move || loop {
                     // The receiver lock is held while blocked on recv(),
                     // which is fine: exactly one idle worker waits at a
                     // time, takes the next job, and releases the lock
                     // before running it.
-                    let job = rx.lock().unwrap().recv();
+                    let job = rx.lock().recv();
                     match job {
                         Ok(job) => job(),
                         // Queue closed and drained: the pool is shutting down.
@@ -189,7 +189,7 @@ pub fn default_threads() -> usize {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::atomic::{AtomicUsize, Ordering};
+    use crate::util::sync::SyncAtomicUsize;
 
     #[test]
     fn preserves_order() {
@@ -277,31 +277,31 @@ mod tests {
     fn shutdown_drains_queued_jobs() {
         // Queue far more jobs than workers, then shut down immediately:
         // every queued job must still run (drain, not abort).
-        let ran = Arc::new(AtomicUsize::new(0));
+        let ran = Arc::new(SyncAtomicUsize::new(0));
         let mut pool = WorkerPool::new(2);
         for _ in 0..64 {
             let ran = Arc::clone(&ran);
             pool.execute(move || {
-                ran.fetch_add(1, Ordering::SeqCst);
+                ran.fetch_add(1);
             });
         }
         pool.shutdown();
-        assert_eq!(ran.load(Ordering::SeqCst), 64);
+        assert_eq!(ran.load(), 64);
     }
 
     #[test]
     fn drop_joins_workers() {
-        let ran = Arc::new(AtomicUsize::new(0));
+        let ran = Arc::new(SyncAtomicUsize::new(0));
         {
             let pool = WorkerPool::new(3);
             for _ in 0..9 {
                 let ran = Arc::clone(&ran);
                 pool.execute(move || {
-                    ran.fetch_add(1, Ordering::SeqCst);
+                    ran.fetch_add(1);
                 });
             }
         } // drop ⇒ drain + join
-        assert_eq!(ran.load(Ordering::SeqCst), 9);
+        assert_eq!(ran.load(), 9);
     }
 
     #[test]

@@ -1,0 +1,726 @@
+//! Synchronization shims: `std::sync` in normal builds, model-checked
+//! under `--features modelcheck`.
+//!
+//! Every concurrency-bearing module in the crate (the worker pool, the
+//! serve daemon's coalescing cache and admission gate, the engine /
+//! profiler / backend shared counters) builds on these types instead of
+//! raw `std::sync` — srclint enforces the confinement. In a normal build
+//! each shim is a zero-cost wrapper over the corresponding `std`
+//! primitive with two deliberate behavior choices:
+//!
+//! - **Poison recovery**: [`SyncMutex::lock`] never panics on a poisoned
+//!   mutex; it recovers the inner value (`PoisonError::into_inner`).
+//!   Callers that need typed poisoning semantics (the serve coalescing
+//!   slots) layer them on top explicitly.
+//! - **Single ordering**: the atomics expose no `Ordering` parameter and
+//!   behave as `SeqCst`. Nothing in this crate is hot enough for relaxed
+//!   orderings to matter, and one ordering keeps the model checker's
+//!   sequentially-consistent exploration faithful to the real build.
+//!
+//! Under `--features modelcheck`, any shim **constructed on a thread
+//! controlled by [`crate::modelcheck`]** routes every visible operation
+//! (acquire, release, wait, notify, load, store, rmw, spawn, join)
+//! through the cooperative scheduler, which enumerates interleavings
+//! exhaustively. Shims constructed outside a model run — including every
+//! use in a `--features modelcheck` build that never enters an explorer —
+//! behave exactly like the normal build, so enabling the feature does not
+//! perturb other tests.
+//!
+//! The [`channel`] here is a single-consumer FIFO built on
+//! [`SyncMutex`] + [`SyncCondvar`] (so the model checker sees through it
+//! for free); it mirrors the `std::sync::mpsc` surface the pool needs:
+//! cloneable senders, receiver-side disconnection detection, and
+//! sender-side error once the receiver is gone.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar as StdCondvar, Mutex as StdMutex, MutexGuard as StdMutexGuard};
+
+/// One shared-memory read-modify-write, as seen by the model checker.
+///
+/// Public only because the shim methods construct these; harness code
+/// never needs to. Values are `u64`; `bool`/`usize` shims widen.
+#[derive(Clone, Copy, Debug)]
+pub enum AtomicOp {
+    /// Read the current value.
+    Load,
+    /// Write the operand, returning the previous value.
+    Store(u64),
+    /// Add the operand (wrapping), returning the previous value.
+    FetchAdd(u64),
+    /// Subtract the operand (wrapping), returning the previous value.
+    FetchSub(u64),
+    /// Compare-and-swap: if the value equals `expect`, write `new`.
+    /// Returns the previous value; success iff it equals `expect`.
+    CompareExchange {
+        /// Value the cell must hold for the write to happen.
+        expect: u64,
+        /// Replacement value on success.
+        new: u64,
+    },
+}
+
+/// Model-checker hooks. In a normal build every hook is a no-op with a
+/// zero-sized id; under `--features modelcheck` the hooks forward to
+/// [`crate::modelcheck::rt`] when (and only when) the calling thread is
+/// controlled by an active explorer.
+#[cfg(feature = "modelcheck")]
+mod hook {
+    use super::AtomicOp;
+    use crate::modelcheck::rt;
+
+    pub type Id = Option<u64>;
+
+    pub fn register_mutex() -> Id {
+        rt::register_mutex()
+    }
+    pub fn register_condvar() -> Id {
+        rt::register_condvar()
+    }
+    pub fn register_atomic(init: u64) -> Id {
+        rt::register_atomic(init)
+    }
+    pub fn modeled(id: &Id) -> bool {
+        id.is_some() && rt::active()
+    }
+    pub fn lock(id: &Id) {
+        if let Some(i) = id {
+            if rt::active() {
+                rt::mutex_lock(*i);
+            }
+        }
+    }
+    pub fn unlock(id: &Id) {
+        if let Some(i) = id {
+            if rt::active() {
+                rt::mutex_unlock(*i);
+            }
+        }
+    }
+    /// Model-side condvar wait: parks the thread until a notify arrives
+    /// and the paired mutex has been re-granted. Caller must have
+    /// released the real inner guard first.
+    pub fn wait(cv: &Id, mutex: &Id) {
+        if let (Some(c), Some(m)) = (cv, mutex) {
+            if rt::active() {
+                rt::condvar_wait(*c, *m);
+            }
+        }
+    }
+    pub fn notify(cv: &Id, all: bool) {
+        if let Some(c) = cv {
+            if rt::active() {
+                rt::condvar_notify(*c, all);
+            }
+        }
+    }
+    /// Returns `Some(previous value)` when the op was applied to the
+    /// model's shadow cell; `None` means "not modeled, use the real
+    /// atomic".
+    pub fn atomic(id: &Id, op: AtomicOp) -> Option<u64> {
+        match id {
+            Some(i) if rt::active() => Some(rt::atomic(*i, op)),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(not(feature = "modelcheck"))]
+mod hook {
+    use super::AtomicOp;
+
+    pub type Id = ();
+
+    pub fn register_mutex() -> Id {}
+    pub fn register_condvar() -> Id {}
+    pub fn register_atomic(_init: u64) -> Id {}
+    pub fn modeled(_id: &Id) -> bool {
+        false
+    }
+    pub fn lock(_id: &Id) {}
+    pub fn unlock(_id: &Id) {}
+    pub fn wait(_cv: &Id, _mutex: &Id) {}
+    pub fn notify(_cv: &Id, _all: bool) {}
+    pub fn atomic(_id: &Id, _op: AtomicOp) -> Option<u64> {
+        None
+    }
+}
+
+/// Mutual exclusion shim. `std::sync::Mutex` with poison recovery in
+/// normal builds; a scheduler-routed model mutex under an active
+/// explorer (double-lock is then detected, not deadlocked).
+pub struct SyncMutex<T> {
+    inner: StdMutex<T>,
+    mc: hook::Id,
+}
+
+impl<T> SyncMutex<T> {
+    /// Wrap `value` in a mutex.
+    pub fn new(value: T) -> SyncMutex<T> {
+        SyncMutex { inner: StdMutex::new(value), mc: hook::register_mutex() }
+    }
+
+    /// Acquire the lock, blocking until available.
+    ///
+    /// A poisoned mutex (a previous holder panicked) is recovered rather
+    /// than propagated: the guard to the inner value is returned as-is.
+    /// Layers that must surface poisoning to peers do so with their own
+    /// typed state (see `serve::coalesce`).
+    pub fn lock(&self) -> SyncMutexGuard<'_, T> {
+        hook::lock(&self.mc);
+        let guard = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        SyncMutexGuard { guard: Some(guard), owner: self }
+    }
+
+    /// Consume the mutex, returning the inner value (poison recovered).
+    pub fn into_inner(self) -> T {
+        self.inner.into_inner().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+impl<T: Default> Default for SyncMutex<T> {
+    fn default() -> SyncMutex<T> {
+        SyncMutex::new(T::default())
+    }
+}
+
+impl<T> std::fmt::Debug for SyncMutex<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SyncMutex").finish_non_exhaustive()
+    }
+}
+
+/// RAII guard for [`SyncMutex`]; releases on drop (model release is
+/// reported to the scheduler as an immediate, non-blocking effect).
+pub struct SyncMutexGuard<'a, T> {
+    /// `None` only transiently, while [`SyncCondvar::wait`] has taken
+    /// the inner guard out to park; such a husk is dropped without
+    /// running the unlock hook.
+    guard: Option<StdMutexGuard<'a, T>>,
+    owner: &'a SyncMutex<T>,
+}
+
+impl<T> std::ops::Deref for SyncMutexGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        self.guard.as_ref().expect("guard consumed by wait")
+    }
+}
+
+impl<T> std::ops::DerefMut for SyncMutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.guard.as_mut().expect("guard consumed by wait")
+    }
+}
+
+impl<T> Drop for SyncMutexGuard<'_, T> {
+    fn drop(&mut self) {
+        if let Some(g) = self.guard.take() {
+            drop(g);
+            hook::unlock(&self.owner.mc);
+        }
+    }
+}
+
+/// Condition variable shim paired with [`SyncMutex`].
+pub struct SyncCondvar {
+    inner: StdCondvar,
+    mc: hook::Id,
+}
+
+impl SyncCondvar {
+    /// New condition variable.
+    pub fn new() -> SyncCondvar {
+        SyncCondvar { inner: StdCondvar::new(), mc: hook::register_condvar() }
+    }
+
+    /// Release the guard's mutex, park until notified, re-acquire, and
+    /// return a fresh guard. As with `std`, spurious wakeups are
+    /// permitted — always wait in a predicate loop.
+    ///
+    /// Under the model this is the two-stage op that opens the classic
+    /// check-then-wait race window: the scheduler may run other threads
+    /// between the caller's last predicate check and the park, which is
+    /// exactly how lost wakeups are flushed out.
+    pub fn wait<'a, T>(&self, mut guard: SyncMutexGuard<'a, T>) -> SyncMutexGuard<'a, T> {
+        let owner = guard.owner;
+        let inner = guard.guard.take().expect("guard consumed by wait");
+        drop(guard); // husk: unlock hook intentionally not run
+        if hook::modeled(&self.mc) {
+            drop(inner); // real lock released; model still owns until the wait is granted
+            hook::wait(&self.mc, &owner.mc);
+            let reacquired = owner.inner.lock().unwrap_or_else(|e| e.into_inner());
+            SyncMutexGuard { guard: Some(reacquired), owner }
+        } else {
+            let g = self.inner.wait(inner).unwrap_or_else(|e| e.into_inner());
+            SyncMutexGuard { guard: Some(g), owner }
+        }
+    }
+
+    /// Wake one waiter (if any).
+    pub fn notify_one(&self) {
+        hook::notify(&self.mc, false);
+        self.inner.notify_one();
+    }
+
+    /// Wake every waiter.
+    pub fn notify_all(&self) {
+        hook::notify(&self.mc, true);
+        self.inner.notify_all();
+    }
+}
+
+impl Default for SyncCondvar {
+    fn default() -> SyncCondvar {
+        SyncCondvar::new()
+    }
+}
+
+macro_rules! sync_atomic {
+    ($name:ident, $std:ty, $prim:ty, $doc:literal) => {
+        #[doc = $doc]
+        ///
+        /// All operations behave as `SeqCst`; there is no `Ordering`
+        /// parameter by design (see the module docs).
+        pub struct $name {
+            inner: $std,
+            mc: hook::Id,
+        }
+
+        impl $name {
+            /// New cell holding `v`.
+            pub fn new(v: $prim) -> $name {
+                $name {
+                    inner: <$std>::new(v),
+                    mc: hook::register_atomic(v as u64),
+                }
+            }
+
+            /// Read the current value.
+            pub fn load(&self) -> $prim {
+                match hook::atomic(&self.mc, AtomicOp::Load) {
+                    Some(v) => v as $prim,
+                    None => self.inner.load(std::sync::atomic::Ordering::SeqCst),
+                }
+            }
+
+            /// Write `v`.
+            pub fn store(&self, v: $prim) {
+                match hook::atomic(&self.mc, AtomicOp::Store(v as u64)) {
+                    Some(_) => {}
+                    None => self.inner.store(v, std::sync::atomic::Ordering::SeqCst),
+                }
+            }
+
+            /// Add `v` (wrapping), returning the previous value.
+            pub fn fetch_add(&self, v: $prim) -> $prim {
+                match hook::atomic(&self.mc, AtomicOp::FetchAdd(v as u64)) {
+                    Some(prev) => prev as $prim,
+                    None => self.inner.fetch_add(v, std::sync::atomic::Ordering::SeqCst),
+                }
+            }
+
+            /// Subtract `v` (wrapping), returning the previous value.
+            pub fn fetch_sub(&self, v: $prim) -> $prim {
+                match hook::atomic(&self.mc, AtomicOp::FetchSub(v as u64)) {
+                    Some(prev) => prev as $prim,
+                    None => self.inner.fetch_sub(v, std::sync::atomic::Ordering::SeqCst),
+                }
+            }
+
+            /// Compare-and-swap: if the value is `expect`, write `new`.
+            /// `Ok(previous)` on success, `Err(actual)` on failure.
+            pub fn compare_exchange(&self, expect: $prim, new: $prim) -> Result<$prim, $prim> {
+                match hook::atomic(
+                    &self.mc,
+                    AtomicOp::CompareExchange { expect: expect as u64, new: new as u64 },
+                ) {
+                    Some(prev) => {
+                        let prev = prev as $prim;
+                        if prev == expect {
+                            Ok(prev)
+                        } else {
+                            Err(prev)
+                        }
+                    }
+                    None => self.inner.compare_exchange(
+                        expect,
+                        new,
+                        std::sync::atomic::Ordering::SeqCst,
+                        std::sync::atomic::Ordering::SeqCst,
+                    ),
+                }
+            }
+        }
+
+        impl Default for $name {
+            fn default() -> $name {
+                $name::new(0)
+            }
+        }
+
+        impl std::fmt::Debug for $name {
+            fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+                write!(f, concat!(stringify!($name), "({:?})"), self.load())
+            }
+        }
+    };
+}
+
+sync_atomic!(
+    SyncAtomicU64,
+    std::sync::atomic::AtomicU64,
+    u64,
+    "Shared `u64` counter shim (hit/miss counters, stats)."
+);
+sync_atomic!(
+    SyncAtomicUsize,
+    std::sync::atomic::AtomicUsize,
+    usize,
+    "Shared `usize` counter shim (admission gates, in-flight counts)."
+);
+
+/// Shared boolean flag shim (shutdown flags). `SeqCst` semantics, no
+/// `Ordering` parameter; see the module docs.
+pub struct SyncAtomicBool {
+    inner: std::sync::atomic::AtomicBool,
+    mc: hook::Id,
+}
+
+impl SyncAtomicBool {
+    /// New flag holding `v`.
+    pub fn new(v: bool) -> SyncAtomicBool {
+        SyncAtomicBool {
+            inner: std::sync::atomic::AtomicBool::new(v),
+            mc: hook::register_atomic(v as u64),
+        }
+    }
+
+    /// Read the current value.
+    pub fn load(&self) -> bool {
+        match hook::atomic(&self.mc, AtomicOp::Load) {
+            Some(v) => v != 0,
+            None => self.inner.load(std::sync::atomic::Ordering::SeqCst),
+        }
+    }
+
+    /// Write `v`.
+    pub fn store(&self, v: bool) {
+        match hook::atomic(&self.mc, AtomicOp::Store(v as u64)) {
+            Some(_) => {}
+            None => self.inner.store(v, std::sync::atomic::Ordering::SeqCst),
+        }
+    }
+
+    /// Write `v`, returning the previous value.
+    pub fn swap(&self, v: bool) -> bool {
+        match hook::atomic(&self.mc, AtomicOp::Store(v as u64)) {
+            Some(prev) => prev != 0,
+            None => self.inner.swap(v, std::sync::atomic::Ordering::SeqCst),
+        }
+    }
+}
+
+impl Default for SyncAtomicBool {
+    fn default() -> SyncAtomicBool {
+        SyncAtomicBool::new(false)
+    }
+}
+
+impl std::fmt::Debug for SyncAtomicBool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "SyncAtomicBool({:?})", self.load())
+    }
+}
+
+
+// ---------------------------------------------------------------------------
+// Channel
+// ---------------------------------------------------------------------------
+
+struct ChanState<T> {
+    queue: VecDeque<T>,
+    senders: usize,
+    receiver_alive: bool,
+}
+
+struct ChanInner<T> {
+    state: SyncMutex<ChanState<T>>,
+    cv: SyncCondvar,
+}
+
+/// Sending half of [`channel`]. Cloneable; the receiver disconnects when
+/// every sender is dropped.
+pub struct SyncSender<T> {
+    inner: Arc<ChanInner<T>>,
+}
+
+/// Receiving half of [`channel`]. Single receiver; senders error once it
+/// is dropped.
+pub struct SyncReceiver<T> {
+    inner: Arc<ChanInner<T>>,
+}
+
+/// The receiver was dropped; the unsent value is returned.
+pub struct SendError<T>(pub T);
+
+impl<T> std::fmt::Debug for SendError<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("SendError(..)")
+    }
+}
+
+/// Every sender was dropped and the queue is drained.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RecvError;
+
+/// FIFO channel with the `std::sync::mpsc` contract the pool relies on
+/// (cloneable senders, drain-then-disconnect receiver), built on
+/// [`SyncMutex`] + [`SyncCondvar`] so the model checker sees through it
+/// with no dedicated channel ops.
+pub fn channel<T>() -> (SyncSender<T>, SyncReceiver<T>) {
+    let inner = Arc::new(ChanInner {
+        state: SyncMutex::new(ChanState {
+            queue: VecDeque::new(),
+            senders: 1,
+            receiver_alive: true,
+        }),
+        cv: SyncCondvar::new(),
+    });
+    (SyncSender { inner: Arc::clone(&inner) }, SyncReceiver { inner })
+}
+
+impl<T> SyncSender<T> {
+    /// Queue `t`. Fails (returning `t`) iff the receiver is gone.
+    pub fn send(&self, t: T) -> Result<(), SendError<T>> {
+        let mut st = self.inner.state.lock();
+        if !st.receiver_alive {
+            return Err(SendError(t));
+        }
+        st.queue.push_back(t);
+        self.inner.cv.notify_one();
+        Ok(())
+    }
+}
+
+impl<T> Clone for SyncSender<T> {
+    fn clone(&self) -> SyncSender<T> {
+        self.inner.state.lock().senders += 1;
+        SyncSender { inner: Arc::clone(&self.inner) }
+    }
+}
+
+impl<T> Drop for SyncSender<T> {
+    fn drop(&mut self) {
+        let mut st = self.inner.state.lock();
+        st.senders -= 1;
+        if st.senders == 0 {
+            // Wake a blocked receiver so it can observe disconnection.
+            self.inner.cv.notify_all();
+        }
+    }
+}
+
+impl<T> SyncReceiver<T> {
+    /// Pop the next value, blocking while the queue is empty and at
+    /// least one sender is alive. `Err(RecvError)` after the last
+    /// sender drops *and* the queue drains — never before (queued
+    /// values always arrive, which is what makes the pool's shutdown a
+    /// drain rather than an abort).
+    pub fn recv(&self) -> Result<T, RecvError> {
+        let mut st = self.inner.state.lock();
+        loop {
+            if let Some(t) = st.queue.pop_front() {
+                return Ok(t);
+            }
+            if st.senders == 0 {
+                return Err(RecvError);
+            }
+            st = self.inner.cv.wait(st);
+        }
+    }
+
+    /// Pop without blocking: `Ok(None)` when the queue is empty but
+    /// senders remain, `Err` once disconnected and drained.
+    pub fn try_recv(&self) -> Result<Option<T>, RecvError> {
+        let mut st = self.inner.state.lock();
+        match st.queue.pop_front() {
+            Some(t) => Ok(Some(t)),
+            None if st.senders == 0 => Err(RecvError),
+            None => Ok(None),
+        }
+    }
+}
+
+impl<T> Drop for SyncReceiver<T> {
+    fn drop(&mut self) {
+        self.inner.state.lock().receiver_alive = false;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Threads
+// ---------------------------------------------------------------------------
+
+enum HandleImpl<T> {
+    Std(std::thread::JoinHandle<T>),
+    #[cfg(feature = "modelcheck")]
+    Model {
+        tid: u64,
+        cell: Arc<StdMutex<Option<T>>>,
+    },
+}
+
+/// Join handle from [`spawn`]. Mirrors `std::thread::JoinHandle`.
+pub struct SyncJoinHandle<T> {
+    imp: HandleImpl<T>,
+}
+
+impl<T> SyncJoinHandle<T> {
+    /// Wait for the thread to finish and take its result. `Err` carries
+    /// the panic payload if the thread panicked (in a model run a
+    /// panicking thread aborts the whole execution first, so the `Err`
+    /// arm is only reachable in normal builds).
+    pub fn join(self) -> std::thread::Result<T> {
+        match self.imp {
+            HandleImpl::Std(h) => h.join(),
+            #[cfg(feature = "modelcheck")]
+            HandleImpl::Model { tid, cell } => {
+                crate::modelcheck::rt::join(tid);
+                match cell.lock().unwrap_or_else(|e| e.into_inner()).take() {
+                    Some(v) => Ok(v),
+                    None => Err(Box::new("model thread produced no value".to_string())
+                        as Box<dyn std::any::Any + Send>),
+                }
+            }
+        }
+    }
+}
+
+/// Spawn a thread. `std::thread::spawn` normally; a scheduler-controlled
+/// cooperative thread when called on a thread owned by an active
+/// explorer.
+pub fn spawn<T, F>(f: F) -> SyncJoinHandle<T>
+where
+    T: Send + 'static,
+    F: FnOnce() -> T + Send + 'static,
+{
+    #[cfg(feature = "modelcheck")]
+    if crate::modelcheck::rt::active() {
+        let cell = Arc::new(StdMutex::new(None));
+        let out = Arc::clone(&cell);
+        let tid = crate::modelcheck::rt::spawn(Box::new(move || {
+            let v = f();
+            *out.lock().unwrap_or_else(|e| e.into_inner()) = Some(v);
+        }));
+        return SyncJoinHandle { imp: HandleImpl::Model { tid, cell } };
+    }
+    SyncJoinHandle { imp: HandleImpl::Std(std::thread::spawn(f)) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mutex_basic() {
+        let m = SyncMutex::new(1);
+        *m.lock() += 41;
+        assert_eq!(*m.lock(), 42);
+        assert_eq!(m.into_inner(), 42);
+    }
+
+    #[test]
+    fn mutex_poison_recovered() {
+        let m = Arc::new(SyncMutex::new(0));
+        let m2 = Arc::clone(&m);
+        let r = spawn(move || {
+            let _g = m2.lock();
+            panic!("poison it");
+        })
+        .join();
+        assert!(r.is_err());
+        // A poisoned SyncMutex still hands out its value.
+        *m.lock() += 7;
+        assert_eq!(*m.lock(), 7);
+    }
+
+    #[test]
+    fn condvar_wakes_waiter() {
+        let pair = Arc::new((SyncMutex::new(false), SyncCondvar::new()));
+        let p2 = Arc::clone(&pair);
+        let t = spawn(move || {
+            let (m, cv) = &*p2;
+            let mut g = m.lock();
+            while !*g {
+                g = cv.wait(g);
+            }
+        });
+        {
+            let (m, cv) = &*pair;
+            *m.lock() = true;
+            cv.notify_one();
+        }
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn atomics_seqcst_surface() {
+        let a = SyncAtomicU64::new(5);
+        assert_eq!(a.fetch_add(3), 5);
+        assert_eq!(a.load(), 8);
+        assert_eq!(a.compare_exchange(8, 1), Ok(8));
+        assert_eq!(a.compare_exchange(8, 2), Err(1));
+        a.store(0);
+        assert_eq!(a.fetch_sub(0), 0);
+
+        let n = SyncAtomicUsize::new(0);
+        assert_eq!(n.compare_exchange(0, 9), Ok(0));
+        assert_eq!(n.load(), 9);
+
+        let b = SyncAtomicBool::new(false);
+        assert!(!b.swap(true));
+        assert!(b.load());
+        b.store(false);
+        assert!(!b.load());
+    }
+
+    #[test]
+    fn channel_fifo_and_disconnect() {
+        let (tx, rx) = channel::<u32>();
+        let tx2 = tx.clone();
+        tx.send(1).unwrap();
+        tx2.send(2).unwrap();
+        drop(tx);
+        drop(tx2);
+        // Queued values drain before disconnection surfaces.
+        assert_eq!(rx.recv(), Ok(1));
+        assert_eq!(rx.recv(), Ok(2));
+        assert_eq!(rx.recv(), Err(RecvError));
+        assert_eq!(rx.try_recv(), Err(RecvError));
+    }
+
+    #[test]
+    fn channel_send_fails_after_receiver_drop() {
+        let (tx, rx) = channel::<u32>();
+        drop(rx);
+        assert!(tx.send(1).is_err());
+    }
+
+    #[test]
+    fn channel_blocking_recv() {
+        let (tx, rx) = channel::<u32>();
+        let t = spawn(move || {
+            tx.send(77).unwrap();
+        });
+        assert_eq!(rx.recv(), Ok(77));
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn try_recv_empty_but_connected() {
+        let (tx, rx) = channel::<u32>();
+        assert_eq!(rx.try_recv(), Ok(None));
+        tx.send(4).unwrap();
+        assert_eq!(rx.try_recv(), Ok(Some(4)));
+    }
+}

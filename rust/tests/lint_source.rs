@@ -68,6 +68,16 @@ const RULES: &[Rule] = &[
         why: "unsafe stays confined to the PJRT FFI boundary",
     },
     Rule {
+        id: "sync-primitives",
+        needles: &["std::sync::"],
+        also: &["Mutex", "Condvar", "atomic", "mpsc", "RwLock", "Barrier", "OnceLock"],
+        exempt: &["util/sync.rs", "modelcheck/"],
+        why: "locks, condvars, atomics, and channels flow through the util::sync shims so \
+              `--features modelcheck` can model-check every interleaving; raw std::sync \
+              primitives are invisible to the explorer (std::sync::Arc is fine — it has no \
+              scheduling-visible operations)",
+    },
+    Rule {
         id: "debug-fmt-json",
         needles: &["{:?}"],
         also: &["Json", ".dump("],
